@@ -1,0 +1,17 @@
+//! Profiling driver for the §Perf pass: 3M generations of the behavioral
+//! engine (N = 32, m = 20, F3). Used with `perf record` / `perf stat` to
+//! find engine hot spots (EXPERIMENTS.md §Perf).
+//!
+//! Run:  cargo build --release --example perf_profile &&
+//!       perf record -g ./target/release/examples/perf_profile
+
+fn main() {
+    use fpga_ga::ga::{Dims, GaInstance};
+    use fpga_ga::rom::{build_tables, F3, GAMMA_BITS_DEFAULT};
+    use std::sync::Arc;
+    let dims = Dims::new(32, 20, 1);
+    let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+    let mut inst = GaInstance::new(dims, tables, false, 1);
+    inst.run(3_000_000);
+    println!("{}", inst.best().y);
+}

@@ -1,0 +1,50 @@
+//! Quickstart: minimize the paper's F3 = √(x² + y²) exactly like Fig. 12
+//! (N = 64, m = 20, K = 100), through the full serving stack.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (requires `make artifacts`; add `ENGINE_ONLY=1` to skip the PJRT path)
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, OptimizeRequest};
+
+fn main() -> anyhow::Result<()> {
+    let use_pjrt = std::env::var_os("ENGINE_ONLY").is_none();
+    let serve = ServeParams {
+        use_pjrt,
+        ..ServeParams::default()
+    };
+    let coord = Coordinator::builder(serve).start()?;
+
+    // Fig. 12 configuration: minimize F3 with N = 64, m = 20, K = 100.
+    let params = GaParams {
+        n: 64,
+        m: 20,
+        k: 100,
+        function: "f3".into(),
+        maximize: false,
+        seed: 2024,
+        ..GaParams::default()
+    };
+    println!(
+        "minimizing f3(x, y) = sqrt(x^2 + y^2) over x, y in [-512, 511], N={}, K={}",
+        params.n, params.k
+    );
+
+    let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("quickstart"));
+    anyhow::ensure!(result.error.is_none(), "job failed: {:?}", result.error);
+
+    let (x, y) = result.decoded_vars(params.m);
+    println!("\nbackend: {}", result.backend);
+    println!("best fitness (gamma-LUT fixed point): {}", result.best_y);
+    println!("best chromosome {:#07x} decodes to (x, y) = ({x}, {y})", result.best_x);
+    println!("exact f3 at that point: {:.3}", ((x * x + y * y) as f64).sqrt());
+    println!("generations: {}, latency: {:?}", result.generations, result.latency);
+
+    println!("\nconvergence (best fitness per generation, every 5th):");
+    for (i, v) in result.curve.iter().enumerate().step_by(5) {
+        println!("  gen {i:3}: {v}");
+    }
+
+    coord.shutdown();
+    Ok(())
+}

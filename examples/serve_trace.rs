@@ -1,0 +1,105 @@
+//! END-TO-END driver (DESIGN.md §6): serve a synthetic optimization trace
+//! through the full three-layer stack — rust coordinator → dynamic batcher
+//! → AOT-compiled JAX/Pallas chunk on PJRT — and report latency/throughput.
+//!
+//! The workload models the paper's motivating "large flow of data"
+//! applications: a Poisson stream of independent optimization requests over
+//! a mix of fitness functions, population sizes and directions.
+//!
+//! Run:  cargo run --release --example serve_trace [-- <jobs> <rate_per_s>]
+//! (requires `make artifacts`)
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, OptimizeRequest};
+use fpga_ga::prng::SplitMix64;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let jobs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2000.0);
+
+    let serve = ServeParams {
+        workers: 2,
+        max_batch: 8,
+        batch_window_us: 5_000,
+        early_stop_chunks: 0,
+        use_pjrt: true,
+        ..ServeParams::default()
+    };
+    println!("== fpga-ga serve_trace: {jobs} jobs, Poisson rate {rate}/s, batch<=8, PJRT ==");
+    let coord = Coordinator::builder(serve).start()?;
+
+    // Warm the executable cache so compile time doesn't pollute latency.
+    let warm = coord.optimize(OptimizeRequest::new(mix_params(0, 0)).with_tag("warmup"));
+    anyhow::ensure!(warm.error.is_none(), "warmup failed: {:?}", warm.error);
+
+    let mut rng = SplitMix64::new(7);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        // Poisson arrivals: exponential inter-arrival sleep.
+        let gap = -((1.0 - rng.unit_f64()).ln()) / rate;
+        std::thread::sleep(Duration::from_secs_f64(gap));
+        let mix = (rng.next_u64() % 4) as usize;
+        handles.push((
+            Instant::now(),
+            coord.submit(OptimizeRequest::new(mix_params(mix, i as u64)).with_tag(format!("t{i}"))),
+        ));
+    }
+
+    let mut latencies: Vec<Duration> = Vec::with_capacity(jobs);
+    let mut failures = 0usize;
+    for (submitted, h) in handles {
+        let r = h.wait();
+        if r.error.is_some() {
+            failures += 1;
+        }
+        latencies.push(submitted.elapsed());
+        let _ = r;
+    }
+    let wall = t0.elapsed();
+
+    latencies.sort();
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    println!("\n== results ==");
+    println!("jobs: {jobs} ({failures} failed)");
+    println!("wall: {wall:?}  throughput: {:.1} jobs/s", jobs as f64 / wall.as_secs_f64());
+    println!(
+        "request latency: p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99),
+        pct(1.0)
+    );
+
+    let m = coord.metrics();
+    println!("\n== coordinator metrics ==\n{}", m.render());
+    let gens_per_sec = m.generations as f64 / wall.as_secs_f64();
+    println!(
+        "\naggregate GA throughput: {} generations/s across the trace",
+        fpga_ga::bench_util::fmt_count(gens_per_sec)
+    );
+    coord.shutdown();
+    anyhow::ensure!(failures == 0, "{failures} jobs failed");
+    Ok(())
+}
+
+/// The trace mixes the paper's evaluation settings.
+fn mix_params(mix: usize, seed: u64) -> GaParams {
+    let (n, m, function, maximize) = match mix {
+        0 => (32usize, 20u32, "f3", false), // Fig. 12-ish
+        1 => (64, 20, "f3", false),
+        2 => (32, 20, "f2", true),
+        _ => (32, 26, "f1", false), // Fig. 11
+    };
+    GaParams {
+        n,
+        m,
+        k: 100,
+        function: function.into(),
+        maximize,
+        seed: 0xACE + seed,
+        ..GaParams::default()
+    }
+}

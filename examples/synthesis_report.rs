@@ -1,0 +1,120 @@
+//! Regenerate every synthesis artifact of the paper's evaluation — Table 1,
+//! Table 2, Figs. 13-16 — and dump machine-readable JSON next to the
+//! human-readable tables (consumed by EXPERIMENTS.md).
+//!
+//! Also exercises the RTL netlist path: the area numbers printed here are
+//! recomputed from an actual constructed machine, not just closed forms.
+//!
+//! Run:  cargo run --release --example synthesis_report [-- out_dir]
+
+use fpga_ga::bench_util::Table;
+use fpga_ga::ga::Dims;
+use fpga_ga::jsonmini::{obj, to_string, Value};
+use fpga_ga::lfsr::LfsrBank;
+use fpga_ga::prng::{initial_population, seed_bank};
+use fpga_ga::rom::{build_tables, F3, GAMMA_BITS_DEFAULT};
+use fpga_ga::rtl::GaMachine;
+use fpga_ga::synth;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "reports".into());
+    std::fs::create_dir_all(&out_dir)?;
+
+    // ---- Table 1 (+ netlist cross-check) --------------------------------
+    println!("Table 1 — GA synthesis for m = 20 (model vs paper, netlist-derived)");
+    let mut t1 = Table::new([
+        "N", "FF model", "FF paper", "LUT model", "LUT paper", "util%", "clk MHz",
+        "clk paper", "Tg ns", "max err%",
+    ]);
+    let mut t1_json = Vec::new();
+    for row in synth::table1() {
+        let d = Dims::new(row.n, 20, Dims::default_p(row.n));
+        // Netlist-derived area (must agree with the closed form).
+        let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+        let pop = initial_population(1, d.n, d.m);
+        let bank = LfsrBank::from_states(seed_bank(2, d.lfsr_len()), d.n, d.p);
+        let machine = GaMachine::new(d, tables, false, &pop, &bank);
+        let nl_area = synth::netlist_area(machine.netlist(), &d);
+        assert!((nl_area.luts - row.lut_model).abs() < 1.0, "netlist/model drift");
+
+        t1.row([
+            row.n.to_string(),
+            format!("{:.0}", row.ff_model),
+            format!("{:.0}", row.ff_paper),
+            format!("{:.0}", nl_area.luts),
+            format!("{:.0}", row.lut_paper),
+            format!("{:.2}", row.lut_util_pct),
+            format!("{:.2}", row.clock_model),
+            format!("{:.2}", row.clock_paper),
+            format!("{:.1}", synth::tg_ns(&d)),
+            format!("{:.1}", row.max_err_pct()),
+        ]);
+        t1_json.push(obj([
+            ("n", (row.n as i64).into()),
+            ("ff_model", row.ff_model.into()),
+            ("ff_paper", row.ff_paper.into()),
+            ("lut_model", row.lut_model.into()),
+            ("lut_paper", row.lut_paper.into()),
+            ("clock_model", row.clock_model.into()),
+            ("clock_paper", row.clock_paper.into()),
+            ("max_err_pct", row.max_err_pct().into()),
+        ]));
+    }
+    t1.print();
+
+    // ---- Table 2 ---------------------------------------------------------
+    println!("\nTable 2 — comparisons with the state of the art");
+    let mut t2 = Table::new([
+        "Reference", "N", "k", "ref µs", "model µs", "paper µs", "speedup model",
+        "speedup paper",
+    ]);
+    let mut t2_json = Vec::new();
+    for r in synth::table2() {
+        t2.row([
+            r.reference.to_string(),
+            r.n.to_string(),
+            r.k.to_string(),
+            format!("{:.0}", r.reference_time_us),
+            format!("{:.2}", r.model_time_us),
+            format!("{:.2}", r.paper_time_us),
+            format!("{:.0}x", r.model_speedup),
+            format!("{:.0}x", r.paper_speedup),
+        ]);
+        t2_json.push(obj([
+            ("reference", r.reference.into()),
+            ("n", (r.n as i64).into()),
+            ("k", i64::from(r.k).into()),
+            ("model_time_us", r.model_time_us.into()),
+            ("paper_time_us", r.paper_time_us.into()),
+            ("model_speedup", r.model_speedup.into()),
+            ("paper_speedup", r.paper_speedup.into()),
+        ]));
+    }
+    t2.print();
+
+    // ---- Figures ----------------------------------------------------------
+    let figs = [synth::fig13(), synth::fig14(), synth::fig15(), synth::fig16()];
+    for fig in &figs {
+        println!("\n{} (x = {}):", fig.name, fig.x_label);
+        println!("  x, {}", fig.series_labels.join(", "));
+        for (x, ys) in &fig.points {
+            let vals: Vec<String> = ys.iter().map(|v| format!("{v:.2}")).collect();
+            println!("  {x}, {}", vals.join(", "));
+        }
+    }
+
+    // ---- JSON dump ---------------------------------------------------------
+    let report = obj([
+        ("table1", Value::Array(t1_json)),
+        ("table2", Value::Array(t2_json)),
+        (
+            "figures",
+            Value::Array(figs.iter().map(|f| f.to_json()).collect()),
+        ),
+    ]);
+    let path = format!("{out_dir}/synthesis_report.json");
+    std::fs::write(&path, to_string(&report))?;
+    println!("\nwrote {path}");
+    Ok(())
+}

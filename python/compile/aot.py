@@ -1,0 +1,142 @@
+"""AOT compile path: lower every GA variant to HLO *text* + a manifest.
+
+Run once by `make artifacts`; python never runs again after this. The rust
+runtime (rust/src/runtime/) loads artifacts/<name>.hlo.txt with
+HloModuleProto::from_text_file, compiles on the PJRT CPU client, and
+executes from the L3 hot path.
+
+HLO TEXT, not serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids; the xla crate's xla_extension 0.5.1 rejects them
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact set (DESIGN.md SS3): chunk variants over
+  (B, N, m) in BATCHES x POPULATIONS, m fixed per entry, P = ceil(0.02 N)
+plus single-step variants for rust runtime unit tests, plus golden vectors
+(golden.py) and manifest.json describing shapes for the rust side.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels.ref import GaConfig  # noqa: E402
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+#: (N, m) pairs lowered as chunk artifacts. Covers every population size of
+#: Table 1 at m=20, plus the Fig. 11 configuration (N=32, m=26).
+VARIANTS: list[tuple[int, int]] = [
+    (4, 20),
+    (8, 20),
+    (16, 20),
+    (32, 20),
+    (64, 20),
+    (32, 26),
+]
+
+#: Batch sizes the dynamic batcher can dispatch. B=1 is the latency path,
+#: B=8 the throughput path (vLLM-style micro-batching in rust).
+BATCHES: list[int] = [1, 8]
+
+#: Single-step artifacts (rust runtime unit tests replay golden vectors).
+STEP_VARIANTS: list[tuple[int, int, int]] = [(4, 20, 1), (8, 20, 1)]
+
+
+def cfg_for(n: int, m: int) -> GaConfig:
+    return GaConfig(n=n, m=m, p=GaConfig.default_p(n))
+
+
+def chunk_name(b: int, cfg: GaConfig, k_chunk: int) -> str:
+    return f"ga_chunk_b{b}_n{cfg.n}_m{cfg.m}_p{cfg.p}_k{k_chunk}"
+
+
+def step_name(b: int, cfg: GaConfig) -> str:
+    return f"ga_step_b{b}_n{cfg.n}_m{cfg.m}_p{cfg.p}"
+
+
+def entry(kind: str, name: str, b: int, cfg: GaConfig, k_chunk: int, secs: float) -> dict:
+    return {
+        "kind": kind,
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "batch": b,
+        "n": cfg.n,
+        "m": cfg.m,
+        "p": cfg.p,
+        "gamma_bits": cfg.gamma_bits,
+        "lfsr_len": cfg.lfsr_len,
+        "table_size": cfg.table_size,
+        "gamma_size": cfg.gamma_size,
+        "k_chunk": k_chunk,
+        "lower_seconds": round(secs, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the (B=1, N=8, m=20) variant — CI smoke path")
+    ap.add_argument("--k-chunk", type=int, default=model.K_CHUNK)
+    args = ap.parse_args()
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    variants = [(8, 20)] if args.quick else VARIANTS
+    batches = [1] if args.quick else BATCHES
+    manifest: dict = {"k_chunk": args.k_chunk, "artifacts": []}
+
+    for n, m in variants:
+        cfg = cfg_for(n, m)
+        for b in batches:
+            t0 = time.time()
+            text = to_hlo_text(model.lower_chunk(b, cfg, args.k_chunk))
+            name = chunk_name(b, cfg, args.k_chunk)
+            (out / f"{name}.hlo.txt").write_text(text)
+            dt = time.time() - t0
+            manifest["artifacts"].append(entry("chunk", name, b, cfg, args.k_chunk, dt))
+            print(f"  lowered {name}: {len(text)/1e6:.2f} MB hlo text in {dt:.1f}s")
+
+    for n, m, b in ([] if args.quick else STEP_VARIANTS):
+        cfg = cfg_for(n, m)
+        t0 = time.time()
+        text = to_hlo_text(model.lower_step(b, cfg))
+        name = step_name(b, cfg)
+        (out / f"{name}.hlo.txt").write_text(text)
+        dt = time.time() - t0
+        manifest["artifacts"].append(entry("step", name, b, cfg, 1, dt))
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB hlo text in {dt:.1f}s")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {out}")
+
+    # Golden vectors for the rust bit-exactness tests ride along.
+    from . import golden
+
+    golden.write_golden(out / "golden")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Fitness-function specs and ROM/LUT builders (the paper's FFM contents).
+
+The paper's FFM computes   y = gamma( alpha(px) + beta(qx) )   where alpha,
+beta, gamma are ROM look-up tables (FFMROM1/2/3) and px/qx are the two
+m/2-bit halves of the chromosome. "The range of values, bit width, decimal
+precision and the possibility of exploring negative numbers are all
+parameters of the LUT" (paper SS4) — this module is that parameterization.
+
+Table encoding (mirrored bit-for-bit by rust/src/rom/):
+  * input code u in [0, 2^h)  (h = m/2) maps to a value
+      v = to_signed(u, h) * 2^-in_frac        if signed
+      v = u * 2^-in_frac                      otherwise
+  * alpha/beta ROM entry = round(f(v) * 2^out_frac) as int64
+  * delta = alpha[px] + beta[qx]   (wrapping int64; ranges are sized to fit)
+  * gamma ROM has G = 2^gamma_bits entries indexed by the fixed-point rescale
+      gidx = clamp((delta - gmin) >> gshift, 0, G-1)
+    with entry  gamma[i] = round(g(midpoint(i) * 2^-out_frac) * 2^out_frac)
+  * gamma_bypass: F1/F2 use gamma = identity; the hardware passes delta
+    through an identity ROM, we pass delta through unchanged (exact, no
+    re-quantization) and the gamma table is unused.
+
+All of gmin, gshift, gamma_bypass, maximize are *runtime* inputs of the AOT
+artifact, so one compiled variant serves every fitness function — the
+paper's "only the values stored in the memories change" property.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+GAMMA_BITS_DEFAULT = 12
+
+
+def to_signed(u: int, bits: int) -> int:
+    """Two's-complement reinterpretation of a `bits`-wide code."""
+    half = 1 << (bits - 1)
+    return u - (1 << bits) if u >= half else u
+
+
+@dataclass(frozen=True)
+class FnSpec:
+    """A fitness function in the paper's gamma(alpha(px) + beta(qx)) form."""
+
+    name: str
+    alpha: Callable[[float], float]
+    beta: Callable[[float], float]
+    gamma: Callable[[float], float] = field(default=lambda d: d)
+    gamma_bypass: bool = True  # True when gamma is the identity
+    signed: bool = True  # interpret chromosome halves as two's complement
+    in_frac: int = 0  # fractional bits of the input fixed point
+    out_frac: int = 0  # fractional bits of alpha/beta/gamma outputs
+    single_var: bool = False  # paper's one-variable mode: alpha(px) == 0
+
+
+@dataclass(frozen=True)
+class RomTables:
+    """Materialized FFM ROM contents + gamma rescale constants."""
+
+    spec_name: str
+    m: int
+    gamma_bits: int
+    alpha: list[int]
+    beta: list[int]
+    gamma: list[int]
+    gmin: int
+    gshift: int
+    gamma_bypass: bool
+
+    @property
+    def h(self) -> int:
+        return self.m // 2
+
+
+def _quantize(x: float, out_frac: int) -> int:
+    return int(round(x * (1 << out_frac)))
+
+
+def build_tables(spec: FnSpec, m: int, gamma_bits: int = GAMMA_BITS_DEFAULT) -> RomTables:
+    """Build the three FFM ROMs for chromosome width m (m even)."""
+    if m % 2 != 0:
+        raise ValueError(f"m must be even (paper splits x into halves), got {m}")
+    h = m // 2
+    size = 1 << h
+    scale_in = 1 << spec.in_frac
+
+    def code_value(u: int) -> float:
+        raw = to_signed(u, h) if spec.signed else u
+        return raw / scale_in
+
+    alpha = [0] * size if spec.single_var else [
+        _quantize(spec.alpha(code_value(u)), spec.out_frac) for u in range(size)
+    ]
+    beta = [_quantize(spec.beta(code_value(u)), spec.out_frac) for u in range(size)]
+
+    dmin = min(alpha) + min(beta)
+    dmax = max(alpha) + max(beta)
+    g = 1 << gamma_bits
+    span = dmax - dmin + 1
+    gshift = max(0, math.ceil(math.log2(span / g)) if span > g else 0)
+    gmin = dmin
+
+    out_scale = 1 << spec.out_frac
+    gamma = []
+    for i in range(g):
+        # midpoint of bucket i in delta space
+        lo = gmin + (i << gshift)
+        mid = lo + ((1 << gshift) >> 1)
+        gamma.append(_quantize(spec.gamma(mid / out_scale), spec.out_frac))
+
+    return RomTables(
+        spec_name=spec.name,
+        m=m,
+        gamma_bits=gamma_bits,
+        alpha=alpha,
+        beta=beta,
+        gamma=gamma,
+        gmin=gmin,
+        gshift=gshift,
+        gamma_bypass=spec.gamma_bypass,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's three evaluation functions (SS4, Eqs. 24-26).
+# ---------------------------------------------------------------------------
+
+#: F1: f(x) = x^3 - 15x^2 + 500, single variable (alpha = 0, gamma = id).
+#: Used by [9]; minimized in Fig. 11 with N=32, m=26.
+F1 = FnSpec(
+    name="f1",
+    alpha=lambda px: 0.0,
+    beta=lambda qx: qx**3 - 15.0 * qx**2 + 500.0,
+    gamma_bypass=True,
+    signed=True,
+    single_var=True,
+)
+
+#: F2: f(x, y) = 8x - 4y + 1020 (alpha = 8x, beta = -4y + 1020, gamma = id).
+#: Used by [6] (GA IP core).
+F2 = FnSpec(
+    name="f2",
+    alpha=lambda px: 8.0 * px,
+    beta=lambda qx: -4.0 * qx + 1020.0,
+    gamma_bypass=True,
+    signed=True,
+)
+
+#: F3: f(x, y) = sqrt(x^2 + y^2) (alpha = x^2, beta = y^2, gamma = sqrt).
+#: Used by [19] and [14]; minimized in Fig. 12 with N=64, m=20.
+F3 = FnSpec(
+    name="f3",
+    alpha=lambda px: px**2,
+    beta=lambda qx: qx**2,
+    gamma=lambda d: math.sqrt(d) if d > 0 else 0.0,
+    gamma_bypass=False,
+    signed=True,
+)
+
+SPECS: dict[str, FnSpec] = {"f1": F1, "f2": F2, "f3": F3}
+
+
+def exact_value(spec: FnSpec, px_code: int, qx_code: int, m: int) -> float:
+    """Float reference f(px, qx) for quantization-error measurements."""
+    h = m // 2
+    scale_in = 1 << spec.in_frac
+
+    def val(u: int) -> float:
+        raw = to_signed(u, h) if spec.signed else u
+        return raw / scale_in
+
+    a = 0.0 if spec.single_var else spec.alpha(val(px_code))
+    d = a + spec.beta(val(qx_code))
+    return d if spec.gamma_bypass else spec.gamma(d)

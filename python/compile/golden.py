@@ -1,0 +1,105 @@
+"""Golden-vector generator: the cross-layer bit-exactness contract on disk.
+
+For a matrix of (N, m, function) variants, run the jnp reference for a few
+generations from deterministic seeds and dump the full trajectory (every
+population, LFSR bank and fitness vector) plus the ROM tables and rescale
+constants to JSON. The rust tests replay these through:
+
+  * rust/src/ga/      (behavioral engine)       -- must match every step
+  * rust/src/rtl/     (cycle-accurate sim)      -- must match every 3 clocks
+  * rust/src/rom/     (table builder)           -- must rebuild identical tables
+  * rust/src/runtime/ (PJRT path, step artifact)-- must match via XLA too
+
+Written by `make artifacts` into artifacts/golden/.
+"""
+
+from __future__ import annotations
+
+import json
+from functools import partial
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from . import functions as F  # noqa: E402
+from .kernels.lfsr import initial_population, seed_bank  # noqa: E402
+from .kernels.ref import GaConfig, ga_step  # noqa: E402
+
+#: (name, N, m, fn, maximize, pop_seed, lfsr_seed, generations)
+CASES = [
+    ("g_n4_m20_f2_min", 4, 20, "f2", 0, 42, 1042, 8),
+    ("g_n8_m20_f3_min", 8, 20, "f3", 0, 43, 1043, 8),
+    ("g_n8_m20_f3_max", 8, 20, "f3", 1, 44, 1044, 8),
+    ("g_n16_m22_f3_min", 16, 22, "f3", 0, 45, 1045, 6),
+    ("g_n32_m26_f1_min", 32, 26, "f1", 0, 46, 1046, 6),
+    ("g_n64_m20_f3_min", 64, 20, "f3", 0, 47, 1047, 4),
+]
+
+
+def run_case(name: str, n: int, m: int, fn: str, maximize: int,
+             pop_seed: int, lfsr_seed: int, gens: int) -> dict:
+    cfg = GaConfig(n=n, m=m, p=GaConfig.default_p(n))
+    tab = F.build_tables(F.SPECS[fn], m)
+
+    pop = jnp.array(initial_population(pop_seed, n, m), dtype=jnp.uint32)
+    lfsr = jnp.array(seed_bank(lfsr_seed, cfg.lfsr_len), dtype=jnp.uint32)
+    alpha = jnp.array(tab.alpha, dtype=jnp.int64)
+    beta = jnp.array(tab.beta, dtype=jnp.int64)
+    gamma = jnp.array(tab.gamma, dtype=jnp.int64)
+    scal = jnp.array(
+        [tab.gmin, tab.gshift, int(tab.gamma_bypass), maximize], dtype=jnp.int64
+    )
+
+    steps = []
+    step = partial(ga_step, cfg=cfg)
+    for _ in range(gens):
+        npop, nlfsr, y = step(pop, lfsr, alpha, beta, gamma, scal)
+        steps.append(
+            {
+                "pop": [int(v) for v in pop],
+                "lfsr": [int(v) for v in lfsr],
+                "y": [int(v) for v in y],
+                "next_pop": [int(v) for v in npop],
+            }
+        )
+        pop, lfsr = npop, nlfsr
+
+    return {
+        "name": name,
+        "n": n,
+        "m": m,
+        "p": cfg.p,
+        "gamma_bits": cfg.gamma_bits,
+        "fn": fn,
+        "maximize": maximize,
+        "pop_seed": pop_seed,
+        "lfsr_seed": lfsr_seed,
+        "gmin": tab.gmin,
+        "gshift": tab.gshift,
+        "gamma_bypass": int(tab.gamma_bypass),
+        "alpha": tab.alpha,
+        "beta": tab.beta,
+        "gamma": tab.gamma,
+        "steps": steps,
+    }
+
+
+def write_golden(out_dir: Path) -> None:
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    index = []
+    for case in CASES:
+        data = run_case(*case)
+        path = out_dir / f"{data['name']}.json"
+        path.write_text(json.dumps(data))
+        index.append(data["name"])
+        print(f"  golden {data['name']}: {len(data['steps'])} generations")
+    (out_dir / "index.json").write_text(json.dumps(index))
+
+
+if __name__ == "__main__":
+    write_golden(Path("../artifacts/golden"))

@@ -1,0 +1,143 @@
+"""Layer-1 Pallas kernel: one fused GA generation for a batch of instances.
+
+The FPGA's full-parallel datapath (one FFM/SM/CM/MM circuit per individual,
+SS3 of the paper) maps to TPU as ONE fused kernel over the whole population
+vector, batched over B independent GA instances (DESIGN.md SS7):
+
+  * FFM ROMs        -> VMEM-resident tables + vectorized gathers (VPU)
+  * SM's 3 N-input muxes per individual (the paper's N^2 area term)
+                    -> jnp.take gathers, O(1) per lane
+  * RX registers + LFSR fabric -> uint32 vectors in VMEM
+  * SyncM 3-clock cadence      -> lax.scan pipeline around this kernel (L2)
+
+Grid: one program per batch instance b; every per-instance block (population,
+LFSR bank, the three ROMs, scalars) fits comfortably in VMEM (< 1 MiB for the
+largest paper variant, DESIGN.md SS7), so there is a single HBM->VMEM round
+trip per instance per generation chunk.
+
+interpret=True ALWAYS: real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute; interpret mode lowers to plain HLO ops with
+identical numerics (see /opt/xla-example/README.md).
+
+Must be bit-identical to kernels/ref.py — asserted by python/tests/.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    GaConfig,
+    NUM_SCALARS,
+    SCAL_GBYPASS,
+    SCAL_GMIN,
+    SCAL_GSHIFT,
+    SCAL_MAXIMIZE,
+)
+
+
+def _ga_generation_kernel(pop_ref, lfsr_ref, alpha_ref, beta_ref, gamma_ref,
+                          scal_ref, npop_ref, nlfsr_ref, y_ref, *, cfg: GaConfig):
+    """Kernel body: the full FFM -> SM -> CM -> MM -> LFSR-advance pipeline."""
+    n, h = cfg.n, cfg.h
+    u32 = jnp.uint32
+    hmask = u32(cfg.table_size - 1)
+    mmask = u32((1 << cfg.m) - 1)
+
+    pop = pop_ref[0].astype(u32)
+    lfsr = lfsr_ref[0].astype(u32)
+    alpha = alpha_ref[0]
+    beta = beta_ref[0]
+    gamma = gamma_ref[0]
+    gmin = scal_ref[0, SCAL_GMIN]
+    gshift = scal_ref[0, SCAL_GSHIFT]
+    gbypass = scal_ref[0, SCAL_GBYPASS]
+    maximize = scal_ref[0, SCAL_MAXIMIZE]
+
+    # ---- FFM (Eq. 8-11): split, two ROM gathers, adder, gamma ROM --------
+    px = (pop >> u32(h)) & hmask
+    qx = pop & hmask
+    delta = jnp.take(alpha, px.astype(jnp.int32)) + jnp.take(beta, qx.astype(jnp.int32))
+    gidx = jnp.clip((delta - gmin) >> gshift, 0, cfg.gamma_size - 1)
+    y = jnp.where(gbypass != 0, delta, jnp.take(gamma, gidx.astype(jnp.int32)))
+
+    # ---- SM (SS3.2): two random indices, fitness compare, winner gather --
+    sm1 = lfsr[0 : 2 * n : 2]
+    sm2 = lfsr[1 : 2 * n : 2]
+    i1 = (sm1 >> u32(32 - cfg.sel_bits)).astype(jnp.int32)
+    i2 = (sm2 >> u32(32 - cfg.sel_bits)).astype(jnp.int32)
+    y1 = jnp.take(y, i1)
+    y2 = jnp.take(y, i2)
+    first_wins = jnp.where(maximize != 0, y1 > y2, y1 < y2)
+    w = jnp.take(pop, jnp.where(first_wins, i1, i2))
+
+    # ---- CM (SS3.3): per-half shift masks, head/tail swap (Eq. 15-20) ----
+    pw = (w >> u32(h)) & hmask
+    qw = w & hmask
+    pw0, pw1 = pw[0::2], pw[1::2]
+    qw0, qw1 = qw[0::2], qw[1::2]
+    cmp_s = lfsr[2 * n : 3 * n : 2]
+    cmq_s = lfsr[2 * n + 1 : 3 * n : 2]
+    shift_p = jnp.minimum(cmp_s >> u32(32 - cfg.cut_bits), u32(h))
+    shift_q = jnp.minimum(cmq_s >> u32(32 - cfg.cut_bits), u32(h))
+    mask_p = hmask >> shift_p
+    mask_q = hmask >> shift_q
+    pz0 = (pw0 & ~mask_p) | (pw1 & mask_p)
+    pz1 = (pw1 & ~mask_p) | (pw0 & mask_p)
+    qz0 = (qw0 & ~mask_q) | (qw1 & mask_q)
+    qz1 = (qw1 & ~mask_q) | (qw0 & mask_q)
+    z = jnp.stack([(pz0 << u32(h)) | qz0, (pz1 << u32(h)) | qz1], axis=1).reshape(-1) & mmask
+
+    # ---- MM (Eq. 21): XOR first P offspring with top-m LFSR bits ----------
+    if cfg.p > 0:
+        mm = lfsr[3 * n : 3 * n + cfg.p]
+        z = jnp.concatenate([z[: cfg.p] ^ (mm >> u32(32 - cfg.m)), z[cfg.p :]])
+
+    # ---- LFSR advance: s' = (s<<1) | ((s>>31 ^ s>>21 ^ s>>1 ^ s>>0) & 1) --
+    fb = ((lfsr >> u32(31)) ^ (lfsr >> u32(21)) ^ (lfsr >> u32(1)) ^ lfsr) & u32(1)
+    nlfsr = (lfsr << u32(1)) | fb
+
+    npop_ref[0] = z.astype(jnp.uint32)
+    nlfsr_ref[0] = nlfsr.astype(jnp.uint32)
+    y_ref[0] = y
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ga_step_pallas(pop, lfsr, alpha, beta, gamma, scal, cfg: GaConfig):
+    """Batched generation step via pallas_call.
+
+    Args (B = batch of independent GA instances):
+      pop   uint32[B, N]      lfsr  uint32[B, L]        L = 3N + P
+      alpha int64[B, T]       beta  int64[B, T]         T = 2^(m/2)
+      gamma int64[B, G]       scal  int64[B, 4]         G = 2^gamma_bits
+    Returns (pop' uint32[B,N], lfsr' uint32[B,L], y int64[B,N]).
+    """
+    b = pop.shape[0]
+    t, g = cfg.table_size, cfg.gamma_size
+
+    def row(shape):
+        return pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
+
+    return pl.pallas_call(
+        partial(_ga_generation_kernel, cfg=cfg),
+        grid=(b,),
+        in_specs=[
+            row((cfg.n,)),
+            row((cfg.lfsr_len,)),
+            row((t,)),
+            row((t,)),
+            row((g,)),
+            row((NUM_SCALARS,)),
+        ],
+        out_specs=[row((cfg.n,)), row((cfg.lfsr_len,)), row((cfg.n,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, cfg.n), jnp.uint32),
+            jax.ShapeDtypeStruct((b, cfg.lfsr_len), jnp.uint32),
+            jax.ShapeDtypeStruct((b, cfg.n), jnp.int64),
+        ],
+        interpret=True,
+    )(pop, lfsr, alpha, beta, gamma, scal)

@@ -1,0 +1,107 @@
+"""32-bit Fibonacci LFSR, polynomial x^32 + x^22 + x^2 + x + 1.
+
+NOTE (deviation from the paper, documented in DESIGN.md SS9): the paper cites
+the polynomial r^32 + r^22 + r^2 + 1, which is NOT primitive -- as printed it
+cycles after a few thousand states (verified in tests). We use the standard
+maximal-length 32-bit polynomial x^32 + x^22 + x^2 + x + 1 (Xilinx XAPP052),
+almost certainly what the authors' generator actually implemented.
+
+This is the paper's pseudo-random substrate ([24],[25] in the paper): every
+random decision in the GA machine (tournament indices, crossover cut points,
+mutation words, and nothing else) is drawn from an independent 32-bit LFSR.
+
+Bit-exactness contract (DESIGN.md SS5): the rust `lfsr` module and the Pallas
+kernel implement the *same* update:
+
+    s' = (s << 1) | ((s>>31 ^ s>>21 ^ s>>1 ^ s>>0) & 1)        (mod 2^32)
+
+i.e. taps at polynomial exponents {32, 22, 2, 1} -> state bits {31, 21, 1, 0}.
+Outputs at generation k are derived from state k (top-bit truncation), then
+the state advances once per generation.
+
+The zero state is a fixed point of the recurrence; seed generation
+(`seed_bank`) substitutes a non-zero constant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MASK32 = 0xFFFFFFFF
+
+# SplitMix64 constants (seed-bank generator; mirrored in rust/src/prng.rs).
+_SM64_GAMMA = 0x9E3779B97F4A7C15
+_SM64_MUL1 = 0xBF58476D1CE4E5B9
+_SM64_MUL2 = 0x94D049BB133111EB
+_MASK64 = (1 << 64) - 1
+
+# Replacement seed for the degenerate all-zero LFSR state.
+ZERO_SEED_SUBSTITUTE = 0xDEADBEEF
+
+
+def lfsr_step(state: jnp.ndarray) -> jnp.ndarray:
+    """Advance a (vector of) 32-bit Fibonacci LFSR state(s) by one tick.
+
+    `state` is uint32 of any shape; the update is elementwise.
+    """
+    s = state.astype(jnp.uint32)
+    fb = (
+        jnp.right_shift(s, jnp.uint32(31))
+        ^ jnp.right_shift(s, jnp.uint32(21))
+        ^ jnp.right_shift(s, jnp.uint32(1))
+        ^ s
+    ) & jnp.uint32(1)
+    return (jnp.left_shift(s, jnp.uint32(1)) | fb).astype(jnp.uint32)
+
+
+def top_bits(state: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """The paper's truncation convention: the `nbits` *most significant* bits.
+
+    Returns uint32 values in [0, 2^nbits).
+    """
+    if nbits <= 0:
+        return jnp.zeros_like(state, dtype=jnp.uint32)
+    return jnp.right_shift(state.astype(jnp.uint32), jnp.uint32(32 - nbits))
+
+
+def splitmix64(state: int) -> tuple[int, int]:
+    """One SplitMix64 draw: returns (new_state, output64). Pure python ints."""
+    state = (state + _SM64_GAMMA) & _MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * _SM64_MUL1) & _MASK64
+    z = ((z ^ (z >> 27)) * _SM64_MUL2) & _MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def seed_bank(seed: int, count: int) -> list[int]:
+    """`count` distinct non-zero 32-bit LFSR seeds from a master seed.
+
+    The paper gives each LFSR a distinct 32-bit initial value CCseed_lj; we
+    derive them from one master seed so experiments are reproducible from a
+    single integer. Mirrored exactly by rust/src/prng.rs::seed_bank.
+    """
+    out = []
+    st = seed & _MASK64
+    for _ in range(count):
+        st, z = splitmix64(st)
+        s32 = z & MASK32
+        if s32 == 0:
+            s32 = ZERO_SEED_SUBSTITUTE
+        out.append(s32)
+    return out
+
+
+def initial_population(seed: int, n: int, m: int) -> list[int]:
+    """Random initial population: low-m-bit SplitMix64 draws (DESIGN.md SS5).
+
+    Uses a *different* stream position than `seed_bank` consumers by deriving
+    from seed ^ tag so population and LFSR seeds never alias.
+    """
+    out = []
+    st = (seed ^ 0xA5A5A5A5A5A5A5A5) & _MASK64
+    mask = (1 << m) - 1
+    for _ in range(n):
+        st, z = splitmix64(st)
+        out.append(z & mask)
+    return out

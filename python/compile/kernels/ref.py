@@ -1,0 +1,196 @@
+"""Pure-jnp oracle for one GA generation (Algorithm 1 of the paper).
+
+This is the executable specification of the paper's datapath: the Pallas
+kernel (ga_kernel.py), the rust behavioral engine (rust/src/ga/) and the
+rust cycle-accurate RTL simulator (rust/src/rtl/) must all match this
+bit-for-bit (DESIGN.md SS5).
+
+Semantics of one generation k (single GA instance; batch via vmap):
+
+  fitness    y_j   = FFM(x_j)                        (Eq. 8-11)
+  selection  w_j   = tournament(y, x; SM LFSRs)      (SS3.2)
+  crossover  z     = single-point-per-half(w; CM LFSRs)   (SS3.3)
+  mutation   x'_v  = z_v XOR MMr_v   for v < P       (Eq. 21)
+  all LFSRs advance one tick
+
+LFSR bank layout (length L = 3N + P, DESIGN.md SS5):
+  [ sm1_0, sm2_0, ..., sm1_{N-1}, sm2_{N-1},        # 2N tournament generators
+    cmP_0, cmQ_0, ..., cmP_{N/2-1}, cmQ_{N/2-1},    # N  cut-point generators
+    mm_0, ..., mm_{P-1} ]                           # P  mutation generators
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .lfsr import lfsr_step, top_bits
+
+I64_MIN = -(1 << 63)
+I64_MAX = (1 << 63) - 1
+
+# Index of each runtime scalar in the `scal` vector (int64[4]).
+SCAL_GMIN = 0
+SCAL_GSHIFT = 1
+SCAL_GBYPASS = 2
+SCAL_MAXIMIZE = 3
+NUM_SCALARS = 4
+
+
+@dataclass(frozen=True)
+class GaConfig:
+    """Static (compile-time) shape parameters of one GA variant."""
+
+    n: int  # population size (power of two; paper uses 4..64)
+    m: int  # chromosome bits (even; paper uses 20..28)
+    p: int  # number of mutation modules P = ceil(N * MR)
+    gamma_bits: int = 12  # log2 of gamma ROM entries
+
+    def __post_init__(self) -> None:
+        if self.n & (self.n - 1) or self.n < 2:
+            raise ValueError(f"N must be a power of two >= 2, got {self.n}")
+        if self.m % 2 or not 2 <= self.m <= 32:
+            raise ValueError(f"m must be even in [2, 32], got {self.m}")
+        if not 0 <= self.p <= self.n:
+            raise ValueError(f"P must be in [0, N], got {self.p}")
+
+    @property
+    def h(self) -> int:
+        """Bits per variable half."""
+        return self.m // 2
+
+    @property
+    def sel_bits(self) -> int:
+        """Tournament index width ceil(log2 N)."""
+        return max(1, math.ceil(math.log2(self.n)))
+
+    @property
+    def cut_bits(self) -> int:
+        """Cut-point selector width ceil(log2(m/2 + 1))."""
+        return math.ceil(math.log2(self.h + 1))
+
+    @property
+    def lfsr_len(self) -> int:
+        return 3 * self.n + self.p
+
+    @property
+    def table_size(self) -> int:
+        return 1 << self.h
+
+    @property
+    def gamma_size(self) -> int:
+        return 1 << self.gamma_bits
+
+    @staticmethod
+    def default_p(n: int, mutation_rate: float = 0.02) -> int:
+        """Paper Eq. 5: P = ceil(N * MR), MR defaulting to 2%."""
+        return max(1, math.ceil(n * mutation_rate))
+
+
+def fitness(pop: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
+            gamma: jnp.ndarray, scal: jnp.ndarray, cfg: GaConfig) -> jnp.ndarray:
+    """FFM: y = gamma(alpha(px) + beta(qx)) with LUT gathers (Eq. 11)."""
+    h = cfg.h
+    hmask = jnp.uint32(cfg.table_size - 1)
+    px = jnp.right_shift(pop.astype(jnp.uint32), jnp.uint32(h)) & hmask
+    qx = pop.astype(jnp.uint32) & hmask
+    a = jnp.take(alpha, px.astype(jnp.int32), axis=0)
+    b = jnp.take(beta, qx.astype(jnp.int32), axis=0)
+    delta = a + b  # int64 (tables sized to avoid overflow)
+    gidx = jnp.clip(
+        jnp.right_shift(delta - scal[SCAL_GMIN], scal[SCAL_GSHIFT]),
+        0,
+        cfg.gamma_size - 1,
+    )
+    looked = jnp.take(gamma, gidx.astype(jnp.int32), axis=0)
+    return jnp.where(scal[SCAL_GBYPASS] != 0, delta, looked)
+
+
+def selection(pop: jnp.ndarray, y: jnp.ndarray, sm1: jnp.ndarray,
+              sm2: jnp.ndarray, scal: jnp.ndarray, cfg: GaConfig) -> jnp.ndarray:
+    """SM: per-slot binary tournament between two LFSR-chosen individuals.
+
+    Comparator is strict; on a tie the *second* contestant wins (DESIGN.md SS5).
+    """
+    i1 = top_bits(sm1, cfg.sel_bits).astype(jnp.int32)
+    i2 = top_bits(sm2, cfg.sel_bits).astype(jnp.int32)
+    y1 = jnp.take(y, i1, axis=0)
+    y2 = jnp.take(y, i2, axis=0)
+    maximize = scal[SCAL_MAXIMIZE] != 0
+    first_wins = jnp.where(maximize, y1 > y2, y1 < y2)
+    widx = jnp.where(first_wins, i1, i2)
+    return jnp.take(pop, widx, axis=0)
+
+
+def crossover(w: jnp.ndarray, cmp_states: jnp.ndarray, cmq_states: jnp.ndarray,
+              cfg: GaConfig) -> jnp.ndarray:
+    """CM: single-point crossover per variable half via shift masks (SS3.3).
+
+    mask = (2^h - 1) >> shift is the *tail* mask (Eq. 12-14); children swap
+    tails (Eq. 19-20). The raw LFSR draw is clamped to h (hardware don't-care
+    pinned in DESIGN.md SS5).
+    """
+    h = cfg.h
+    ones = jnp.uint32(cfg.table_size - 1)
+    w = w.astype(jnp.uint32)
+    pw = jnp.right_shift(w, jnp.uint32(h)) & ones
+    qw = w & ones
+    # Parents: even slots (2i) and odd slots (2i+1).
+    pw0, pw1 = pw[0::2], pw[1::2]
+    qw0, qw1 = qw[0::2], qw[1::2]
+
+    shift_p = jnp.minimum(top_bits(cmp_states, cfg.cut_bits), jnp.uint32(h))
+    shift_q = jnp.minimum(top_bits(cmq_states, cfg.cut_bits), jnp.uint32(h))
+    mask_p = jnp.right_shift(ones, shift_p)
+    mask_q = jnp.right_shift(ones, shift_q)
+
+    pz0 = (pw0 & ~mask_p) | (pw1 & mask_p)
+    pz1 = (pw1 & ~mask_p) | (pw0 & mask_p)
+    qz0 = (qw0 & ~mask_q) | (qw1 & mask_q)
+    qz1 = (qw1 & ~mask_q) | (qw0 & mask_q)
+
+    mbits = jnp.uint32((1 << cfg.m) - 1)
+    z0 = (jnp.left_shift(pz0, jnp.uint32(h)) | qz0) & mbits
+    z1 = (jnp.left_shift(pz1, jnp.uint32(h)) | qz1) & mbits
+    # Interleave children back into population order [z0_0, z1_0, z0_1, ...].
+    return jnp.stack([z0, z1], axis=1).reshape(-1)
+
+
+def mutation(z: jnp.ndarray, mm_states: jnp.ndarray, cfg: GaConfig) -> jnp.ndarray:
+    """MM: XOR the first P offspring with the top m bits of their LFSR (Eq. 21)."""
+    if cfg.p == 0:
+        return z
+    rand_m = top_bits(mm_states, cfg.m)
+    return jnp.concatenate([z[: cfg.p] ^ rand_m, z[cfg.p :]])
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ga_step(pop: jnp.ndarray, lfsr: jnp.ndarray, alpha: jnp.ndarray,
+            beta: jnp.ndarray, gamma: jnp.ndarray, scal: jnp.ndarray,
+            cfg: GaConfig):
+    """One full generation. Returns (pop', lfsr', y) where y scores `pop`."""
+    n = cfg.n
+    sm1 = lfsr[0 : 2 * n : 2]
+    sm2 = lfsr[1 : 2 * n : 2]
+    cmp_states = lfsr[2 * n : 3 * n : 2]
+    cmq_states = lfsr[2 * n + 1 : 3 * n : 2]
+    mm_states = lfsr[3 * n : 3 * n + cfg.p]
+
+    y = fitness(pop, alpha, beta, gamma, scal, cfg)
+    w = selection(pop, y, sm1, sm2, scal, cfg)
+    z = crossover(w, cmp_states, cmq_states, cfg)
+    new_pop = mutation(z, mm_states, cfg)
+    new_lfsr = lfsr_step(lfsr)
+    return new_pop, new_lfsr, y
+
+
+def best_of(y: jnp.ndarray, pop: jnp.ndarray, scal: jnp.ndarray):
+    """(best fitness, best chromosome) of a scored population."""
+    maximize = scal[SCAL_MAXIMIZE] != 0
+    key = jnp.where(maximize, y, -y)
+    i = jnp.argmax(key)
+    return y[i], pop[i]

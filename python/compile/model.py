@@ -1,0 +1,101 @@
+"""Layer-2 JAX model: a K_CHUNK-generation GA chunk around the L1 kernel.
+
+The rust coordinator executes the GA in fixed-size chunks of K_CHUNK
+generations per PJRT dispatch. Chunking (rather than baking the full K) is
+what enables the L3 contribution: between chunks the scheduler can
+early-stop converged jobs, rebatch, and backfill freed batch slots
+(DESIGN.md SS3). K_CHUNK = 25 balances dispatch overhead against scheduling
+granularity: the paper's default K = 100 is exactly 4 chunks.
+
+Chunk signature (all arrays carry a leading batch dim B):
+
+  inputs : pop u32[B,N], lfsr u32[B,L], alpha i64[B,T], beta i64[B,T],
+           gamma i64[B,G], scal i64[B,4], best_y i64[B], best_x u32[B]
+  outputs: pop', lfsr', best_y', best_x', curve i64[B,K_CHUNK]
+
+`curve[b, t]` is the best fitness of instance b's population at the start of
+chunk-generation t (the convergence series of Figs. 11-12). `best_y/best_x`
+thread the running best through chunk boundaries, so chaining chunks is
+exactly equivalent to one long run.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ga_kernel import ga_step_pallas
+from .kernels.ref import GaConfig, SCAL_MAXIMIZE
+
+K_CHUNK = 25
+
+I64_MIN = -(1 << 63)
+I64_MAX = (1 << 63) - 1
+
+
+def initial_best(scal: jnp.ndarray) -> jnp.ndarray:
+    """Identity element of the running-best reduction: -inf/+inf per direction."""
+    maximize = scal[:, SCAL_MAXIMIZE] != 0
+    return jnp.where(maximize, jnp.int64(I64_MIN), jnp.int64(I64_MAX))
+
+
+@partial(jax.jit, static_argnames=("cfg", "k_chunk"))
+def ga_chunk(pop, lfsr, alpha, beta, gamma, scal, best_y, best_x,
+             cfg: GaConfig, k_chunk: int = K_CHUNK):
+    """Run k_chunk generations; track per-generation and running best."""
+    maximize = scal[:, SCAL_MAXIMIZE] != 0  # [B] bool, loop-invariant
+
+    def gen_best(y, pop_in):
+        """Best (fitness, chromosome) of each instance's scored population."""
+        key = jnp.where(maximize[:, None], y, -y)
+        idx = jnp.argmax(key, axis=1)  # [B]
+        rows = jnp.arange(y.shape[0])
+        return y[rows, idx], pop_in[rows, idx]
+
+    def step(carry, _):
+        pop, lfsr, best_y, best_x = carry
+        npop, nlfsr, y = ga_step_pallas(pop, lfsr, alpha, beta, gamma, scal, cfg)
+        yb, xb = gen_best(y, pop)
+        improved = jnp.where(maximize, yb > best_y, yb < best_y)
+        best_y = jnp.where(improved, yb, best_y)
+        best_x = jnp.where(improved, xb, best_x)
+        return (npop, nlfsr, best_y, best_x), yb
+
+    (pop, lfsr, best_y, best_x), curve = jax.lax.scan(
+        step, (pop, lfsr, best_y, best_x), None, length=k_chunk
+    )
+    return pop, lfsr, best_y, best_x, jnp.transpose(curve)  # curve -> [B, K]
+
+
+def chunk_abstract_inputs(b: int, cfg: GaConfig):
+    """ShapeDtypeStructs matching ga_chunk's runtime signature (for AOT)."""
+    u32, i64 = jnp.uint32, jnp.int64
+    t, g = cfg.table_size, cfg.gamma_size
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds((b, cfg.n), u32),          # pop
+        sds((b, cfg.lfsr_len), u32),   # lfsr
+        sds((b, t), i64),              # alpha
+        sds((b, t), i64),              # beta
+        sds((b, g), i64),              # gamma
+        sds((b, 4), i64),              # scal
+        sds((b,), i64),                # best_y
+        sds((b,), u32),                # best_x
+    )
+
+
+def lower_chunk(b: int, cfg: GaConfig, k_chunk: int = K_CHUNK):
+    """jax.jit(...).lower for one (B, N, m, P) variant; returns Lowered."""
+    fn = partial(ga_chunk, cfg=cfg, k_chunk=k_chunk)
+    return jax.jit(fn).lower(*chunk_abstract_inputs(b, cfg))
+
+
+def lower_step(b: int, cfg: GaConfig):
+    """Single-generation artifact (used by rust runtime unit tests)."""
+    def fn(pop, lfsr, alpha, beta, gamma, scal):
+        return ga_step_pallas(pop, lfsr, alpha, beta, gamma, scal, cfg)
+
+    inputs = chunk_abstract_inputs(b, cfg)[:6]
+    return jax.jit(fn).lower(*inputs)

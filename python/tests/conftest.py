@@ -1,0 +1,5 @@
+"""Pytest config: int64 fitness values require jax x64 mode (DESIGN.md SS5)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

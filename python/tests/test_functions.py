@@ -1,0 +1,129 @@
+"""Unit tests for the FFM ROM table builder (compile/functions.py)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import functions as F
+
+
+class TestToSigned:
+    def test_positive(self):
+        assert F.to_signed(5, 10) == 5
+
+    def test_negative(self):
+        assert F.to_signed(1023, 10) == -1
+        assert F.to_signed(512, 10) == -512
+
+    def test_boundaries(self):
+        assert F.to_signed(511, 10) == 511
+        assert F.to_signed(0, 10) == 0
+
+    @given(st.integers(min_value=2, max_value=16), st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip(self, bits, data):
+        u = data.draw(st.integers(min_value=0, max_value=(1 << bits) - 1))
+        v = F.to_signed(u, bits)
+        assert -(1 << (bits - 1)) <= v < (1 << (bits - 1))
+        assert v & ((1 << bits) - 1) == u
+
+
+class TestBuildTables:
+    def test_sizes(self):
+        tab = F.build_tables(F.F3, 20)
+        assert len(tab.alpha) == 1024 and len(tab.beta) == 1024
+        assert len(tab.gamma) == 1 << tab.gamma_bits
+
+    def test_odd_m_rejected(self):
+        with pytest.raises(ValueError):
+            F.build_tables(F.F3, 21)
+
+    def test_f1_single_var_alpha_zero(self):
+        tab = F.build_tables(F.F1, 26)
+        assert all(a == 0 for a in tab.alpha)
+
+    def test_f1_values(self):
+        """F1 beta entries are exactly qx^3 - 15 qx^2 + 500 (integer math)."""
+        tab = F.build_tables(F.F1, 26)
+        h = 13
+        for u in (0, 1, 4095, 4096, 8191):
+            v = F.to_signed(u, h)
+            assert tab.beta[u] == v**3 - 15 * v**2 + 500
+
+    def test_f1_minimum_matches_paper(self):
+        """Paper SS4: min over range is f(-2^12) = -6.8971e10 (m=26)."""
+        tab = F.build_tables(F.F1, 26)
+        mn = min(tab.beta)
+        v = -(2**12)
+        assert mn == v**3 - 15 * v**2 + 500
+        assert abs(mn - (-6.8971e10)) / 6.8971e10 < 1e-3
+
+    def test_f2_linear_exact(self):
+        tab = F.build_tables(F.F2, 20)
+        h = 10
+        for u in (0, 1, 511, 512, 1023):
+            v = F.to_signed(u, h)
+            assert tab.alpha[u] == 8 * v
+            assert tab.beta[u] == -4 * v + 1020
+
+    def test_f2_bypass(self):
+        assert F.build_tables(F.F2, 20).gamma_bypass is True
+        assert F.build_tables(F.F3, 20).gamma_bypass is False
+
+    def test_f3_alpha_beta_squares(self):
+        tab = F.build_tables(F.F3, 20)
+        assert tab.alpha[3] == 9 and tab.beta[3] == 9
+        assert tab.alpha[1023] == 1  # -1 squared
+
+    def test_gamma_index_covers_delta_range(self):
+        """gidx of both extremes of delta must land inside [0, G)."""
+        for spec, m in ((F.F3, 20), (F.F3, 28), (F.F1, 26), (F.F2, 24)):
+            tab = F.build_tables(spec, m)
+            g = 1 << tab.gamma_bits
+            dmin = min(tab.alpha) + min(tab.beta)
+            dmax = max(tab.alpha) + max(tab.beta)
+            assert (dmin - tab.gmin) >> tab.gshift == 0
+            assert (dmax - tab.gmin) >> tab.gshift <= g - 1
+
+    def test_f3_gamma_accuracy(self):
+        """gamma-LUT sqrt error bounded by one bucket's derivative span."""
+        tab = F.build_tables(F.F3, 20)
+        bucket = 1 << tab.gshift
+        for delta in (0, 100, 10_000, 250_000, 500_000):
+            gidx = min(max((delta - tab.gmin) >> tab.gshift, 0), (1 << tab.gamma_bits) - 1)
+            approx = tab.gamma[gidx]
+            exact = math.sqrt(max(delta, 0))
+            # sqrt is 1/2-Lipschitz above 1; bucket midpoint error bound:
+            tol = max(1.0, bucket / (2 * math.sqrt(max(exact**2 - bucket, 1)))) + 1
+            assert abs(approx - exact) <= max(tol, math.sqrt(bucket))
+
+    def test_exact_value_consistency(self):
+        """exact_value agrees with table composition for bypass functions."""
+        tab = F.build_tables(F.F2, 20)
+        for px, qx in ((0, 0), (5, 7), (1023, 512)):
+            assert tab.alpha[px] + tab.beta[qx] == F.exact_value(F.F2, px, qx, 20)
+
+    def test_custom_fractional_spec(self):
+        """in_frac/out_frac scale domain and codomain as fixed point."""
+        spec = F.FnSpec(
+            name="half",
+            alpha=lambda x: x,
+            beta=lambda y: y,
+            signed=True,
+            in_frac=1,
+            out_frac=2,
+        )
+        tab = F.build_tables(spec, 16)  # h = 8 bits per half
+        # u=1 -> v=0.5 -> entry = 0.5 * 4 = 2
+        assert tab.alpha[1] == 2
+        # u=255 -> v=-0.5 -> entry=-2
+        assert tab.alpha[255] == -2
+
+    @given(st.sampled_from([20, 22, 24, 26, 28]), st.sampled_from(["f1", "f2", "f3"]))
+    @settings(max_examples=15, deadline=None)
+    def test_all_paper_widths_build(self, m, name):
+        tab = F.build_tables(F.SPECS[name], m)
+        assert len(tab.alpha) == 1 << (m // 2)
+        assert tab.gshift >= 0

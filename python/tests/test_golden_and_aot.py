@@ -1,0 +1,60 @@
+"""Golden-vector determinism + AOT lowering sanity."""
+
+import json
+from pathlib import Path
+
+from compile import golden
+from compile import model
+from compile.aot import VARIANTS, STEP_VARIANTS, cfg_for, chunk_name, to_hlo_text
+from compile.kernels.ref import GaConfig
+
+
+class TestGolden:
+    def test_case_is_deterministic(self):
+        a = golden.run_case("t", 8, 20, "f3", 0, 1, 2, 3)
+        b = golden.run_case("t", 8, 20, "f3", 0, 1, 2, 3)
+        assert a == b
+
+    def test_case_structure(self):
+        d = golden.run_case("t", 4, 20, "f2", 1, 10, 20, 2)
+        assert len(d["steps"]) == 2
+        s0, s1 = d["steps"]
+        assert s0["next_pop"] == s1["pop"]
+        assert len(s0["pop"]) == 4 and len(s0["lfsr"]) == 3 * 4 + d["p"]
+        assert len(d["alpha"]) == 1 << 10
+
+    def test_write_golden(self, tmp_path):
+        # Trim to two cases for speed by writing through the public API.
+        golden.write_golden(tmp_path)
+        index = json.loads((tmp_path / "index.json").read_text())
+        assert len(index) == len(golden.CASES)
+        for name in index:
+            data = json.loads((tmp_path / f"{name}.json").read_text())
+            assert data["steps"], name
+
+    def test_cases_cover_paper_matrix(self):
+        ns = {c[1] for c in golden.CASES}
+        fns = {c[3] for c in golden.CASES}
+        assert {4, 8, 16, 32, 64} <= ns
+        assert fns == {"f1", "f2", "f3"}
+        assert any(c[4] == 1 for c in golden.CASES)  # at least one maximize
+
+
+class TestAot:
+    def test_variant_list_covers_table1(self):
+        assert {(n, m) for n, m in VARIANTS} >= {(4, 20), (8, 20), (16, 20), (32, 20), (64, 20)}
+        assert (32, 26) in VARIANTS  # Fig. 11 configuration
+
+    def test_chunk_name_stable(self):
+        cfg = cfg_for(32, 20)
+        assert chunk_name(8, cfg, 25) == "ga_chunk_b8_n32_m20_p1_k25"
+
+    def test_default_p(self):
+        assert cfg_for(64, 20).p == 2  # ceil(64 * 0.02)
+        assert cfg_for(32, 20).p == 1
+
+    def test_step_lowering_has_entry(self):
+        text = to_hlo_text(model.lower_step(1, GaConfig(n=4, m=20, p=1)))
+        assert "ENTRY" in text
+        # All 9 output leaves present: 3 tensors in the tuple.
+        assert "tuple(" in text or "ROOT" in text

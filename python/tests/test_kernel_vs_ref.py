@@ -1,0 +1,122 @@
+"""THE core L1 correctness signal: Pallas kernel == jnp oracle, bit-for-bit.
+
+Hypothesis sweeps shapes (N, m, P), batch sizes, optimization direction,
+gamma bypass, and seeds. Any mismatch in any bit of any output is a failure
+— the contract is exact equality, not allclose (DESIGN.md SS5).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import functions as F
+from compile.kernels.ga_kernel import ga_step_pallas
+from compile.kernels.lfsr import initial_population, seed_bank
+from compile.kernels.ref import GaConfig, ga_step
+
+_TABLE_CACHE: dict = {}
+
+
+def tables_for(fn: str, m: int):
+    key = (fn, m)
+    if key not in _TABLE_CACHE:
+        _TABLE_CACHE[key] = F.build_tables(F.SPECS[fn], m)
+    return _TABLE_CACHE[key]
+
+
+def make_inputs(cfg: GaConfig, fn: str, b: int, seed: int, maximize: int):
+    tab = tables_for(fn, cfg.m)
+    pop = jnp.array(
+        [initial_population(seed + i, cfg.n, cfg.m) for i in range(b)], dtype=jnp.uint32
+    )
+    lfsr = jnp.array(
+        [seed_bank(seed * 31 + i, cfg.lfsr_len) for i in range(b)], dtype=jnp.uint32
+    )
+    alpha = jnp.tile(jnp.array(tab.alpha, dtype=jnp.int64), (b, 1))
+    beta = jnp.tile(jnp.array(tab.beta, dtype=jnp.int64), (b, 1))
+    gamma = jnp.tile(jnp.array(tab.gamma, dtype=jnp.int64), (b, 1))
+    scal = jnp.tile(
+        jnp.array(
+            [tab.gmin, tab.gshift, int(tab.gamma_bypass), maximize], dtype=jnp.int64
+        ),
+        (b, 1),
+    )
+    return pop, lfsr, alpha, beta, gamma, scal
+
+
+def assert_step_equal(cfg: GaConfig, inputs):
+    ref_step = jax.vmap(partial(ga_step, cfg=cfg))
+    rp, rl, ry = ref_step(*inputs)
+    kp, kl, ky = ga_step_pallas(*inputs, cfg)
+    np.testing.assert_array_equal(np.asarray(rp), np.asarray(kp), err_msg="population")
+    np.testing.assert_array_equal(np.asarray(rl), np.asarray(kl), err_msg="lfsr bank")
+    np.testing.assert_array_equal(np.asarray(ry), np.asarray(ky), err_msg="fitness")
+
+
+@given(
+    n=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    m=st.sampled_from([20, 22, 24, 26, 28]),
+    fn=st.sampled_from(["f1", "f2", "f3"]),
+    maximize=st.integers(min_value=0, max_value=1),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+@settings(max_examples=30, deadline=None)
+def test_single_step_bit_exact(n, m, fn, maximize, seed):
+    cfg = GaConfig(n=n, m=m, p=GaConfig.default_p(n))
+    assert_step_equal(cfg, make_inputs(cfg, fn, b=1, seed=seed, maximize=maximize))
+
+
+@given(
+    b=st.sampled_from([2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+@settings(max_examples=10, deadline=None)
+def test_batched_bit_exact(b, seed):
+    cfg = GaConfig(n=16, m=20, p=1)
+    assert_step_equal(cfg, make_inputs(cfg, "f3", b=b, seed=seed, maximize=0))
+
+
+@given(p=st.sampled_from([0, 1, 2, 5, 16]))
+@settings(max_examples=8, deadline=None)
+def test_mutation_counts(p):
+    cfg = GaConfig(n=16, m=20, p=p)
+    assert_step_equal(cfg, make_inputs(cfg, "f3", b=1, seed=7, maximize=0))
+
+
+def test_multi_generation_chain():
+    """10 chained generations stay bit-identical (state threading correct)."""
+    cfg = GaConfig(n=8, m=22, p=1)
+    pop, lfsr, alpha, beta, gamma, scal = make_inputs(cfg, "f3", b=2, seed=3, maximize=0)
+    ref_step = jax.vmap(partial(ga_step, cfg=cfg))
+    rp, rl = pop, lfsr
+    kp, kl = pop, lfsr
+    for gen in range(10):
+        rp, rl, ry = ref_step(rp, rl, alpha, beta, gamma, scal)
+        kp, kl, ky = ga_step_pallas(kp, kl, alpha, beta, gamma, scal, cfg)
+        np.testing.assert_array_equal(np.asarray(rp), np.asarray(kp), err_msg=f"gen {gen}")
+        np.testing.assert_array_equal(np.asarray(rl), np.asarray(kl), err_msg=f"gen {gen}")
+
+
+def test_population_stays_masked():
+    """Chromosomes never grow beyond m bits through any stage."""
+    cfg = GaConfig(n=32, m=20, p=2)
+    inputs = make_inputs(cfg, "f2", b=1, seed=11, maximize=1)
+    kp, kl, _ = ga_step_pallas(*inputs, cfg)
+    for _ in range(20):
+        kp, kl, _ = ga_step_pallas(kp, kl, *inputs[2:], cfg)
+    assert int(jnp.max(kp)) < (1 << cfg.m)
+
+
+def test_maximize_vs_minimize_differ():
+    """Direction flag must actually change selection pressure."""
+    cfg = GaConfig(n=16, m=20, p=1)
+    lo = make_inputs(cfg, "f3", b=1, seed=5, maximize=0)
+    hi = list(lo)
+    hi[5] = lo[5].at[0, 3].set(1)  # flip maximize
+    p0, _, _ = ga_step_pallas(*lo, cfg)
+    p1, _, _ = ga_step_pallas(*tuple(hi), cfg)
+    assert not np.array_equal(np.asarray(p0), np.asarray(p1))

@@ -1,0 +1,138 @@
+"""Unit tests for the LFSR / seed-bank substrate (kernels/lfsr.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.lfsr import (
+    MASK32,
+    ZERO_SEED_SUBSTITUTE,
+    initial_population,
+    lfsr_step,
+    seed_bank,
+    splitmix64,
+    top_bits,
+)
+
+
+def lfsr_step_py(s: int) -> int:
+    """Independent scalar-python model of the update (spec re-derivation)."""
+    fb = ((s >> 31) ^ (s >> 21) ^ (s >> 1) ^ s) & 1
+    return ((s << 1) | fb) & MASK32
+
+
+class TestLfsrStep:
+    def test_known_vector_from_one(self):
+        s = jnp.array([1], dtype=jnp.uint32)
+        seq = []
+        for _ in range(8):
+            s = lfsr_step(s)
+            seq.append(int(s[0]))
+        expect, v = [], 1
+        for _ in range(8):
+            v = lfsr_step_py(v)
+            expect.append(v)
+        assert seq == expect
+
+    def test_zero_is_fixed_point(self):
+        s = jnp.array([0], dtype=jnp.uint32)
+        assert int(lfsr_step(s)[0]) == 0
+
+    @given(st.integers(min_value=1, max_value=MASK32))
+    @settings(max_examples=50, deadline=None)
+    def test_matches_python_model(self, seed):
+        s = jnp.array([seed], dtype=jnp.uint32)
+        assert int(lfsr_step(s)[0]) == lfsr_step_py(seed)
+
+    def test_vectorized_is_elementwise(self):
+        seeds = [1, 2, 0xDEADBEEF, MASK32, 12345]
+        out = lfsr_step(jnp.array(seeds, dtype=jnp.uint32))
+        assert [int(v) for v in out] == [lfsr_step_py(s) for s in seeds]
+
+    def test_no_short_cycle(self):
+        """The maximal-length polynomial must not cycle within 10^5 steps.
+
+        (The paper's polynomial *as printed*, x^32+x^22+x^2+1, cycles after
+        ~7.8k states -- the reason for the documented deviation.)"""
+        s0 = 0xACE1ACE1
+        s = s0
+        for _ in range(100_000):
+            s = lfsr_step_py(s)
+            assert s != 0
+            assert s != s0
+
+    def test_feedback_bit_positions(self):
+        """Taps at exponents {32,22,2,1} -> state bits {31,21,1,0}."""
+        for bit in (31, 21, 1, 0):
+            s = 1 << bit
+            assert lfsr_step_py(s) & 1 == 1, f"bit {bit} must feed back"
+        for bit in (30, 20, 15):
+            s = 1 << bit
+            assert lfsr_step_py(s) & 1 == 0, f"bit {bit} must not feed back"
+
+
+class TestTopBits:
+    @given(st.integers(min_value=0, max_value=MASK32), st.integers(min_value=1, max_value=32))
+    @settings(max_examples=50, deadline=None)
+    def test_range_and_value(self, state, nbits):
+        out = int(top_bits(jnp.array([state], dtype=jnp.uint32), nbits)[0])
+        assert out == state >> (32 - nbits)
+        assert 0 <= out < (1 << nbits)
+
+    def test_zero_bits(self):
+        assert int(top_bits(jnp.array([MASK32], dtype=jnp.uint32), 0)[0]) == 0
+
+
+class TestSeedBank:
+    def test_deterministic(self):
+        assert seed_bank(7, 16) == seed_bank(7, 16)
+
+    def test_distinct_masters_distinct_banks(self):
+        assert seed_bank(7, 16) != seed_bank(8, 16)
+
+    def test_nonzero(self):
+        assert all(s != 0 for s in seed_bank(0, 1000))
+
+    def test_range(self):
+        assert all(0 < s <= MASK32 for s in seed_bank(123, 256))
+
+    def test_mostly_unique(self):
+        bank = seed_bank(99, 1000)
+        assert len(set(bank)) >= 999  # 32-bit birthday collisions allowed, barely
+
+    def test_prefix_stability(self):
+        """Extending the bank must not change earlier seeds (streams)."""
+        assert seed_bank(5, 8) == seed_bank(5, 16)[:8]
+
+
+class TestSplitMix64:
+    def test_reference_vector(self):
+        # Reference values for seed 0 (standard SplitMix64 stream).
+        _, z1 = splitmix64(0)
+        assert z1 == 0xE220A8397B1DCDAF
+
+    def test_stream_progression(self):
+        st1, z1 = splitmix64(42)
+        st2, z2 = splitmix64(st1)
+        assert z1 != z2 and st1 != st2
+
+
+class TestInitialPopulation:
+    def test_mask(self):
+        for m in (2, 20, 26, 32):
+            pop = initial_population(1, 64, m)
+            assert all(0 <= x < (1 << m) for x in pop)
+
+    def test_deterministic(self):
+        assert initial_population(9, 32, 20) == initial_population(9, 32, 20)
+
+    def test_independent_of_seed_bank_stream(self):
+        """Population stream must not alias the LFSR seed stream."""
+        pop = initial_population(9, 8, 32)
+        bank = seed_bank(9, 8)
+        assert [p & MASK32 for p in pop] != bank
+
+    def test_zero_substitute_constant(self):
+        assert ZERO_SEED_SUBSTITUTE != 0

@@ -1,0 +1,196 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. γ ROM size (gamma_bits): precision vs area — the paper's "decimal
+//!    precision is a LUT parameter" knob, quantified.
+//! 2. LUT fitness vs direct computation: the FFM's reason to exist.
+//! 3. Mask crossover vs branchy single-point crossover: the CM network.
+//! 4. Mutation rate MR: P = ⌈N·MR⌉ around the paper's 0.1%-2% band.
+
+use fpga_ga::bench_util::{bench, fmt_count, BenchOpts, Table};
+use fpga_ga::bits::{concat, mask32, split};
+use fpga_ga::ga::{Dims, GaInstance};
+use fpga_ga::prng::SplitMix64;
+use fpga_ga::rom::{build_tables, F3};
+use fpga_ga::synth;
+use std::sync::Arc;
+
+fn main() {
+    ablation_gamma_bits();
+    ablation_lut_vs_compute();
+    ablation_mask_vs_branch_crossover();
+    ablation_mutation_rate();
+}
+
+/// γ ROM size: achievable F3 minimum (quantization floor) and modeled area.
+fn ablation_gamma_bits() {
+    println!("=== Ablation 1: γ ROM size (precision vs area), F3, N=64, m=20, K=100 ===\n");
+    let mut t = Table::new([
+        "gamma_bits", "entries", "best found (avg 6 seeds)", "quantization floor",
+        "γ ROM bits (area proxy)",
+    ]);
+    for gamma_bits in [8u32, 10, 12, 14, 16] {
+        let dims = Dims::new(64, 20, 2).with_gamma_bits(gamma_bits);
+        let tables = Arc::new(build_tables(&F3, 20, gamma_bits));
+        let floor = tables.gamma.iter().min().unwrap();
+        let mut sum = 0.0;
+        for seed in 0..6 {
+            let mut inst = GaInstance::new(dims, tables.clone(), false, 100 + seed);
+            sum += inst.run(100).y as f64;
+        }
+        t.row([
+            gamma_bits.to_string(),
+            (1u32 << gamma_bits).to_string(),
+            format!("{:.1}", sum / 6.0),
+            floor.to_string(),
+            fmt_count((1u64 << gamma_bits) as f64 * 64.0),
+        ]);
+    }
+    t.print();
+    println!("(larger γ ROM → lower achievable fitness floor, linearly more BRAM)\n");
+}
+
+/// FFM LUT gather vs computing f3 directly in the loop.
+fn ablation_lut_vs_compute() {
+    println!("=== Ablation 2: LUT fitness (FFM) vs direct computation ===\n");
+    let tables = build_tables(&F3, 20, 12);
+    let mut rng = SplitMix64::new(5);
+    let xs: Vec<u32> = (0..4096).map(|_| rng.next_u32() & mask32(20)).collect();
+
+    let lut = bench("lut", BenchOpts::default(), || {
+        let mut acc = 0i64;
+        for &x in &xs {
+            acc = acc.wrapping_add(tables.evaluate(x));
+        }
+        std::hint::black_box(acc);
+    });
+    let direct = bench("direct", BenchOpts::default(), || {
+        let mut acc = 0f64;
+        for &x in &xs {
+            let (px, qx) = split(x, 10);
+            let a = fpga_ga::bits::to_signed(px, 10) as f64;
+            let b = fpga_ga::bits::to_signed(qx, 10) as f64;
+            acc += (a * a + b * b).sqrt();
+        }
+        std::hint::black_box(acc);
+    });
+    let mut t = Table::new(["path", "ns/eval", "evals/s"]);
+    for m in [&lut, &direct] {
+        t.row([
+            m.name.clone(),
+            format!("{:.2}", m.mean_ns() / xs.len() as f64),
+            fmt_count(m.throughput(xs.len() as f64)),
+        ]);
+    }
+    t.print();
+    println!(
+        "(the FFM trades multiplies/sqrt for table lookups — {:.1}x here; on the FPGA the\n\
+         trade is ROM blocks for DSP slices and a fixed 2-cycle latency for ANY function)\n",
+        direct.mean.as_secs_f64() / lut.mean.as_secs_f64()
+    );
+}
+
+/// The CM mask network vs a branchy reference crossover.
+fn ablation_mask_vs_branch_crossover() {
+    println!("=== Ablation 3: mask crossover (CM network) vs branchy crossover ===\n");
+    let mut rng = SplitMix64::new(7);
+    let pairs: Vec<(u32, u32, u32, u32)> = (0..4096)
+        .map(|_| {
+            (
+                rng.next_u32() & mask32(20),
+                rng.next_u32() & mask32(20),
+                rng.next_u32() % 11,
+                rng.next_u32() % 11,
+            )
+        })
+        .collect();
+
+    let mask = bench("mask-network", BenchOpts::default(), || {
+        let ones = mask32(10);
+        let mut acc = 0u32;
+        for &(w0, w1, sp, sq) in &pairs {
+            let (p0, q0) = split(w0, 10);
+            let (p1, q1) = split(w1, 10);
+            let mp = ones >> sp;
+            let mq = ones >> sq;
+            let c0 = concat((p0 & !mp) | (p1 & mp), (q0 & !mq) | (q1 & mq), 10);
+            let c1 = concat((p1 & !mp) | (p0 & mp), (q1 & !mq) | (q0 & mq), 10);
+            acc = acc.wrapping_add(c0 ^ c1);
+        }
+        std::hint::black_box(acc);
+    });
+    let branch = bench("branchy", BenchOpts::default(), || {
+        let mut acc = 0u32;
+        for &(w0, w1, sp, sq) in &pairs {
+            // Bit-by-bit branching crossover (textbook formulation).
+            let mut c0 = 0u32;
+            let mut c1 = 0u32;
+            for bit in 0..20u32 {
+                let half = bit / 10;
+                let cut = if half == 1 { sp } else { sq }; // top half = p
+                let pos_in_half = bit % 10;
+                // Swap the tail: the low (10 - cut) bits of each half come
+                // from the other parent (mask = ones >> cut in the network).
+                let swap = pos_in_half < 10 - cut;
+                let b0 = (w0 >> bit) & 1;
+                let b1 = (w1 >> bit) & 1;
+                if swap {
+                    c0 |= b1 << bit;
+                    c1 |= b0 << bit;
+                } else {
+                    c0 |= b0 << bit;
+                    c1 |= b1 << bit;
+                }
+            }
+            acc = acc.wrapping_add(c0 ^ c1);
+        }
+        std::hint::black_box(acc);
+    });
+    let mut t = Table::new(["path", "ns/pair", "pairs/s"]);
+    for m in [&mask, &branch] {
+        t.row([
+            m.name.clone(),
+            format!("{:.2}", m.mean_ns() / pairs.len() as f64),
+            fmt_count(m.throughput(pairs.len() as f64)),
+        ]);
+    }
+    t.print();
+    println!(
+        "(the paper's AND/OR mask network is branch-free: {:.1}x faster in software, and in\n\
+         hardware it is pure combinational logic — no sequential bit loop at all)\n",
+        branch.mean.as_secs_f64() / mask.mean.as_secs_f64()
+    );
+}
+
+/// Mutation rate: convergence quality around the paper's MR band.
+fn ablation_mutation_rate() {
+    println!("=== Ablation 4: mutation rate MR (P = ⌈N·MR⌉), F3, N=64, K=100 ===\n");
+    let tables = Arc::new(build_tables(&F3, 20, 12));
+    let mut t = Table::new(["MR", "P", "avg best (10 seeds)", "avg gens to <=2x floor"]);
+    for (mr, p) in [(0.0f64, 0usize), (0.005, 1), (0.02, 2), (0.06, 4), (0.25, 16), (1.0, 64)] {
+        let dims = Dims::new(64, 20, p);
+        let floor = *tables.gamma.iter().min().unwrap();
+        let mut best_sum = 0.0;
+        let mut gens_sum = 0.0;
+        for seed in 0..10 {
+            let mut inst = GaInstance::new(dims, tables.clone(), false, 500 + seed);
+            inst.run(100);
+            best_sum += inst.best().y as f64;
+            let hit = inst
+                .curve()
+                .iter()
+                .position(|&v| v <= floor * 2 + 1)
+                .unwrap_or(100);
+            gens_sum += hit as f64;
+        }
+        t.row([
+            format!("{:.1}%", mr * 100.0),
+            p.to_string(),
+            format!("{:.1}", best_sum / 10.0),
+            format!("{:.0}", gens_sum / 10.0),
+        ]);
+    }
+    t.print();
+    println!("(the paper's 0.1-2% band balances exploration against disruption; MR=0 stalls\n\
+              on lost alleles, MR→100% degrades toward random search)");
+    let _ = synth::VIRTEX7_LUTS; // keep synth linked for the area proxy note
+}

@@ -1,0 +1,124 @@
+//! Hot-path throughput: generations/second of every execution substrate,
+//! across population sizes. This is the §Perf headline bench (the paper's
+//! R_g column translated to our substrates).
+//!
+//! Substrates:
+//! * engine  — behavioral bit-exact engine (the L3 software hot path)
+//! * rtl     — cycle-accurate simulator (3 clocks per generation)
+//! * sw-GA   — idiomatic float software baseline
+//! * pjrt B=1 / B=8 — the AOT JAX/Pallas chunk, per-instance amortized
+
+use fpga_ga::baseline::SoftwareGa;
+use fpga_ga::bench_util::{bench, fmt_count, BenchOpts, Table};
+use fpga_ga::config::GaParams;
+use fpga_ga::ga::{Dims, GaInstance};
+use fpga_ga::lfsr::LfsrBank;
+use fpga_ga::prng::{initial_population, seed_bank};
+use fpga_ga::rom::{build_tables, F3, GAMMA_BITS_DEFAULT};
+use fpga_ga::rtl::GaMachine;
+use fpga_ga::runtime::{default_artifacts_dir, ChunkIo, Manifest, Runtime};
+use fpga_ga::synth;
+use std::sync::Arc;
+
+const GENS_PER_ITER: u32 = 100;
+
+fn engine_gps(n: usize) -> f64 {
+    let dims = Dims::new(n, 20, Dims::default_p(n));
+    let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+    let mut inst = GaInstance::new(dims, tables, false, 1);
+    let m = bench("engine", BenchOpts::default(), || {
+        inst.run(GENS_PER_ITER);
+    });
+    m.throughput(f64::from(GENS_PER_ITER))
+}
+
+fn rtl_gps(n: usize) -> f64 {
+    let dims = Dims::new(n, 20, Dims::default_p(n));
+    let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+    let pop = initial_population(1, n, 20);
+    let bank = LfsrBank::from_states(seed_bank(2, dims.lfsr_len()), n, dims.p);
+    let mut machine = GaMachine::new(dims, tables, false, &pop, &bank);
+    let m = bench("rtl", BenchOpts::default(), || {
+        for _ in 0..10 {
+            machine.step_generation();
+        }
+    });
+    m.throughput(10.0)
+}
+
+fn baseline_gps(n: usize) -> f64 {
+    let params = GaParams {
+        n,
+        m: 20,
+        k: GENS_PER_ITER,
+        function: "f3".into(),
+        seed: 1,
+        ..GaParams::default()
+    };
+    let m = bench("sw", BenchOpts::default(), || {
+        let mut ga = SoftwareGa::new(params.clone()).unwrap();
+        std::hint::black_box(ga.run().best_y);
+    });
+    m.throughput(f64::from(GENS_PER_ITER))
+}
+
+fn pjrt_gps(rt: &mut Runtime, n: usize, batch: usize) -> Option<f64> {
+    let dims = Dims::new(n, 20, Dims::default_p(n));
+    let exe = rt.executable(&dims, batch).ok()?;
+    if exe.meta.batch != batch {
+        return None;
+    }
+    let tables = build_tables(&F3, 20, GAMMA_BITS_DEFAULT);
+    let io = ChunkIo {
+        batch,
+        pop: (0..batch).flat_map(|b| initial_population(b as u64, dims.n, dims.m)).collect(),
+        lfsr: (0..batch).flat_map(|b| seed_bank(b as u64 + 9, dims.lfsr_len())).collect(),
+        alpha: tables.alpha.repeat(batch),
+        beta: tables.beta.repeat(batch),
+        gamma: tables.gamma.repeat(batch),
+        scal: tables.scalars(false).repeat(batch),
+        best_y: vec![i64::MAX; batch],
+        best_x: vec![0; batch],
+        curve: vec![],
+    };
+    let k = exe.meta.k_chunk;
+    let mut slot = Some(io);
+    let m = bench("pjrt", BenchOpts::quick(), || {
+        let out = exe.run(slot.take().unwrap()).unwrap();
+        std::hint::black_box(out.best_y[0]);
+        slot = Some(out);
+    });
+    // Per-instance generations per second.
+    Some(m.throughput(f64::from(k) * batch as f64))
+}
+
+fn main() {
+    let manifest = Manifest::load(&default_artifacts_dir()).expect("run `make artifacts`");
+    let mut rt = Runtime::new(manifest).unwrap();
+
+    println!("=== GA generation throughput by substrate (F3, m = 20) ===\n");
+    let mut t = Table::new([
+        "N", "engine gen/s", "rtl-sim gen/s", "sw-GA gen/s", "pjrt B=1 gen/s",
+        "pjrt B=8 gen/s/inst", "modeled FPGA Rg",
+    ]);
+    for n in [4usize, 8, 16, 32, 64] {
+        let d = Dims::new(n, 20, Dims::default_p(n));
+        let p1 = pjrt_gps(&mut rt, n, 1).map(fmt_count).unwrap_or_else(|| "-".into());
+        let p8 = pjrt_gps(&mut rt, n, 8).map(fmt_count).unwrap_or_else(|| "-".into());
+        t.row([
+            n.to_string(),
+            fmt_count(engine_gps(n)),
+            fmt_count(rtl_gps(n)),
+            fmt_count(baseline_gps(n)),
+            p1,
+            p8,
+            fmt_count(synth::generations_per_sec(&d)),
+        ]);
+    }
+    t.print();
+
+    println!("\nnotes:");
+    println!("* engine vs sw-GA is the hardware-shaped-datapath dividend (LUT fitness, mask crossover).");
+    println!("* pjrt B=8 vs B=1 shows dispatch-overhead amortization — the batching rationale.");
+    println!("* 'modeled FPGA Rg' is the paper-calibrated timing model (Table 1), for scale.");
+}

@@ -1,0 +1,103 @@
+//! Figs. 8-10 (the three fitness functions as the FFM ROMs encode them,
+//! with quantization error vs the exact function) and Figs. 15-16
+//! (clock vs m; LUTs vs m).
+
+use fpga_ga::bench_util::Table;
+use fpga_ga::bits::{concat, mask32};
+use fpga_ga::rom::{build_tables, FnSpec, F1, F2, F3, GAMMA_BITS_DEFAULT};
+use fpga_ga::synth;
+
+/// Max/mean |ROM composition − exact f| over a domain sample.
+fn quantization_error(spec: &FnSpec, m: u32, samples: u32) -> (f64, f64, f64) {
+    let tab = build_tables(spec, m, GAMMA_BITS_DEFAULT);
+    let h = m / 2;
+    let size = 1u32 << h;
+    let step = (size / samples.min(size)).max(1);
+    let out_scale = (1i64 << spec.out_frac) as f64;
+    let mut max_err = 0.0f64;
+    let mut sum_err = 0.0f64;
+    let mut count = 0usize;
+    let mut range = 0.0f64;
+    for px in (0..size).step_by(step as usize) {
+        for qx in (0..size).step_by(step as usize) {
+            let x = concat(px, qx, h) & mask32(m);
+            let got = tab.evaluate(x) as f64 / out_scale;
+            let exact = spec.exact_value(px, qx, m);
+            let err = (got - exact).abs();
+            max_err = max_err.max(err);
+            sum_err += err;
+            range = range.max(exact.abs());
+            count += 1;
+        }
+    }
+    (max_err, sum_err / count as f64, range)
+}
+
+fn main() {
+    println!("=== Figs. 8-10: fitness functions as FFM ROM contents ===\n");
+    println!("(the hardware computes f through {}+{}-entry LUTs; this bench measures how",
+             1 << 10, 1 << GAMMA_BITS_DEFAULT);
+    println!(" faithfully the ROM composition reproduces the analytic function)\n");
+
+    let mut t = Table::new([
+        "fig", "function", "m", "gamma", "max |err|", "mean |err|", "max err % of range",
+    ]);
+    for (fig, spec, m) in [
+        ("Fig 8", &F1, 26u32),
+        ("Fig 9", &F2, 20),
+        ("Fig 10", &F3, 20),
+    ] {
+        let (max_e, mean_e, range) = quantization_error(spec, m, 128);
+        t.row([
+            fig.to_string(),
+            spec.name.to_string(),
+            m.to_string(),
+            if spec.gamma_bypass { "bypass (exact)".into() } else { format!("2^{} LUT", GAMMA_BITS_DEFAULT) },
+            format!("{max_e:.3}"),
+            format!("{mean_e:.4}"),
+            format!("{:.4}%", max_e / range * 100.0),
+        ]);
+    }
+    t.print();
+
+    println!("\nfunction shape samples (x = qx code domain midline):\n");
+    for (name, spec, m) in [("F1", &F1, 26u32), ("F2", &F2, 20), ("F3", &F3, 20)] {
+        let tab = build_tables(spec, m, GAMMA_BITS_DEFAULT);
+        let h = m / 2;
+        let size = 1u32 << h;
+        print!("{name}: ");
+        // 9 samples across the signed domain: codes at fractions of range.
+        let samples: Vec<String> = (0..9)
+            .map(|i| {
+                let u = (i * (size - 1) / 8) & (size - 1);
+                // vary qx, hold px mid-domain (0 for single var)
+                let px = if spec.single_var { 0 } else { 0 };
+                let x = concat(px, u, h);
+                format!("f({})={}", fpga_ga::bits::to_signed(u, h), tab.evaluate(x))
+            })
+            .collect();
+        println!("{}", samples.join("  "));
+    }
+
+    println!("\n=== Fig. 15: clock vs m at N = 32 ===\n");
+    let mut f15 = Table::new(["m", "clock model MHz"]);
+    for (x, ys) in &synth::fig15().points {
+        f15.row([format!("{x:.0}"), format!("{:.2}", ys[0])]);
+    }
+    f15.print();
+    println!("(paper: linear fall, \"slightly more than 1 MHz\" from m=20 to 28; model: {:.2} MHz)",
+        synth::fig15().points[0].1[0] - synth::fig15().points[4].1[0]);
+
+    println!("\n=== Fig. 16: LUTs vs m for N in {{16, 32, 64}} ===\n");
+    let mut f16 = Table::new(["m", "N=16", "N=32", "N=64"]);
+    for (x, ys) in &synth::fig16().points {
+        f16.row([
+            format!("{x:.0}"),
+            format!("{:.0}", ys[0]),
+            format!("{:.0}", ys[1]),
+            format!("{:.0}", ys[2]),
+        ]);
+    }
+    f16.print();
+    println!("(paper: linear growth in m per N, largest spread at m = 28 — both hold)");
+}

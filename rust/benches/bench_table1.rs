@@ -1,0 +1,81 @@
+//! Table 1 + Figs. 13/14 regeneration (paper §4) + RTL simulator speed.
+//!
+//! The area/timing numbers come from the calibrated structural models over
+//! the RTL netlist (the Vivado substitute, DESIGN.md §2); the paper columns
+//! are printed alongside with per-row residuals. The second half measures
+//! the cycle-accurate simulator itself (simulated clocks/second), which is
+//! OUR substrate's throughput — not a paper claim, but the number that
+//! bounds every RTL-based experiment.
+
+use fpga_ga::bench_util::{bench, fmt_count, BenchOpts, Table};
+use fpga_ga::ga::Dims;
+use fpga_ga::lfsr::LfsrBank;
+use fpga_ga::prng::{initial_population, seed_bank};
+use fpga_ga::rom::{build_tables, F3, GAMMA_BITS_DEFAULT};
+use fpga_ga::rtl::GaMachine;
+use fpga_ga::synth;
+use std::sync::Arc;
+
+fn main() {
+    println!("=== Table 1: GA synthesis on FPGA, m = 20 (model vs paper) ===\n");
+    let mut t = Table::new([
+        "N", "FF model", "FF paper", "LUT model", "LUT paper", "util%",
+        "clk model MHz", "clk paper", "Rg model M/s", "Rg paper", "Tg ns", "max err%",
+    ]);
+    for r in synth::table1() {
+        let d = Dims::new(r.n, 20, Dims::default_p(r.n));
+        t.row([
+            r.n.to_string(),
+            format!("{:.0}", r.ff_model),
+            format!("{:.0}", r.ff_paper),
+            format!("{:.0}", r.lut_model),
+            format!("{:.0}", r.lut_paper),
+            format!("{:.2}", r.lut_util_pct),
+            format!("{:.2}", r.clock_model),
+            format!("{:.2}", r.clock_paper),
+            format!("{:.2}", r.rg_model_m),
+            format!("{:.2}", r.rg_paper_m),
+            format!("{:.1}", synth::tg_ns(&d)),
+            format!("{:.1}", r.max_err_pct()),
+        ]);
+    }
+    t.print();
+    println!("\npaper headline check: N=64 Tg = {:.1} ns (paper: ≈87 ns); \
+              N=64 LUT utilization = {:.1}% (< 1/5 of the Virtex-7 ✓)",
+        synth::tg_ns(&Dims::new(64, 20, 2)),
+        synth::utilization_pct(&Dims::new(64, 20, 2)));
+
+    println!("\n=== Fig. 13 (FF vs N, linear) / Fig. 14 (LUT vs N, ~N²) series ===\n");
+    let mut f = Table::new(["N", "FF model", "FF paper", "LUT model", "LUT paper"]);
+    for ((x, ff), (_, lut)) in synth::fig13().points.iter().zip(synth::fig14().points.iter()) {
+        f.row([
+            format!("{x:.0}"),
+            format!("{:.0}", ff[0]),
+            format!("{:.0}", ff[1]),
+            format!("{:.0}", lut[0]),
+            format!("{:.0}", lut[1]),
+        ]);
+    }
+    f.print();
+
+    println!("\n=== RTL simulator throughput (substrate speed, not a paper number) ===\n");
+    let mut s = Table::new(["N", "sim clocks/s", "sim generations/s", "vs modeled FPGA Rg"]);
+    for n in [4usize, 8, 16, 32, 64] {
+        let d = Dims::new(n, 20, Dims::default_p(n));
+        let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+        let pop = initial_population(1, n, 20);
+        let bank = LfsrBank::from_states(seed_bank(2, d.lfsr_len()), n, d.p);
+        let mut machine = GaMachine::new(d, tables, false, &pop, &bank);
+        let m = bench(&format!("rtl_n{n}"), BenchOpts::default(), || {
+            machine.step_generation();
+        });
+        let gens_per_s = m.throughput(1.0);
+        s.row([
+            n.to_string(),
+            fmt_count(gens_per_s * 3.0),
+            fmt_count(gens_per_s),
+            format!("{:.1e}x slower", synth::generations_per_sec(&d) / gens_per_s),
+        ]);
+    }
+    s.print();
+}

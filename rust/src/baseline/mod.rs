@@ -1,0 +1,187 @@
+//! Baselines for the comparison experiments (paper §5, Table 2).
+//!
+//! * [`SoftwareGa`] — an idiomatic *sequential* software GA (float fitness,
+//!   `Vec` populations, per-individual loops — deliberately NOT the
+//!   hardware-shaped bit-parallel engine). This is the "equivalent software
+//!   implementation" role that [6] used for its ×5.16 speedup claim, measured
+//!   live on this machine by `bench_table2`.
+//! * [`reference_times`] — the prior-work FPGA numbers exactly as the paper
+//!   cites them (the paper compares against published times, not reruns).
+
+use crate::config::GaParams;
+use crate::prng::SplitMix64;
+
+/// Result of a software-baseline run.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub best_y: f64,
+    pub best_x: (f64, f64),
+    pub generations: u32,
+}
+
+/// Sequential software GA with the same operator suite as the hardware
+/// (binary tournament, single-point-per-variable crossover, XOR-style
+/// mutation) but a conventional software representation.
+pub struct SoftwareGa {
+    params: GaParams,
+    rng: SplitMix64,
+    pop: Vec<u32>,
+    spec: crate::rom::FnSpec,
+}
+
+impl SoftwareGa {
+    pub fn new(params: GaParams) -> crate::Result<Self> {
+        params.validate()?;
+        let spec = params.spec()?;
+        let mut rng = SplitMix64::new(params.seed);
+        let mask = crate::bits::mask32(params.m);
+        let pop = (0..params.n).map(|_| rng.next_u32() & mask).collect();
+        Ok(Self {
+            params,
+            rng,
+            pop,
+            spec,
+        })
+    }
+
+    fn fitness(&self, x: u32) -> f64 {
+        let h = self.params.h();
+        let (px, qx) = crate::bits::split(x, h);
+        self.spec.exact_value(px, qx, self.params.m)
+    }
+
+    fn better(&self, a: f64, b: f64) -> bool {
+        if self.params.maximize {
+            a > b
+        } else {
+            a < b
+        }
+    }
+
+    /// Run K generations; returns the best found.
+    pub fn run(&mut self) -> BaselineResult {
+        let n = self.params.n;
+        let m = self.params.m;
+        let h = self.params.h();
+        let p = self.params.p();
+        let mask_m = crate::bits::mask32(m);
+        let mask_h = crate::bits::mask32(h);
+        let mut best_x = self.pop[0];
+        let mut best_y = self.fitness(best_x);
+        let mut fit = vec![0.0f64; n];
+        let mut next = vec![0u32; n];
+
+        for _ in 0..self.params.k {
+            // Sequential fitness pass.
+            for (j, &x) in self.pop.iter().enumerate() {
+                fit[j] = self.fitness(x);
+                if self.better(fit[j], best_y) {
+                    best_y = fit[j];
+                    best_x = x;
+                }
+            }
+            // Tournament selection into parents.
+            for slot in next.iter_mut() {
+                let a = self.rng.below(n as u64) as usize;
+                let b = self.rng.below(n as u64) as usize;
+                *slot = if self.better(fit[a], fit[b]) {
+                    self.pop[a]
+                } else {
+                    self.pop[b]
+                };
+            }
+            // Single-point crossover per half, pairwise.
+            for i in 0..n / 2 {
+                let (w0, w1) = (next[2 * i], next[2 * i + 1]);
+                let cut_p = (self.rng.below(u64::from(h) + 1)) as u32;
+                let cut_q = (self.rng.below(u64::from(h) + 1)) as u32;
+                let mp = mask_h >> cut_p;
+                let mq = mask_h >> cut_q;
+                let mask = (mp << h) | mq;
+                next[2 * i] = ((w0 & !mask) | (w1 & mask)) & mask_m;
+                next[2 * i + 1] = ((w1 & !mask) | (w0 & mask)) & mask_m;
+            }
+            // Mutation of the first P.
+            for slot in next.iter_mut().take(p) {
+                *slot ^= self.rng.next_u32() & mask_m;
+            }
+            std::mem::swap(&mut self.pop, &mut next);
+        }
+
+        let (px, qx) = crate::bits::split(best_x, h);
+        let decode = |u: u32| crate::bits::to_signed(u, h) as f64;
+        BaselineResult {
+            best_y,
+            best_x: (decode(px), decode(qx)),
+            generations: self.params.k,
+        }
+    }
+}
+
+/// Prior-work reference times as cited by the paper (§5, Table 2):
+/// (label, N, k, time in µs).
+pub fn reference_times() -> Vec<(&'static str, usize, u32, f64)> {
+    vec![
+        ("[9] Vavouras 2009 (FPGA)", 32, 100, 210.0),
+        ("[24] Deliparaschos 2008 (FPGA)", 32, 60, 1_702.0),
+        ("[6] Fernando 2008 (GA IP core)", 32, 32, 7_290.0),
+        ("[10] Zhu 2007 (OIMGA)", 64, 500, 800_000.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(fn_name: &str, maximize: bool) -> GaParams {
+        GaParams {
+            n: 32,
+            m: 20,
+            k: 100,
+            maximize,
+            function: fn_name.into(),
+            seed: 7,
+            ..GaParams::default()
+        }
+    }
+
+    #[test]
+    fn minimizes_f3_toward_zero() {
+        let mut ga = SoftwareGa::new(params("f3", false)).unwrap();
+        let r = ga.run();
+        // Domain max is ~724; random best-of-32 would be ~130.
+        assert!(r.best_y < 60.0, "best {}", r.best_y);
+        assert_eq!(r.generations, 100);
+    }
+
+    #[test]
+    fn maximizes_f2() {
+        let mut ga = SoftwareGa::new(params("f2", true)).unwrap();
+        let r = ga.run();
+        // Max is 8*511 + 4*512 + 1020 = 7156.
+        assert!(r.best_y > 5000.0, "best {}", r.best_y);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SoftwareGa::new(params("f3", false)).unwrap().run();
+        let b = SoftwareGa::new(params("f3", false)).unwrap().run();
+        assert_eq!(a.best_y, b.best_y);
+        assert_eq!(a.best_x, b.best_x);
+    }
+
+    #[test]
+    fn reference_table_matches_paper() {
+        let refs = reference_times();
+        assert_eq!(refs.len(), 4);
+        assert_eq!(refs[0].3, 210.0); // 0.21 ms
+        assert_eq!(refs[3].3, 800_000.0); // 0.8 s
+    }
+
+    #[test]
+    fn rejects_invalid_params() {
+        let mut p = params("f3", false);
+        p.n = 3;
+        assert!(SoftwareGa::new(p).is_err());
+    }
+}

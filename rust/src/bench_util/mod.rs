@@ -1,0 +1,253 @@
+//! Benchmark harness — substrate (criterion is not in the offline crate set).
+//!
+//! Provides warmed-up, repeated timing with robust statistics, and table /
+//! series printers shared by every `rust/benches/bench_*.rs` target so the
+//! paper's tables and figures all print in one consistent format (and are
+//! optionally dumped as JSON for EXPERIMENTS.md).
+
+use std::time::{Duration, Instant};
+
+/// Result of measuring one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+
+    /// items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    /// Target measurement time (iterations auto-scaled to fill it).
+    pub measure: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: u64,
+    /// Minimum measured iterations (even if slow).
+    pub min_iters: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 1_000_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Faster profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_iters: 10_000,
+            min_iters: 3,
+        }
+    }
+}
+
+/// Measure `f`, returning robust statistics. `f` is a full iteration; use a
+/// closure capturing pre-built inputs to exclude setup.
+pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> Measurement {
+    // Warmup + rate estimation.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < opts.warmup || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= opts.max_iters {
+            break;
+        }
+    }
+    let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+
+    // Choose a sample plan: ~50 samples of batched iterations.
+    let total_iters = ((opts.measure.as_secs_f64() / per_iter.as_secs_f64().max(1e-9)) as u64)
+        .clamp(opts.min_iters, opts.max_iters);
+    let samples = total_iters.min(50).max(1);
+    let batch = (total_iters / samples).max(1);
+
+    let mut times: Vec<Duration> = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t0.elapsed() / batch as u32);
+    }
+    times.sort();
+
+    let mean_ns = times.iter().map(|d| d.as_secs_f64()).sum::<f64>() / times.len() as f64;
+    let var = times
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_ns;
+            x * x
+        })
+        .sum::<f64>()
+        / times.len() as f64;
+    let idx = |q: f64| ((times.len() - 1) as f64 * q) as usize;
+
+    Measurement {
+        name: name.to_string(),
+        iters: samples * batch,
+        mean: Duration::from_secs_f64(mean_ns),
+        median: times[idx(0.5)],
+        p95: times[idx(0.95)],
+        min: times[0],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Human-friendly duration formatting (ns/µs/ms/s auto-scale).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Large-number formatting with thousands separators.
+pub fn fmt_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// Fixed-width table printer for paper-style tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Self {
+        Self {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_iters: 100_000,
+            min_iters: 3,
+        };
+        let m = bench("spin", opts, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean >= m.min);
+        assert!(m.p95 >= m.median);
+        assert!(m.mean_ns() > 0.0);
+        assert!(m.throughput(1.0) > 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).contains("s"));
+    }
+
+    #[test]
+    fn fmt_count_scales() {
+        assert_eq!(fmt_count(1500.0), "1.50k");
+        assert_eq!(fmt_count(2_000_000.0), "2.00M");
+        assert_eq!(fmt_count(3_000_000_000.0), "3.00G");
+        assert_eq!(fmt_count(12.0), "12.0");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["N", "LUTs"]);
+        t.row(["4", "592"]);
+        t.row(["64", "58875"]);
+        let s = t.render();
+        assert!(s.contains("N"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_row_width_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+}

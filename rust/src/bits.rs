@@ -1,0 +1,118 @@
+//! Bit-width helpers shared by every layer.
+//!
+//! The paper's datapath is a forest of odd-width buses (m-bit chromosomes,
+//! m/2-bit halves, ⌈log₂N⌉-bit mux selectors...). This module pins the
+//! conventions of DESIGN.md §5 in one place so `ga`, `rtl` and `rom` cannot
+//! drift apart.
+
+/// Mask with the low `n` bits set (`n` in 0..=32).
+#[inline]
+pub const fn mask32(n: u32) -> u32 {
+    if n >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << n) - 1
+    }
+}
+
+/// The paper's truncation convention: the `n` *most significant* bits of a
+/// 32-bit word (used for every LFSR-driven selector).
+#[inline]
+pub const fn top_bits(state: u32, n: u32) -> u32 {
+    if n == 0 {
+        0
+    } else {
+        state >> (32 - n)
+    }
+}
+
+/// ⌈log₂ v⌉ for v ≥ 1 (mux selector widths).
+#[inline]
+pub const fn ceil_log2(v: u32) -> u32 {
+    if v <= 1 {
+        0
+    } else {
+        32 - (v - 1).leading_zeros()
+    }
+}
+
+/// Split an m-bit chromosome into its (px, qx) halves, px = top half
+/// (Eq. 7: x = px ‖ qx).
+#[inline]
+pub const fn split(x: u32, h: u32) -> (u32, u32) {
+    ((x >> h) & mask32(h), x & mask32(h))
+}
+
+/// Concatenate (px, qx) halves back into an m-bit chromosome.
+#[inline]
+pub const fn concat(px: u32, qx: u32, h: u32) -> u32 {
+    (px << h) | (qx & mask32(h))
+}
+
+/// Two's-complement reinterpretation of a `bits`-wide code (ROM domain
+/// mapping; mirrors python `functions.to_signed`).
+#[inline]
+pub const fn to_signed(u: u32, bits: u32) -> i64 {
+    let half = 1i64 << (bits - 1);
+    let v = u as i64;
+    if v >= half {
+        v - (1i64 << bits)
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask32_widths() {
+        assert_eq!(mask32(0), 0);
+        assert_eq!(mask32(1), 1);
+        assert_eq!(mask32(10), 0x3FF);
+        assert_eq!(mask32(32), u32::MAX);
+        assert_eq!(mask32(33), u32::MAX);
+    }
+
+    #[test]
+    fn top_bits_convention() {
+        assert_eq!(top_bits(0xFFFF_FFFF, 5), 31);
+        assert_eq!(top_bits(0x8000_0000, 1), 1);
+        assert_eq!(top_bits(0x8000_0000, 2), 2);
+        assert_eq!(top_bits(0x1234_5678, 0), 0);
+        assert_eq!(top_bits(0xABCD_EF01, 32), 0xABCD_EF01);
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(11), 4); // m/2+1 for m=20
+        assert_eq!(ceil_log2(64), 6);
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        for h in [10u32, 11, 13, 14] {
+            let m = 2 * h;
+            for x in [0u32, 1, 0x000F_F00F & mask32(m), mask32(m)] {
+                let (px, qx) = split(x, h);
+                assert!(px <= mask32(h) && qx <= mask32(h));
+                assert_eq!(concat(px, qx, h), x);
+            }
+        }
+    }
+
+    #[test]
+    fn to_signed_matches_python() {
+        assert_eq!(to_signed(5, 10), 5);
+        assert_eq!(to_signed(1023, 10), -1);
+        assert_eq!(to_signed(512, 10), -512);
+        assert_eq!(to_signed(511, 10), 511);
+        assert_eq!(to_signed(8191, 13), -1);
+        assert_eq!(to_signed(4096, 13), -4096);
+    }
+}

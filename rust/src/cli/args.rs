@@ -1,0 +1,120 @@
+//! Tiny argument parser: `command [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+/// Parse error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, ArgError> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        out.command = it.next().unwrap_or_default();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(ArgError("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, ArgError> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| ArgError(format!("invalid value for --{name}: `{s}`"))),
+        }
+    }
+
+    /// Option with default.
+    pub fn opt_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ArgError> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_positional() {
+        let a = parse("optimize f3 extra");
+        assert_eq!(a.command, "optimize");
+        assert_eq!(a.positional, vec!["f3", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse("optimize --n 64 --m=26 --seed 7");
+        assert_eq!(a.opt("n"), Some("64"));
+        assert_eq!(a.opt("m"), Some("26"));
+        assert_eq!(a.opt_or::<u64>("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("serve --pjrt --workers 4 --verbose");
+        assert!(a.flag("pjrt"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("workers"));
+        assert_eq!(a.opt("workers"), Some("4"));
+    }
+
+    #[test]
+    fn parse_errors() {
+        let a = parse("x --n notanumber");
+        assert!(a.opt_parse::<u32>("n").is_err());
+        assert!(Args::parse(vec!["c".into(), "--".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or::<usize>("n", 32).unwrap(), 32);
+        assert!(a.opt("none").is_none());
+    }
+}

@@ -1,0 +1,303 @@
+//! Launcher subcommands. `fpga-ga <command> [options]`.
+
+use crate::baseline::SoftwareGa;
+use crate::bench_util::Table;
+use crate::cli::Args;
+use crate::config::{Config, GaParams};
+use crate::coordinator::{Coordinator, OptimizeRequest};
+use crate::ga::{Dims, GaInstance};
+use crate::lfsr::LfsrBank;
+use crate::prng::{initial_population, seed_bank};
+use crate::rom::build_tables;
+use crate::rtl::GaMachine;
+use crate::synth;
+use std::sync::Arc;
+
+pub const USAGE: &str = "\
+fpga-ga — parallel FPGA Genetic Algorithm (Torquato & Fernandes 2018) on rust + JAX/Pallas
+
+USAGE: fpga-ga <command> [options]
+
+COMMANDS:
+  optimize    run one GA optimization
+              --function f1|f2|f3  --n N  --m M  --k K  --seed S
+              --maximize  --pjrt  --config FILE
+  serve       start the coordinator and run a synthetic request trace
+              --jobs J  --workers W  --batch B  --pjrt  --early-stop C
+  rtl         run the cycle-accurate machine and report cycles
+              --function F --n N --m M --k K --seed S
+  table1      print Table 1 (synthesis model vs paper)
+  table2      print Table 2 (speedups vs state of the art)
+  figures     print Fig. 13-16 series (CSV-ish)
+  baseline    run the sequential software GA
+              --function F --n N --m M --k K --seed S
+  help        this message
+";
+
+fn ga_params_from(args: &Args) -> crate::Result<GaParams> {
+    let mut p = if let Some(path) = args.opt("config") {
+        Config::from_file(std::path::Path::new(path))?.ga
+    } else {
+        GaParams::default()
+    };
+    if let Some(f) = args.opt("function") {
+        p.function = f.to_string();
+    }
+    p.n = args.opt_or("n", p.n)?;
+    p.m = args.opt_or("m", p.m)?;
+    p.k = args.opt_or("k", p.k)?;
+    p.seed = args.opt_or("seed", p.seed)?;
+    if args.flag("maximize") {
+        p.maximize = true;
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Entry point used by main.rs (and exercised directly by tests).
+pub fn run(args: Args) -> crate::Result<String> {
+    match args.command.as_str() {
+        "optimize" => cmd_optimize(&args),
+        "serve" => cmd_serve(&args),
+        "rtl" => cmd_rtl(&args),
+        "table1" => Ok(render_table1()),
+        "table2" => Ok(render_table2()),
+        "figures" => Ok(render_figures()),
+        "baseline" => cmd_baseline(&args),
+        "" | "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        other => anyhow::bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn cmd_optimize(args: &Args) -> crate::Result<String> {
+    let params = ga_params_from(args)?;
+    let mut serve = crate::config::ServeParams::default();
+    serve.use_pjrt = args.flag("pjrt");
+    let coord = Coordinator::builder(serve).start()?;
+    let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("cli"));
+    coord.shutdown();
+    anyhow::ensure!(result.error.is_none(), "job failed: {:?}", result.error);
+    let (px, qx) = result.decoded_vars(params.m);
+    Ok(format!(
+        "function={} N={} m={} K={} direction={} backend={}\n\
+         best fitness (fixed-point): {}\n\
+         best chromosome: {:#x}  decoded (px, qx) = ({}, {})\n\
+         generations executed: {}  latency: {:?}\n\
+         convergence (every 10th gen): {:?}",
+        params.function,
+        params.n,
+        params.m,
+        params.k,
+        if params.maximize { "maximize" } else { "minimize" },
+        result.backend,
+        result.best_y,
+        result.best_x,
+        px,
+        qx,
+        result.generations,
+        result.latency,
+        result.curve.iter().step_by(10).collect::<Vec<_>>(),
+    ))
+}
+
+fn cmd_serve(args: &Args) -> crate::Result<String> {
+    let jobs: usize = args.opt_or("jobs", 32)?;
+    let mut serve = crate::config::ServeParams::default();
+    serve.workers = args.opt_or("workers", serve.workers)?;
+    serve.max_batch = args.opt_or("batch", serve.max_batch)?;
+    serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
+    serve.use_pjrt = args.flag("pjrt");
+    let params = ga_params_from(args)?;
+
+    let coord = Coordinator::builder(serve).start()?;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let mut p = params.clone();
+            p.seed = params.seed + i as u64;
+            coord.submit(OptimizeRequest::new(p).with_tag(format!("trace-{i}")))
+        })
+        .collect();
+    let mut best = i64::MAX;
+    for h in handles {
+        let r = h.wait();
+        anyhow::ensure!(r.error.is_none(), "job failed: {:?}", r.error);
+        best = best.min(r.best_y);
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    coord.shutdown();
+    Ok(format!(
+        "served {jobs} jobs in {wall:?} ({:.1} jobs/s)\nbest across trace: {best}\n{}",
+        jobs as f64 / wall.as_secs_f64(),
+        m.render()
+    ))
+}
+
+fn cmd_rtl(args: &Args) -> crate::Result<String> {
+    let params = ga_params_from(args)?;
+    let dims = Dims::from_params(&params);
+    let tables = Arc::new(build_tables(&params.spec()?, params.m, params.gamma_bits));
+    let pop = initial_population(params.seed, dims.n, dims.m);
+    let bank = LfsrBank::from_states(
+        seed_bank(params.seed ^ 0x5EED_0000_0000_0001, dims.lfsr_len()),
+        dims.n,
+        dims.p,
+    );
+    let mut machine = GaMachine::new(dims, tables.clone(), params.maximize, &pop, &bank);
+    // Twin behavioral run cross-check (the RTL's reason to exist).
+    let mut twin = GaInstance::from_state(dims, tables, params.maximize, pop, bank);
+    for _ in 0..params.k {
+        machine.step_generation();
+        twin.step();
+    }
+    anyhow::ensure!(
+        machine.population() == twin.population(),
+        "RTL diverged from behavioral engine"
+    );
+    let d = machine.dims();
+    Ok(format!(
+        "RTL simulation: {} generations in {} clocks (3 per generation ✓)\n\
+         population bit-exact with behavioral engine ✓\n\
+         modeled clock {:.2} MHz → modeled wall time {:.2} µs (T_g = {:.1} ns)\n\
+         best fitness: {}",
+        machine.generations(),
+        machine.clocks(),
+        synth::fmax_mhz(d),
+        synth::timing::run_time_us(d, params.k),
+        synth::tg_ns(d),
+        twin.best().y,
+    ))
+}
+
+fn cmd_baseline(args: &Args) -> crate::Result<String> {
+    let params = ga_params_from(args)?;
+    let t0 = std::time::Instant::now();
+    let result = SoftwareGa::new(params.clone())?.run();
+    let wall = t0.elapsed();
+    Ok(format!(
+        "software baseline: N={} m={} K={} → best {} at (px, qx) = ({}, {}) in {wall:?}",
+        params.n, params.m, params.k, result.best_y, result.best_x.0, result.best_x.1
+    ))
+}
+
+fn render_table1() -> String {
+    let mut t = Table::new([
+        "N", "FF model", "FF paper", "LUT model", "LUT paper", "util%", "clk model",
+        "clk paper", "Rg model M/s", "Rg paper", "max err%",
+    ]);
+    for r in synth::table1() {
+        t.row([
+            r.n.to_string(),
+            format!("{:.0}", r.ff_model),
+            format!("{:.0}", r.ff_paper),
+            format!("{:.0}", r.lut_model),
+            format!("{:.0}", r.lut_paper),
+            format!("{:.2}", r.lut_util_pct),
+            format!("{:.2}", r.clock_model),
+            format!("{:.2}", r.clock_paper),
+            format!("{:.2}", r.rg_model_m),
+            format!("{:.2}", r.rg_paper_m),
+            format!("{:.1}", r.max_err_pct()),
+        ]);
+    }
+    format!("Table 1 — GA synthesis on FPGA for m = 20 (model vs paper)\n{}", t.render())
+}
+
+fn render_table2() -> String {
+    let mut t = Table::new([
+        "Reference", "N", "k", "ref time µs", "model µs", "paper µs", "model speedup",
+        "paper speedup",
+    ]);
+    for r in synth::table2() {
+        t.row([
+            r.reference.to_string(),
+            r.n.to_string(),
+            r.k.to_string(),
+            format!("{:.1}", r.reference_time_us),
+            format!("{:.2}", r.model_time_us),
+            format!("{:.2}", r.paper_time_us),
+            format!("{:.0}x", r.model_speedup),
+            format!("{:.0}x", r.paper_speedup),
+        ]);
+    }
+    format!("Table 2 — comparison with state of the art (model vs paper)\n{}", t.render())
+}
+
+fn render_figures() -> String {
+    let mut out = String::new();
+    for fig in [synth::fig13(), synth::fig14(), synth::fig15(), synth::fig16()] {
+        out.push_str(&format!("# {} (x = {})\n", fig.name, fig.x_label));
+        out.push_str(&format!("x,{}\n", fig.series_labels.join(",")));
+        for (x, ys) in &fig.points {
+            let row: Vec<String> = ys.iter().map(|y| format!("{y:.2}")).collect();
+            out.push_str(&format!("{x},{}\n", row.join(",")));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_cmd(s: &str) -> crate::Result<String> {
+        run(Args::parse(s.split_whitespace().map(String::from)).unwrap())
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(run_cmd("help").unwrap().contains("USAGE"));
+        assert!(run_cmd("nope").is_err());
+    }
+
+    #[test]
+    fn table1_renders() {
+        let out = run_cmd("table1").unwrap();
+        assert!(out.contains("58875") && out.contains("N"));
+    }
+
+    #[test]
+    fn table2_renders() {
+        let out = run_cmd("table2").unwrap();
+        assert!(out.contains("Vavouras") && out.contains("x"));
+    }
+
+    #[test]
+    fn figures_render_csv() {
+        let out = run_cmd("figures").unwrap();
+        assert!(out.contains("fig13") && out.contains("fig16"));
+    }
+
+    #[test]
+    fn baseline_runs() {
+        let out = run_cmd("baseline --function f3 --n 16 --k 20 --seed 3").unwrap();
+        assert!(out.contains("best"));
+    }
+
+    #[test]
+    fn rtl_runs_and_cross_checks() {
+        let out = run_cmd("rtl --function f3 --n 8 --k 9 --seed 5").unwrap();
+        assert!(out.contains("27 clocks"));
+        assert!(out.contains("bit-exact"));
+    }
+
+    #[test]
+    fn optimize_engine_path() {
+        let out = run_cmd("optimize --function f3 --n 16 --k 50 --seed 1").unwrap();
+        assert!(out.contains("best fitness"));
+    }
+
+    #[test]
+    fn serve_engine_trace() {
+        let out = run_cmd("serve --jobs 6 --workers 2 --function f3 --n 16 --k 25").unwrap();
+        assert!(out.contains("served 6 jobs"), "{out}");
+        assert!(out.contains("6 completed"), "{out}");
+    }
+
+    #[test]
+    fn bad_params_rejected() {
+        assert!(run_cmd("optimize --n 3").is_err());
+    }
+}

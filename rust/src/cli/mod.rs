@@ -1,0 +1,8 @@
+//! CLI: argument parsing substrate (clap is not in the offline crate set)
+//! plus the launcher subcommands.
+
+mod args;
+mod commands;
+
+pub use args::{ArgError, Args};
+pub use commands::{run, USAGE};

@@ -1,0 +1,293 @@
+//! Typed configuration system over [`crate::tomlmini`].
+//!
+//! One TOML file configures a whole run: GA parameters, fitness function,
+//! coordinator/serving knobs, and experiment sweeps. Defaults follow the
+//! paper's defaults (K = 100, MR = 2%, minimize, m = 20).
+
+use crate::jsonmini::Value;
+use crate::rom::FnSpec;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// GA problem parameters (the paper's N, m, K, MR, direction + function).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaParams {
+    /// Population size N (power of two, 2..=1024 here; paper: 4..64).
+    pub n: usize,
+    /// Chromosome bits m (even, 2..=32; paper: 20..28).
+    pub m: u32,
+    /// Generations K.
+    pub k: u32,
+    /// Mutation rate MR (P = ceil(N*MR), paper Eq. 5).
+    pub mutation_rate: f64,
+    /// Optimization direction.
+    pub maximize: bool,
+    /// Fitness function name ("f1"/"f2"/"f3").
+    pub function: String,
+    /// γ ROM size exponent.
+    pub gamma_bits: u32,
+    /// Master seed for population + LFSR bank derivation.
+    pub seed: u64,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        Self {
+            n: 32,
+            m: 20,
+            k: 100,
+            mutation_rate: 0.02,
+            maximize: false,
+            function: "f3".to_string(),
+            gamma_bits: crate::rom::GAMMA_BITS_DEFAULT,
+            seed: 42,
+        }
+    }
+}
+
+impl GaParams {
+    /// P = ⌈N · MR⌉, at least 1 (paper Eq. 5; the paper always mutates).
+    pub fn p(&self) -> usize {
+        ((self.n as f64 * self.mutation_rate).ceil() as usize).max(1)
+    }
+
+    /// Bits per half.
+    pub fn h(&self) -> u32 {
+        self.m / 2
+    }
+
+    /// Resolve the fitness function spec.
+    pub fn spec(&self) -> Result<FnSpec> {
+        FnSpec::by_name(&self.function)
+            .ok_or_else(|| anyhow!("unknown fitness function `{}`", self.function))
+    }
+
+    /// Validate the paper's structural constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.n < 2 || !self.n.is_power_of_two() || self.n > 1024 {
+            bail!("N must be a power of two in [2, 1024], got {}", self.n);
+        }
+        if self.m % 2 != 0 || !(2..=32).contains(&self.m) {
+            bail!("m must be even in [2, 32], got {}", self.m);
+        }
+        if self.k == 0 {
+            bail!("K must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.mutation_rate) {
+            bail!("mutation rate must be in [0, 1]");
+        }
+        if self.p() > self.n {
+            bail!("P = {} exceeds N = {}", self.p(), self.n);
+        }
+        if self.gamma_bits == 0 || self.gamma_bits > 20 {
+            bail!("gamma_bits must be in [1, 20]");
+        }
+        Ok(())
+    }
+}
+
+/// Coordinator / serving configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeParams {
+    /// Worker threads executing chunks.
+    pub workers: usize,
+    /// Maximum batch the batcher may form (must match a compiled variant).
+    pub max_batch: usize,
+    /// Batching window: how long the batcher waits to fill a batch (µs).
+    pub batch_window_us: u64,
+    /// Early-stop: stop a job when the best hasn't improved for this many
+    /// consecutive chunks (0 = never early-stop).
+    pub early_stop_chunks: u32,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+    /// Use the PJRT path (false = behavioral engine; ablation knob).
+    pub use_pjrt: bool,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            batch_window_us: 200,
+            early_stop_chunks: 0,
+            artifacts_dir: "artifacts".to_string(),
+            use_pjrt: true,
+        }
+    }
+}
+
+/// Top-level config: `[ga]` + `[serve]` sections.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub ga: GaParams,
+    pub serve: ServeParams,
+}
+
+impl Config {
+    pub fn from_toml(src: &str) -> Result<Self> {
+        let tree = crate::tomlmini::parse(src).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = Config::default();
+        if let Some(ga) = tree.get("ga") {
+            apply_ga(&mut cfg.ga, ga)?;
+        }
+        if let Some(serve) = tree.get("serve") {
+            apply_serve(&mut cfg.serve, serve)?;
+        }
+        cfg.ga.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&src)
+    }
+}
+
+fn get_usize(v: &Value, key: &str, into: &mut usize) -> Result<()> {
+    if let Some(x) = v.get(key) {
+        *into = x
+            .as_usize()
+            .ok_or_else(|| anyhow!("`{key}` must be a non-negative integer"))?;
+    }
+    Ok(())
+}
+
+fn get_u32(v: &Value, key: &str, into: &mut u32) -> Result<()> {
+    if let Some(x) = v.get(key) {
+        *into = u32::try_from(x.as_i64().ok_or_else(|| anyhow!("`{key}` must be an integer"))?)
+            .map_err(|_| anyhow!("`{key}` out of range"))?;
+    }
+    Ok(())
+}
+
+fn get_u64(v: &Value, key: &str, into: &mut u64) -> Result<()> {
+    if let Some(x) = v.get(key) {
+        *into = u64::try_from(x.as_i64().ok_or_else(|| anyhow!("`{key}` must be an integer"))?)
+            .map_err(|_| anyhow!("`{key}` out of range"))?;
+    }
+    Ok(())
+}
+
+fn get_bool(v: &Value, key: &str, into: &mut bool) -> Result<()> {
+    if let Some(x) = v.get(key) {
+        *into = x.as_bool().ok_or_else(|| anyhow!("`{key}` must be a bool"))?;
+    }
+    Ok(())
+}
+
+fn get_f64(v: &Value, key: &str, into: &mut f64) -> Result<()> {
+    if let Some(x) = v.get(key) {
+        *into = x.as_f64().ok_or_else(|| anyhow!("`{key}` must be a number"))?;
+    }
+    Ok(())
+}
+
+fn get_string(v: &Value, key: &str, into: &mut String) -> Result<()> {
+    if let Some(x) = v.get(key) {
+        *into = x
+            .as_str()
+            .ok_or_else(|| anyhow!("`{key}` must be a string"))?
+            .to_string();
+    }
+    Ok(())
+}
+
+fn apply_ga(ga: &mut GaParams, v: &Value) -> Result<()> {
+    get_usize(v, "n", &mut ga.n)?;
+    get_u32(v, "m", &mut ga.m)?;
+    get_u32(v, "k", &mut ga.k)?;
+    get_f64(v, "mutation_rate", &mut ga.mutation_rate)?;
+    get_bool(v, "maximize", &mut ga.maximize)?;
+    get_string(v, "function", &mut ga.function)?;
+    get_u32(v, "gamma_bits", &mut ga.gamma_bits)?;
+    get_u64(v, "seed", &mut ga.seed)?;
+    Ok(())
+}
+
+fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
+    get_usize(v, "workers", &mut s.workers)?;
+    get_usize(v, "max_batch", &mut s.max_batch)?;
+    get_u64(v, "batch_window_us", &mut s.batch_window_us)?;
+    get_u32(v, "early_stop_chunks", &mut s.early_stop_chunks)?;
+    get_string(v, "artifacts_dir", &mut s.artifacts_dir)?;
+    get_bool(v, "use_pjrt", &mut s.use_pjrt)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_follow_paper() {
+        let c = Config::default();
+        assert_eq!(c.ga.n, 32);
+        assert_eq!(c.ga.k, 100);
+        assert_eq!(c.ga.mutation_rate, 0.02);
+        assert!(!c.ga.maximize);
+        assert_eq!(c.ga.p(), 1); // ceil(32 * 0.02) = 1
+    }
+
+    #[test]
+    fn p_formula_matches_paper_eq5() {
+        let mut g = GaParams::default();
+        g.n = 64;
+        assert_eq!(g.p(), 2); // ceil(1.28)
+        g.mutation_rate = 0.001;
+        assert_eq!(g.p(), 1); // max(1, ceil(0.064))
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let c = Config::from_toml(
+            r#"
+[ga]
+n = 64
+m = 26
+k = 200
+maximize = true
+function = "f1"
+seed = 7
+
+[serve]
+workers = 4
+max_batch = 8
+early_stop_chunks = 3
+use_pjrt = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.ga.n, 64);
+        assert_eq!(c.ga.m, 26);
+        assert!(c.ga.maximize);
+        assert_eq!(c.ga.function, "f1");
+        assert_eq!(c.serve.workers, 4);
+        assert!(!c.serve.use_pjrt);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        for toml in [
+            "[ga]\nn = 3",      // not power of two
+            "[ga]\nm = 21",     // odd m
+            "[ga]\nk = 0",      // zero generations
+            "[ga]\nmutation_rate = 1.5",
+            "[ga]\ngamma_bits = 0",
+        ] {
+            assert!(Config::from_toml(toml).is_err(), "{toml}");
+        }
+    }
+
+    #[test]
+    fn unknown_function_rejected_at_spec() {
+        let c = Config::from_toml("[ga]\nfunction = \"nope\"").unwrap();
+        assert!(c.ga.spec().is_err());
+    }
+
+    #[test]
+    fn empty_config_is_default() {
+        assert_eq!(Config::from_toml("").unwrap(), Config::default());
+    }
+}

@@ -1,0 +1,177 @@
+//! Dynamic batcher: groups ready same-variant jobs into dispatch plans.
+//!
+//! Policy (the paper-era analogue of vLLM continuous batching, simplified to
+//! chunk granularity): jobs become *ready* when submitted or when their
+//! previous chunk completes; the batcher coalesces ready jobs that share a
+//! compiled variant `(N, m, P)` into one dispatch of the largest compiled
+//! batch size that fits, padding the final partial batch only after the
+//! batching window has elapsed (latency/throughput knob).
+
+use crate::coordinator::job::JobId;
+use crate::ga::Dims;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// A dispatch plan: jobs to run together in one chunk execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub dims: Dims,
+    pub jobs: Vec<JobId>,
+}
+
+/// Ready-queue per variant with window-based release.
+#[derive(Debug)]
+pub struct Batcher {
+    queues: BTreeMap<(usize, u32, usize), VecDeque<(JobId, Instant)>>,
+    /// Maximum batch the policy may form (≤ largest compiled B).
+    max_batch: usize,
+    /// How long a partial batch may wait for company.
+    window: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration) -> Self {
+        Self {
+            queues: BTreeMap::new(),
+            max_batch: max_batch.max(1),
+            window,
+        }
+    }
+
+    fn key(dims: &Dims) -> (usize, u32, usize) {
+        (dims.n, dims.m, dims.p)
+    }
+
+    /// Mark a job ready for its next chunk.
+    pub fn push(&mut self, dims: Dims, id: JobId, now: Instant) {
+        self.queues
+            .entry(Self::key(&dims))
+            .or_default()
+            .push_back((id, now));
+    }
+
+    /// Number of ready jobs across all variants.
+    pub fn ready_count(&self) -> usize {
+        self.queues.values().map(VecDeque::len).sum()
+    }
+
+    /// Pull every batch that is ready to dispatch at `now`: full batches
+    /// always; partial batches only once their oldest member has waited the
+    /// window. Returns plans in variant order (deterministic).
+    pub fn drain_ready(&mut self, now: Instant) -> Vec<BatchPlan> {
+        let mut plans = Vec::new();
+        for (&(n, m, p), q) in self.queues.iter_mut() {
+            loop {
+                if q.is_empty() {
+                    break;
+                }
+                let full = q.len() >= self.max_batch;
+                let expired = q
+                    .front()
+                    .map(|(_, t)| now.duration_since(*t) >= self.window)
+                    .unwrap_or(false);
+                if !full && !expired {
+                    break;
+                }
+                let take = q.len().min(self.max_batch);
+                let jobs = q.drain(..take).map(|(id, _)| id).collect();
+                plans.push(BatchPlan {
+                    dims: Dims::new(n, m, p),
+                    jobs,
+                });
+            }
+        }
+        plans
+    }
+
+    /// Earliest instant at which a currently-waiting partial batch expires
+    /// (scheduler sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|(_, t)| *t + self.window))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims::new(32, 20, 1)
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let mut b = Batcher::new(4, Duration::from_millis(100));
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(dims(), JobId(i), t0);
+        }
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs.len(), 4);
+        assert_eq!(b.ready_count(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_window() {
+        let mut b = Batcher::new(4, Duration::from_millis(100));
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        assert!(b.drain_ready(t0).is_empty(), "must hold a fresh partial");
+        let later = t0 + Duration::from_millis(101);
+        let plans = b.drain_ready(later);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn variants_do_not_mix() {
+        let mut b = Batcher::new(8, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push(Dims::new(32, 20, 1), JobId(1), t0);
+        b.push(Dims::new(64, 20, 2), JobId(2), t0);
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.jobs.len() == 1));
+    }
+
+    #[test]
+    fn oversubscribed_queue_splits_into_full_batches() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        let t0 = Instant::now();
+        for i in 0..10 {
+            b.push(dims(), JobId(i), t0);
+        }
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].jobs.len(), 4);
+        assert_eq!(plans[1].jobs.len(), 4);
+        assert_eq!(plans[2].jobs.len(), 2); // window zero: remainder flushes
+    }
+
+    #[test]
+    fn fifo_order_within_variant() {
+        let mut b = Batcher::new(2, Duration::ZERO);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(dims(), JobId(i), t0);
+        }
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans[0].jobs, vec![JobId(0), JobId(1)]);
+        assert_eq!(plans[1].jobs, vec![JobId(2), JobId(3)]);
+    }
+
+    #[test]
+    fn next_deadline_is_oldest_plus_window() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        b.push(dims(), JobId(2), t0 + Duration::from_millis(10));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(50)));
+        assert!(b.drain_ready(t0 + Duration::from_millis(49)).is_empty());
+        assert_eq!(b.drain_ready(t0 + Duration::from_millis(50)).len(), 1);
+    }
+}

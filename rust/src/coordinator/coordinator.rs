@@ -1,0 +1,339 @@
+//! The coordinator: public submit/wait API + the scheduler thread.
+
+use crate::config::ServeParams;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::job::{JobHandle, JobId, JobResult, JobStatus, OptimizeRequest};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::workers::{
+    spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, WorkMsg,
+};
+use crate::ga::GaInstance;
+use crate::runtime::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Generations per dispatch (must match the AOT artifacts' K_CHUNK).
+pub const K_CHUNK: u32 = 25;
+
+/// Builder: configure then [`CoordinatorBuilder::start`].
+pub struct CoordinatorBuilder {
+    serve: ServeParams,
+}
+
+impl CoordinatorBuilder {
+    pub fn new(serve: ServeParams) -> Self {
+        Self { serve }
+    }
+
+    /// Engine-only profile (no artifacts required).
+    pub fn engine_only(mut self) -> Self {
+        self.serve.use_pjrt = false;
+        self
+    }
+
+    /// Spawn scheduler + backends.
+    pub fn start(self) -> crate::Result<Coordinator> {
+        let serve = self.serve;
+        let metrics = Arc::new(Metrics::new());
+        let (sched_tx, sched_rx) = channel::<SchedMsg>();
+
+        // Behavioral pool (always available: it is also the pjrt fallback).
+        let (engine_tx, engine_rx) = channel::<WorkMsg>();
+        let engine_rx = Arc::new(Mutex::new(engine_rx));
+        let engine_threads = spawn_engine_pool(
+            serve.workers.max(1),
+            engine_rx,
+            sched_tx.clone(),
+            metrics.clone(),
+        );
+
+        // PJRT dispatcher (only when enabled; requires artifacts on disk).
+        let (pjrt_tx, pjrt_thread) = if serve.use_pjrt {
+            let manifest = Manifest::load(Path::new(&serve.artifacts_dir))?;
+            let (tx, rx) = channel::<WorkMsg>();
+            let th = spawn_pjrt_thread(manifest, rx, sched_tx.clone(), metrics.clone());
+            (Some(tx), Some(th))
+        } else {
+            (None, None)
+        };
+
+        let sched_metrics = metrics.clone();
+        let sched_serve = serve.clone();
+        let engine_tx_sched = engine_tx.clone();
+        let pjrt_tx_sched = pjrt_tx.clone();
+        let scheduler = std::thread::Builder::new()
+            .name("ga-scheduler".into())
+            .spawn(move || {
+                scheduler_loop(
+                    sched_rx,
+                    engine_tx_sched,
+                    pjrt_tx_sched,
+                    sched_serve,
+                    sched_metrics,
+                )
+            })
+            .expect("spawn scheduler");
+
+        Ok(Coordinator {
+            sched_tx,
+            engine_tx,
+            pjrt_tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            threads: Mutex::new(Some(JoinSet {
+                scheduler,
+                engine_threads,
+                pjrt_thread,
+            })),
+        })
+    }
+}
+
+struct JoinSet {
+    scheduler: std::thread::JoinHandle<()>,
+    engine_threads: Vec<std::thread::JoinHandle<()>>,
+    pjrt_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    sched_tx: Sender<SchedMsg>,
+    engine_tx: Sender<WorkMsg>,
+    pjrt_tx: Option<Sender<WorkMsg>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    threads: Mutex<Option<JoinSet>>,
+}
+
+impl Coordinator {
+    /// Convenience: builder with defaults.
+    pub fn builder(serve: ServeParams) -> CoordinatorBuilder {
+        CoordinatorBuilder::new(serve)
+    }
+
+    /// Submit a job; returns immediately with a handle.
+    pub fn submit(&self, req: OptimizeRequest) -> JobHandle {
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let (tx, rx) = channel();
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        // A send failure means the scheduler is gone; the handle will then
+        // report Failed via the dropped channel.
+        let _ = self.sched_tx.send(SchedMsg::Submit {
+            id,
+            req,
+            result_tx: tx,
+        });
+        JobHandle { id, rx }
+    }
+
+    /// Submit and block.
+    pub fn optimize(&self, req: OptimizeRequest) -> JobResult {
+        self.submit(req).wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown (also runs on Drop).
+    pub fn shutdown(&self) {
+        if let Some(set) = self.threads.lock().unwrap().take() {
+            let _ = self.sched_tx.send(SchedMsg::Shutdown);
+            let _ = set.scheduler.join();
+            for _ in &set.engine_threads {
+                let _ = self.engine_tx.send(WorkMsg::Shutdown);
+            }
+            for t in set.engine_threads {
+                let _ = t.join();
+            }
+            if let (Some(tx), Some(t)) = (&self.pjrt_tx, set.pjrt_thread) {
+                let _ = tx.send(WorkMsg::Shutdown);
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-job scheduler bookkeeping.
+struct JobEntry {
+    tag: String,
+    result_tx: Sender<JobResult>,
+    submitted: Instant,
+    requested_k: u32,
+    early_stop_chunks: u32,
+    stale_chunks: u32,
+    last_best: Option<i64>,
+    inst: Option<GaInstance>,
+    remaining: u32,
+}
+
+fn scheduler_loop(
+    rx: std::sync::mpsc::Receiver<SchedMsg>,
+    engine_tx: Sender<WorkMsg>,
+    pjrt_tx: Option<Sender<WorkMsg>>,
+    serve: ServeParams,
+    metrics: Arc<Metrics>,
+) {
+    let mut table: HashMap<JobId, JobEntry> = HashMap::new();
+    let window = Duration::from_micros(serve.batch_window_us);
+    // Batching only pays on the PJRT path; the engine pool parallelizes
+    // across jobs instead (batch of 1, zero window).
+    let mut batcher = if pjrt_tx.is_some() {
+        Batcher::new(serve.max_batch, window)
+    } else {
+        Batcher::new(1, Duration::ZERO)
+    };
+
+    let dispatch = |plan_jobs: Vec<RunningJob>| {
+        let msg = WorkMsg::Batch(plan_jobs, K_CHUNK);
+        match &pjrt_tx {
+            Some(tx) => tx.send(msg).is_ok(),
+            None => engine_tx.send(msg).is_ok(),
+        }
+    };
+
+    loop {
+        // Sleep until the next batching deadline (or idle tick).
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        let msg = rx.recv_timeout(timeout.max(Duration::from_micros(10)));
+
+        match msg {
+            Ok(SchedMsg::Submit { id, req, result_tx }) => {
+                let now = Instant::now();
+                match GaInstance::from_params(&req.params) {
+                    Ok(inst) => {
+                        let dims = *inst.dims();
+                        table.insert(
+                            id,
+                            JobEntry {
+                                tag: req.tag,
+                                result_tx,
+                                submitted: now,
+                                requested_k: req.params.k,
+                                early_stop_chunks: serve.early_stop_chunks,
+                                stale_chunks: 0,
+                                last_best: None,
+                                inst: Some(inst),
+                                remaining: req.params.k,
+                            },
+                        );
+                        batcher.push(dims, id, now);
+                    }
+                    Err(e) => {
+                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = result_tx.send(JobResult {
+                            id,
+                            tag: req.tag,
+                            status: JobStatus::Failed,
+                            best_y: 0,
+                            best_x: 0,
+                            generations: 0,
+                            curve: Vec::new(),
+                            latency: Duration::ZERO,
+                            backend: "none",
+                            error: Some(e.to_string()),
+                        });
+                    }
+                }
+            }
+            Ok(SchedMsg::Done(DoneMsg { jobs, backend })) => {
+                let now = Instant::now();
+                for job in jobs {
+                    let RunningJob {
+                        id,
+                        inst,
+                        executed,
+                        ..
+                    } = job;
+                    let Some(entry) = table.get_mut(&id) else { continue };
+                    entry.remaining = entry.remaining.saturating_sub(executed);
+                    metrics
+                        .generations
+                        .fetch_add(u64::from(executed), Ordering::Relaxed);
+
+                    // Early-stop accounting.
+                    let best = inst.best().y;
+                    if entry.last_best == Some(best) {
+                        entry.stale_chunks += 1;
+                    } else {
+                        entry.stale_chunks = 0;
+                        entry.last_best = Some(best);
+                    }
+                    let early =
+                        entry.early_stop_chunks > 0 && entry.stale_chunks >= entry.early_stop_chunks;
+
+                    if entry.remaining == 0 || early {
+                        let entry = table.remove(&id).unwrap();
+                        let status = if early && entry.remaining > 0 {
+                            metrics.jobs_early_stopped.fetch_add(1, Ordering::Relaxed);
+                            JobStatus::EarlyStopped
+                        } else {
+                            metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                            JobStatus::Completed
+                        };
+                        let latency = now.duration_since(entry.submitted);
+                        metrics.record_latency(latency);
+                        let mut curve = inst.curve().to_vec();
+                        curve.truncate(entry.requested_k as usize);
+                        let _ = entry.result_tx.send(JobResult {
+                            id,
+                            tag: entry.tag,
+                            status,
+                            best_y: inst.best().y,
+                            best_x: inst.best().x,
+                            generations: inst.generation(),
+                            curve,
+                            latency,
+                            backend,
+                            error: None,
+                        });
+                    } else {
+                        let dims = *inst.dims();
+                        entry.inst = Some(inst);
+                        batcher.push(dims, id, now);
+                    }
+                }
+            }
+            Ok(SchedMsg::Shutdown) => return,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+
+        // Dispatch everything ready.
+        for plan in batcher.drain_ready(Instant::now()) {
+            let mut running = Vec::with_capacity(plan.jobs.len());
+            for id in plan.jobs {
+                if let Some(entry) = table.get_mut(&id) {
+                    if let Some(inst) = entry.inst.take() {
+                        running.push(RunningJob {
+                            id,
+                            inst,
+                            remaining: entry.remaining,
+                            executed: 0,
+                        });
+                    }
+                }
+            }
+            if running.is_empty() {
+                continue;
+            }
+            metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
+            if !dispatch(running) {
+                return; // backend gone
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Job types: requests, ids, results, client-side handles.
+
+use crate::config::GaParams;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Unique job identifier (monotone per coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// A client request: optimize `params.function` with the paper's machine.
+#[derive(Debug, Clone)]
+pub struct OptimizeRequest {
+    pub params: GaParams,
+    /// Free-form tag echoed in the result (trace correlation).
+    pub tag: String,
+}
+
+impl OptimizeRequest {
+    pub fn new(params: GaParams) -> Self {
+        Self {
+            params,
+            tag: String::new(),
+        }
+    }
+
+    pub fn with_tag(mut self, tag: impl Into<String>) -> Self {
+        self.tag = tag.into();
+        self
+    }
+}
+
+/// Terminal job status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Ran the full requested K generations.
+    Completed,
+    /// Stopped early: best stale for `early_stop_chunks` consecutive chunks.
+    EarlyStopped,
+    /// Rejected or failed (reason in `JobResult::error`).
+    Failed,
+}
+
+/// Final result delivered to the client.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: JobId,
+    pub tag: String,
+    pub status: JobStatus,
+    /// Best fitness found (fixed-point integer domain).
+    pub best_y: i64,
+    /// Best chromosome (px ‖ qx encoding).
+    pub best_x: u32,
+    /// Generations actually executed.
+    pub generations: u32,
+    /// Best-of-generation series (Figs. 11-12 convergence curve).
+    pub curve: Vec<i64>,
+    /// Queue + execution latency.
+    pub latency: Duration,
+    /// Which backend executed the final chunk ("pjrt" / "engine").
+    pub backend: &'static str,
+    pub error: Option<String>,
+}
+
+impl JobResult {
+    /// Decode best_x into signed (px, qx) variable values (the paper's
+    /// two's-complement LUT domain).
+    pub fn decoded_vars(&self, m: u32) -> (i64, i64) {
+        let h = m / 2;
+        let (px, qx) = crate::bits::split(self.best_x, h);
+        (crate::bits::to_signed(px, h), crate::bits::to_signed(qx, h))
+    }
+}
+
+/// Client-side handle: blocks for the result.
+pub struct JobHandle {
+    pub id: JobId,
+    pub(crate) rx: mpsc::Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block until the job finishes.
+    pub fn wait(self) -> JobResult {
+        self.rx.recv().unwrap_or_else(|_| JobResult {
+            id: self.id,
+            tag: String::new(),
+            status: JobStatus::Failed,
+            best_y: 0,
+            best_x: 0,
+            generations: 0,
+            curve: Vec::new(),
+            latency: Duration::ZERO,
+            backend: "none",
+            error: Some("coordinator dropped the job channel".into()),
+        })
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoded_vars_two_complement() {
+        let r = JobResult {
+            id: JobId(1),
+            tag: String::new(),
+            status: JobStatus::Completed,
+            best_y: 0,
+            best_x: crate::bits::concat(1023, 5, 10), // px=-1, qx=5 at m=20
+            generations: 0,
+            curve: vec![],
+            latency: Duration::ZERO,
+            backend: "engine",
+            error: None,
+        };
+        assert_eq!(r.decoded_vars(20), (-1, 5));
+    }
+
+    #[test]
+    fn handle_reports_dropped_channel() {
+        let (tx, rx) = mpsc::channel();
+        drop(tx);
+        let h = JobHandle { id: JobId(9), rx };
+        let r = h.wait();
+        assert_eq!(r.status, JobStatus::Failed);
+        assert!(r.error.is_some());
+    }
+
+    #[test]
+    fn request_builder() {
+        let r = OptimizeRequest::new(GaParams::default()).with_tag("t1");
+        assert_eq!(r.tag, "t1");
+    }
+}

@@ -1,0 +1,167 @@
+//! Serving metrics: counters (atomics) + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_early_stopped: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub chunks_dispatched: AtomicU64,
+    pub pjrt_dispatches: AtomicU64,
+    pub engine_dispatches: AtomicU64,
+    /// Total generations executed across all jobs.
+    pub generations: AtomicU64,
+    /// Batch-slot padding waste (padded rows dispatched).
+    pub padded_rows: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push(d.as_micros() as u64);
+    }
+
+    pub fn record_batch(&self, effective: usize, padded: usize) {
+        self.batch_sizes.lock().unwrap().push(effective);
+        self.padded_rows.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot with percentile math done.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pct = |q: f64| -> Duration {
+            if lat.is_empty() {
+                Duration::ZERO
+            } else {
+                let idx = ((lat.len() - 1) as f64 * q) as usize;
+                Duration::from_micros(lat[idx])
+            }
+        };
+        let sizes = self.batch_sizes.lock().unwrap();
+        let mean_batch = if sizes.is_empty() {
+            0.0
+        } else {
+            sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
+        };
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_early_stopped: self.jobs_early_stopped.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
+            pjrt_dispatches: self.pjrt_dispatches.load(Ordering::Relaxed),
+            engine_dispatches: self.engine_dispatches.load(Ordering::Relaxed),
+            generations: self.generations.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            latency_p50: pct(0.50),
+            latency_p95: pct(0.95),
+            latency_p99: pct(0.99),
+            latency_max: pct(1.0),
+            mean_batch,
+            samples: lat.len(),
+        }
+    }
+}
+
+/// Immutable metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_early_stopped: u64,
+    pub jobs_failed: u64,
+    pub chunks_dispatched: u64,
+    pub pjrt_dispatches: u64,
+    pub engine_dispatches: u64,
+    pub generations: u64,
+    pub padded_rows: u64,
+    pub latency_p50: Duration,
+    pub latency_p95: Duration,
+    pub latency_p99: Duration,
+    pub latency_max: Duration,
+    pub mean_batch: f64,
+    pub samples: usize,
+}
+
+impl MetricsSnapshot {
+    /// Render a human-readable summary block.
+    pub fn render(&self) -> String {
+        format!(
+            "jobs: {} submitted, {} completed, {} early-stopped, {} failed\n\
+             chunks: {} dispatched ({} pjrt, {} engine), mean batch {:.2}, {} padded rows\n\
+             generations: {}\n\
+             latency: p50 {:?}, p95 {:?}, p99 {:?}, max {:?} ({} samples)",
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.jobs_early_stopped,
+            self.jobs_failed,
+            self.chunks_dispatched,
+            self.pjrt_dispatches,
+            self.engine_dispatches,
+            self.mean_batch,
+            self.padded_rows,
+            self.generations,
+            self.latency_p50,
+            self.latency_p95,
+            self.latency_p99,
+            self.latency_max,
+            self.samples,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50, Duration::from_micros(500));
+        assert_eq!(s.latency_max, Duration::from_micros(1000));
+        assert!(s.latency_p95 >= s.latency_p50);
+        assert_eq!(s.samples, 10);
+    }
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.record_batch(8, 0);
+        m.record_batch(4, 4);
+        let s = m.snapshot();
+        assert_eq!(s.mean_batch, 6.0);
+        assert_eq!(s.padded_rows, 4);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.latency_p50, Duration::ZERO);
+        assert_eq!(s.samples, 0);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let m = Metrics::new();
+        m.jobs_submitted.store(3, Ordering::Relaxed);
+        assert!(m.snapshot().render().contains("3 submitted"));
+    }
+}

@@ -1,0 +1,35 @@
+//! L3 coordinator — the serving layer (vLLM-router-shaped).
+//!
+//! Clients submit [`OptimizeRequest`]s; the coordinator routes each to a
+//! compiled variant, batches same-variant jobs into single PJRT dispatches,
+//! executes K_CHUNK-generation chunks, early-stops converged jobs between
+//! chunks, and returns [`JobResult`]s. The paper's machine is the *inner
+//! loop*; this layer is what turns it into the "large flow of data"
+//! service the paper's introduction motivates (data mining, tactile
+//! internet, massive data processing).
+//!
+//! Thread topology (std threads; tokio is not in the offline crate set):
+//!
+//! ```text
+//!  clients ──submit──▶ scheduler thread ──BatchTask──▶ pjrt thread (owns Runtime)
+//!                        ▲    │   ▲                      │
+//!                        │    └───┼──ChunkTask──▶ engine worker pool (behavioral)
+//!                        │        └────────────completions┘
+//!  clients ◀─JobHandle───┘
+//! ```
+//!
+//! The canonical job state is always the behavioral [`GaInstance`]; the
+//! PJRT path marshals it into literals and absorbs the advanced state back,
+//! so both backends are interchangeable mid-job (and bit-identical — see
+//! rust/tests/coordinator_integration.rs).
+
+mod batcher;
+mod coordinator;
+mod job;
+mod metrics;
+mod workers;
+
+pub use batcher::{BatchPlan, Batcher};
+pub use coordinator::{Coordinator, CoordinatorBuilder};
+pub use job::{JobHandle, JobId, JobResult, JobStatus, OptimizeRequest};
+pub use metrics::{Metrics, MetricsSnapshot};

@@ -1,0 +1,223 @@
+//! Execution backends: the behavioral engine worker pool and the PJRT
+//! dispatcher thread. Both consume [`WorkMsg`] batches and return advanced
+//! job state via [`DoneMsg`]; the scheduler treats them uniformly.
+
+use crate::coordinator::job::JobId;
+use crate::coordinator::metrics::Metrics;
+use crate::ga::GaInstance;
+use crate::runtime::{ChunkIo, Manifest, Runtime};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A job in flight: canonical behavioral state + chunk accounting.
+#[derive(Debug)]
+pub(crate) struct RunningJob {
+    pub id: JobId,
+    pub inst: GaInstance,
+    /// Generations still requested.
+    pub remaining: u32,
+    /// Generations executed by the just-finished chunk (set by backend).
+    pub executed: u32,
+}
+
+/// Work sent to a backend: same-variant jobs to advance one chunk.
+pub(crate) enum WorkMsg {
+    Batch(Vec<RunningJob>, u32),
+    Shutdown,
+}
+
+/// Completion sent back to the scheduler.
+pub(crate) struct DoneMsg {
+    pub jobs: Vec<RunningJob>,
+    pub backend: &'static str,
+}
+
+/// Scheduler inbox message (submissions share the channel with completions).
+pub(crate) enum SchedMsg {
+    Submit {
+        id: JobId,
+        req: crate::coordinator::job::OptimizeRequest,
+        result_tx: Sender<crate::coordinator::job::JobResult>,
+    },
+    Done(DoneMsg),
+    Shutdown,
+}
+
+/// Spawn the behavioral worker pool: `count` threads sharing one queue.
+/// Each worker advances each job by `min(remaining, chunk)` generations —
+/// the engine path is exact in K (no chunk rounding).
+pub(crate) fn spawn_engine_pool(
+    count: usize,
+    work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
+    done_tx: Sender<SchedMsg>,
+    metrics: Arc<Metrics>,
+) -> Vec<JoinHandle<()>> {
+    (0..count)
+        .map(|i| {
+            let rx = work_rx.clone();
+            let tx = done_tx.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name(format!("ga-engine-{i}"))
+                .spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(WorkMsg::Batch(mut jobs, chunk)) => {
+                            for job in &mut jobs {
+                                let gens = job.remaining.min(chunk);
+                                job.inst.run(gens);
+                                job.executed = gens;
+                            }
+                            metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
+                            if tx
+                                .send(SchedMsg::Done(DoneMsg {
+                                    jobs,
+                                    backend: "engine",
+                                }))
+                                .is_err()
+                            {
+                                return; // scheduler gone
+                            }
+                        }
+                        Ok(WorkMsg::Shutdown) | Err(_) => return,
+                    }
+                })
+                .expect("spawn engine worker")
+        })
+        .collect()
+}
+
+/// Spawn the PJRT dispatcher: ONE thread owning the non-`Send` Runtime.
+/// Batches are padded to the compiled batch size (padding rows replicate
+/// row 0 and are discarded); each dispatch advances every job by exactly
+/// `k_chunk` generations.
+pub(crate) fn spawn_pjrt_thread(
+    manifest: Manifest,
+    work_rx: Receiver<WorkMsg>,
+    done_tx: Sender<SchedMsg>,
+    metrics: Arc<Metrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ga-pjrt".into())
+        .spawn(move || {
+            let mut rt = Runtime::new(manifest).expect("PJRT client");
+            loop {
+                match work_rx.recv() {
+                    Ok(WorkMsg::Batch(mut jobs, _chunk)) => {
+                        match run_pjrt_batch(&mut rt, &mut jobs, &metrics) {
+                            Ok(()) => {}
+                            Err(e) => {
+                                // Fall back to the behavioral engine in-place:
+                                // the canonical state is untouched on failure.
+                                log::warn!("pjrt dispatch failed ({e}); engine fallback");
+                                for job in &mut jobs {
+                                    let gens = job.remaining.min(25);
+                                    job.inst.run(gens);
+                                    job.executed = gens;
+                                }
+                            }
+                        }
+                        metrics.pjrt_dispatches.fetch_add(1, Ordering::Relaxed);
+                        if done_tx
+                            .send(SchedMsg::Done(DoneMsg {
+                                jobs,
+                                backend: "pjrt",
+                            }))
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Ok(WorkMsg::Shutdown) | Err(_) => return,
+                }
+            }
+        })
+        .expect("spawn pjrt thread")
+}
+
+/// Marshal a same-variant job batch into PJRT dispatches, execute, absorb
+/// back. Jobs beyond one executable's batch capacity are processed in
+/// follow-up sub-dispatches rather than bounced back to the scheduler
+/// (EXPERIMENTS.md §Perf iter 3: bouncing cost a full scheduler round-trip
+/// per excess job and re-padded every partial batch).
+fn run_pjrt_batch(
+    rt: &mut Runtime,
+    jobs: &mut [RunningJob],
+    metrics: &Metrics,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(!jobs.is_empty(), "empty batch");
+    let mut start = 0;
+    while start < jobs.len() {
+        let remaining = jobs.len() - start;
+        let end = {
+            let dims = *jobs[start].inst.dims();
+            let exe_batch = rt.executable(&dims, remaining)?.meta.batch;
+            start + remaining.min(exe_batch)
+        };
+        run_pjrt_subbatch(rt, &mut jobs[start..end], metrics)?;
+        start = end;
+    }
+    Ok(())
+}
+
+/// One PJRT dispatch: `jobs.len() <= executable batch`; padding rows
+/// replicate row 0 and are discarded.
+fn run_pjrt_subbatch(
+    rt: &mut Runtime,
+    jobs: &mut [RunningJob],
+    metrics: &Metrics,
+) -> anyhow::Result<()> {
+    let dims = *jobs[0].inst.dims();
+    let exe = rt.executable(&dims, jobs.len())?;
+    let b = exe.meta.batch;
+    let k = exe.meta.k_chunk;
+    let rows = jobs.len().min(b);
+
+    let mut io = ChunkIo {
+        batch: b,
+        pop: Vec::with_capacity(b * dims.n),
+        lfsr: Vec::with_capacity(b * dims.lfsr_len()),
+        alpha: Vec::with_capacity(b * dims.table_size()),
+        beta: Vec::with_capacity(b * dims.table_size()),
+        gamma: Vec::with_capacity(b * dims.gamma_size()),
+        scal: Vec::with_capacity(b * 4),
+        best_y: Vec::with_capacity(b),
+        best_x: Vec::with_capacity(b),
+        curve: Vec::new(),
+    };
+    for row in 0..b {
+        // Padding rows replicate row 0's state; their outputs are ignored.
+        let src = &jobs[if row < rows { row } else { 0 }];
+        let inst = &src.inst;
+        io.pop.extend_from_slice(inst.population());
+        io.lfsr.extend_from_slice(inst.bank().states());
+        io.alpha.extend_from_slice(&inst.tables().alpha);
+        io.beta.extend_from_slice(&inst.tables().beta);
+        io.gamma.extend_from_slice(&inst.tables().gamma);
+        io.scal
+            .extend_from_slice(&inst.tables().scalars(inst.maximize()));
+        io.best_y.push(inst.best().y);
+        io.best_x.push(inst.best().x);
+    }
+    metrics.record_batch(rows, b - rows);
+
+    let out = exe.run(io)?;
+    for (row, job) in jobs.iter_mut().enumerate().take(rows) {
+        let d = &dims;
+        job.inst.absorb_chunk(
+            out.pop[row * d.n..(row + 1) * d.n].to_vec(),
+            out.lfsr[row * d.lfsr_len()..(row + 1) * d.lfsr_len()].to_vec(),
+            out.best_y[row],
+            out.best_x[row],
+            &out.curve[row * k as usize..(row + 1) * k as usize],
+            k,
+        );
+        job.executed = k;
+    }
+    Ok(())
+}

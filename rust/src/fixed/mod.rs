@@ -1,0 +1,133 @@
+//! Fixed-point (Q-format) arithmetic — the FFM ROM number system.
+//!
+//! The paper's ROMs store fixed-point words; "range of values, bit width m,
+//! decimal precision and the possibility of exploring negative numbers are
+//! all parameters of the LUT" (paper §4). [`FixedSpec`] is that parameter
+//! set; quantization here must match `python/compile/functions.py` exactly
+//! (round-half-away-from-zero, i64 storage).
+
+/// A fixed-point format: `frac` fractional bits, signed i64 storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedSpec {
+    /// Fractional bits (scale = 2^frac).
+    pub frac: u32,
+}
+
+impl FixedSpec {
+    pub const fn integer() -> Self {
+        Self { frac: 0 }
+    }
+
+    pub const fn new(frac: u32) -> Self {
+        Self { frac }
+    }
+
+    /// Scale factor 2^frac.
+    #[inline]
+    pub const fn scale(&self) -> i64 {
+        1i64 << self.frac
+    }
+
+    /// Quantize a real value: `round(x * 2^frac)` with python-3 `round()`
+    /// semantics (banker's rounding, half-to-even) so ROM tables built here
+    /// are bit-identical to `functions._quantize` on the python side.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i64 {
+        py_round(x * self.scale() as f64)
+    }
+
+    /// Back to float (diagnostics, error measurements).
+    #[inline]
+    pub fn dequantize(&self, v: i64) -> f64 {
+        v as f64 / self.scale() as f64
+    }
+}
+
+/// Python 3 `round()`: banker's rounding (round-half-to-even). The ROM
+/// builders on both sides must agree on exact-.5 cases, so we reproduce
+/// python semantics here rather than rust's `f64::round` (half away from 0).
+#[inline]
+pub fn py_round(x: f64) -> i64 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor as i64 + 1
+    } else if diff < 0.5 {
+        floor as i64
+    } else {
+        // exactly .5: to even
+        let f = floor as i64;
+        if f % 2 == 0 {
+            f
+        } else {
+            f + 1
+        }
+    }
+}
+
+/// Saturating add in a `bits`-wide signed range (hardware adders saturate or
+/// wrap; the paper's tables are sized so delta never overflows — this is the
+/// guard used by table validation).
+#[inline]
+pub fn fits_signed(v: i64, bits: u32) -> bool {
+    if bits >= 64 {
+        return true;
+    }
+    let half = 1i64 << (bits - 1);
+    (-half..half).contains(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn py_round_matches_python_semantics() {
+        // python: round(0.5) == 0, round(1.5) == 2, round(2.5) == 2,
+        //         round(-0.5) == 0, round(-1.5) == -2
+        assert_eq!(py_round(0.5), 0);
+        assert_eq!(py_round(1.5), 2);
+        assert_eq!(py_round(2.5), 2);
+        assert_eq!(py_round(-0.5), 0);
+        assert_eq!(py_round(-1.5), -2);
+        assert_eq!(py_round(-2.5), -2);
+        assert_eq!(py_round(1.49), 1);
+        assert_eq!(py_round(-1.49), -1);
+        assert_eq!(py_round(3.0), 3);
+    }
+
+    #[test]
+    fn quantize_integer_spec_is_round() {
+        let q = FixedSpec::integer();
+        assert_eq!(q.quantize(41.7), 42);
+        assert_eq!(q.quantize(-41.7), -42);
+        assert_eq!(q.quantize(1e10), 10_000_000_000);
+    }
+
+    #[test]
+    fn quantize_fractional() {
+        let q = FixedSpec::new(2);
+        assert_eq!(q.quantize(0.5), 2);
+        assert_eq!(q.quantize(-0.5), -2);
+        assert_eq!(q.dequantize(2), 0.5);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let q = FixedSpec::new(8);
+        for i in -1000..1000 {
+            let x = i as f64 * 0.013;
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(err <= 0.5 / 256.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn fits_signed_bounds() {
+        assert!(fits_signed(127, 8));
+        assert!(!fits_signed(128, 8));
+        assert!(fits_signed(-128, 8));
+        assert!(!fits_signed(-129, 8));
+        assert!(fits_signed(i64::MAX, 64));
+    }
+}

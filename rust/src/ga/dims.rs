@@ -1,0 +1,149 @@
+//! Static shape parameters of one GA variant (rust twin of python's
+//! `GaConfig`).
+
+use crate::bits::ceil_log2;
+
+/// Compile-time-ish dimensions: everything that fixes array shapes and
+/// selector widths. A `(n, m, p)` triple identifies an AOT variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dims {
+    /// Population size N (power of two).
+    pub n: usize,
+    /// Chromosome bits m (even).
+    pub m: u32,
+    /// Mutation module count P.
+    pub p: usize,
+    /// γ ROM size exponent.
+    pub gamma_bits: u32,
+}
+
+impl Dims {
+    pub fn new(n: usize, m: u32, p: usize) -> Self {
+        let d = Self {
+            n,
+            m,
+            p,
+            gamma_bits: crate::rom::GAMMA_BITS_DEFAULT,
+        };
+        d.validate();
+        d
+    }
+
+    pub fn with_gamma_bits(mut self, gamma_bits: u32) -> Self {
+        self.gamma_bits = gamma_bits;
+        self
+    }
+
+    /// From config-level GA parameters.
+    pub fn from_params(p: &crate::config::GaParams) -> Self {
+        Self {
+            n: p.n,
+            m: p.m,
+            p: p.p(),
+            gamma_bits: p.gamma_bits,
+        }
+        .validated()
+    }
+
+    fn validated(self) -> Self {
+        self.validate();
+        self
+    }
+
+    fn validate(&self) {
+        assert!(
+            self.n >= 2 && self.n.is_power_of_two(),
+            "N must be a power of two >= 2, got {}",
+            self.n
+        );
+        assert!(
+            self.m % 2 == 0 && (2..=32).contains(&self.m),
+            "m must be even in [2,32], got {}",
+            self.m
+        );
+        assert!(self.p <= self.n, "P must be <= N");
+        assert!(self.n % 2 == 0, "N must be even for pairwise crossover");
+    }
+
+    /// Bits per variable half.
+    #[inline]
+    pub fn h(&self) -> u32 {
+        self.m / 2
+    }
+
+    /// Tournament index width ⌈log₂N⌉.
+    #[inline]
+    pub fn sel_bits(&self) -> u32 {
+        ceil_log2(self.n as u32).max(1)
+    }
+
+    /// Cut-point selector width ⌈log₂(m/2 + 1)⌉.
+    #[inline]
+    pub fn cut_bits(&self) -> u32 {
+        ceil_log2(self.h() + 1)
+    }
+
+    /// LFSR bank length 3N + P.
+    #[inline]
+    pub fn lfsr_len(&self) -> usize {
+        3 * self.n + self.p
+    }
+
+    /// α/β table size 2^(m/2).
+    #[inline]
+    pub fn table_size(&self) -> usize {
+        1 << self.h()
+    }
+
+    /// γ table size.
+    #[inline]
+    pub fn gamma_size(&self) -> usize {
+        1 << self.gamma_bits
+    }
+
+    /// Paper Eq. 5 default: P = ⌈N·MR⌉ at MR = 2%.
+    pub fn default_p(n: usize) -> usize {
+        ((n as f64 * 0.02).ceil() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_widths_match_python() {
+        let d = Dims::new(32, 20, 1);
+        assert_eq!(d.h(), 10);
+        assert_eq!(d.sel_bits(), 5);
+        assert_eq!(d.cut_bits(), 4); // ceil(log2(11))
+        assert_eq!(d.lfsr_len(), 97);
+        assert_eq!(d.table_size(), 1024);
+        assert_eq!(d.gamma_size(), 4096);
+    }
+
+    #[test]
+    fn sel_bits_minimum_one() {
+        assert_eq!(Dims::new(2, 20, 1).sel_bits(), 1);
+    }
+
+    #[test]
+    fn default_p_matches_paper() {
+        assert_eq!(Dims::default_p(4), 1);
+        assert_eq!(Dims::default_p(32), 1);
+        assert_eq!(Dims::default_p(64), 2);
+        assert_eq!(Dims::default_p(128), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn odd_n_rejected() {
+        Dims::new(5, 20, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_m_rejected() {
+        Dims::new(4, 21, 1);
+    }
+}

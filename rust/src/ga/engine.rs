@@ -1,0 +1,291 @@
+//! The generation step as pure functions over slices — one function per
+//! hardware module (FFM, SM, CM, MM), composed by [`generation_step`].
+//!
+//! Bit-exactness contract (DESIGN.md §5): every line here has a pinned twin
+//! in `python/compile/kernels/ref.py`. Change both or neither.
+
+use crate::bits::{concat, mask32, split, top_bits};
+use crate::ga::Dims;
+use crate::lfsr::LfsrBank;
+use crate::rom::RomTables;
+
+/// FFM: score every chromosome (Eq. 8-11). `out.len() == pop.len()`.
+///
+/// Perf note (EXPERIMENTS.md §Perf iter 1): the γ-bypass branch and the
+/// table slice borrows are hoisted out of the per-individual loop so the
+/// bypass path (F1/F2) compiles to two gathers + an add per individual.
+pub fn fitness_all(pop: &[u32], tables: &RomTables, out: &mut [i64]) {
+    debug_assert_eq!(pop.len(), out.len());
+    let h = tables.h();
+    let hmask = crate::bits::mask32(h);
+    let alpha = &tables.alpha[..];
+    let beta = &tables.beta[..];
+    if tables.gamma_bypass {
+        for (x, y) in pop.iter().zip(out.iter_mut()) {
+            let px = (x >> h) & hmask;
+            let qx = x & hmask;
+            *y = alpha[px as usize] + beta[qx as usize];
+        }
+    } else {
+        let gamma = &tables.gamma[..];
+        let gmax = gamma.len() as i64 - 1;
+        let (gmin, gshift) = (tables.gmin, tables.gshift);
+        for (x, y) in pop.iter().zip(out.iter_mut()) {
+            let px = (x >> h) & hmask;
+            let qx = x & hmask;
+            let delta = alpha[px as usize] + beta[qx as usize];
+            let gidx = ((delta - gmin) >> gshift).clamp(0, gmax);
+            *y = gamma[gidx as usize];
+        }
+    }
+}
+
+/// SM: per-slot binary tournament (§3.2). Two LFSR-driven indices; strict
+/// comparator; tie → second contestant. Writes winners into `w`.
+pub fn select_all(
+    pop: &[u32],
+    y: &[i64],
+    bank: &LfsrBank,
+    maximize: bool,
+    dims: &Dims,
+    w: &mut [u32],
+) {
+    let sel_bits = dims.sel_bits();
+    for j in 0..dims.n {
+        let i1 = top_bits(bank.sm1(j), sel_bits) as usize;
+        let i2 = top_bits(bank.sm2(j), sel_bits) as usize;
+        let first_wins = if maximize {
+            y[i1] > y[i2]
+        } else {
+            y[i1] < y[i2]
+        };
+        w[j] = if first_wins { pop[i1] } else { pop[i2] };
+    }
+}
+
+/// CM: single-point crossover per variable half via shift masks
+/// (Eq. 12-20). Children overwrite `z` in population order.
+pub fn crossover_all(w: &[u32], bank: &LfsrBank, dims: &Dims, z: &mut [u32]) {
+    let h = dims.h();
+    let ones = mask32(h);
+    let cut_bits = dims.cut_bits();
+    let mbits = mask32(dims.m);
+    // chunks_exact pairs + enumerate: no per-element bounds checks in the
+    // loop body (EXPERIMENTS.md §Perf iter 2).
+    debug_assert_eq!(w.len(), dims.n);
+    for (i, (wp, zp)) in w.chunks_exact(2).zip(z.chunks_exact_mut(2)).enumerate() {
+        let (pw0, qw0) = split(wp[0], h);
+        let (pw1, qw1) = split(wp[1], h);
+
+        // Raw draw clamped to h (hardware mux don't-care pinned as clamp).
+        let shift_p = top_bits(bank.cm_p(i), cut_bits).min(h);
+        let shift_q = top_bits(bank.cm_q(i), cut_bits).min(h);
+        let mask_p = ones >> shift_p; // tail mask (Eq. 13)
+        let mask_q = ones >> shift_q;
+
+        // Head/tail swap (Eq. 15-20).
+        let pz0 = (pw0 & !mask_p) | (pw1 & mask_p);
+        let pz1 = (pw1 & !mask_p) | (pw0 & mask_p);
+        let qz0 = (qw0 & !mask_q) | (qw1 & mask_q);
+        let qz1 = (qw1 & !mask_q) | (qw0 & mask_q);
+
+        zp[0] = concat(pz0, qz0, h) & mbits;
+        zp[1] = concat(pz1, qz1, h) & mbits;
+    }
+}
+
+/// MM: XOR the first P offspring with the top m bits of their LFSR (Eq. 21).
+pub fn mutate_all(z: &mut [u32], bank: &LfsrBank, dims: &Dims) {
+    for v in 0..dims.p {
+        z[v] ^= top_bits(bank.mm(v), dims.m);
+    }
+}
+
+/// One full generation (Algorithm 1 body): returns the fitness of the
+/// *input* population in `y`, writes the next population into `next_pop`,
+/// and advances the LFSR bank one tick.
+pub fn generation_step(
+    pop: &[u32],
+    bank: &mut LfsrBank,
+    tables: &RomTables,
+    maximize: bool,
+    dims: &Dims,
+    y: &mut [i64],
+    next_pop: &mut [u32],
+    scratch_w: &mut [u32],
+) {
+    fitness_all(pop, tables, y);
+    select_all(pop, y, bank, maximize, dims, scratch_w);
+    crossover_all(scratch_w, bank, dims, next_pop);
+    mutate_all(next_pop, bank, dims);
+    bank.tick_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::{build_tables, F2, F3, GAMMA_BITS_DEFAULT};
+    use crate::testing::{for_all, Gen};
+
+    fn dims() -> Dims {
+        Dims::new(8, 20, 1)
+    }
+
+    fn setup(g: &mut Gen, d: &Dims) -> (Vec<u32>, LfsrBank, RomTables) {
+        let pop = g.masked_vec(d.n, d.m);
+        let bank = LfsrBank::from_states(g.lfsr_states(d.lfsr_len()), d.n, d.p);
+        let tables = build_tables(&F3, d.m, d.gamma_bits);
+        (pop, bank, tables)
+    }
+
+    #[test]
+    fn fitness_uses_rom_composition() {
+        let d = dims();
+        let tables = build_tables(&F2, d.m, GAMMA_BITS_DEFAULT);
+        let pop: Vec<u32> = vec![crate::bits::concat(2, 3, 10); d.n];
+        let mut y = vec![0i64; d.n];
+        fitness_all(&pop, &tables, &mut y);
+        assert!(y.iter().all(|&v| v == 16 - 12 + 1020));
+    }
+
+    #[test]
+    fn selection_picks_the_better() {
+        // Force known indices by building a bank whose top bits are fixed.
+        let d = Dims::new(4, 20, 1);
+        // sel_bits = 2; states with top-2 bits = 0..3.
+        let idx_state = |i: u32| i << 30 | 1;
+        let mut states = vec![0u32; d.lfsr_len()];
+        for j in 0..d.n {
+            states[2 * j] = idx_state(0); // contestant A: index 0
+            states[2 * j + 1] = idx_state(3); // contestant B: index 3
+        }
+        for s in states.iter_mut().skip(2 * d.n) {
+            *s = 1;
+        }
+        let bank = LfsrBank::from_states(states, d.n, d.p);
+        let pop = vec![111u32, 222, 333, 444];
+        let y = vec![10i64, 20, 30, 40];
+        let mut w = vec![0u32; d.n];
+        // minimize: y[0]=10 < y[3]=40 → first wins.
+        select_all(&pop, &y, &bank, false, &d, &mut w);
+        assert!(w.iter().all(|&x| x == 111));
+        // maximize: y[0] < y[3] → second wins.
+        select_all(&pop, &y, &bank, true, &d, &mut w);
+        assert!(w.iter().all(|&x| x == 444));
+    }
+
+    #[test]
+    fn selection_tie_second_wins() {
+        let d = Dims::new(4, 20, 1);
+        let idx_state = |i: u32| i << 30 | 1;
+        let mut states = vec![1u32; d.lfsr_len()];
+        states[0] = idx_state(1);
+        states[1] = idx_state(2);
+        let bank = LfsrBank::from_states(states, d.n, d.p);
+        let pop = vec![111u32, 222, 333, 444];
+        let y = vec![5i64, 7, 7, 9];
+        let mut w = vec![0u32; d.n];
+        select_all(&pop, &y, &bank, false, &d, &mut w);
+        assert_eq!(w[0], 333, "tie must pick the second contestant");
+    }
+
+    #[test]
+    fn crossover_children_are_head_tail_swaps() {
+        for_all(50, |g| {
+            let d = dims();
+            let w = g.masked_vec(d.n, d.m);
+            let bank = LfsrBank::from_states(g.lfsr_states(d.lfsr_len()), d.n, d.p);
+            let mut z = vec![0u32; d.n];
+            crossover_all(&w, &bank, &d, &mut z);
+            let h = d.h();
+            for i in 0..d.n / 2 {
+                let (p0, q0) = split(w[2 * i], h);
+                let (p1, q1) = split(w[2 * i + 1], h);
+                let (zp0, zq0) = split(z[2 * i], h);
+                let (zp1, zq1) = split(z[2 * i + 1], h);
+                // Every child bit comes from one of the two parents at the
+                // same bit position.
+                for b in 0..h {
+                    let bit = |v: u32| (v >> b) & 1;
+                    assert!(bit(zp0) == bit(p0) || bit(zp0) == bit(p1));
+                    assert!(bit(zp1) == bit(p0) || bit(zp1) == bit(p1));
+                    assert!(bit(zq0) == bit(q0) || bit(zq0) == bit(q1));
+                    assert!(bit(zq1) == bit(q0) || bit(zq1) == bit(q1));
+                    // Complementarity: children partition parent bits.
+                    assert!(
+                        (bit(zp0) == bit(p0)) == (bit(zp1) == bit(p1))
+                            || bit(p0) == bit(p1)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn crossover_shift_zero_swaps_whole_halves() {
+        // shift 0 → mask = all ones → child0 = tail of parent1 entirely.
+        let d = Dims::new(2, 20, 0);
+        let states = vec![1u32; d.lfsr_len()]; // top bits 0 → shift 0
+        let bank = LfsrBank::from_states(states, 2, 0);
+        let w = vec![crate::bits::concat(0x3FF, 0x3FF, 10), 0u32];
+        let mut z = vec![0u32; 2];
+        crossover_all(&w, &bank, &d, &mut z);
+        assert_eq!(z[0], 0); // head(w0)=0 | tail(w1)=0
+        assert_eq!(z[1], crate::bits::concat(0x3FF, 0x3FF, 10));
+    }
+
+    #[test]
+    fn mutation_only_first_p() {
+        for_all(20, |g| {
+            let n = 16;
+            for p in [0usize, 1, 3, 16] {
+                let d = Dims::new(n, 20, p);
+                let bank = LfsrBank::from_states(g.lfsr_states(d.lfsr_len()), n, p);
+                let z0 = g.masked_vec(n, 20);
+                let mut z = z0.clone();
+                mutate_all(&mut z, &bank, &d);
+                for j in 0..n {
+                    if j < p {
+                        assert_eq!(z[j], z0[j] ^ top_bits(bank.mm(j), 20));
+                    } else {
+                        assert_eq!(z[j], z0[j]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn step_preserves_population_size_and_mask() {
+        for_all(30, |g| {
+            let d = Dims::new(g.paper_n().max(4), g.paper_m(), 1);
+            let (pop, mut bank, tables) = setup(g, &d);
+            let mut y = vec![0i64; d.n];
+            let mut next = vec![0u32; d.n];
+            let mut w = vec![0u32; d.n];
+            generation_step(&pop, &mut bank, &tables, false, &d, &mut y, &mut next, &mut w);
+            assert_eq!(next.len(), d.n);
+            let lim = mask32(d.m);
+            assert!(next.iter().all(|&x| x <= lim));
+        });
+    }
+
+    #[test]
+    fn step_is_deterministic() {
+        let mut g = Gen::new(99);
+        let d = dims();
+        let (pop, bank, tables) = setup(&mut g, &d);
+        let run = |mut b: LfsrBank| {
+            let mut y = vec![0i64; d.n];
+            let mut next = vec![0u32; d.n];
+            let mut w = vec![0u32; d.n];
+            generation_step(&pop, &mut b, &tables, true, &d, &mut y, &mut next, &mut w);
+            (y, next, b)
+        };
+        let (y1, n1, b1) = run(bank.clone());
+        let (y2, n2, b2) = run(bank);
+        assert_eq!(y1, y2);
+        assert_eq!(n1, n2);
+        assert_eq!(b1, b2);
+    }
+}

@@ -1,0 +1,335 @@
+//! Stateful GA instance: population + LFSR bank + running best, advanced in
+//! chunks. The coordinator drives these directly (behavioral path) or mirrors
+//! their state into PJRT literals (accelerated path) — both produce identical
+//! trajectories.
+
+use crate::config::GaParams;
+use crate::ga::{engine, Dims};
+use crate::lfsr::LfsrBank;
+use crate::prng::{initial_population, seed_bank};
+use crate::rom::{cached_tables, RomTables};
+use std::sync::Arc;
+
+/// Running best (fitness, chromosome) with the direction's identity element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BestSoFar {
+    pub y: i64,
+    pub x: u32,
+    maximize: bool,
+}
+
+impl BestSoFar {
+    pub fn new(maximize: bool) -> Self {
+        Self {
+            y: if maximize { i64::MIN } else { i64::MAX },
+            x: 0,
+            maximize,
+        }
+    }
+
+    /// Fold in a candidate; returns true if it improved.
+    #[inline]
+    pub fn offer(&mut self, y: i64, x: u32) -> bool {
+        let better = if self.maximize { y > self.y } else { y < self.y };
+        if better {
+            self.y = y;
+            self.x = x;
+        }
+        better
+    }
+
+    /// Merge another tracker (chunk boundaries).
+    pub fn merge(&mut self, other: &BestSoFar) {
+        self.offer(other.y, other.x);
+    }
+}
+
+/// One live GA optimization: the paper's machine state between generations.
+#[derive(Debug, Clone)]
+pub struct GaInstance {
+    dims: Dims,
+    tables: Arc<RomTables>,
+    maximize: bool,
+    pop: Vec<u32>,
+    bank: LfsrBank,
+    best: BestSoFar,
+    generation: u32,
+    /// Best fitness of each generation's population (Figs. 11-12 series).
+    curve: Vec<i64>,
+    // Scratch buffers reused across generations (hot path: no allocation).
+    scratch_y: Vec<i64>,
+    scratch_w: Vec<u32>,
+    scratch_next: Vec<u32>,
+}
+
+impl GaInstance {
+    /// Build from config-level parameters (tables constructed here).
+    pub fn from_params(params: &GaParams) -> crate::Result<Self> {
+        params.validate()?;
+        let dims = Dims::from_params(params);
+        // Cached per (function, m, gamma_bits): table construction is too
+        // slow for the scheduler's submit path (EXPERIMENTS.md §Perf iter 4).
+        let tables = cached_tables(&params.spec()?, params.m, params.gamma_bits);
+        Ok(Self::new(dims, tables, params.maximize, params.seed))
+    }
+
+    /// Build with explicit tables (custom fitness functions, tests).
+    pub fn new(dims: Dims, tables: Arc<RomTables>, maximize: bool, seed: u64) -> Self {
+        assert_eq!(tables.m, dims.m, "table width must match dims");
+        let pop = initial_population(seed, dims.n, dims.m);
+        // LFSR seeds from a distinct stream position (mirrors the python
+        // convention of separate seeds; kept simple: seed+0x5EED offset).
+        let bank = LfsrBank::from_states(
+            seed_bank(seed ^ SEED_BANK_TAG, dims.lfsr_len()),
+            dims.n,
+            dims.p,
+        );
+        Self::from_state(dims, tables, maximize, pop, bank)
+    }
+
+    /// Resume from explicit state (golden replay, PJRT round-trips).
+    pub fn from_state(
+        dims: Dims,
+        tables: Arc<RomTables>,
+        maximize: bool,
+        pop: Vec<u32>,
+        bank: LfsrBank,
+    ) -> Self {
+        assert_eq!(pop.len(), dims.n);
+        assert_eq!(bank.len(), dims.lfsr_len());
+        Self {
+            dims,
+            tables,
+            maximize,
+            pop,
+            bank,
+            best: BestSoFar::new(maximize),
+            generation: 0,
+            curve: Vec::new(),
+            scratch_y: vec![0; dims.n],
+            scratch_w: vec![0; dims.n],
+            scratch_next: vec![0; dims.n],
+        }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> &Dims {
+        &self.dims
+    }
+
+    #[inline]
+    pub fn tables(&self) -> &Arc<RomTables> {
+        &self.tables
+    }
+
+    #[inline]
+    pub fn maximize(&self) -> bool {
+        self.maximize
+    }
+
+    #[inline]
+    pub fn population(&self) -> &[u32] {
+        &self.pop
+    }
+
+    #[inline]
+    pub fn bank(&self) -> &LfsrBank {
+        &self.bank
+    }
+
+    #[inline]
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+
+    #[inline]
+    pub fn best(&self) -> &BestSoFar {
+        &self.best
+    }
+
+    /// Convergence series so far (one entry per completed generation).
+    #[inline]
+    pub fn curve(&self) -> &[i64] {
+        &self.curve
+    }
+
+    /// Run one generation; returns this generation's best (y, x).
+    pub fn step(&mut self) -> (i64, u32) {
+        // Split borrows: engine needs &pop and &mut scratch simultaneously.
+        engine::fitness_all(&self.pop, &self.tables, &mut self.scratch_y);
+        engine::select_all(
+            &self.pop,
+            &self.scratch_y,
+            &self.bank,
+            self.maximize,
+            &self.dims,
+            &mut self.scratch_w,
+        );
+        engine::crossover_all(&self.scratch_w, &self.bank, &self.dims, &mut self.scratch_next);
+        engine::mutate_all(&mut self.scratch_next, &self.bank, &self.dims);
+        self.bank.tick_all();
+
+        // Generation best over the *input* population (matches L2 curve).
+        let mut gen_best = BestSoFar::new(self.maximize);
+        for (x, y) in self.pop.iter().zip(&self.scratch_y) {
+            gen_best.offer(*y, *x);
+        }
+        self.best.offer(gen_best.y, gen_best.x);
+        self.curve.push(gen_best.y);
+
+        std::mem::swap(&mut self.pop, &mut self.scratch_next);
+        self.generation += 1;
+        (gen_best.y, gen_best.x)
+    }
+
+    /// Run `k` generations; returns the running best afterwards.
+    pub fn run(&mut self, k: u32) -> BestSoFar {
+        for _ in 0..k {
+            self.step();
+        }
+        self.best
+    }
+
+    /// Overwrite one individual (island-model migration, [19]): the migrant
+    /// enters the population as-is; fitness is computed next generation like
+    /// any other chromosome.
+    pub fn replace_individual(&mut self, slot: usize, x: u32) {
+        assert!(slot < self.dims.n, "slot out of range");
+        assert!(x <= crate::bits::mask32(self.dims.m), "migrant wider than m");
+        self.pop[slot] = x;
+    }
+
+    /// Overwrite state from an accelerated-path round trip (pop + bank after
+    /// a chunk, plus the chunk's best and curve slice).
+    pub fn absorb_chunk(
+        &mut self,
+        pop: Vec<u32>,
+        bank_states: Vec<u32>,
+        best_y: i64,
+        best_x: u32,
+        curve: &[i64],
+        generations: u32,
+    ) {
+        assert_eq!(pop.len(), self.dims.n);
+        self.pop = pop;
+        self.bank = LfsrBank::from_states(bank_states, self.dims.n, self.dims.p);
+        self.best.offer(best_y, best_x);
+        self.curve.extend_from_slice(curve);
+        self.generation += generations;
+    }
+}
+
+/// Stream tag separating the LFSR-bank seed stream from the population
+/// stream for the same master seed.
+const SEED_BANK_TAG: u64 = 0x5EED_0000_0000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::{F2, F3, GAMMA_BITS_DEFAULT};
+
+    fn params() -> GaParams {
+        GaParams {
+            n: 16,
+            m: 20,
+            k: 50,
+            function: "f3".into(),
+            ..GaParams::default()
+        }
+    }
+
+    #[test]
+    fn best_so_far_directions() {
+        let mut min = BestSoFar::new(false);
+        assert!(min.offer(10, 1));
+        assert!(!min.offer(10, 2)); // tie: no improvement
+        assert!(min.offer(9, 3));
+        assert_eq!((min.y, min.x), (9, 3));
+
+        let mut max = BestSoFar::new(true);
+        assert!(max.offer(-5, 1));
+        assert!(max.offer(7, 2));
+        assert!(!max.offer(6, 3));
+        assert_eq!((max.y, max.x), (7, 2));
+    }
+
+    #[test]
+    fn merge_keeps_better() {
+        let mut a = BestSoFar::new(false);
+        a.offer(5, 1);
+        let mut b = BestSoFar::new(false);
+        b.offer(3, 2);
+        a.merge(&b);
+        assert_eq!(a.y, 3);
+    }
+
+    #[test]
+    fn instance_runs_and_tracks_curve() {
+        let mut inst = GaInstance::from_params(&params()).unwrap();
+        let best = inst.run(50);
+        assert_eq!(inst.generation(), 50);
+        assert_eq!(inst.curve().len(), 50);
+        // Running best equals the min over the curve (minimize).
+        assert_eq!(best.y, *inst.curve().iter().min().unwrap());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = {
+            let mut i = GaInstance::from_params(&params()).unwrap();
+            i.run(30);
+            (i.population().to_vec(), i.best().y)
+        };
+        let b = {
+            let mut i = GaInstance::from_params(&params()).unwrap();
+            i.run(30);
+            (i.population().to_vec(), i.best().y)
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut p1 = params();
+        p1.seed = 1;
+        let mut p2 = params();
+        p2.seed = 2;
+        let mut i1 = GaInstance::from_params(&p1).unwrap();
+        let mut i2 = GaInstance::from_params(&p2).unwrap();
+        i1.run(10);
+        i2.run(10);
+        assert_ne!(i1.population(), i2.population());
+    }
+
+    #[test]
+    fn step_equals_engine_generation_step() {
+        // The instance hot path (scratch reuse) must equal the pure function.
+        let dims = Dims::new(8, 20, 1);
+        let tables = Arc::new(crate::rom::build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+        let mut inst = GaInstance::new(dims, tables.clone(), false, 77);
+        let pop0 = inst.population().to_vec();
+        let mut bank0 = inst.bank().clone();
+        inst.step();
+        let mut y = vec![0i64; dims.n];
+        let mut next = vec![0u32; dims.n];
+        let mut w = vec![0u32; dims.n];
+        engine::generation_step(&pop0, &mut bank0, &tables, false, &dims, &mut y, &mut next, &mut w);
+        assert_eq!(inst.population(), &next[..]);
+        assert_eq!(inst.bank(), &bank0);
+    }
+
+    #[test]
+    fn absorb_chunk_threads_state() {
+        let dims = Dims::new(4, 20, 1);
+        let tables = Arc::new(crate::rom::build_tables(&F2, 20, GAMMA_BITS_DEFAULT));
+        let mut inst = GaInstance::new(dims, tables, false, 5);
+        let pop = vec![1u32, 2, 3, 4];
+        let bank = vec![9u32; dims.lfsr_len()];
+        inst.absorb_chunk(pop.clone(), bank, -100, 7, &[-50, -100], 2);
+        assert_eq!(inst.population(), &pop[..]);
+        assert_eq!(inst.generation(), 2);
+        assert_eq!(inst.best().y, -100);
+        assert_eq!(inst.best().x, 7);
+        assert_eq!(inst.curve(), &[-50, -100]);
+    }
+}

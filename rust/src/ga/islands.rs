@@ -1,0 +1,254 @@
+//! Island-model parallel GA — the multi-FPGA configuration of [19]
+//! (Guo et al., "Parallel genetic algorithms on multiple FPGAs", the work
+//! the paper compares against for F3).
+//!
+//! M isolated GA machines ("islands", one per FPGA in [19]) evolve
+//! independently; every `migration_interval` generations each island's best
+//! chromosome replaces a fixed slot of the next island on a ring. Isolation
+//! maintains diversity, migration spreads building blocks — [19]'s rationale
+//! quoted in the paper's related work.
+//!
+//! Policy pinned for determinism (documented, tested):
+//! * ring topology, island i → island (i+1) mod M;
+//! * the migrant replaces the LAST individual (slot N−1) of the target —
+//!   slot 0..P−1 are the mutation modules' slots, so the migrant is not
+//!   immediately mutated; replacement happens simultaneously on all islands
+//!   (double-buffered, like the hardware's register exchange would be);
+//! * the migrant is the island's *running best* (best-so-far register).
+
+use crate::ga::{BestSoFar, GaInstance};
+
+/// Ring-topology island GA over M identical machines.
+#[derive(Debug, Clone)]
+pub struct IslandGa {
+    islands: Vec<GaInstance>,
+    migration_interval: u32,
+    generations: u32,
+    migrations: u32,
+}
+
+impl IslandGa {
+    /// Build from pre-seeded instances (each island must differ in seed to
+    /// be useful; identical seeds are allowed but pointless).
+    pub fn new(islands: Vec<GaInstance>, migration_interval: u32) -> Self {
+        assert!(islands.len() >= 2, "island model needs >= 2 islands");
+        assert!(migration_interval > 0, "migration interval must be positive");
+        let dims = *islands[0].dims();
+        let maximize = islands[0].maximize();
+        for isl in &islands {
+            assert_eq!(isl.dims(), &dims, "islands must share dims");
+            assert_eq!(isl.maximize(), maximize, "islands must share direction");
+        }
+        Self {
+            islands,
+            migration_interval,
+            generations: 0,
+            migrations: 0,
+        }
+    }
+
+    pub fn islands(&self) -> &[GaInstance] {
+        &self.islands
+    }
+
+    pub fn generations(&self) -> u32 {
+        self.generations
+    }
+
+    pub fn migrations(&self) -> u32 {
+        self.migrations
+    }
+
+    /// Best across all islands.
+    pub fn best(&self) -> BestSoFar {
+        let mut best = BestSoFar::new(self.islands[0].maximize());
+        for isl in &self.islands {
+            best.merge(isl.best());
+        }
+        best
+    }
+
+    /// Global best-of-generation curve: elementwise best across island curves.
+    pub fn curve(&self) -> Vec<i64> {
+        let maximize = self.islands[0].maximize();
+        let len = self.islands[0].curve().len();
+        (0..len)
+            .map(|g| {
+                self.islands
+                    .iter()
+                    .map(|i| i.curve()[g])
+                    .reduce(|a, b| if maximize { a.max(b) } else { a.min(b) })
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// One migration epoch: all islands' running bests move one ring hop,
+    /// double-buffered (all reads before any write).
+    fn migrate(&mut self) {
+        let m = self.islands.len();
+        let migrants: Vec<u32> = self.islands.iter().map(|i| i.best().x).collect();
+        for (i, migrant) in migrants.into_iter().enumerate() {
+            let target = (i + 1) % m;
+            let slot = self.islands[target].dims().n - 1;
+            self.islands[target].replace_individual(slot, migrant);
+        }
+        self.migrations += 1;
+    }
+
+    /// Run `k` generations with migration epochs; returns the global best.
+    pub fn run(&mut self, k: u32) -> BestSoFar {
+        let mut remaining = k;
+        while remaining > 0 {
+            let until_epoch = self.migration_interval
+                - (self.generations % self.migration_interval);
+            let step = remaining.min(until_epoch);
+            for isl in &mut self.islands {
+                isl.run(step);
+            }
+            self.generations += step;
+            remaining -= step;
+            if self.generations % self.migration_interval == 0 && remaining > 0 {
+                self.migrate();
+            }
+        }
+        self.best()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaParams;
+    use crate::ga::{Dims, GaInstance};
+    use crate::rom::{cached_tables, F3};
+
+    fn island(seed: u64, n: usize) -> GaInstance {
+        let params = GaParams {
+            n,
+            m: 20,
+            k: 100,
+            function: "f3".into(),
+            seed,
+            ..GaParams::default()
+        };
+        GaInstance::from_params(&params).unwrap()
+    }
+
+    fn ring(m: usize, n: usize, interval: u32) -> IslandGa {
+        IslandGa::new((0..m as u64).map(|s| island(s * 7 + 1, n)).collect(), interval)
+    }
+
+    #[test]
+    fn runs_requested_generations_across_epochs() {
+        let mut ig = ring(4, 16, 10);
+        ig.run(35);
+        assert_eq!(ig.generations(), 35);
+        for isl in ig.islands() {
+            assert_eq!(isl.generation(), 35);
+        }
+        assert_eq!(ig.migrations(), 3); // after gens 10, 20, 30
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = {
+            let mut ig = ring(3, 16, 5);
+            ig.run(40);
+            (ig.best().y, ig.curve())
+        };
+        let b = {
+            let mut ig = ring(3, 16, 5);
+            ig.run(40);
+            (ig.best().y, ig.curve())
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn migration_copies_bests_one_hop() {
+        let mut ig = ring(3, 8, 5);
+        for isl in &mut ig.islands {
+            isl.run(5);
+        }
+        ig.generations = 5;
+        let bests: Vec<u32> = ig.islands().iter().map(|i| i.best().x).collect();
+        ig.migrate();
+        for (i, &migrant) in bests.iter().enumerate() {
+            let target = (i + 1) % 3;
+            let slot = ig.islands()[target].dims().n - 1;
+            assert_eq!(ig.islands()[target].population()[slot], migrant);
+        }
+    }
+
+    #[test]
+    fn global_best_is_min_over_islands() {
+        let mut ig = ring(4, 16, 10);
+        ig.run(50);
+        let manual = ig.islands().iter().map(|i| i.best().y).min().unwrap();
+        assert_eq!(ig.best().y, manual);
+    }
+
+    #[test]
+    fn curve_is_elementwise_best() {
+        let mut ig = ring(2, 8, 7);
+        ig.run(20);
+        let c = ig.curve();
+        assert_eq!(c.len(), 20);
+        for g in 0..20 {
+            let expect = ig.islands().iter().map(|i| i.curve()[g]).min().unwrap();
+            assert_eq!(c[g], expect);
+        }
+    }
+
+    #[test]
+    fn islands_with_migration_beat_isolated_islands() {
+        // Same total budget: 4 islands x N=16 x K=100, with vs without
+        // migration. Statistical over seeds: migration should win or tie
+        // a clear majority (the [19] rationale).
+        let mut wins = 0;
+        let mut ties = 0;
+        let trials = 10;
+        for t in 0..trials {
+            let mk = |interval| {
+                IslandGa::new(
+                    (0..4u64).map(|s| island(t * 100 + s * 13 + 1, 16)).collect(),
+                    interval,
+                )
+            };
+            let with = {
+                let mut ig = mk(10);
+                ig.run(100).y
+            };
+            let without = {
+                // interval larger than K => never migrates
+                let mut ig = mk(1000);
+                ig.run(100).y
+            };
+            if with < without {
+                wins += 1;
+            } else if with == without {
+                ties += 1;
+            }
+        }
+        assert!(
+            wins + ties >= trials / 2,
+            "migration lost too often: {wins} wins, {ties} ties of {trials}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 2 islands")]
+    fn single_island_rejected() {
+        IslandGa::new(vec![island(1, 8)], 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "share dims")]
+    fn mismatched_dims_rejected() {
+        let a = island(1, 8);
+        let tables = cached_tables(&F3, 20, 12);
+        let b = GaInstance::new(Dims::new(16, 20, 1), tables, false, 2);
+        IslandGa::new(vec![a, b], 10);
+    }
+}

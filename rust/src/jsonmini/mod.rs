@@ -1,0 +1,208 @@
+//! Minimal JSON parser/writer — substrate (serde is not in the offline crate
+//! set, DESIGN.md §2). Used for the AOT `manifest.json`, the golden-vector
+//! replay files, and machine-readable bench reports.
+//!
+//! Scope: full JSON syntax; numbers are kept as `i64` when integral (golden
+//! vectors are exact integers — floats would break bit-exact replay) and
+//! `f64` otherwise. No streaming; files here are ≤ a few MB.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string;
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integral numbers (exact; golden vectors rely on this).
+    Int(i64),
+    /// Non-integral numbers.
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    /// BTreeMap keeps key order deterministic for round-trip tests.
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_i64().and_then(|v| u32::try_from(v).ok())
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field access: `v.get("steps")`.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Required-field helpers for loader code (error over Option juggling).
+    pub fn req_i64(&self, key: &str) -> anyhow::Result<i64> {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid int field `{key}`"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field `{key}`"))
+    }
+
+    pub fn req_array(&self, key: &str) -> anyhow::Result<&[Value]> {
+        self.get(key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field `{key}`"))
+    }
+
+    /// Decode an array field of integers as `Vec<i64>`.
+    pub fn req_i64_vec(&self, key: &str) -> anyhow::Result<Vec<i64>> {
+        self.req_array(key)?
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .ok_or_else(|| anyhow::anyhow!("non-integer in array `{key}`"))
+            })
+            .collect()
+    }
+
+    /// Decode an array field of u32 (golden populations / LFSR banks).
+    pub fn req_u32_vec(&self, key: &str) -> anyhow::Result<Vec<u32>> {
+        self.req_array(key)?
+            .iter()
+            .map(|v| {
+                v.as_u32()
+                    .ok_or_else(|| anyhow::anyhow!("non-u32 in array `{key}`"))
+            })
+            .collect()
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Convenience object builder: `obj([("a", 1.into()), ...])`.
+pub fn obj<I: IntoIterator<Item = (&'static str, Value)>>(fields: I) -> Value {
+    Value::Object(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": 1, "b": "x", "c": [1,2,3], "d": true, "e": null, "f": 1.5}"#).unwrap();
+        assert_eq!(v.req_i64("a").unwrap(), 1);
+        assert_eq!(v.req_str("b").unwrap(), "x");
+        assert_eq!(v.req_i64_vec("c").unwrap(), vec![1, 2, 3]);
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("e"), Some(&Value::Null));
+        assert_eq!(v.get("f").unwrap().as_f64(), Some(1.5));
+        assert!(v.req_i64("zzz").is_err());
+    }
+
+    #[test]
+    fn u32_vec_bounds() {
+        let v = parse(r#"{"x": [0, 4294967295]}"#).unwrap();
+        assert_eq!(v.req_u32_vec("x").unwrap(), vec![0, u32::MAX]);
+        let bad = parse(r#"{"x": [-1]}"#).unwrap();
+        assert!(bad.req_u32_vec("x").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a":[1,2,{"b":false}],"c":"hi\nthere","d":-42}"#;
+        let v = parse(src).unwrap();
+        let emitted = to_string(&v);
+        assert_eq!(parse(&emitted).unwrap(), v);
+    }
+}

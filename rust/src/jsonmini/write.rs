@@ -1,0 +1,113 @@
+//! JSON serialization (compact, deterministic key order via BTreeMap).
+
+use super::Value;
+use std::fmt::Write as _;
+
+/// Serialize a value to a compact JSON string.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v);
+    out
+}
+
+fn write_value(out: &mut String, v: &Value) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Int(n) => {
+            let _ = write!(out, "{n}");
+        }
+        Value::Float(f) => {
+            if f.is_finite() {
+                // Ensure round-trippable floats keep a decimal marker.
+                if f.fract() == 0.0 && f.abs() < 1e15 {
+                    let _ = write!(out, "{f:.1}");
+                } else {
+                    let _ = write!(out, "{f}");
+                }
+            } else {
+                // JSON has no Inf/NaN; degrade to null (reports only).
+                out.push_str("null");
+            }
+        }
+        Value::Str(s) => write_string(out, s),
+        Value::Array(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(out, item);
+            }
+            out.push(']');
+        }
+        Value::Object(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(out, k);
+                out.push(':');
+                write_value(out, val);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{obj, parse};
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(to_string(&Value::Int(-5)), "-5");
+        assert_eq!(to_string(&Value::Float(1.5)), "1.5");
+        assert_eq!(to_string(&Value::Float(2.0)), "2.0");
+        assert_eq!(to_string(&Value::Bool(true)), "true");
+        assert_eq!(to_string(&Value::Null), "null");
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(to_string(&Value::Str("a\"b\n".into())), r#""a\"b\n""#);
+        assert_eq!(to_string(&Value::Str("\u{0001}".into())), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn object_roundtrip() {
+        let v = obj([
+            ("name", "table1".into()),
+            ("rows", vec![1i64, 2, 3].into()),
+            ("ok", true.into()),
+        ]);
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn nan_degrades_to_null() {
+        assert_eq!(to_string(&Value::Float(f64::NAN)), "null");
+    }
+}

@@ -1,0 +1,158 @@
+//! The LFSR *bank*: the flat array of generator states one GA instance owns.
+//!
+//! Layout (DESIGN.md §5, identical to python/compile/kernels/ref.py):
+//!
+//! ```text
+//! [ sm1_0, sm2_0, …, sm1_{N−1}, sm2_{N−1},   // 2N tournament generators (SM)
+//!   cmP_0, cmQ_0, …, cmP_{N/2−1}, cmQ_{N/2−1}, // N cut-point generators (CM)
+//!   mm_0, …, mm_{P−1} ]                      // P mutation generators (MM)
+//! ```
+
+use crate::lfsr::step;
+use crate::prng::seed_bank;
+
+/// Flat bank of LFSR states with the paper's module-to-index mapping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LfsrBank {
+    states: Vec<u32>,
+    n: usize,
+    p: usize,
+}
+
+impl LfsrBank {
+    /// Seed a bank of `3N + P` generators from a master seed (SplitMix64
+    /// stream; identical to the python `seed_bank(seed, L)` call).
+    pub fn seeded(master_seed: u64, n: usize, p: usize) -> Self {
+        Self {
+            states: seed_bank(master_seed, 3 * n + p),
+            n,
+            p,
+        }
+    }
+
+    /// Wrap explicit states (golden-vector replay). Length must be `3N + P`.
+    pub fn from_states(states: Vec<u32>, n: usize, p: usize) -> Self {
+        assert_eq!(states.len(), 3 * n + p, "bank length must be 3N+P");
+        Self { states, n, p }
+    }
+
+    /// Wrap a flat state vector with no layout interpretation (the
+    /// multi-variable machine computes its own offsets — `ga::multivar`).
+    /// The 2-var accessors (`sm1`/`cm_p`/…) must not be used on such a bank.
+    pub fn from_states_unchecked(states: Vec<u32>) -> Self {
+        Self {
+            states,
+            n: 0,
+            p: 0,
+        }
+    }
+
+    /// Advance every generator one tick (layout-agnostic alias of
+    /// [`LfsrBank::tick_all`] for flat banks).
+    pub fn tick_all_flat(&mut self) {
+        for s in &mut self.states {
+            *s = step(*s);
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Raw states (for marshalling into PJRT literals / golden comparisons).
+    #[inline]
+    pub fn states(&self) -> &[u32] {
+        &self.states
+    }
+
+    /// First tournament generator of selection module j (SMLFSR1_j).
+    #[inline]
+    pub fn sm1(&self, j: usize) -> u32 {
+        self.states[2 * j]
+    }
+
+    /// Second tournament generator of selection module j (SMLFSR2_j).
+    #[inline]
+    pub fn sm2(&self, j: usize) -> u32 {
+        self.states[2 * j + 1]
+    }
+
+    /// Cut-point generator for the p-half of crossover pair i (CMPQLFSR1 of
+    /// CMPQ1_i).
+    #[inline]
+    pub fn cm_p(&self, i: usize) -> u32 {
+        self.states[2 * self.n + 2 * i]
+    }
+
+    /// Cut-point generator for the q-half of crossover pair i (CMPQ2_i).
+    #[inline]
+    pub fn cm_q(&self, i: usize) -> u32 {
+        self.states[2 * self.n + 2 * i + 1]
+    }
+
+    /// Mutation generator of mutation module v (MMLFSR_v).
+    #[inline]
+    pub fn mm(&self, v: usize) -> u32 {
+        self.states[3 * self.n + v]
+    }
+
+    /// Advance every generator one tick (end of a generation).
+    pub fn tick_all(&mut self) {
+        for s in &mut self.states {
+            *s = step(*s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_indices() {
+        let n = 8;
+        let p = 2;
+        let states: Vec<u32> = (1..=(3 * n + p) as u32).collect();
+        let bank = LfsrBank::from_states(states, n, p);
+        assert_eq!(bank.sm1(0), 1);
+        assert_eq!(bank.sm2(0), 2);
+        assert_eq!(bank.sm1(7), 15);
+        assert_eq!(bank.sm2(7), 16);
+        assert_eq!(bank.cm_p(0), 17);
+        assert_eq!(bank.cm_q(0), 18);
+        assert_eq!(bank.cm_p(3), 23);
+        assert_eq!(bank.cm_q(3), 24);
+        assert_eq!(bank.mm(0), 25);
+        assert_eq!(bank.mm(1), 26);
+    }
+
+    #[test]
+    #[should_panic(expected = "3N+P")]
+    fn wrong_length_rejected() {
+        LfsrBank::from_states(vec![1, 2, 3], 8, 1);
+    }
+
+    #[test]
+    fn seeded_matches_python_seed_bank_layout() {
+        let bank = LfsrBank::seeded(1042, 4, 1);
+        let raw = seed_bank(1042, 13);
+        assert_eq!(bank.states(), &raw[..]);
+    }
+
+    #[test]
+    fn tick_all_advances_every_state() {
+        let mut bank = LfsrBank::seeded(7, 4, 1);
+        let before = bank.states().to_vec();
+        bank.tick_all();
+        for (b, a) in before.iter().zip(bank.states()) {
+            assert_eq!(*a, step(*b));
+            assert_ne!(a, b);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # fpga-ga — parallel FPGA Genetic Algorithm, reproduced as a rust + JAX/Pallas stack
+//!
+//! Reproduction of *High-Performance Parallel Implementation of Genetic
+//! Algorithm on FPGA* (Torquato & Fernandes, 2018). The paper's fully
+//! parallel GA machine (one fitness/selection/crossover/mutation circuit per
+//! individual, everything clocked from LFSRs) is rebuilt three ways that must
+//! agree bit-for-bit:
+//!
+//! * [`ga`] — a behavioral engine (the fast software model, the L3 hot path
+//!   fallback and the baseline for the PJRT path),
+//! * [`rtl`] — a cycle-accurate simulator of the paper's exact block diagram
+//!   (the FPGA substitute; also the netlist source for [`synth`]),
+//! * the AOT-compiled JAX/Pallas kernel executed through [`runtime`]
+//!   (the accelerator path; python authors it once at build time).
+//!
+//! [`coordinator`] is the serving layer gluing it together: routing,
+//! dynamic batching, chunked execution with early stopping, metrics.
+//! [`synth`] reproduces the paper's synthesis results (Table 1, Figs 13-16)
+//! from structural area/timing models over the RTL netlist.
+//!
+//! See DESIGN.md for the experiment index and the bit-exactness contract.
+
+pub mod baseline;
+pub mod bench_util;
+pub mod bits;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fixed;
+pub mod ga;
+pub mod jsonmini;
+pub mod lfsr;
+pub mod prng;
+pub mod rom;
+pub mod rtl;
+pub mod runtime;
+pub mod synth;
+pub mod testing;
+pub mod tomlmini;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

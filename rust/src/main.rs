@@ -1,0 +1,20 @@
+//! `fpga-ga` launcher binary — the L3 leader entrypoint.
+
+use fpga_ga::cli::{run, Args};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n\n{}", fpga_ga::cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    match run(args) {
+        Ok(output) => println!("{output}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! SplitMix64 — the seed-bank generator, bit-identical to
+//! `python/compile/kernels/lfsr.py::{splitmix64, seed_bank, initial_population}`.
+//!
+//! NOT on the GA datapath: the hardware's randomness is the LFSR fabric
+//! ([`crate::lfsr`]). SplitMix64 only derives the per-LFSR seeds and the
+//! initial population from one reproducible master seed, exactly as the
+//! python compile path does, so both sides start every experiment from the
+//! same state.
+
+/// Replacement seed when a SplitMix64 draw lands on the degenerate all-zero
+/// LFSR state.
+pub const ZERO_SEED_SUBSTITUTE: u32 = 0xDEAD_BEEF;
+
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+const MUL1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MUL2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// Stream tag XORed into the master seed for the population stream, so the
+/// initial population never aliases the LFSR seed bank.
+const POP_STREAM_TAG: u64 = 0xA5A5_A5A5_A5A5_A5A5;
+
+/// SplitMix64 stream state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Start a stream from a master seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(MUL1);
+        z = (z ^ (z >> 27)).wrapping_mul(MUL2);
+        z ^ (z >> 31)
+    }
+
+    /// Next draw truncated to 32 bits (low half, matching python `& MASK32`).
+    pub fn next_u32(&mut self) -> u32 {
+        self.next_u64() as u32
+    }
+
+    /// Uniform in `[0, bound)` (used by test generators, not the GA path).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform f64 in [0, 1) (trace generators).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// `count` distinct non-zero 32-bit LFSR seeds from a master seed.
+/// Mirrors python `seed_bank` exactly (prefix-stable stream).
+pub fn seed_bank(seed: u64, count: usize) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..count)
+        .map(|_| {
+            let s = rng.next_u32();
+            if s == 0 {
+                ZERO_SEED_SUBSTITUTE
+            } else {
+                s
+            }
+        })
+        .collect()
+}
+
+/// Random initial population: low-m-bit draws from the tagged stream.
+/// Mirrors python `initial_population` exactly.
+pub fn initial_population(seed: u64, n: usize, m: u32) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed ^ POP_STREAM_TAG);
+    let mask = (1u64 << m.min(32)) - 1; // m <= 32 by GaParams validation
+    (0..n).map(|_| (rng.next_u64() & mask) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vector_seed_zero() {
+        // Standard SplitMix64 stream, seed 0 (same constant asserted in python).
+        let mut rng = SplitMix64::new(0);
+        assert_eq!(rng.next_u64(), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn seed_bank_nonzero_and_deterministic() {
+        let a = seed_bank(7, 64);
+        let b = seed_bank(7, 64);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| s != 0));
+    }
+
+    #[test]
+    fn seed_bank_prefix_stable() {
+        assert_eq!(seed_bank(5, 8), seed_bank(5, 16)[..8]);
+    }
+
+    #[test]
+    fn population_masked() {
+        for m in [2u32, 20, 26, 32] {
+            let pop = initial_population(1, 64, m);
+            let lim = crate::bits::mask32(m);
+            assert!(pop.iter().all(|&x| x <= lim), "m={m}");
+        }
+    }
+
+    #[test]
+    fn population_stream_independent_of_seed_bank() {
+        let pop = initial_population(9, 8, 32);
+        let bank = seed_bank(9, 8);
+        assert_ne!(pop, bank);
+    }
+
+    #[test]
+    fn unit_f64_in_range() {
+        let mut rng = SplitMix64::new(123);
+        for _ in 0..1000 {
+            let v = rng.unit_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

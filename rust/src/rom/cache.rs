@@ -1,0 +1,79 @@
+//! Process-wide ROM table cache.
+//!
+//! Building tables is O(2^(m/2) + 2^gamma_bits) function evaluations —
+//! hundreds of microseconds for m = 26. Doing that per job submission
+//! stalled the scheduler long enough to blow every batching window
+//! (EXPERIMENTS.md §Perf iter 4). Named functions are pure, so their tables
+//! are cached per (name, m, gamma_bits) for the life of the process.
+//! Custom (closure) specs are not cached — the cache cannot see through
+//! the closure identity.
+
+use super::{build_tables, FnSpec, RomTables};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+static CACHE: Lazy<Mutex<HashMap<(String, u32, u32), Arc<RomTables>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Cached table build for *named* specs (f1/f2/f3). Falls back to an
+/// uncached build for custom specs.
+pub fn cached_tables(spec: &FnSpec, m: u32, gamma_bits: u32) -> Arc<RomTables> {
+    let cacheable = matches!(
+        spec.kind,
+        super::FnKind::F1 | super::FnKind::F2 | super::FnKind::F3
+    );
+    if !cacheable {
+        return Arc::new(build_tables(spec, m, gamma_bits));
+    }
+    let key = (spec.name.to_string(), m, gamma_bits);
+    let mut cache = CACHE.lock().unwrap();
+    cache
+        .entry(key)
+        .or_insert_with(|| Arc::new(build_tables(spec, m, gamma_bits)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::{FnKind, F3};
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn named_specs_share_one_build() {
+        let a = cached_tables(&F3, 20, 12);
+        let b = cached_tables(&F3, 20, 12);
+        assert!(StdArc::ptr_eq(&a, &b));
+        let c = cached_tables(&F3, 22, 12);
+        assert!(!StdArc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn custom_specs_not_cached() {
+        let spec = FnSpec {
+            name: "custom",
+            kind: FnKind::Custom {
+                alpha: StdArc::new(|x| x),
+                beta: StdArc::new(|y| y),
+                gamma: StdArc::new(|d| d),
+            },
+            gamma_bypass: true,
+            signed: true,
+            in_frac: 0,
+            out_frac: 0,
+            single_var: false,
+        };
+        let a = cached_tables(&spec, 10, 8);
+        let b = cached_tables(&spec, 10, 8);
+        assert!(!StdArc::ptr_eq(&a, &b));
+        assert_eq!(a.alpha, b.alpha);
+    }
+
+    #[test]
+    fn cached_equals_direct_build() {
+        let cached = cached_tables(&F3, 24, 12);
+        let direct = build_tables(&F3, 24, 12);
+        assert_eq!(*cached, direct);
+    }
+}

@@ -1,0 +1,102 @@
+//! FFM ROM/LUT builder — the paper's fitness-function memories.
+//!
+//! `y = γ(α(px) + β(qx))` (Eq. 11): FFMROM1 (α) and FFMROM2 (β) are indexed
+//! directly by the two m/2-bit chromosome halves; FFMROM3 (γ) is indexed by
+//! the fixed-point rescale `gidx = clamp((δ − gmin) >> gshift, 0, G−1)`.
+//! Bypass functions (γ = identity: F1, F2) skip the γ ROM entirely so their
+//! fitness is exact.
+//!
+//! Must rebuild tables **bit-identical** to `python/compile/functions.py`
+//! (asserted against the golden vectors in `rust/tests/golden_rom.rs`).
+
+mod cache;
+mod spec;
+mod tables;
+
+pub use cache::cached_tables;
+pub use spec::{FnKind, FnSpec, F1, F2, F3};
+pub use tables::{build_tables, RomTables, GAMMA_BITS_DEFAULT};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::to_signed;
+
+    #[test]
+    fn f1_beta_entries_exact() {
+        let tab = build_tables(&F1, 26, GAMMA_BITS_DEFAULT);
+        let h = 13;
+        for u in [0u32, 1, 4095, 4096, 8191] {
+            let v = to_signed(u, h);
+            assert_eq!(tab.beta[u as usize], v * v * v - 15 * v * v + 500);
+        }
+        assert!(tab.alpha.iter().all(|&a| a == 0), "single-var: alpha == 0");
+    }
+
+    #[test]
+    fn f1_minimum_matches_paper() {
+        // Paper §4: min over [-2^12, 2^12) is f(-2^12) ≈ -6.8971e10.
+        let tab = build_tables(&F1, 26, GAMMA_BITS_DEFAULT);
+        let mn = *tab.beta.iter().min().unwrap();
+        let v: i64 = -(1 << 12);
+        assert_eq!(mn, v * v * v - 15 * v * v + 500);
+        assert!((mn as f64 + 6.8971e10).abs() / 6.8971e10 < 1e-3);
+    }
+
+    #[test]
+    fn f2_linear_exact() {
+        let tab = build_tables(&F2, 20, GAMMA_BITS_DEFAULT);
+        for u in [0u32, 1, 511, 512, 1023] {
+            let v = to_signed(u, 10);
+            assert_eq!(tab.alpha[u as usize], 8 * v);
+            assert_eq!(tab.beta[u as usize], -4 * v + 1020);
+        }
+        assert!(tab.gamma_bypass);
+    }
+
+    #[test]
+    fn f3_squares_and_sqrt() {
+        let tab = build_tables(&F3, 20, GAMMA_BITS_DEFAULT);
+        assert_eq!(tab.alpha[3], 9);
+        assert_eq!(tab.beta[1023], 1); // (-1)^2
+        assert!(!tab.gamma_bypass);
+        // gamma[i] ≈ sqrt(bucket midpoint)
+        let bucket = 1i64 << tab.gshift;
+        let mid = (tab.gmin + bucket / 2) as f64;
+        assert_eq!(tab.gamma[0], crate::fixed::py_round(mid.sqrt()));
+    }
+
+    #[test]
+    fn gamma_index_covers_range() {
+        for (spec, m) in [(&F3, 20u32), (&F3, 28), (&F1, 26), (&F2, 24)] {
+            let tab = build_tables(spec, m, GAMMA_BITS_DEFAULT);
+            let dmin = tab.alpha.iter().min().unwrap() + tab.beta.iter().min().unwrap();
+            let dmax = tab.alpha.iter().max().unwrap() + tab.beta.iter().max().unwrap();
+            assert_eq!((dmin - tab.gmin) >> tab.gshift, 0);
+            assert!((dmax - tab.gmin) >> tab.gshift <= (tab.gamma.len() - 1) as i64);
+        }
+    }
+
+    #[test]
+    fn evaluate_matches_table_composition() {
+        let tab = build_tables(&F3, 20, GAMMA_BITS_DEFAULT);
+        for x in [0u32, 1, 0xFFFFF, 0x3FF, 0x12345] {
+            let y = tab.evaluate(x);
+            let (px, qx) = crate::bits::split(x, 10);
+            let delta = tab.alpha[px as usize] + tab.beta[qx as usize];
+            let gidx = ((delta - tab.gmin) >> tab.gshift).clamp(0, tab.gamma.len() as i64 - 1);
+            assert_eq!(y, tab.gamma[gidx as usize]);
+        }
+    }
+
+    #[test]
+    fn all_paper_widths_build() {
+        for m in [20u32, 22, 24, 26, 28] {
+            for spec in [&F1, &F2, &F3] {
+                let tab = build_tables(spec, m, GAMMA_BITS_DEFAULT);
+                assert_eq!(tab.alpha.len(), 1 << (m / 2));
+                assert!(tab.gshift >= 0);
+            }
+        }
+    }
+}

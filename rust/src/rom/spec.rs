@@ -1,0 +1,215 @@
+//! Fitness-function specifications in the paper's γ(α+β) decomposition.
+//!
+//! A spec is *data*, not code: arbitrary user functions plug in through
+//! [`FnKind::Custom`] with boxed closures, while the paper's three
+//! evaluation functions are provided as constants. The config system
+//! ([`crate::config`]) names them "f1"/"f2"/"f3".
+
+use std::sync::Arc;
+
+/// α/β/γ component functions over the real-valued (fixed-point-decoded)
+/// domain.
+#[derive(Clone)]
+pub enum FnKind {
+    /// F1: f(x) = x³ − 15x² + 500 (single variable, γ = id). Used by [9].
+    F1,
+    /// F2: f(x,y) = 8x − 4y + 1020 (γ = id). Used by [6].
+    F2,
+    /// F3: f(x,y) = √(x² + y²). Used by [19], [14].
+    F3,
+    /// Arbitrary user function (examples: adaptive filter, PID tuning).
+    Custom {
+        alpha: Arc<dyn Fn(f64) -> f64 + Send + Sync>,
+        beta: Arc<dyn Fn(f64) -> f64 + Send + Sync>,
+        gamma: Arc<dyn Fn(f64) -> f64 + Send + Sync>,
+    },
+}
+
+impl std::fmt::Debug for FnKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FnKind::F1 => write!(f, "F1"),
+            FnKind::F2 => write!(f, "F2"),
+            FnKind::F3 => write!(f, "F3"),
+            FnKind::Custom { .. } => write!(f, "Custom"),
+        }
+    }
+}
+
+/// A fitness function plus its LUT parameterization (paper §4: range,
+/// precision and signedness are "parameters of the LUT").
+#[derive(Debug, Clone)]
+pub struct FnSpec {
+    pub name: &'static str,
+    pub kind: FnKind,
+    /// γ is the identity → bypass the γ ROM (exact fitness).
+    pub gamma_bypass: bool,
+    /// Interpret chromosome halves as two's complement.
+    pub signed: bool,
+    /// Fractional bits of the input fixed point.
+    pub in_frac: u32,
+    /// Fractional bits of α/β/γ outputs.
+    pub out_frac: u32,
+    /// Paper's one-variable mode: α(px) ≡ 0, only qx carries data.
+    pub single_var: bool,
+}
+
+impl FnSpec {
+    /// Evaluate the α component at a real input.
+    pub fn alpha(&self, v: f64) -> f64 {
+        if self.single_var {
+            return 0.0;
+        }
+        match &self.kind {
+            FnKind::F1 => 0.0,
+            FnKind::F2 => 8.0 * v,
+            FnKind::F3 => v * v,
+            FnKind::Custom { alpha, .. } => alpha(v),
+        }
+    }
+
+    /// Evaluate the β component at a real input.
+    pub fn beta(&self, v: f64) -> f64 {
+        match &self.kind {
+            FnKind::F1 => v * v * v - 15.0 * v * v + 500.0,
+            FnKind::F2 => -4.0 * v + 1020.0,
+            FnKind::F3 => v * v,
+            FnKind::Custom { beta, .. } => beta(v),
+        }
+    }
+
+    /// Evaluate the γ component at a real δ.
+    pub fn gamma(&self, d: f64) -> f64 {
+        match &self.kind {
+            FnKind::F1 | FnKind::F2 => d,
+            FnKind::F3 => {
+                if d > 0.0 {
+                    d.sqrt()
+                } else {
+                    0.0
+                }
+            }
+            FnKind::Custom { gamma, .. } => gamma(d),
+        }
+    }
+
+    /// Exact float f(px, qx) over decoded codes (quantization-error metric
+    /// for Figs. 8-10; mirrors python `functions.exact_value`).
+    pub fn exact_value(&self, px_code: u32, qx_code: u32, m: u32) -> f64 {
+        let h = m / 2;
+        let scale = (1u64 << self.in_frac) as f64;
+        let decode = |u: u32| -> f64 {
+            let raw = if self.signed {
+                crate::bits::to_signed(u, h) as f64
+            } else {
+                u as f64
+            };
+            raw / scale
+        };
+        let d = self.alpha(decode(px_code)) + self.beta(decode(qx_code));
+        if self.gamma_bypass {
+            d
+        } else {
+            self.gamma(d)
+        }
+    }
+
+    /// Lookup by config name ("f1"/"f2"/"f3").
+    pub fn by_name(name: &str) -> Option<FnSpec> {
+        match name {
+            "f1" => Some(F1.clone()),
+            "f2" => Some(F2.clone()),
+            "f3" => Some(F3.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Paper Eq. 24 (Fig. 8). Minimized in Fig. 11 with N=32, m=26.
+pub static F1: FnSpec = FnSpec {
+    name: "f1",
+    kind: FnKind::F1,
+    gamma_bypass: true,
+    signed: true,
+    in_frac: 0,
+    out_frac: 0,
+    single_var: true,
+};
+
+/// Paper Eq. 25 (Fig. 9).
+pub static F2: FnSpec = FnSpec {
+    name: "f2",
+    kind: FnKind::F2,
+    gamma_bypass: true,
+    signed: true,
+    in_frac: 0,
+    out_frac: 0,
+    single_var: false,
+};
+
+/// Paper Eq. 26 (Fig. 10). Minimized in Fig. 12 with N=64, m=20.
+pub static F3: FnSpec = FnSpec {
+    name: "f3",
+    kind: FnKind::F3,
+    gamma_bypass: false,
+    signed: true,
+    in_frac: 0,
+    out_frac: 0,
+    single_var: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["f1", "f2", "f3"] {
+            assert_eq!(FnSpec::by_name(n).unwrap().name, n);
+        }
+        assert!(FnSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn f1_is_single_var() {
+        assert!(F1.single_var);
+        assert_eq!(F1.alpha(123.0), 0.0);
+        assert_eq!(F1.beta(2.0), 8.0 - 60.0 + 500.0);
+    }
+
+    #[test]
+    fn f3_gamma_clamps_negative() {
+        assert_eq!(F3.gamma(-5.0), 0.0);
+        assert_eq!(F3.gamma(9.0), 3.0);
+    }
+
+    #[test]
+    fn exact_value_signed_domain() {
+        // m=20, h=10: code 1023 decodes to -1.
+        let v = F3.exact_value(1023, 0, 20);
+        assert!((v - 1.0).abs() < 1e-12);
+        let v2 = F2.exact_value(1, 1, 20);
+        assert!((v2 - (8.0 - 4.0 + 1020.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_closures() {
+        let spec = FnSpec {
+            name: "custom",
+            kind: FnKind::Custom {
+                alpha: Arc::new(|x| 2.0 * x),
+                beta: Arc::new(|y| y + 1.0),
+                gamma: Arc::new(|d| d * d),
+            },
+            gamma_bypass: false,
+            signed: false,
+            in_frac: 0,
+            out_frac: 0,
+            single_var: false,
+        };
+        assert_eq!(spec.alpha(3.0), 6.0);
+        assert_eq!(spec.beta(3.0), 4.0);
+        assert_eq!(spec.gamma(3.0), 9.0);
+        assert_eq!(spec.exact_value(1, 1, 8), 16.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! ROM table materialization — bit-identical to python `functions.build_tables`.
+
+use super::FnSpec;
+use crate::bits::{split, to_signed};
+use crate::fixed::py_round;
+
+/// Default γ ROM size exponent (G = 2^12 entries; DESIGN.md §9).
+pub const GAMMA_BITS_DEFAULT: u32 = 12;
+
+/// Materialized FFM ROM contents plus the γ rescale constants. This is the
+/// *whole* per-function state: the paper's claim that changing the fitness
+/// function only changes memory contents holds here as "only this struct
+/// changes", and it is passed to the PJRT artifact as runtime inputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RomTables {
+    pub spec_name: String,
+    pub m: u32,
+    pub gamma_bits: u32,
+    /// FFMROM1: α LUT, 2^(m/2) entries.
+    pub alpha: Vec<i64>,
+    /// FFMROM2: β LUT, 2^(m/2) entries.
+    pub beta: Vec<i64>,
+    /// FFMROM3: γ LUT, 2^gamma_bits entries over rescaled δ.
+    pub gamma: Vec<i64>,
+    /// δ-domain offset of γ bucket 0.
+    pub gmin: i64,
+    /// δ-domain log2 bucket width.
+    pub gshift: i64,
+    /// γ = identity → skip the γ ROM (exact fitness for F1/F2).
+    pub gamma_bypass: bool,
+}
+
+impl RomTables {
+    #[inline]
+    pub fn h(&self) -> u32 {
+        self.m / 2
+    }
+
+    /// Full FFM evaluation of one chromosome (Eq. 11) — the behavioral
+    /// engine's fitness path.
+    #[inline]
+    pub fn evaluate(&self, x: u32) -> i64 {
+        let (px, qx) = split(x, self.h());
+        let delta = self.alpha[px as usize] + self.beta[qx as usize];
+        if self.gamma_bypass {
+            delta
+        } else {
+            let gidx = ((delta - self.gmin) >> self.gshift)
+                .clamp(0, self.gamma.len() as i64 - 1);
+            self.gamma[gidx as usize]
+        }
+    }
+
+    /// Scalar vector in the AOT artifact layout
+    /// `[gmin, gshift, gamma_bypass, maximize]`.
+    pub fn scalars(&self, maximize: bool) -> [i64; 4] {
+        [
+            self.gmin,
+            self.gshift,
+            i64::from(self.gamma_bypass),
+            i64::from(maximize),
+        ]
+    }
+}
+
+/// Build the three FFM ROMs for chromosome width `m` (m even).
+/// Mirrors `python/compile/functions.py::build_tables` exactly, including
+/// banker's rounding and γ bucket-midpoint sampling.
+pub fn build_tables(spec: &FnSpec, m: u32, gamma_bits: u32) -> RomTables {
+    assert!(m % 2 == 0, "m must be even (paper splits x into halves)");
+    let h = m / 2;
+    let size = 1usize << h;
+    let scale_in = (1u64 << spec.in_frac) as f64;
+    let out_scale = (1i64 << spec.out_frac) as f64;
+
+    let code_value = |u: u32| -> f64 {
+        let raw = if spec.signed {
+            to_signed(u, h) as f64
+        } else {
+            u as f64
+        };
+        raw / scale_in
+    };
+
+    let quantize = |x: f64| -> i64 { py_round(x * out_scale) };
+
+    let alpha: Vec<i64> = if spec.single_var {
+        vec![0; size]
+    } else {
+        (0..size as u32).map(|u| quantize(spec.alpha(code_value(u)))).collect()
+    };
+    let beta: Vec<i64> = (0..size as u32)
+        .map(|u| quantize(spec.beta(code_value(u))))
+        .collect();
+
+    let dmin = alpha.iter().min().unwrap() + beta.iter().min().unwrap();
+    let dmax = alpha.iter().max().unwrap() + beta.iter().max().unwrap();
+    let g = 1i64 << gamma_bits;
+    let span = dmax - dmin + 1;
+    let gshift = if span > g {
+        // ceil(log2(span / g)) exactly as python computes it over floats.
+        (span as f64 / g as f64).log2().ceil().max(0.0) as i64
+    } else {
+        0
+    };
+    let gmin = dmin;
+
+    let gamma: Vec<i64> = (0..g)
+        .map(|i| {
+            let lo = gmin + (i << gshift);
+            let mid = lo + ((1i64 << gshift) >> 1);
+            quantize(spec.gamma(mid as f64 / out_scale))
+        })
+        .collect();
+
+    RomTables {
+        spec_name: spec.name.to_string(),
+        m,
+        gamma_bits,
+        alpha,
+        beta,
+        gamma,
+        gmin,
+        gshift,
+        gamma_bypass: spec.gamma_bypass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::{F2, F3};
+
+    #[test]
+    fn scalars_layout() {
+        let tab = build_tables(&F3, 20, GAMMA_BITS_DEFAULT);
+        let s = tab.scalars(true);
+        assert_eq!(s[0], tab.gmin);
+        assert_eq!(s[1], tab.gshift);
+        assert_eq!(s[2], 0); // F3 is not bypass
+        assert_eq!(s[3], 1);
+    }
+
+    #[test]
+    fn bypass_evaluate_is_exact_delta() {
+        let tab = build_tables(&F2, 20, GAMMA_BITS_DEFAULT);
+        // x = px ‖ qx with px=2, qx=3 → 8*2 + (-4*3 + 1020)
+        let x = crate::bits::concat(2, 3, 10);
+        assert_eq!(tab.evaluate(x), 16 - 12 + 1020);
+    }
+
+    #[test]
+    fn gshift_never_negative_and_covers() {
+        for gamma_bits in [8u32, 12, 16] {
+            let tab = build_tables(&F3, 24, gamma_bits);
+            assert!(tab.gshift >= 0);
+            let dmax = tab.alpha.iter().max().unwrap() + tab.beta.iter().max().unwrap();
+            assert!((dmax - tab.gmin) >> tab.gshift <= (1 << gamma_bits) - 1);
+        }
+    }
+}

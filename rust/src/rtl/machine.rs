@@ -1,0 +1,289 @@
+//! The full GA machine (paper Fig. 1): wiring of RX registers, N FFMs,
+//! N SMs, N/2 CMs, P MMs and SyncM, advanced clock by clock.
+
+use super::modules::{Cm, Ffm, Mm, Sm, SyncM};
+use super::netlist::{Netlist, PrimKind};
+use super::primitives::Register;
+use crate::ga::Dims;
+use crate::lfsr::LfsrBank;
+use crate::rom::RomTables;
+use std::sync::Arc;
+
+/// Cycle-accurate GA machine. One generation per 3 clocks.
+#[derive(Debug, Clone)]
+pub struct GaMachine {
+    dims: Dims,
+    maximize: bool,
+    rx: Vec<Register<u32>>,
+    ffm: Vec<Ffm>,
+    sm: Vec<Sm>,
+    cm: Vec<Cm>,
+    mm: Vec<Mm>,
+    syncm: SyncM,
+    netlist: Netlist,
+    clocks: u64,
+    generations: u64,
+    /// y snapshot (registered FFM outputs) for observation.
+    y_bus: Vec<i64>,
+}
+
+impl GaMachine {
+    /// Build the machine with an explicit initial population and LFSR bank
+    /// (the bank supplies seeds in the DESIGN.md §5 layout, so behavioral
+    /// and RTL runs with the same bank are directly comparable).
+    pub fn new(
+        dims: Dims,
+        tables: Arc<RomTables>,
+        maximize: bool,
+        initial_pop: &[u32],
+        bank: &LfsrBank,
+    ) -> Self {
+        assert_eq!(initial_pop.len(), dims.n);
+        assert_eq!(bank.len(), dims.lfsr_len());
+        let mut netlist = Netlist::new();
+
+        netlist.add("rx", PrimKind::Register { width: dims.m }, dims.n);
+        let rx: Vec<Register<u32>> = initial_pop.iter().map(|&x| Register::new(x)).collect();
+        let ffm: Vec<Ffm> = (0..dims.n)
+            .map(|_| Ffm::new(dims, tables.clone(), &mut netlist))
+            .collect();
+        let sm: Vec<Sm> = (0..dims.n)
+            .map(|j| Sm::new(dims, bank.sm1(j), bank.sm2(j), &mut netlist))
+            .collect();
+        let cm: Vec<Cm> = (0..dims.n / 2)
+            .map(|i| Cm::new(dims, bank.cm_p(i), bank.cm_q(i), &mut netlist))
+            .collect();
+        let mm: Vec<Mm> = (0..dims.p)
+            .map(|v| Mm::new(dims, bank.mm(v), &mut netlist))
+            .collect();
+        let syncm = SyncM::new(&mut netlist);
+
+        Self {
+            dims,
+            maximize,
+            rx,
+            ffm,
+            sm,
+            cm,
+            mm,
+            syncm,
+            netlist,
+            clocks: 0,
+            generations: 0,
+            y_bus: vec![0; dims.n],
+        }
+    }
+
+    /// Current population (RX register outputs).
+    pub fn population(&self) -> Vec<u32> {
+        self.rx.iter().map(Register::q).collect()
+    }
+
+    /// Fitness bus (valid in phase 2, i.e. right before a generation edge).
+    pub fn fitness_bus(&self) -> &[i64] {
+        &self.y_bus
+    }
+
+    /// LFSR bank states in the DESIGN.md §5 flat layout.
+    pub fn lfsr_states(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.dims.lfsr_len());
+        for sm in &self.sm {
+            let (s1, s2) = sm.lfsr_states();
+            out.push(s1);
+            out.push(s2);
+        }
+        for cm in &self.cm {
+            let (sp, sq) = cm.lfsr_states();
+            out.push(sp);
+            out.push(sq);
+        }
+        for mm in &self.mm {
+            out.push(mm.lfsr_state());
+        }
+        out
+    }
+
+    pub fn netlist(&self) -> &Netlist {
+        &self.netlist
+    }
+
+    pub fn dims(&self) -> &Dims {
+        &self.dims
+    }
+
+    pub fn clocks(&self) -> u64 {
+        self.clocks
+    }
+
+    pub fn generations(&self) -> u64 {
+        self.generations
+    }
+
+    /// Advance ONE clock. Returns true if this edge completed a generation
+    /// (SyncM enable was asserted).
+    pub fn clock(&mut self) -> bool {
+        let phase = self.syncm.phase();
+        let enable = self.syncm.enable();
+        match phase {
+            0 => {
+                // FFMROM1/2 address phase.
+                for (j, ffm) in self.ffm.iter_mut().enumerate() {
+                    ffm.phase0_read(self.rx[j].q());
+                    ffm.phase0_latch();
+                }
+            }
+            1 => {
+                // Adder + FFMROM3 phase.
+                for ffm in self.ffm.iter_mut() {
+                    ffm.phase1_read();
+                    ffm.phase1_latch();
+                }
+                for (j, ffm) in self.ffm.iter().enumerate() {
+                    self.y_bus[j] = ffm.y();
+                }
+            }
+            _ => {
+                // Phase 2: SM → CM → MM combinational cloud; RX latch on edge.
+                debug_assert!(enable);
+                let pop_q = self.population();
+                let mut w = vec![0u32; self.dims.n];
+                for (j, sm) in self.sm.iter().enumerate() {
+                    w[j] = sm.select(&pop_q, &self.y_bus, self.maximize);
+                }
+                let mut z = vec![0u32; self.dims.n];
+                for (i, cm) in self.cm.iter().enumerate() {
+                    let (c0, c1) = cm.cross(w[2 * i], w[2 * i + 1]);
+                    z[2 * i] = c0;
+                    z[2 * i + 1] = c1;
+                }
+                for (v, mm) in self.mm.iter().enumerate() {
+                    z[v] = mm.mutate(z[v]);
+                }
+                // Clock edge: RX latch (SyncM-enabled) + all LFSRs tick.
+                for (rx, znew) in self.rx.iter_mut().zip(&z) {
+                    rx.latch(*znew);
+                }
+                for sm in &mut self.sm {
+                    sm.tick();
+                }
+                for cm in &mut self.cm {
+                    cm.tick();
+                }
+                for mm in &mut self.mm {
+                    mm.tick();
+                }
+                self.generations += 1;
+            }
+        }
+        self.syncm.tick();
+        self.clocks += 1;
+        enable
+    }
+
+    /// Advance exactly one generation (3 clocks); returns the fitness bus of
+    /// the generation that just completed.
+    pub fn step_generation(&mut self) -> Vec<i64> {
+        loop {
+            let y_ready = self.syncm.phase() == SyncM::SYNC_VAL;
+            let y = if y_ready { self.y_bus.clone() } else { Vec::new() };
+            if self.clock() {
+                return y;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::GaInstance;
+    use crate::prng::{initial_population, seed_bank};
+    use crate::rom::{build_tables, F3, GAMMA_BITS_DEFAULT};
+    use crate::testing::for_all;
+
+    fn setup(n: usize, m: u32, p: usize, seed: u64) -> (Dims, Arc<RomTables>, Vec<u32>, LfsrBank) {
+        let dims = Dims::new(n, m, p);
+        let tables = Arc::new(build_tables(&F3, m, GAMMA_BITS_DEFAULT));
+        let pop = initial_population(seed, n, m);
+        let bank = LfsrBank::from_states(seed_bank(seed + 999, dims.lfsr_len()), n, p);
+        (dims, tables, pop, bank)
+    }
+
+    #[test]
+    fn three_clocks_per_generation() {
+        let (dims, tables, pop, bank) = setup(8, 20, 1, 3);
+        let mut m = GaMachine::new(dims, tables, false, &pop, &bank);
+        for gen in 1..=5 {
+            assert!(!m.clock());
+            assert!(!m.clock());
+            assert!(m.clock(), "generation must complete on clock 3");
+            assert_eq!(m.generations(), gen);
+        }
+        assert_eq!(m.clocks(), 15);
+    }
+
+    #[test]
+    fn rtl_matches_behavioral_engine_multi_generation() {
+        for_all(10, |g| {
+            let seed = g.u64() >> 1;
+            let n = *g.choose(&[4usize, 8, 16]);
+            let (dims, tables, pop, bank) = setup(n, 20, 1, seed);
+            let mut machine =
+                GaMachine::new(dims, tables.clone(), false, &pop, &bank);
+            let mut inst =
+                GaInstance::from_state(dims, tables, false, pop, bank);
+            for gen in 0..6 {
+                let y_rtl = machine.step_generation();
+                inst.step();
+                assert_eq!(
+                    machine.population(),
+                    inst.population(),
+                    "gen {gen}: population"
+                );
+                assert_eq!(
+                    machine.lfsr_states(),
+                    inst.bank().states(),
+                    "gen {gen}: lfsr bank"
+                );
+                assert!(!y_rtl.is_empty());
+            }
+        });
+    }
+
+    #[test]
+    fn maximize_direction_respected() {
+        let (dims, tables, pop, bank) = setup(8, 20, 1, 11);
+        let mut mach_max = GaMachine::new(dims, tables.clone(), true, &pop, &bank);
+        let mut inst_max = GaInstance::from_state(dims, tables, true, pop, bank);
+        for _ in 0..4 {
+            mach_max.step_generation();
+            inst_max.step();
+        }
+        assert_eq!(mach_max.population(), inst_max.population());
+    }
+
+    #[test]
+    fn netlist_inventory_scales_with_n() {
+        let (dims, tables, pop, bank) = setup(16, 20, 1, 1);
+        let m16 = GaMachine::new(dims, tables, false, &pop, &bank);
+        let nl = m16.netlist();
+        use super::PrimKind;
+        // 2 SM + 1 CM-equivalent per individual + P MM LFSRs = 3N + P.
+        assert_eq!(nl.count_where(|k| matches!(k, PrimKind::Lfsr)), 3 * 16 + 1);
+        // N FFMs × 3 ROMs.
+        assert_eq!(
+            nl.count_where(|k| matches!(k, PrimKind::Rom { .. })),
+            3 * 16
+        );
+        assert_eq!(nl.module_count("rx"), 16);
+    }
+
+    #[test]
+    fn fitness_bus_valid_at_generation_boundary() {
+        let (dims, tables, pop, bank) = setup(4, 20, 1, 21);
+        let mut m = GaMachine::new(dims, tables.clone(), false, &pop, &bank);
+        let y = m.step_generation();
+        let expect: Vec<i64> = pop.iter().map(|&x| tables.evaluate(x)).collect();
+        assert_eq!(y, expect);
+    }
+}

@@ -1,0 +1,35 @@
+//! Cycle-accurate simulator of the paper's hardware (the FPGA substitute).
+//!
+//! This is a register-transfer-level model of Figure 1: population registers
+//! `RX_j`, N fitness-function modules (FFM, §3.1) with their two-deep ROM
+//! pipeline, N selection modules (SM, §3.2), N/2 crossover modules (CM,
+//! §3.3), P mutation modules (MM, §3.4) and the synchronization module
+//! (SyncM, §3.5). The machine is advanced **clock by clock**; a generation
+//! completes every 3 clocks (two ROM pipeline delays + the register update,
+//! paper Eq. 22: R_g = f_clk / 3).
+//!
+//! Clock phases within a generation (pinned; DESIGN.md §2):
+//!
+//! * phase 0: FFMROM1/2 outputs latch (α(px), β(qx) of the population in RX)
+//! * phase 1: FFM adder + FFMROM3 output latch (fitness y valid)
+//! * phase 2: SM → CM → MM combinational cloud settles; SyncM asserts
+//!   `enable`; on the clock edge RX latches the new population and every
+//!   LFSR ticks once (the generators are clock-enabled by SyncM, like RX —
+//!   this is what makes the trajectory identical to the behavioral engine).
+//!
+//! Besides simulation, construction registers every hardware primitive in a
+//! [`Netlist`]; [`crate::synth`] walks it for the area/timing models that
+//! reproduce Table 1 and Figs. 13-16.
+//!
+//! Bit-exactness: `GaMachine` must produce, every 3 clocks, exactly the
+//! population trajectory of [`crate::ga`] (asserted against the python
+//! golden vectors and by property tests).
+
+mod machine;
+mod modules;
+mod netlist;
+mod primitives;
+
+pub use machine::GaMachine;
+pub use netlist::{Netlist, PrimKind};
+pub use primitives::{LfsrCell, Register, RomCell};

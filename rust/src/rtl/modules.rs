@@ -1,0 +1,355 @@
+//! The paper's five hardware modules as simulation structs. Each owns its
+//! stateful primitives, registers its full primitive inventory (stateful
+//! *and* combinational) into the netlist at construction, and exposes the
+//! per-clock evaluation the machine composes.
+
+use super::netlist::{Netlist, PrimKind};
+use super::primitives::{LfsrCell, RomCell};
+use crate::bits::{concat, mask32, split, top_bits};
+use crate::ga::Dims;
+use crate::rom::RomTables;
+use std::sync::Arc;
+
+/// Fitness Function Module FFM_j (§3.1, Fig. 2): two α/β ROMs, adder, γ ROM.
+/// Two-stage ROM pipeline — the source of the machine's 3-clock cadence.
+#[derive(Debug, Clone)]
+pub struct Ffm {
+    rom_alpha: RomCell,
+    rom_beta: RomCell,
+    rom_gamma: RomCell,
+    tables: Arc<RomTables>,
+    dims: Dims,
+}
+
+impl Ffm {
+    pub fn new(dims: Dims, tables: Arc<RomTables>, netlist: &mut Netlist) -> Self {
+        // Fitness bus width: i64 fixed point in this model (hardware `a`).
+        netlist.add(
+            "ffm",
+            PrimKind::Rom {
+                depth: dims.table_size(),
+                width: 64,
+            },
+            2,
+        );
+        netlist.add(
+            "ffm",
+            PrimKind::Rom {
+                depth: dims.gamma_size(),
+                width: 64,
+            },
+            1,
+        );
+        netlist.add("ffm", PrimKind::Adder { width: 64 }, 1);
+        Self {
+            rom_alpha: RomCell::new(Arc::new(tables.alpha.clone())),
+            rom_beta: RomCell::new(Arc::new(tables.beta.clone())),
+            rom_gamma: RomCell::new(Arc::new(tables.gamma.clone())),
+            tables,
+            dims,
+        }
+    }
+
+    /// Phase 0: split RX and present addresses to FFMROM1/2.
+    pub fn phase0_read(&mut self, x: u32) {
+        let (px, qx) = split(x, self.dims.h());
+        self.rom_alpha.read(px as usize);
+        self.rom_beta.read(qx as usize);
+    }
+
+    /// Clock edge after phase 0.
+    pub fn phase0_latch(&mut self) {
+        self.rom_alpha.latch_pending();
+        self.rom_beta.latch_pending();
+    }
+
+    /// Phase 1: adder output (δ, Eq. 9) drives the γ ROM address.
+    pub fn phase1_read(&mut self) {
+        let delta = self.rom_alpha.q() + self.rom_beta.q();
+        if self.tables.gamma_bypass {
+            // Identity γ: the hardware stores δ in an identity ROM; the model
+            // skips the table walk but keeps the register timing identical.
+            self.rom_gamma.force_pending(delta);
+        } else {
+            let gidx = ((delta - self.tables.gmin) >> self.tables.gshift)
+                .clamp(0, self.tables.gamma.len() as i64 - 1);
+            self.rom_gamma.read(gidx as usize);
+        }
+    }
+
+    /// Clock edge after phase 1: fitness y becomes valid.
+    pub fn phase1_latch(&mut self) {
+        self.rom_gamma.latch_pending();
+    }
+
+    /// Registered fitness output (valid during phase 2).
+    pub fn y(&self) -> i64 {
+        self.rom_gamma.q()
+    }
+}
+
+/// Selection Module SM_j (§3.2, Fig. 3): two LFSRs, three N-input muxes,
+/// comparator, direction mux.
+#[derive(Debug, Clone)]
+pub struct Sm {
+    lfsr1: LfsrCell,
+    lfsr2: LfsrCell,
+    dims: Dims,
+}
+
+impl Sm {
+    pub fn new(dims: Dims, seed1: u32, seed2: u32, netlist: &mut Netlist) -> Self {
+        netlist.add("sm", PrimKind::Lfsr, 2);
+        // SMMUX1/2 route fitness (64-bit bus here), SMMUX3 routes chromosomes.
+        netlist.add("sm", PrimKind::Mux { inputs: dims.n, width: 64 }, 2);
+        netlist.add("sm", PrimKind::Mux { inputs: dims.n, width: dims.m }, 1);
+        netlist.add("sm", PrimKind::Comparator { width: 64 }, 1);
+        // SMMUX4/5/6: 2-input direction muxes (paper excludes them from its
+        // own LUT estimate; they are in the netlist for completeness).
+        netlist.add("sm", PrimKind::Mux { inputs: 2, width: dims.m }, 3);
+        Self {
+            lfsr1: LfsrCell::new(seed1),
+            lfsr2: LfsrCell::new(seed2),
+            dims,
+        }
+    }
+
+    /// Phase 2 combinational: tournament winner chromosome (w_j).
+    pub fn select(&self, pop_q: &[u32], y: &[i64], maximize: bool) -> u32 {
+        let bits = self.dims.sel_bits();
+        let i1 = self.lfsr1.top_bits(bits) as usize;
+        let i2 = self.lfsr2.top_bits(bits) as usize;
+        let first_wins = if maximize { y[i1] > y[i2] } else { y[i1] < y[i2] };
+        if first_wins {
+            pop_q[i1]
+        } else {
+            pop_q[i2]
+        }
+    }
+
+    /// SyncM-enabled clock edge.
+    pub fn tick(&mut self) {
+        self.lfsr1.tick();
+        self.lfsr2.tick();
+    }
+
+    pub fn lfsr_states(&self) -> (u32, u32) {
+        (self.lfsr1.q(), self.lfsr2.q())
+    }
+}
+
+/// Crossover Module CM_i (§3.3, Figs. 4-5): two CMPQ submodules (one per
+/// variable half), each with an LFSR-driven shift-mask network.
+#[derive(Debug, Clone)]
+pub struct Cm {
+    lfsr_p: LfsrCell,
+    lfsr_q: LfsrCell,
+    dims: Dims,
+}
+
+impl Cm {
+    pub fn new(dims: Dims, seed_p: u32, seed_q: u32, netlist: &mut Netlist) -> Self {
+        let h = dims.h();
+        netlist.add("cm", PrimKind::Lfsr, 2);
+        // CMPQMUX: (h+1) possible cut masks, h bits wide; one per submodule.
+        netlist.add("cm", PrimKind::Mux { inputs: h as usize + 1, width: h }, 2);
+        // Head/tail AND/OR networks (Eq. 15-20), per submodule.
+        netlist.add("cm", PrimKind::MaskNet { width: h }, 2);
+        Self {
+            lfsr_p: LfsrCell::new(seed_p),
+            lfsr_q: LfsrCell::new(seed_q),
+            dims,
+        }
+    }
+
+    /// Phase 2 combinational: cross parents (w0, w1) into two children.
+    pub fn cross(&self, w0: u32, w1: u32) -> (u32, u32) {
+        let h = self.dims.h();
+        let ones = mask32(h);
+        let cut_bits = self.dims.cut_bits();
+        let shift_p = self.lfsr_p.top_bits(cut_bits).min(h);
+        let shift_q = self.lfsr_q.top_bits(cut_bits).min(h);
+        let mask_p = ones >> shift_p;
+        let mask_q = ones >> shift_q;
+
+        let (pw0, qw0) = split(w0, h);
+        let (pw1, qw1) = split(w1, h);
+        let pz0 = (pw0 & !mask_p) | (pw1 & mask_p);
+        let pz1 = (pw1 & !mask_p) | (pw0 & mask_p);
+        let qz0 = (qw0 & !mask_q) | (qw1 & mask_q);
+        let qz1 = (qw1 & !mask_q) | (qw0 & mask_q);
+        let mbits = mask32(self.dims.m);
+        (concat(pz0, qz0, h) & mbits, concat(pz1, qz1, h) & mbits)
+    }
+
+    pub fn tick(&mut self) {
+        self.lfsr_p.tick();
+        self.lfsr_q.tick();
+    }
+
+    pub fn lfsr_states(&self) -> (u32, u32) {
+        (self.lfsr_p.q(), self.lfsr_q.q())
+    }
+}
+
+/// Mutation Module MM_v (§3.4, Fig. 6): XOR with the LFSR's top m bits.
+#[derive(Debug, Clone)]
+pub struct Mm {
+    lfsr: LfsrCell,
+    dims: Dims,
+}
+
+impl Mm {
+    pub fn new(dims: Dims, seed: u32, netlist: &mut Netlist) -> Self {
+        netlist.add("mm", PrimKind::Lfsr, 1);
+        netlist.add("mm", PrimKind::XorNet { width: dims.m }, 1);
+        Self {
+            lfsr: LfsrCell::new(seed),
+            dims,
+        }
+    }
+
+    /// Phase 2 combinational (Eq. 21).
+    pub fn mutate(&self, z: u32) -> u32 {
+        z ^ top_bits(self.lfsr.q(), self.dims.m)
+    }
+
+    pub fn tick(&mut self) {
+        self.lfsr.tick();
+    }
+
+    pub fn lfsr_state(&self) -> u32 {
+        self.lfsr.q()
+    }
+}
+
+/// Synchronization Module (§3.5, Fig. 7): 2-bit counter + comparator against
+/// SyncVal = 2 (two ROM delays); `enable` is true in phase 2.
+#[derive(Debug, Clone)]
+pub struct SyncM {
+    counter: u32,
+    sync_val: u32,
+}
+
+impl SyncM {
+    pub const SYNC_VAL: u32 = 2;
+
+    pub fn new(netlist: &mut Netlist) -> Self {
+        netlist.add("syncm", PrimKind::Counter { width: 2 }, 1);
+        netlist.add("syncm", PrimKind::Comparator { width: 2 }, 1);
+        Self {
+            counter: 0,
+            sync_val: Self::SYNC_VAL,
+        }
+    }
+
+    /// Combinational: enable (counter == SyncVal).
+    #[inline]
+    pub fn enable(&self) -> bool {
+        self.counter == self.sync_val
+    }
+
+    /// Current phase (0..=SYNC_VAL).
+    #[inline]
+    pub fn phase(&self) -> u32 {
+        self.counter
+    }
+
+    /// Clock edge: counter wraps after SyncVal.
+    pub fn tick(&mut self) {
+        self.counter = if self.counter >= self.sync_val {
+            0
+        } else {
+            self.counter + 1
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::{build_tables, F2, F3, GAMMA_BITS_DEFAULT};
+
+    #[test]
+    fn syncm_three_phase_cycle() {
+        let mut nl = Netlist::new();
+        let mut s = SyncM::new(&mut nl);
+        let mut enables = Vec::new();
+        for _ in 0..9 {
+            enables.push(s.enable());
+            s.tick();
+        }
+        assert_eq!(
+            enables,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+    }
+
+    #[test]
+    fn ffm_two_cycle_pipeline_bypass() {
+        let dims = Dims::new(4, 20, 1);
+        let tables = Arc::new(build_tables(&F2, 20, GAMMA_BITS_DEFAULT));
+        let mut nl = Netlist::new();
+        let mut ffm = Ffm::new(dims, tables.clone(), &mut nl);
+        let x = concat(2, 3, 10);
+        ffm.phase0_read(x);
+        ffm.phase0_latch();
+        ffm.phase1_read();
+        ffm.phase1_latch();
+        assert_eq!(ffm.y(), tables.evaluate(x));
+    }
+
+    #[test]
+    fn ffm_two_cycle_pipeline_gamma_rom() {
+        let dims = Dims::new(4, 20, 1);
+        let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+        let mut nl = Netlist::new();
+        let mut ffm = Ffm::new(dims, tables.clone(), &mut nl);
+        for x in [0u32, 515, 0xFFFFF, concat(100, 900, 10)] {
+            ffm.phase0_read(x);
+            ffm.phase0_latch();
+            ffm.phase1_read();
+            ffm.phase1_latch();
+            assert_eq!(ffm.y(), tables.evaluate(x), "x={x:#x}");
+        }
+    }
+
+    #[test]
+    fn sm_matches_engine_selection() {
+        let dims = Dims::new(4, 20, 1);
+        let mut nl = Netlist::new();
+        let sm = Sm::new(dims, 0x4000_0001, 0xC000_0001, &mut nl);
+        // top 2 bits: 1 and 3.
+        let pop = [10u32, 20, 30, 40];
+        let y = [5i64, 1, 9, 7];
+        assert_eq!(sm.select(&pop, &y, false), 20); // y[1]=1 < y[3]=7
+        assert_eq!(sm.select(&pop, &y, true), 40);
+    }
+
+    #[test]
+    fn cm_matches_engine_crossover() {
+        let dims = Dims::new(4, 20, 1);
+        let mut nl = Netlist::new();
+        let cm = Cm::new(dims, 0x3000_0001, 0x7000_0001, &mut nl);
+        let (a, b) = cm.cross(0x12345, 0xFEDCB);
+        // Mirror via engine path.
+        let mut bank_states = vec![1u32; dims.lfsr_len()];
+        bank_states[2 * dims.n] = 0x3000_0001;
+        bank_states[2 * dims.n + 1] = 0x7000_0001;
+        let bank = crate::lfsr::LfsrBank::from_states(bank_states, dims.n, dims.p);
+        let w = [0x12345u32, 0xFEDCB, 0, 0];
+        let mut z = [0u32; 4];
+        crate::ga::crossover_all(&w, &bank, &dims, &mut z);
+        assert_eq!((a, b), (z[0], z[1]));
+    }
+
+    #[test]
+    fn mm_is_involution() {
+        let dims = Dims::new(4, 20, 1);
+        let mut nl = Netlist::new();
+        let mm = Mm::new(dims, 0xABCD_EF01, &mut nl);
+        let z = 0x54321u32;
+        assert_eq!(mm.mutate(mm.mutate(z)), z);
+        assert!(mm.mutate(z) <= mask32(20));
+    }
+}

@@ -1,0 +1,113 @@
+//! Structural netlist: every primitive the machine instantiates, grouped by
+//! hardware module. [`crate::synth`] walks this to produce the area model
+//! (flip-flop and LUT estimates) that reproduces Table 1 / Figs. 13-16.
+
+use std::collections::BTreeMap;
+
+/// Primitive kinds with the width information the area model needs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PrimKind {
+    /// Data register, `width` bits (RX_j, pipeline registers).
+    Register { width: u32 },
+    /// 32-bit LFSR (SM/CM/MM generators).
+    Lfsr,
+    /// ROM of `depth` words × `width` bits with registered output.
+    Rom { depth: usize, width: u32 },
+    /// `inputs`-to-1 multiplexer, `width` bits per leg (SMMUX1-3, CMPQMUX).
+    Mux { inputs: usize, width: u32 },
+    /// Adder, `width`-bit operands (FFMADD).
+    Adder { width: u32 },
+    /// Magnitude comparator, `width` bits (SMCOMP, SyncM comparator).
+    Comparator { width: u32 },
+    /// AND/OR crossover masking net over `width` bits (CMPQ head/tail logic).
+    MaskNet { width: u32 },
+    /// XOR net over `width` bits (MM mutation).
+    XorNet { width: u32 },
+    /// Free-running counter, `width` bits (SyncM).
+    Counter { width: u32 },
+}
+
+/// Counted inventory of primitives, grouped by module label
+/// ("rx", "ffm", "sm", "cm", "mm", "syncm").
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    counts: BTreeMap<(String, PrimKind), usize>,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `count` primitives of `kind` under `module`.
+    pub fn add(&mut self, module: &str, kind: PrimKind, count: usize) {
+        *self.counts.entry((module.to_string(), kind)).or_insert(0) += count;
+    }
+
+    /// Iterate `(module, kind, count)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &PrimKind, usize)> {
+        self.counts
+            .iter()
+            .map(|((m, k), c)| (m.as_str(), k, *c))
+    }
+
+    /// Total primitives of a module.
+    pub fn module_count(&self, module: &str) -> usize {
+        self.counts
+            .iter()
+            .filter(|((m, _), _)| m == module)
+            .map(|(_, c)| *c)
+            .sum()
+    }
+
+    /// Total count matching a predicate over kinds.
+    pub fn count_where(&self, pred: impl Fn(&PrimKind) -> bool) -> usize {
+        self.counts
+            .iter()
+            .filter(|((_, k), _)| pred(k))
+            .map(|(_, c)| *c)
+            .sum()
+    }
+
+    /// Total true flip-flop bits implied by the stateful primitives
+    /// (pre-calibration structural count; see `synth::area`).
+    pub fn structural_ff_bits(&self) -> u64 {
+        self.iter()
+            .map(|(_, kind, count)| {
+                let per = match kind {
+                    PrimKind::Register { width } => u64::from(*width),
+                    PrimKind::Lfsr => 32,
+                    PrimKind::Rom { width, .. } => u64::from(*width), // output reg
+                    PrimKind::Counter { width } => u64::from(*width),
+                    _ => 0,
+                };
+                per * count as u64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates() {
+        let mut n = Netlist::new();
+        n.add("sm", PrimKind::Lfsr, 2);
+        n.add("sm", PrimKind::Lfsr, 3);
+        n.add("cm", PrimKind::Lfsr, 1);
+        assert_eq!(n.module_count("sm"), 5);
+        assert_eq!(n.count_where(|k| matches!(k, PrimKind::Lfsr)), 6);
+    }
+
+    #[test]
+    fn structural_ff_bits_counts_state() {
+        let mut n = Netlist::new();
+        n.add("rx", PrimKind::Register { width: 20 }, 4); // 80
+        n.add("sm", PrimKind::Lfsr, 2); // 64
+        n.add("ffm", PrimKind::Rom { depth: 16, width: 8 }, 1); // 8
+        n.add("sm", PrimKind::Mux { inputs: 4, width: 20 }, 3); // 0
+        assert_eq!(n.structural_ff_bits(), 80 + 64 + 8);
+    }
+}

@@ -1,0 +1,149 @@
+//! Clocked hardware primitives. Combinational elements (muxes, adders,
+//! comparators, AND/OR/XOR nets) are plain expressions in the module
+//! evaluators — they still appear in the [`super::Netlist`] for area
+//! accounting, but only *stateful* primitives need simulation objects.
+
+use crate::lfsr;
+
+/// A clock-enabled register: output changes only at `latch()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Register<T: Copy> {
+    q: T,
+}
+
+impl<T: Copy> Register<T> {
+    pub fn new(initial: T) -> Self {
+        Self { q: initial }
+    }
+
+    /// Registered output (stable within a clock).
+    #[inline]
+    pub fn q(&self) -> T {
+        self.q
+    }
+
+    /// Clock edge with enable asserted: latch `d`.
+    #[inline]
+    pub fn latch(&mut self, d: T) {
+        self.q = d;
+    }
+}
+
+/// A ROM with registered output: `read()` presents the address; the data
+/// appears at `q()` only after the next clock edge (`latch_pending`).
+/// This one-cycle latency is what makes the FFM two clocks deep and the
+/// whole machine generate one population per **three** clocks (Eq. 22).
+#[derive(Debug, Clone)]
+pub struct RomCell {
+    data: std::sync::Arc<Vec<i64>>,
+    q: i64,
+    pending: i64,
+}
+
+impl RomCell {
+    pub fn new(data: std::sync::Arc<Vec<i64>>) -> Self {
+        Self {
+            data,
+            q: 0,
+            pending: 0,
+        }
+    }
+
+    /// Present an address (combinational read into the output register's D).
+    #[inline]
+    pub fn read(&mut self, addr: usize) {
+        self.pending = self.data[addr];
+    }
+
+    /// Registered output.
+    #[inline]
+    pub fn q(&self) -> i64 {
+        self.q
+    }
+
+    /// Clock edge: output register captures the pending word.
+    #[inline]
+    pub fn latch_pending(&mut self) {
+        self.q = self.pending;
+    }
+
+    /// Inject a raw pending word (identity-γ bypass: same register timing as
+    /// `read()`, no table walk).
+    #[inline]
+    pub fn force_pending(&mut self, v: i64) {
+        self.pending = v;
+    }
+
+    pub fn depth(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A clock-enabled 32-bit LFSR cell (`CCLFSRlj` in the paper). Enabled by
+/// SyncM: it ticks once per generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LfsrCell {
+    state: u32,
+}
+
+impl LfsrCell {
+    pub fn new(seed: u32) -> Self {
+        Self { state: seed }
+    }
+
+    /// Current output word.
+    #[inline]
+    pub fn q(&self) -> u32 {
+        self.state
+    }
+
+    /// Top-bit truncation of the output (selector convention).
+    #[inline]
+    pub fn top_bits(&self, n: u32) -> u32 {
+        crate::bits::top_bits(self.state, n)
+    }
+
+    /// Enabled clock edge.
+    #[inline]
+    pub fn tick(&mut self) {
+        self.state = lfsr::step(self.state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn register_holds_until_latch() {
+        let mut r = Register::new(5u32);
+        assert_eq!(r.q(), 5);
+        r.latch(9);
+        assert_eq!(r.q(), 9);
+    }
+
+    #[test]
+    fn rom_has_one_cycle_latency() {
+        let mut rom = RomCell::new(Arc::new(vec![10, 20, 30]));
+        rom.read(2);
+        assert_eq!(rom.q(), 0, "output must not change before the edge");
+        rom.latch_pending();
+        assert_eq!(rom.q(), 30);
+        rom.read(0);
+        assert_eq!(rom.q(), 30, "still holding previous word");
+        rom.latch_pending();
+        assert_eq!(rom.q(), 10);
+    }
+
+    #[test]
+    fn lfsr_cell_matches_free_step() {
+        let mut c = LfsrCell::new(0x1234_5678);
+        let mut s = 0x1234_5678u32;
+        for _ in 0..50 {
+            assert_eq!(c.q(), s);
+            c.tick();
+            s = crate::lfsr::step(s);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Executable loading, caching and literal marshalling.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::ga::Dims;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// In/out state of one chunk dispatch for a batch of B GA instances.
+/// All vectors are row-major `[B, ...]` flattened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkIo {
+    pub batch: usize,
+    /// u32[B*N]
+    pub pop: Vec<u32>,
+    /// u32[B*L]
+    pub lfsr: Vec<u32>,
+    /// i64[B*T]
+    pub alpha: Vec<i64>,
+    /// i64[B*T]
+    pub beta: Vec<i64>,
+    /// i64[B*G]
+    pub gamma: Vec<i64>,
+    /// i64[B*4]: [gmin, gshift, gamma_bypass, maximize] per instance
+    pub scal: Vec<i64>,
+    /// i64[B]
+    pub best_y: Vec<i64>,
+    /// u32[B]
+    pub best_x: Vec<u32>,
+    /// i64[B*K] — filled by execution
+    pub curve: Vec<i64>,
+}
+
+impl ChunkIo {
+    /// Validate shapes against a variant.
+    pub fn check(&self, meta: &ArtifactMeta) -> Result<()> {
+        let d = &meta.dims;
+        let b = meta.batch;
+        anyhow::ensure!(self.batch == b, "batch {} != artifact {}", self.batch, b);
+        anyhow::ensure!(self.pop.len() == b * d.n, "pop shape");
+        anyhow::ensure!(self.lfsr.len() == b * d.lfsr_len(), "lfsr shape");
+        anyhow::ensure!(self.alpha.len() == b * d.table_size(), "alpha shape");
+        anyhow::ensure!(self.beta.len() == b * d.table_size(), "beta shape");
+        anyhow::ensure!(self.gamma.len() == b * d.gamma_size(), "gamma shape");
+        anyhow::ensure!(self.scal.len() == b * 4, "scal shape");
+        anyhow::ensure!(self.best_y.len() == b && self.best_x.len() == b, "best shape");
+        Ok(())
+    }
+}
+
+/// One compiled GA chunk executable.
+pub struct GaExecutable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative executions (metrics).
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl GaExecutable {
+    /// Execute one chunk. `io` state is consumed and the advanced state
+    /// returned (pop/lfsr/best threaded; curve filled).
+    pub fn run(&self, mut io: ChunkIo) -> Result<ChunkIo> {
+        io.check(&self.meta)?;
+        let d = &self.meta.dims;
+        let b = self.meta.batch as i64;
+
+        let lit = |v: &[u32], cols: i64| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(&[b, cols])?)
+        };
+        let lit64 = |v: &[i64], cols: i64| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(&[b, cols])?)
+        };
+
+        let args = [
+            lit(&io.pop, d.n as i64)?,
+            lit(&io.lfsr, d.lfsr_len() as i64)?,
+            lit64(&io.alpha, d.table_size() as i64)?,
+            lit64(&io.beta, d.table_size() as i64)?,
+            lit64(&io.gamma, d.gamma_size() as i64)?,
+            lit64(&io.scal, 4)?,
+            xla::Literal::vec1(&io.best_y).reshape(&[b])?,
+            xla::Literal::vec1(&io.best_x).reshape(&[b])?,
+        ];
+
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+        io.pop = parts[0].to_vec::<u32>()?;
+        io.lfsr = parts[1].to_vec::<u32>()?;
+        io.best_y = parts[2].to_vec::<i64>()?;
+        io.best_x = parts[3].to_vec::<u32>()?;
+        io.curve = parts[4].to_vec::<i64>()?;
+        self.dispatches.set(self.dispatches.get() + 1);
+        Ok(io)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus a lazily-populated executable cache
+/// keyed by (dims, batch). NOT `Send` — confine to one thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(Dims, usize), std::rc::Rc<GaExecutable>>,
+    /// Total HLO compile time (startup cost metric).
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (must contain manifest.json).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            compile_seconds: 0.0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (loading + compiling on first use) the executable for a variant
+    /// at the largest compiled batch ≤ `want_batch`.
+    pub fn executable(&mut self, dims: &Dims, want_batch: usize) -> Result<std::rc::Rc<GaExecutable>> {
+        let meta = self
+            .manifest
+            .best_batch(dims, want_batch)
+            .with_context(|| format!("no chunk artifact for {dims:?}"))?
+            .clone();
+        let key = (meta.dims, meta.batch);
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_seconds += t0.elapsed().as_secs_f64();
+        let entry = std::rc::Rc::new(GaExecutable {
+            meta,
+            exe,
+            dispatches: std::cell::Cell::new(0),
+        });
+        self.cache.insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Pre-compile every artifact for a set of dims (warmup; keeps compile
+    /// cost out of the serving hot path).
+    pub fn warmup(&mut self, dims: &[Dims]) -> Result<()> {
+        for d in dims {
+            let batches: Vec<usize> =
+                self.manifest.chunks_for(d).iter().map(|m| m.batch).collect();
+            for batch in batches {
+                let _ = self.executable(d, batch)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+}

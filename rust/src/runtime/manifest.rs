@@ -1,0 +1,194 @@
+//! AOT manifest reader: artifacts/manifest.json describes every compiled
+//! variant (shapes, batch size, chunk length) for the loader and router.
+
+use crate::ga::Dims;
+use crate::jsonmini::{parse, Value};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact kind: a K-generation chunk or a single step (tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Chunk,
+    Step,
+}
+
+/// One compiled variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub dims: Dims,
+    pub k_chunk: u32,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let kind = match v.req_str("kind")? {
+            "chunk" => ArtifactKind::Chunk,
+            "step" => ArtifactKind::Step,
+            other => anyhow::bail!("unknown artifact kind `{other}`"),
+        };
+        let dims = Dims::new(
+            v.req_i64("n")? as usize,
+            v.req_i64("m")? as u32,
+            v.req_i64("p")? as usize,
+        )
+        .with_gamma_bits(v.req_i64("gamma_bits")? as u32);
+        // Shape cross-checks: the manifest is generated from the same python
+        // GaConfig; these catch any drift between the two shape derivations.
+        anyhow::ensure!(
+            v.req_i64("lfsr_len")? as usize == dims.lfsr_len(),
+            "manifest lfsr_len mismatch for {}",
+            v.req_str("name")?
+        );
+        anyhow::ensure!(
+            v.req_i64("table_size")? as usize == dims.table_size(),
+            "manifest table_size mismatch"
+        );
+        anyhow::ensure!(
+            v.req_i64("gamma_size")? as usize == dims.gamma_size(),
+            "manifest gamma_size mismatch"
+        );
+        Ok(Self {
+            kind,
+            name: v.req_str("name")?.to_string(),
+            file: v.req_str("file")?.to_string(),
+            batch: v.req_i64("batch")? as usize,
+            dims,
+            k_chunk: v.req_i64("k_chunk")? as u32,
+        })
+    }
+}
+
+/// The parsed manifest: all compiled variants in an artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub k_chunk: u32,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "missing AOT manifest {} — run `make artifacts`",
+                path.display()
+            )
+        })?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let artifacts = v
+            .req_array("artifacts")?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            k_chunk: v.req_i64("k_chunk")? as u32,
+            artifacts,
+        })
+    }
+
+    /// Chunk variants for a dims triple, all batch sizes, sorted by batch.
+    pub fn chunks_for(&self, dims: &Dims) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Chunk && &a.dims == dims)
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+
+    /// The largest compiled batch ≤ `want` for a variant (None if the
+    /// variant has no chunk artifacts at all).
+    pub fn best_batch(&self, dims: &Dims, want: usize) -> Option<&ArtifactMeta> {
+        let chunks = self.chunks_for(dims);
+        chunks
+            .iter()
+            .rev()
+            .find(|a| a.batch <= want.max(1))
+            .or_else(|| chunks.first())
+            .copied()
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All dims with at least one chunk artifact.
+    pub fn available_dims(&self) -> Vec<Dims> {
+        let mut v: Vec<Dims> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Chunk)
+            .map(|a| a.dims)
+            .collect();
+        v.sort_by_key(|d| (d.n, d.m, d.p));
+        v.dedup();
+        v
+    }
+}
+
+/// Default artifacts directory (crate-root relative).
+pub fn default_artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::load(&default_artifacts_dir()).expect("run `make artifacts`")
+    }
+
+    #[test]
+    fn loads_and_has_table1_variants() {
+        let m = manifest();
+        assert_eq!(m.k_chunk, 25);
+        for n in [4usize, 8, 16, 32, 64] {
+            let d = Dims::new(n, 20, Dims::default_p(n));
+            assert!(
+                !m.chunks_for(&d).is_empty(),
+                "missing chunk artifact for N={n}, m=20"
+            );
+        }
+        // Fig. 11 variant.
+        assert!(!m.chunks_for(&Dims::new(32, 26, 1)).is_empty());
+    }
+
+    #[test]
+    fn best_batch_picks_largest_fitting() {
+        let m = manifest();
+        let d = Dims::new(32, 20, 1);
+        assert_eq!(m.best_batch(&d, 1).unwrap().batch, 1);
+        assert_eq!(m.best_batch(&d, 8).unwrap().batch, 8);
+        assert_eq!(m.best_batch(&d, 5).unwrap().batch, 1);
+        assert_eq!(m.best_batch(&d, 100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let m = manifest();
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{}", a.file);
+        }
+    }
+
+    #[test]
+    fn available_dims_dedup() {
+        let m = manifest();
+        let dims = m.available_dims();
+        let mut sorted = dims.clone();
+        sorted.dedup();
+        assert_eq!(dims, sorted);
+        assert!(dims.len() >= 6);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled GA chunk artifacts (HLO text
+//! produced once by `python/compile/aot.py`) and executes them from the L3
+//! hot path. Python is never on this path.
+//!
+//! Pipeline (see /opt/xla-example/README.md for the gotchas):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute`. HLO **text** is the interchange
+//! format — the crate's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! protos (64-bit instruction ids).
+//!
+//! Thread model: PJRT handles are not `Send` in the `xla` crate; the
+//! coordinator confines them to a single dispatcher thread
+//! ([`crate::coordinator`]), which is also where batching happens — the
+//! PJRT CPU client parallelizes internally across a batch.
+
+mod executor;
+mod manifest;
+
+pub use executor::{ChunkIo, GaExecutable, Runtime};
+pub use manifest::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};

@@ -1,0 +1,186 @@
+//! Area model: flip-flops and LUTs as functions of (N, m, P).
+//!
+//! Structural forms (paper §4):
+//!
+//! * Flip-flops grow **linearly** in N (Fig. 13): the LFSR fabric has
+//!   3N + P generators and RX holds N·m bits.
+//! * LUTs grow **quadratically** in N (Fig. 14): each SM_j contains three
+//!   N-input muxes; Virtex-7 builds an N-input mux from ≈N/4 logic cells
+//!   *per data bit* ([26]), giving the paper's own 3N²/4-cells-per-bit
+//!   estimate; the bus is ≈m bits wide, hence the leading (3N²/4)·m term.
+//! * LUTs also grow linearly in m for the per-individual datapath
+//!   (Fig. 16): FFM adder, CM mask networks, MM XOR.
+//!
+//! Constants below are least-squares calibrated against Table 1 (m = 20,
+//! N ∈ {4..64}); residuals ≤ 8.4% on FFs and ≤ 5% on LUTs, asserted in
+//! tests and reported per-row by `report::table1`.
+
+use crate::ga::Dims;
+use crate::rtl::{Netlist, PrimKind};
+
+/// Calibrated flip-flop cost of one 32-bit LFSR after synthesis (< 32:
+/// Xilinx maps shift chains to SRL LUT primitives, trading FFs for LUTs).
+pub const FF_PER_LFSR: f64 = 27.3523;
+/// Calibrated fixed flip-flop offset (SyncM, control).
+pub const FF_FIXED: f64 = -16.8362;
+
+/// Calibrated efficiency of the paper's N/4-cells-per-mux-bit estimate
+/// (LUT6 packing does slightly better than the 4:1 rule of thumb).
+pub const LUT_MUX_EFF: f64 = 0.890124;
+/// Calibrated per-individual-bit datapath LUT cost (FFM adder slice, CM
+/// mask gates, MM XOR, LFSR SRLs).
+pub const LUT_PER_BIT: f64 = 3.189077;
+/// Calibrated fixed LUT offset (SyncM, glue).
+pub const LUT_FIXED: f64 = 115.2745;
+
+/// Flip-flop estimate for a variant. RX registers count at face value
+/// (N·m true FFs); LFSRs at the calibrated post-synthesis cost.
+pub fn flipflops(dims: &Dims) -> f64 {
+    let lfsrs = (3 * dims.n + dims.p) as f64;
+    FF_PER_LFSR * lfsrs + (dims.n as f64) * f64::from(dims.m) + FF_FIXED
+}
+
+/// LUT estimate for a variant: SM mux trees (the N² term) + per-individual
+/// datapath + fixed.
+pub fn luts(dims: &Dims) -> f64 {
+    let n = dims.n as f64;
+    let m = f64::from(dims.m);
+    LUT_MUX_EFF * (3.0 * n * n / 4.0) * m + LUT_PER_BIT * n * m + LUT_FIXED
+}
+
+/// Area summary derived from an actual RTL netlist (structural counts ×
+/// per-primitive costs). Agrees with the closed forms above by construction
+/// — the netlist walk exists so that *changes to the RTL automatically move
+/// the area model* (asserted equal in tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaEstimate {
+    pub flipflops: f64,
+    pub luts: f64,
+    /// True structural state bits (pre-calibration; diagnostics).
+    pub structural_ff_bits: u64,
+}
+
+/// Walk a netlist and produce the calibrated estimate.
+///
+/// Accounting rules (calibration boundary, same partition the constants
+/// were fitted with):
+///
+/// * FFs: data registers at face width + LFSRs at [`FF_PER_LFSR`] + fixed.
+/// * LUTs: the **N-input SM mux trees** contribute the quadratic term at
+///   `EFF · inputs/4 · m_eff` per mux, where `m_eff = m` is the paper's
+///   effective bus width (the paper sizes the fitness bus ≈ m; our
+///   simulation bus is 64-bit i64, a modeling convenience that must not
+///   inflate area). Everything else per-individual (FFM adder, CM mask
+///   gates and its small (h+1)-input muxes, MM XOR, LFSR SRLs) is inside
+///   the calibrated linear [`LUT_PER_BIT`]·N·m term, plus [`LUT_FIXED`].
+pub fn netlist_area(netlist: &Netlist, dims: &Dims) -> AreaEstimate {
+    let mut ff = FF_FIXED;
+    let mut lut = LUT_FIXED;
+    let m_eff = f64::from(dims.m);
+    for (_, kind, count) in netlist.iter() {
+        let c = count as f64;
+        match kind {
+            PrimKind::Register { width } => ff += c * f64::from(*width),
+            PrimKind::Counter { width } => ff += c * f64::from(*width),
+            PrimKind::Lfsr => ff += c * FF_PER_LFSR,
+            PrimKind::Mux { inputs, .. } if *inputs == dims.n && dims.n > 2 => {
+                lut += c * LUT_MUX_EFF * (*inputs as f64 / 4.0) * m_eff;
+            }
+            _ => {}
+        }
+    }
+    lut += LUT_PER_BIT * dims.n as f64 * m_eff;
+    AreaEstimate {
+        flipflops: ff,
+        luts: lut,
+        structural_ff_bits: netlist.structural_ff_bits(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 1 (m = 20).
+    pub const TABLE1: [(usize, f64, f64); 5] = [
+        (4, 457.0, 592.0),
+        (8, 839.0, 1558.0),
+        (16, 1616.0, 4400.0),
+        (32, 3225.0, 15908.0),
+        (64, 6598.0, 58875.0),
+    ];
+
+    fn dims_for(n: usize) -> Dims {
+        Dims::new(n, 20, Dims::default_p(n))
+    }
+
+    #[test]
+    fn flipflops_match_table1_within_9pct() {
+        for (n, ff_paper, _) in TABLE1 {
+            let est = flipflops(&dims_for(n));
+            let err = (est - ff_paper).abs() / ff_paper;
+            assert!(err < 0.09, "N={n}: est {est:.0} vs paper {ff_paper} ({:.1}%)", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn luts_match_table1_within_6pct() {
+        for (n, _, lut_paper) in TABLE1 {
+            let est = luts(&dims_for(n));
+            let err = (est - lut_paper).abs() / lut_paper;
+            assert!(err < 0.06, "N={n}: est {est:.0} vs paper {lut_paper} ({:.1}%)", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn ff_growth_is_linear_in_n() {
+        // Slope between consecutive N doublings must be ~constant (Fig. 13).
+        let s1 = (flipflops(&dims_for(16)) - flipflops(&dims_for(8))) / 8.0;
+        let s2 = (flipflops(&dims_for(64)) - flipflops(&dims_for(32))) / 32.0;
+        assert!((s1 - s2).abs() / s1 < 0.05, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn lut_growth_is_quadratic_in_n() {
+        // LUT(2N)/LUT(N) → 4 as N grows (Fig. 14).
+        let r = luts(&dims_for(64)) / luts(&dims_for(32));
+        assert!(r > 3.3 && r < 4.2, "ratio {r}");
+    }
+
+    #[test]
+    fn lut_growth_linear_in_m() {
+        // Fig. 16: equal increments in m give equal increments in LUTs.
+        let d = |m| luts(&Dims::new(32, m, 1));
+        let inc1 = d(24) - d(20);
+        let inc2 = d(28) - d(24);
+        assert!((inc1 - inc2).abs() < 1e-6);
+        assert!(inc1 > 0.0);
+    }
+
+    #[test]
+    fn n64_stays_under_one_fifth_of_virtex7() {
+        // Paper's headline area claim: N=64 uses < 1/5 of the fabric.
+        let est = luts(&dims_for(64));
+        assert!(est / crate::synth::VIRTEX7_LUTS as f64 <= 0.20);
+    }
+
+    #[test]
+    fn netlist_area_agrees_with_closed_form() {
+        use crate::lfsr::LfsrBank;
+        use crate::prng::{initial_population, seed_bank};
+        use crate::rom::{build_tables, F3, GAMMA_BITS_DEFAULT};
+        use std::sync::Arc;
+        for n in [4usize, 16, 64] {
+            let dims = dims_for(n);
+            let tables = Arc::new(build_tables(&F3, 20, GAMMA_BITS_DEFAULT));
+            let pop = initial_population(1, n, 20);
+            let bank = LfsrBank::from_states(seed_bank(2, dims.lfsr_len()), n, dims.p);
+            let m = crate::rtl::GaMachine::new(dims, tables, false, &pop, &bank);
+            let est = netlist_area(m.netlist(), &dims);
+            assert!((est.luts - luts(&dims)).abs() < 1e-6, "N={n}");
+            // FF estimate from netlist: RX N·m + LFSRs calibrated + fixed.
+            assert!((est.flipflops - flipflops(&dims)).abs() / flipflops(&dims) < 0.01);
+            assert!(est.structural_ff_bits > 0);
+        }
+    }
+}

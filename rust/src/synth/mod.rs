@@ -1,0 +1,26 @@
+//! Synthesis models — the Xilinx-toolchain substitute (DESIGN.md §2).
+//!
+//! The paper reports post-synthesis area (flip-flops, LUTs) and timing
+//! (clock, generations/second) on a Virtex-7 xc7vx550t. We cannot run
+//! Vivado; instead these models estimate the same quantities from the
+//! *structure* of the design (the paper's own §4 analysis provides the
+//! structural forms) with constants calibrated against Table 1. Residuals
+//! against every published number are part of the test suite and reported
+//! in EXPERIMENTS.md.
+//!
+//! * [`area`] — flip-flop and LUT estimates (Table 1 cols 2-3, Figs 13/14/16)
+//! * [`timing`] — Fmax / R_g model (Table 1 cols 4-5, Fig 15)
+//! * [`report`] — paper-vs-model table and figure series generators
+
+pub mod area;
+pub mod report;
+pub mod timing;
+
+pub use area::{flipflops, luts, netlist_area, AreaEstimate};
+pub use report::{fig13, fig14, fig15, fig16, table1, table2, Fig, Table1Row, Table2Row};
+pub use timing::{fmax_mhz, generations_per_sec, tg_ns, utilization_pct};
+
+/// Virtex-7 xc7vx550t resources (paper §4).
+pub const VIRTEX7_LUTS: u64 = 554_240;
+/// Flip-flops available on the xc7vx550t.
+pub const VIRTEX7_FFS: u64 = 692_800;

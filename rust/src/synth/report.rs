@@ -1,0 +1,274 @@
+//! Paper-vs-model report generators: Table 1, Table 2 and the series behind
+//! Figs. 13-16. The bench binaries print these; EXPERIMENTS.md records them.
+
+use crate::ga::Dims;
+use crate::jsonmini::{obj, Value};
+use crate::synth::{area, timing};
+
+/// Paper Table 1 (m = 20): (N, flip-flops, LUTs, clock MHz, R_g).
+///
+/// NOTE on units: the paper labels the last column "Generations Per Second
+/// ×1000", but its own arithmetic (R_g = clock/3, Eq. 22; 48.51 MHz / 3 =
+/// 16.17) only works if the column is in **millions** per second. We follow
+/// the arithmetic (R_g in 10^6/s) and flag the label discrepancy here.
+pub const PAPER_TABLE1: [(usize, f64, f64, f64, f64); 5] = [
+    (4, 457.0, 592.0, 50.28, 16.76),
+    (8, 839.0, 1558.0, 49.32, 16.44),
+    (16, 1616.0, 4400.0, 49.32, 16.44),
+    (32, 3225.0, 15908.0, 48.51, 16.17),
+    (64, 6598.0, 58875.0, 34.56, 11.52),
+];
+
+/// One Table-1 row: model vs paper.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub n: usize,
+    pub ff_model: f64,
+    pub ff_paper: f64,
+    pub lut_model: f64,
+    pub lut_paper: f64,
+    pub lut_util_pct: f64,
+    pub clock_model: f64,
+    pub clock_paper: f64,
+    /// Model R_g in 10^6 generations/second.
+    pub rg_model_m: f64,
+    /// Paper R_g in 10^6 generations/second (see units note).
+    pub rg_paper_m: f64,
+}
+
+impl Table1Row {
+    pub fn max_err_pct(&self) -> f64 {
+        [
+            (self.ff_model - self.ff_paper).abs() / self.ff_paper,
+            (self.lut_model - self.lut_paper).abs() / self.lut_paper,
+            (self.clock_model - self.clock_paper).abs() / self.clock_paper,
+        ]
+        .into_iter()
+        .fold(0.0f64, f64::max)
+            * 100.0
+    }
+}
+
+/// Regenerate Table 1 (model + paper reference).
+pub fn table1() -> Vec<Table1Row> {
+    PAPER_TABLE1
+        .iter()
+        .map(|&(n, ff_p, lut_p, clk_p, rg_p)| {
+            let d = Dims::new(n, 20, Dims::default_p(n));
+            Table1Row {
+                n,
+                ff_model: area::flipflops(&d),
+                ff_paper: ff_p,
+                lut_model: area::luts(&d),
+                lut_paper: lut_p,
+                lut_util_pct: timing::utilization_pct(&d),
+                clock_model: timing::fmax_mhz(&d),
+                clock_paper: clk_p,
+                rg_model_m: timing::generations_per_sec(&d) / 1e6,
+                rg_paper_m: rg_p,
+            }
+        })
+        .collect()
+}
+
+/// A figure as (x, series...) points.
+#[derive(Debug, Clone)]
+pub struct Fig {
+    pub name: &'static str,
+    pub x_label: &'static str,
+    pub series_labels: Vec<String>,
+    /// (x, values-per-series)
+    pub points: Vec<(f64, Vec<f64>)>,
+}
+
+impl Fig {
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("name", self.name.into()),
+            ("x_label", self.x_label.into()),
+            (
+                "series",
+                Value::Array(self.series_labels.iter().map(|s| s.as_str().into()).collect()),
+            ),
+            (
+                "points",
+                Value::Array(
+                    self.points
+                        .iter()
+                        .map(|(x, ys)| {
+                            Value::Array(
+                                std::iter::once(Value::Float(*x))
+                                    .chain(ys.iter().map(|y| Value::Float(*y)))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Fig. 13: registers (flip-flops) vs N, model + paper points (m = 20).
+pub fn fig13() -> Fig {
+    Fig {
+        name: "fig13_registers_vs_n",
+        x_label: "N",
+        series_labels: vec!["model".into(), "paper".into()],
+        points: PAPER_TABLE1
+            .iter()
+            .map(|&(n, ff_p, ..)| {
+                let d = Dims::new(n, 20, Dims::default_p(n));
+                (n as f64, vec![area::flipflops(&d), ff_p])
+            })
+            .collect(),
+    }
+}
+
+/// Fig. 14: LUTs vs N, model + paper points (m = 20).
+pub fn fig14() -> Fig {
+    Fig {
+        name: "fig14_luts_vs_n",
+        x_label: "N",
+        series_labels: vec!["model".into(), "paper".into()],
+        points: PAPER_TABLE1
+            .iter()
+            .map(|&(n, _, lut_p, ..)| {
+                let d = Dims::new(n, 20, Dims::default_p(n));
+                (n as f64, vec![area::luts(&d), lut_p])
+            })
+            .collect(),
+    }
+}
+
+/// Fig. 15: clock vs m at N = 32 (paper gives only the trend + endpoints).
+pub fn fig15() -> Fig {
+    Fig {
+        name: "fig15_clock_vs_m_n32",
+        x_label: "m",
+        series_labels: vec!["model_mhz".into()],
+        points: [20u32, 22, 24, 26, 28]
+            .iter()
+            .map(|&m| {
+                let d = Dims::new(32, m, 1);
+                (f64::from(m), vec![timing::fmax_mhz(&d)])
+            })
+            .collect(),
+    }
+}
+
+/// Fig. 16: LUTs vs m for N ∈ {16, 32, 64}.
+pub fn fig16() -> Fig {
+    Fig {
+        name: "fig16_luts_vs_m",
+        x_label: "m",
+        series_labels: vec!["n16".into(), "n32".into(), "n64".into()],
+        points: [20u32, 22, 24, 26, 28]
+            .iter()
+            .map(|&m| {
+                let ys = [16usize, 32, 64]
+                    .iter()
+                    .map(|&n| area::luts(&Dims::new(n, m, Dims::default_p(n))))
+                    .collect();
+                (f64::from(m), ys)
+            })
+            .collect(),
+    }
+}
+
+/// Paper Table 2 reference rows: (reference, N, k, reference time µs,
+/// paper's obtained time µs, paper speedup).
+pub const PAPER_TABLE2: [(&str, usize, u32, f64, f64, f64); 4] = [
+    ("[9] Vavouras 2009", 32, 100, 210.0, 6.18, 34.0),
+    ("[24] Deliparaschos 2008", 32, 60, 1702.0, 3.71, 459.0),
+    ("[6] Fernando 2008", 32, 32, 7290.0, 1.98, 3683.0),
+    ("[10] Zhu OIMGA", 64, 500, 800_000.0, 43.40, 18432.0),
+];
+
+/// One Table-2 row: the timing model regenerates the paper's arithmetic;
+/// measured engine columns are appended by the bench harness.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub reference: &'static str,
+    pub n: usize,
+    pub k: u32,
+    pub reference_time_us: f64,
+    pub model_time_us: f64,
+    pub paper_time_us: f64,
+    pub model_speedup: f64,
+    pub paper_speedup: f64,
+}
+
+/// Regenerate Table 2 from the timing model.
+pub fn table2() -> Vec<Table2Row> {
+    PAPER_TABLE2
+        .iter()
+        .map(|&(reference, n, k, ref_us, paper_us, paper_speedup)| {
+            let d = Dims::new(n, 20, Dims::default_p(n));
+            let model_us = timing::run_time_us(&d, k);
+            Table2Row {
+                reference,
+                n,
+                k,
+                reference_time_us: ref_us,
+                model_time_us: model_us,
+                paper_time_us: paper_us,
+                model_speedup: ref_us / model_us,
+                paper_speedup,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_complete_and_close() {
+        let rows = table1();
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert!(r.max_err_pct() < 9.0, "N={}: {:.1}%", r.n, r.max_err_pct());
+        }
+    }
+
+    #[test]
+    fn table2_speedups_same_order_of_magnitude() {
+        for r in table2() {
+            let ratio = r.model_speedup / r.paper_speedup;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "{}: model {:.0}x vs paper {:.0}x",
+                r.reference,
+                r.model_speedup,
+                r.paper_speedup
+            );
+        }
+    }
+
+    #[test]
+    fn fig_series_shapes() {
+        assert_eq!(fig13().points.len(), 5);
+        assert_eq!(fig14().points.len(), 5);
+        assert_eq!(fig15().points.len(), 5);
+        let f16 = fig16();
+        assert_eq!(f16.points.len(), 5);
+        assert!(f16.points.iter().all(|(_, ys)| ys.len() == 3));
+    }
+
+    #[test]
+    fn fig15_monotone_decreasing() {
+        let f = fig15();
+        for w in f.points.windows(2) {
+            assert!(w[1].1[0] < w[0].1[0]);
+        }
+    }
+
+    #[test]
+    fn fig_json_serializes() {
+        let j = crate::jsonmini::to_string(&fig14().to_json());
+        assert!(j.contains("fig14"));
+        assert!(crate::jsonmini::parse(&j).is_ok());
+    }
+}

@@ -1,0 +1,140 @@
+//! Timing model: clock frequency, generation time and R_g.
+//!
+//! Structure (paper §4): the critical path runs through the SM mux trees,
+//! whose depth grows with N, and routing congestion grows with fabric
+//! utilization — visible in Table 1 as the clock dropping from ~50 MHz to
+//! 34.56 MHz at N=64 (16% utilization). Fig. 15 adds a small linear droop
+//! in m (~"slightly more than 1 MHz" from m=20 to m=28 at N=32).
+//!
+//! Model:
+//! ```text
+//! period_ns(N, m) = T0 + T_CONG · utilization% + T_M · (m − 20)
+//! Fmax = 1000 / period;   R_g = Fmax / 3  (Eq. 22);   T_g = 3 · period
+//! ```
+//! T0 and T_CONG are least-squares calibrated against Table 1 (residuals
+//! ≤ 6%, dominated by the non-monotonic 49.32/50.28 small-N noise in the
+//! paper's own data); T_M from Fig. 15's reported slope.
+
+use crate::ga::Dims;
+use crate::synth::area::luts;
+use crate::synth::VIRTEX7_LUTS;
+
+/// Calibrated zero-utilization period (ns): FFM ROM→adder→ROM stage plus
+/// clocking overhead.
+pub const T0_NS: f64 = 19.4757;
+/// Calibrated congestion coefficient (ns per % LUT utilization).
+pub const T_CONG_NS: f64 = 0.8594;
+/// Droop per chromosome bit beyond 20 (ns). The LUT model already grows
+/// with m, so the congestion term yields a linear ≈2 MHz droop from m=20 to
+/// m=28 at N=32 (paper Fig. 15 reports "slightly more than 1 MHz" — same
+/// shape, ~2x magnitude; residual documented in EXPERIMENTS.md).
+pub const T_M_NS: f64 = 0.0;
+
+/// LUT utilization of the variant on the xc7vx550t, in percent.
+pub fn utilization_pct(dims: &Dims) -> f64 {
+    luts(dims) / VIRTEX7_LUTS as f64 * 100.0
+}
+
+/// Synthesis clock estimate (MHz).
+pub fn fmax_mhz(dims: &Dims) -> f64 {
+    let period = T0_NS + T_CONG_NS * utilization_pct(dims) + T_M_NS * (f64::from(dims.m) - 20.0);
+    1000.0 / period
+}
+
+/// Generation time T_g = 3 clocks (Eq. 22), in nanoseconds.
+pub fn tg_ns(dims: &Dims) -> f64 {
+    3.0 * 1000.0 / fmax_mhz(dims)
+}
+
+/// Generations per second R_g = Fmax / 3 (Eq. 22).
+pub fn generations_per_sec(dims: &Dims) -> f64 {
+    fmax_mhz(dims) * 1e6 / 3.0
+}
+
+/// Modeled wall-clock for a k-generation GA run (the paper's Table 2
+/// "obtained time"): k · T_g.
+pub fn run_time_us(dims: &Dims, k: u32) -> f64 {
+    f64::from(k) * tg_ns(dims) / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::Dims;
+
+    /// Paper Table 1 clocks (m = 20).
+    const TABLE1_CLK: [(usize, f64); 5] = [
+        (4, 50.28),
+        (8, 49.32),
+        (16, 49.32),
+        (32, 48.51),
+        (64, 34.56),
+    ];
+
+    fn dims_for(n: usize) -> Dims {
+        Dims::new(n, 20, Dims::default_p(n))
+    }
+
+    #[test]
+    fn clock_matches_table1_within_7pct() {
+        for (n, clk) in TABLE1_CLK {
+            let est = fmax_mhz(&dims_for(n));
+            let err = (est - clk).abs() / clk;
+            assert!(err < 0.07, "N={n}: est {est:.2} vs paper {clk} ({:.1}%)", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn rg_is_clock_over_three() {
+        let d = dims_for(32);
+        let rg = generations_per_sec(&d);
+        assert!((rg - fmax_mhz(&d) * 1e6 / 3.0).abs() < 1.0);
+        // Paper: R_g ≈ 16.17k generations/ms → 16.17M/s at N=32.
+        assert!((rg / 1e6 - 16.17).abs() / 16.17 < 0.07, "rg={rg}");
+    }
+
+    #[test]
+    fn n64_generation_time_near_87ns() {
+        // Paper §4: "each GA generation of 64 chromosomes is generated in
+        // Tg ≈ 87 ns".
+        let tg = tg_ns(&dims_for(64));
+        assert!((tg - 86.8).abs() / 86.8 < 0.05, "tg={tg}");
+    }
+
+    #[test]
+    fn clock_decreases_with_n_and_m() {
+        assert!(fmax_mhz(&dims_for(64)) < fmax_mhz(&dims_for(8)));
+        assert!(fmax_mhz(&Dims::new(32, 28, 1)) < fmax_mhz(&Dims::new(32, 20, 1)));
+    }
+
+    #[test]
+    fn fig15_droop_about_one_mhz_over_8_bits() {
+        let drop = fmax_mhz(&Dims::new(32, 20, 1)) - fmax_mhz(&Dims::new(32, 28, 1));
+        assert!(drop > 0.5 && drop < 3.0, "drop={drop}");
+    }
+
+    #[test]
+    fn table2_times_from_model() {
+        // Paper Table 2: N=32, k=100 → ≈6.18 µs; k=60 → ≈3.71 µs;
+        // k=32 → ≈1.98 µs; N=64, k=500 → ≈43.40 µs.
+        let d32 = dims_for(32);
+        let d64 = dims_for(64);
+        for (d, k, us) in [
+            (&d32, 100u32, 6.18),
+            (&d32, 60, 3.71),
+            (&d32, 32, 1.98),
+            (&d64, 500, 43.40),
+        ] {
+            let est = run_time_us(d, k);
+            let err = (est - us).abs() / us;
+            assert!(err < 0.07, "k={k}: est {est:.2} vs paper {us} ({:.1}%)", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn utilization_sane() {
+        assert!(utilization_pct(&dims_for(64)) > 5.0);
+        assert!(utilization_pct(&dims_for(64)) < 20.0);
+        assert!(utilization_pct(&dims_for(4)) < 0.5);
+    }
+}

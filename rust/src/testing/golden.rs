@@ -1,0 +1,114 @@
+//! Golden-vector loader: replays the python-generated trajectories
+//! (artifacts/golden/*.json) through the rust implementations.
+//!
+//! This file is the rust half of the bit-exactness contract (DESIGN.md §5).
+
+use crate::ga::Dims;
+use crate::jsonmini::{parse, Value};
+use crate::rom::RomTables;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One recorded generation.
+#[derive(Debug, Clone)]
+pub struct GoldenStep {
+    /// Population at the start of the generation.
+    pub pop: Vec<u32>,
+    /// LFSR bank at the start of the generation.
+    pub lfsr: Vec<u32>,
+    /// Fitness of `pop`.
+    pub y: Vec<i64>,
+    /// Population after selection/crossover/mutation.
+    pub next_pop: Vec<u32>,
+}
+
+/// A full golden case: config + ROM tables + trajectory.
+#[derive(Debug, Clone)]
+pub struct GoldenCase {
+    pub name: String,
+    pub dims: Dims,
+    pub fn_name: String,
+    pub maximize: bool,
+    pub pop_seed: u64,
+    pub lfsr_seed: u64,
+    pub tables: RomTables,
+    pub steps: Vec<GoldenStep>,
+}
+
+/// Directory containing golden files (build artifact; requires
+/// `make artifacts`).
+pub fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden")
+}
+
+/// Load the index of case names. Errors if artifacts are missing — run
+/// `make artifacts` first (tests treat this as a hard failure, not a skip,
+/// so CI cannot silently pass without the contract).
+pub fn load_index() -> Result<Vec<String>> {
+    let path = golden_dir().join("index.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("missing golden index {} — run `make artifacts`", path.display()))?;
+    let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    v.as_array()
+        .context("index must be an array")?
+        .iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .context("index entries must be strings")
+        })
+        .collect()
+}
+
+/// Load one golden case by name.
+pub fn load_case(name: &str) -> Result<GoldenCase> {
+    let path = golden_dir().join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("missing golden case {}", path.display()))?;
+    let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    parse_case(&v)
+}
+
+fn parse_case(v: &Value) -> Result<GoldenCase> {
+    let n = v.req_i64("n")? as usize;
+    let m = v.req_i64("m")? as u32;
+    let p = v.req_i64("p")? as usize;
+    let gamma_bits = v.req_i64("gamma_bits")? as u32;
+    let dims = Dims::new(n, m, p).with_gamma_bits(gamma_bits);
+
+    let tables = RomTables {
+        spec_name: v.req_str("fn")?.to_string(),
+        m,
+        gamma_bits,
+        alpha: v.req_i64_vec("alpha")?,
+        beta: v.req_i64_vec("beta")?,
+        gamma: v.req_i64_vec("gamma")?,
+        gmin: v.req_i64("gmin")?,
+        gshift: v.req_i64("gshift")?,
+        gamma_bypass: v.req_i64("gamma_bypass")? != 0,
+    };
+
+    let steps = v
+        .req_array("steps")?
+        .iter()
+        .map(|s| -> Result<GoldenStep> {
+            Ok(GoldenStep {
+                pop: s.req_u32_vec("pop")?,
+                lfsr: s.req_u32_vec("lfsr")?,
+                y: s.req_i64_vec("y")?,
+                next_pop: s.req_u32_vec("next_pop")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    Ok(GoldenCase {
+        name: v.req_str("name")?.to_string(),
+        dims,
+        fn_name: v.req_str("fn")?.to_string(),
+        maximize: v.req_i64("maximize")? != 0,
+        pop_seed: v.req_i64("pop_seed")? as u64,
+        lfsr_seed: v.req_i64("lfsr_seed")? as u64,
+        tables,
+        steps,
+    })
+}

@@ -1,0 +1,283 @@
+//! TOML-subset parser — substrate for the config system (no serde offline).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` pairs
+//! with string / integer / float / boolean / flat-array values, `#` comments.
+//! Not supported (not needed by configs/): table arrays, inline tables,
+//! multi-line strings, dotted keys, datetimes.
+//!
+//! Parsed into the same [`Value`](crate::jsonmini::Value) tree as JSON so
+//! the typed config layer has a single source representation.
+
+use crate::jsonmini::Value;
+use std::collections::BTreeMap;
+
+/// Parse error with line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML document into a nested object tree.
+pub fn parse(src: &str) -> Result<Value, TomlError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut section_path: Vec<String> = Vec::new();
+
+    for (idx, raw_line) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner.strip_suffix(']').ok_or_else(|| TomlError {
+                line: lineno,
+                message: "unterminated section header".into(),
+            })?;
+            if inner.is_empty() || inner.starts_with('[') {
+                return Err(TomlError {
+                    line: lineno,
+                    message: "empty or array-of-tables header (unsupported)".into(),
+                });
+            }
+            section_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_section(&mut root, &section_path, lineno)?;
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| TomlError {
+            line: lineno,
+            message: "expected `key = value`".into(),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line: lineno,
+                message: "empty key".into(),
+            });
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        insert(&mut root, &section_path, key, value, lineno)?;
+    }
+    Ok(Value::Object(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_section(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Object(BTreeMap::new()));
+        cur = match entry {
+            Value::Object(o) => o,
+            _ => {
+                return Err(TomlError {
+                    line: lineno,
+                    message: format!("`{part}` already used as a non-table key"),
+                })
+            }
+        };
+    }
+    Ok(())
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    key: &str,
+    value: Value,
+    lineno: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in path {
+        cur = match cur.get_mut(part) {
+            Some(Value::Object(o)) => o,
+            _ => unreachable!("section ensured before key insert"),
+        };
+    }
+    if cur.insert(key.to_string(), value).is_some() {
+        return Err(TomlError {
+            line: lineno,
+            message: format!("duplicate key `{key}`"),
+        });
+    }
+    Ok(())
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, TomlError> {
+    let err = |m: &str| TomlError {
+        line: lineno,
+        message: m.into(),
+    };
+    if text.is_empty() {
+        return Err(err("missing value"));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        // Basic escapes only.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(err("bad escape")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, TomlError> = split_top_level(inner)
+            .into_iter()
+            .map(|part| parse_value(part.trim(), lineno))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    // Numbers (underscores allowed as in TOML).
+    let clean: String = text.chars().filter(|&c| c != '_').collect();
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        clean
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| err("bad float"))
+    } else {
+        clean
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| err("bad integer"))
+    }
+}
+
+/// Split a flat array body on commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let v = parse(
+            r#"
+# top comment
+title = "demo"
+
+[server]
+port = 8080            # trailing comment
+host = "localhost"
+verbose = true
+ratio = 0.25
+
+[server.limits]
+max_jobs = 1_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.req_str("title").unwrap(), "demo");
+        let server = v.get("server").unwrap();
+        assert_eq!(server.req_i64("port").unwrap(), 8080);
+        assert_eq!(server.req_str("host").unwrap(), "localhost");
+        assert_eq!(server.get("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(server.get("ratio").unwrap().as_f64(), Some(0.25));
+        assert_eq!(
+            server.get("limits").unwrap().req_i64("max_jobs").unwrap(),
+            1000
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse("xs = [1, 2, 3]\nnames = [\"a\", \"b,c\"]\nempty = []").unwrap();
+        assert_eq!(v.req_i64_vec("xs").unwrap(), vec![1, 2, 3]);
+        let names = v.req_array("names").unwrap();
+        assert_eq!(names[1].as_str(), Some("b,c"));
+        assert!(v.req_array("empty").unwrap().is_empty());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "a\nb\"c");
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("a = zzz").is_err());
+        assert!(parse("[a]\nx = 1\n[a.x]\ny = 2").is_err()); // key reused as table
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let v = parse("a = -42\nb = 1e3\nc = -0.5").unwrap();
+        assert_eq!(v.req_i64("a").unwrap(), -42);
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(v.get("c").unwrap().as_f64(), Some(-0.5));
+    }
+}

@@ -1,0 +1,173 @@
+//! Coordinator integration: serving semantics, backend equivalence,
+//! batching, early stopping, failure handling.
+//!
+//! Requires `make artifacts` (PJRT tests).
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest};
+use fpga_ga::ga::GaInstance;
+
+fn params(n: usize, k: u32, seed: u64) -> GaParams {
+    GaParams {
+        n,
+        m: 20,
+        k,
+        function: "f3".into(),
+        seed,
+        ..GaParams::default()
+    }
+}
+
+fn engine_coordinator(workers: usize) -> Coordinator {
+    let serve = ServeParams {
+        workers,
+        use_pjrt: false,
+        ..ServeParams::default()
+    };
+    Coordinator::builder(serve).start().unwrap()
+}
+
+fn pjrt_coordinator(max_batch: usize, early_stop: u32) -> Coordinator {
+    let serve = ServeParams {
+        workers: 1,
+        max_batch,
+        batch_window_us: 500,
+        early_stop_chunks: early_stop,
+        use_pjrt: true,
+        ..ServeParams::default()
+    };
+    Coordinator::builder(serve).start().unwrap()
+}
+
+#[test]
+fn engine_path_matches_direct_instance() {
+    let coord = engine_coordinator(2);
+    let p = params(16, 50, 9);
+    let r = coord.optimize(OptimizeRequest::new(p.clone()));
+    assert_eq!(r.status, JobStatus::Completed);
+    assert_eq!(r.generations, 50);
+
+    let mut direct = GaInstance::from_params(&p).unwrap();
+    direct.run(50);
+    assert_eq!(r.best_y, direct.best().y);
+    assert_eq!(r.best_x, direct.best().x);
+    assert_eq!(r.curve, direct.curve());
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_path_matches_engine_path() {
+    // Same job through both backends → identical results (K multiple of 25).
+    let p = params(32, 100, 77);
+    let e = engine_coordinator(1).optimize(OptimizeRequest::new(p.clone()));
+    let j = pjrt_coordinator(1, 0).optimize(OptimizeRequest::new(p));
+    assert_eq!(e.best_y, j.best_y);
+    assert_eq!(e.best_x, j.best_x);
+    assert_eq!(e.curve, j.curve);
+    assert_eq!(e.backend, "engine");
+    assert_eq!(j.backend, "pjrt");
+}
+
+#[test]
+fn many_jobs_batch_and_complete() {
+    let coord = pjrt_coordinator(8, 0);
+    let handles: Vec<_> = (0..12)
+        .map(|i| coord.submit(OptimizeRequest::new(params(32, 50, 100 + i)).with_tag(format!("j{i}"))))
+        .collect();
+    let mut results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    results.sort_by_key(|r| r.id);
+    assert!(results.iter().all(|r| r.status == JobStatus::Completed));
+    assert!(results.iter().all(|r| r.generations == 50));
+    // Tags preserved.
+    assert_eq!(results[0].tag, "j0");
+    let m = coord.metrics();
+    assert_eq!(m.jobs_completed, 12);
+    assert!(m.pjrt_dispatches > 0);
+    assert!(m.mean_batch > 1.0, "batching never engaged: {}", m.mean_batch);
+    coord.shutdown();
+}
+
+#[test]
+fn batched_results_equal_individual_results() {
+    // Batching (with padding) must not change any job's trajectory.
+    let jobs: Vec<GaParams> = (0..5).map(|i| params(32, 50, 200 + i)).collect();
+
+    let coord = pjrt_coordinator(8, 0);
+    let handles: Vec<_> = jobs
+        .iter()
+        .map(|p| coord.submit(OptimizeRequest::new(p.clone())))
+        .collect();
+    let batched: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    coord.shutdown();
+
+    for (p, b) in jobs.iter().zip(&batched) {
+        let mut direct = GaInstance::from_params(p).unwrap();
+        direct.run(50);
+        assert_eq!(b.best_y, direct.best().y, "seed {}", p.seed);
+        assert_eq!(b.curve, direct.curve(), "seed {}", p.seed);
+    }
+}
+
+#[test]
+fn early_stop_fires_on_stale_best() {
+    // K huge + tiny search space → converges fast → early stop.
+    let mut p = params(32, 1000, 5);
+    p.m = 20;
+    let coord = pjrt_coordinator(1, 2);
+    let r = coord.optimize(OptimizeRequest::new(p));
+    assert_eq!(r.status, JobStatus::EarlyStopped);
+    assert!(r.generations < 1000, "ran {} generations", r.generations);
+    let m = coord.metrics();
+    assert_eq!(m.jobs_early_stopped, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn invalid_request_fails_cleanly() {
+    let coord = engine_coordinator(1);
+    let mut p = params(16, 10, 1);
+    p.function = "does-not-exist".into();
+    let r = coord.optimize(OptimizeRequest::new(p));
+    assert_eq!(r.status, JobStatus::Failed);
+    assert!(r.error.unwrap().contains("does-not-exist"));
+    assert_eq!(coord.metrics().jobs_failed, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_variants_route_to_their_artifacts() {
+    let coord = pjrt_coordinator(8, 0);
+    let a = coord.submit(OptimizeRequest::new(params(16, 25, 1)));
+    let b = coord.submit(OptimizeRequest::new(params(64, 25, 2)));
+    let mut c_params = params(32, 25, 3);
+    c_params.m = 26;
+    c_params.function = "f1".into();
+    let c = coord.submit(OptimizeRequest::new(c_params));
+    for h in [a, b, c] {
+        let r = h.wait();
+        assert_eq!(r.status, JobStatus::Completed, "{:?}", r.error);
+        assert_eq!(r.generations, 25);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn engine_pool_parallelism_scales_jobs() {
+    let coord = engine_coordinator(4);
+    let handles: Vec<_> = (0..16)
+        .map(|i| coord.submit(OptimizeRequest::new(params(16, 100, 300 + i))))
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    assert!(results.iter().all(|r| r.status == JobStatus::Completed));
+    let m = coord.metrics();
+    assert!(m.engine_dispatches >= 16);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent() {
+    let coord = engine_coordinator(1);
+    let _ = coord.optimize(OptimizeRequest::new(params(8, 10, 1)));
+    coord.shutdown();
+    coord.shutdown(); // second call must be a no-op
+}

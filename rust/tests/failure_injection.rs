@@ -1,0 +1,147 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! cleanly on broken inputs — no hangs, no silent wrong answers.
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest};
+use fpga_ga::ga::Dims;
+use fpga_ga::runtime::{ChunkIo, Manifest, Runtime};
+
+fn write(dir: &std::path::Path, name: &str, content: &str) {
+    std::fs::write(dir.join(name), content).unwrap();
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let dir = std::env::temp_dir().join("fpga_ga_no_manifest");
+    let _ = std::fs::create_dir_all(&dir);
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let dir = std::env::temp_dir().join("fpga_ga_bad_manifest");
+    let _ = std::fs::create_dir_all(&dir);
+    write(&dir, "manifest.json", "{ not json !!");
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_shape_drift_detected() {
+    // lfsr_len inconsistent with (n, p): the loader must refuse.
+    let dir = std::env::temp_dir().join("fpga_ga_drift_manifest");
+    let _ = std::fs::create_dir_all(&dir);
+    write(
+        &dir,
+        "manifest.json",
+        r#"{"k_chunk": 25, "artifacts": [{
+            "kind": "chunk", "name": "x", "file": "x.hlo.txt", "batch": 1,
+            "n": 8, "m": 20, "p": 1, "gamma_bits": 12,
+            "lfsr_len": 99, "table_size": 1024, "gamma_size": 4096,
+            "k_chunk": 25, "lower_seconds": 0.1}]}"#,
+    );
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("lfsr_len"), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_execute() {
+    let real = fpga_ga::runtime::default_artifacts_dir();
+    let dir = std::env::temp_dir().join("fpga_ga_bad_hlo");
+    let _ = std::fs::create_dir_all(&dir);
+    // Valid manifest pointing at garbage HLO.
+    let manifest_src = std::fs::read_to_string(real.join("manifest.json")).unwrap();
+    write(&dir, "manifest.json", &manifest_src);
+    for entry in std::fs::read_dir(&real).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "txt").unwrap_or(false) {
+            write(&dir, p.file_name().unwrap().to_str().unwrap(), "HloModule garbage\nnonsense");
+        }
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new(manifest).unwrap();
+    assert!(rt.executable(&Dims::new(8, 20, 1), 1).is_err());
+}
+
+#[test]
+fn chunk_io_shape_mismatch_rejected_before_dispatch() {
+    let manifest = Manifest::load(&fpga_ga::runtime::default_artifacts_dir()).unwrap();
+    let mut rt = Runtime::new(manifest).unwrap();
+    let dims = Dims::new(8, 20, 1);
+    let exe = rt.executable(&dims, 1).unwrap();
+    let bad = ChunkIo {
+        batch: 1,
+        pop: vec![0; 7], // wrong: N = 8
+        lfsr: vec![1; dims.lfsr_len()],
+        alpha: vec![0; dims.table_size()],
+        beta: vec![0; dims.table_size()],
+        gamma: vec![0; dims.gamma_size()],
+        scal: vec![0; 4],
+        best_y: vec![0],
+        best_x: vec![0],
+        curve: vec![],
+    };
+    let err = exe.run(bad).unwrap_err().to_string();
+    assert!(err.contains("pop shape"), "{err}");
+}
+
+#[test]
+fn coordinator_survives_a_burst_of_invalid_jobs() {
+    let coord = Coordinator::builder(ServeParams {
+        workers: 1,
+        use_pjrt: false,
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap();
+    // Mix valid and invalid jobs; every handle must resolve.
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            let mut p = GaParams {
+                n: 8,
+                m: 20,
+                k: 10,
+                function: "f3".into(),
+                seed: i,
+                ..GaParams::default()
+            };
+            if i % 2 == 0 {
+                p.function = "bogus".into();
+            }
+            coord.submit(OptimizeRequest::new(p))
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    assert_eq!(results.iter().filter(|r| r.status == JobStatus::Failed).count(), 5);
+    assert_eq!(
+        results.iter().filter(|r| r.status == JobStatus::Completed).count(),
+        5
+    );
+    // Valid jobs unaffected by the failures around them.
+    for r in results.iter().filter(|r| r.status == JobStatus::Completed) {
+        assert_eq!(r.generations, 10);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_handles_zero_k_validation() {
+    let coord = Coordinator::builder(ServeParams {
+        workers: 1,
+        use_pjrt: false,
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap();
+    let mut p = GaParams::default();
+    p.k = 0;
+    let r = coord.optimize(OptimizeRequest::new(p));
+    assert_eq!(r.status, JobStatus::Failed);
+    coord.shutdown();
+}
+
+#[test]
+fn config_file_errors_are_contextual() {
+    let missing = fpga_ga::config::Config::from_file(std::path::Path::new("/nope/x.toml"));
+    assert!(missing.unwrap_err().to_string().contains("/nope/x.toml"));
+}

@@ -1,0 +1,112 @@
+//! Cross-layer bit-exactness: replay every python golden trajectory through
+//! the rust behavioral engine, ROM builder and seed derivation.
+//!
+//! Requires `make artifacts` (golden files are build products).
+
+use fpga_ga::ga::{generation_step, GaInstance};
+use fpga_ga::lfsr::LfsrBank;
+use fpga_ga::prng;
+use fpga_ga::rom::{build_tables, FnSpec};
+use fpga_ga::testing::golden::{load_case, load_index};
+use std::sync::Arc;
+
+#[test]
+fn golden_index_nonempty() {
+    let index = load_index().expect("run `make artifacts` first");
+    assert!(index.len() >= 5, "expected a matrix of golden cases");
+}
+
+/// The rust ROM builder must rebuild the exact tables python recorded.
+#[test]
+fn rom_builder_matches_golden_tables() {
+    for name in load_index().unwrap() {
+        let case = load_case(&name).unwrap();
+        let spec = FnSpec::by_name(&case.fn_name).unwrap();
+        let tab = build_tables(&spec, case.dims.m, case.dims.gamma_bits);
+        assert_eq!(tab.alpha, case.tables.alpha, "{name}: alpha");
+        assert_eq!(tab.beta, case.tables.beta, "{name}: beta");
+        assert_eq!(tab.gamma, case.tables.gamma, "{name}: gamma");
+        assert_eq!(tab.gmin, case.tables.gmin, "{name}: gmin");
+        assert_eq!(tab.gshift, case.tables.gshift, "{name}: gshift");
+        assert_eq!(tab.gamma_bypass, case.tables.gamma_bypass, "{name}: bypass");
+    }
+}
+
+/// Seed derivation (SplitMix64 streams) must match python exactly.
+#[test]
+fn seed_derivation_matches_golden() {
+    for name in load_index().unwrap() {
+        let case = load_case(&name).unwrap();
+        let pop = prng::initial_population(case.pop_seed, case.dims.n, case.dims.m);
+        assert_eq!(pop, case.steps[0].pop, "{name}: initial population");
+        let bank = prng::seed_bank(case.lfsr_seed, case.dims.lfsr_len());
+        assert_eq!(bank, case.steps[0].lfsr, "{name}: lfsr seeds");
+    }
+}
+
+/// Every generation of every case: fitness, next population and LFSR
+/// progression must match python bit-for-bit.
+#[test]
+fn engine_replays_every_golden_step() {
+    for name in load_index().unwrap() {
+        let case = load_case(&name).unwrap();
+        let d = case.dims;
+        let mut y = vec![0i64; d.n];
+        let mut next = vec![0u32; d.n];
+        let mut w = vec![0u32; d.n];
+        for (gen, step) in case.steps.iter().enumerate() {
+            let mut bank = LfsrBank::from_states(step.lfsr.clone(), d.n, d.p);
+            generation_step(
+                &step.pop,
+                &mut bank,
+                &case.tables,
+                case.maximize,
+                &d,
+                &mut y,
+                &mut next,
+                &mut w,
+            );
+            assert_eq!(y, step.y, "{name} gen {gen}: fitness");
+            assert_eq!(next, step.next_pop, "{name} gen {gen}: next population");
+            if gen + 1 < case.steps.len() {
+                assert_eq!(
+                    bank.states(),
+                    &case.steps[gen + 1].lfsr[..],
+                    "{name} gen {gen}: advanced lfsr bank"
+                );
+            }
+        }
+    }
+}
+
+/// The stateful instance (scratch-buffer hot path) replays full
+/// trajectories identically when started from the golden initial state.
+#[test]
+fn instance_replays_full_trajectories() {
+    for name in load_index().unwrap() {
+        let case = load_case(&name).unwrap();
+        let d = case.dims;
+        let bank = LfsrBank::from_states(case.steps[0].lfsr.clone(), d.n, d.p);
+        let mut inst = GaInstance::from_state(
+            d,
+            Arc::new(case.tables.clone()),
+            case.maximize,
+            case.steps[0].pop.clone(),
+            bank,
+        );
+        for (gen, step) in case.steps.iter().enumerate() {
+            assert_eq!(inst.population(), &step.pop[..], "{name} gen {gen}");
+            inst.step();
+            assert_eq!(inst.population(), &step.next_pop[..], "{name} gen {gen}");
+        }
+        // Curve entries must equal the per-generation best of y.
+        for (gen, step) in case.steps.iter().enumerate() {
+            let best = if case.maximize {
+                *step.y.iter().max().unwrap()
+            } else {
+                *step.y.iter().min().unwrap()
+            };
+            assert_eq!(inst.curve()[gen], best, "{name} gen {gen}: curve");
+        }
+    }
+}

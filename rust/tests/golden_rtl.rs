@@ -1,0 +1,78 @@
+//! Cycle-accurate simulator vs the python golden vectors: the RTL machine
+//! must emit, every 3 clocks, exactly the populations the jnp reference
+//! produced — closing the fourth corner of the bit-exactness contract
+//! (DESIGN.md §5).
+//!
+//! Requires `make artifacts`.
+
+use fpga_ga::lfsr::LfsrBank;
+use fpga_ga::rtl::GaMachine;
+use fpga_ga::testing::golden::{load_case, load_index};
+use std::sync::Arc;
+
+#[test]
+fn rtl_machine_replays_every_golden_case() {
+    for name in load_index().expect("run `make artifacts`") {
+        let case = load_case(&name).unwrap();
+        let d = case.dims;
+        let bank = LfsrBank::from_states(case.steps[0].lfsr.clone(), d.n, d.p);
+        let mut machine = GaMachine::new(
+            d,
+            Arc::new(case.tables.clone()),
+            case.maximize,
+            &case.steps[0].pop,
+            &bank,
+        );
+        for (gen, step) in case.steps.iter().enumerate() {
+            assert_eq!(
+                machine.population(),
+                step.pop,
+                "{name} gen {gen}: population before step"
+            );
+            assert_eq!(
+                machine.lfsr_states(),
+                step.lfsr,
+                "{name} gen {gen}: lfsr before step"
+            );
+            let y = machine.step_generation();
+            assert_eq!(y, step.y, "{name} gen {gen}: fitness bus");
+            assert_eq!(
+                machine.population(),
+                step.next_pop,
+                "{name} gen {gen}: latched next population"
+            );
+        }
+        // Exactly 3 clocks per generation, no drift.
+        assert_eq!(machine.clocks(), 3 * case.steps.len() as u64, "{name}");
+        assert_eq!(machine.generations(), case.steps.len() as u64, "{name}");
+    }
+}
+
+#[test]
+fn rtl_netlist_structural_counts_scale_with_golden_dims() {
+    use fpga_ga::rtl::PrimKind;
+    for name in load_index().unwrap() {
+        let case = load_case(&name).unwrap();
+        let d = case.dims;
+        let bank = LfsrBank::from_states(case.steps[0].lfsr.clone(), d.n, d.p);
+        let machine = GaMachine::new(
+            d,
+            Arc::new(case.tables.clone()),
+            case.maximize,
+            &case.steps[0].pop,
+            &bank,
+        );
+        let nl = machine.netlist();
+        assert_eq!(
+            nl.count_where(|k| matches!(k, PrimKind::Lfsr)),
+            3 * d.n + d.p,
+            "{name}: LFSR fabric"
+        );
+        assert_eq!(
+            nl.count_where(|k| matches!(k, PrimKind::Rom { .. })),
+            3 * d.n,
+            "{name}: FFM ROMs"
+        );
+        assert_eq!(nl.module_count("rx"), d.n, "{name}: RX registers");
+    }
+}

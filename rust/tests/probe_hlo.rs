@@ -1,0 +1,30 @@
+// De-risk probe: old XLA text parser must accept the jax-lowered chunk HLO.
+#[test]
+fn probe_compile_chunk_hlo() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/ga_chunk_b1_n8_m20_p1_k25.hlo.txt");
+    if !std::path::Path::new(path).exists() {
+        eprintln!("artifact missing; run make artifacts");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(path).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    // B=1, N=8, m=20, P=1: pop u32[1,8], lfsr u32[1,25], alpha/beta i64[1,1024],
+    // gamma i64[1,4096], scal i64[1,4], best_y i64[1], best_x u32[1]
+    let pop = xla::Literal::vec1(&[1u32,2,3,4,5,6,7,8]).reshape(&[1,8]).unwrap();
+    let lfsr = xla::Literal::vec1(&(1..=25u32).collect::<Vec<_>>()).reshape(&[1,25]).unwrap();
+    let alpha = xla::Literal::vec1(&vec![0i64;1024]).reshape(&[1,1024]).unwrap();
+    let beta = xla::Literal::vec1(&(0..1024i64).collect::<Vec<_>>()).reshape(&[1,1024]).unwrap();
+    let gamma = xla::Literal::vec1(&vec![0i64;4096]).reshape(&[1,4096]).unwrap();
+    let scal = xla::Literal::vec1(&[0i64,0,1,0]).reshape(&[1,4]).unwrap();
+    let besty = xla::Literal::vec1(&[i64::MAX]).reshape(&[1]).unwrap();
+    let bestx = xla::Literal::vec1(&[0u32]).reshape(&[1]).unwrap();
+    let res = exe.execute::<xla::Literal>(&[pop, lfsr, alpha, beta, gamma, scal, besty, bestx]).unwrap();
+    let out = res[0][0].to_literal_sync().unwrap();
+    let parts = out.to_tuple().unwrap();
+    assert_eq!(parts.len(), 5);
+    let pop_out = parts[0].to_vec::<u32>().unwrap();
+    let curve = parts[4].to_vec::<i64>().unwrap();
+    println!("ok: pop'={pop_out:?} curve_len={}", curve.len());
+}

@@ -1,0 +1,167 @@
+//! Integration: the PJRT path (AOT pallas/jax chunk) must produce EXACTLY
+//! the behavioral engine's trajectory — the accelerated and software paths
+//! are interchangeable.
+//!
+//! Requires `make artifacts`.
+
+use fpga_ga::ga::{BestSoFar, Dims, GaInstance};
+use fpga_ga::lfsr::LfsrBank;
+use fpga_ga::prng::{initial_population, seed_bank};
+use fpga_ga::rom::{build_tables, F2, F3, GAMMA_BITS_DEFAULT};
+use fpga_ga::runtime::{default_artifacts_dir, ChunkIo, Manifest, Runtime};
+use std::sync::Arc;
+
+fn runtime() -> Runtime {
+    let manifest = Manifest::load(&default_artifacts_dir()).expect("run `make artifacts`");
+    Runtime::new(manifest).unwrap()
+}
+
+fn chunk_io_for(dims: &Dims, batch: usize, maximize: bool, seed: u64, spec: &fpga_ga::rom::FnSpec) -> (ChunkIo, Arc<fpga_ga::rom::RomTables>) {
+    let tables = Arc::new(build_tables(spec, dims.m, GAMMA_BITS_DEFAULT));
+    let mut io = ChunkIo {
+        batch,
+        pop: Vec::new(),
+        lfsr: Vec::new(),
+        alpha: Vec::new(),
+        beta: Vec::new(),
+        gamma: Vec::new(),
+        scal: Vec::new(),
+        best_y: Vec::new(),
+        best_x: Vec::new(),
+        curve: Vec::new(),
+    };
+    for b in 0..batch {
+        io.pop.extend(initial_population(seed + b as u64, dims.n, dims.m));
+        io.lfsr.extend(seed_bank(seed * 31 + b as u64, dims.lfsr_len()));
+        io.alpha.extend_from_slice(&tables.alpha);
+        io.beta.extend_from_slice(&tables.beta);
+        io.gamma.extend_from_slice(&tables.gamma);
+        io.scal.extend_from_slice(&tables.scalars(maximize));
+        io.best_y.push(if maximize { i64::MIN } else { i64::MAX });
+        io.best_x.push(0);
+    }
+    (io, tables)
+}
+
+#[test]
+fn pjrt_chunk_matches_behavioral_engine_b1() {
+    let mut rt = runtime();
+    let dims = Dims::new(8, 20, 1);
+    let exe = rt.executable(&dims, 1).unwrap();
+    let (io, tables) = chunk_io_for(&dims, 1, false, 42, &F3);
+
+    // Behavioral twin.
+    let bank = LfsrBank::from_states(io.lfsr.clone(), dims.n, dims.p);
+    let mut inst = GaInstance::from_state(dims, tables, false, io.pop.clone(), bank);
+
+    let out = exe.run(io).unwrap();
+    let k = exe.meta.k_chunk;
+    inst.run(k);
+
+    assert_eq!(out.pop, inst.population(), "population after {k} generations");
+    assert_eq!(out.lfsr, inst.bank().states(), "lfsr bank");
+    assert_eq!(out.best_y[0], inst.best().y, "best fitness");
+    assert_eq!(out.best_x[0], inst.best().x, "best chromosome");
+    assert_eq!(out.curve, inst.curve(), "convergence curve");
+}
+
+#[test]
+fn pjrt_chunk_matches_engine_batched_mixed_directions() {
+    let mut rt = runtime();
+    let dims = Dims::new(32, 20, 1);
+    let exe = rt.executable(&dims, 8).unwrap();
+    assert_eq!(exe.meta.batch, 8);
+
+    // Instances 0..4 minimize F3, 4..8 maximize F2 — one dispatch serves a
+    // heterogeneous batch (different ROMs + directions per row).
+    let (mut io, tab_min) = chunk_io_for(&dims, 8, false, 7, &F3);
+    let tab_max = Arc::new(build_tables(&F2, dims.m, GAMMA_BITS_DEFAULT));
+    let t = dims.table_size();
+    let g = dims.gamma_size();
+    for b in 4..8 {
+        io.alpha[b * t..(b + 1) * t].copy_from_slice(&tab_max.alpha);
+        io.beta[b * t..(b + 1) * t].copy_from_slice(&tab_max.beta);
+        io.gamma[b * g..(b + 1) * g].copy_from_slice(&tab_max.gamma);
+        io.scal[b * 4..(b + 1) * 4].copy_from_slice(&tab_max.scalars(true));
+        io.best_y[b] = i64::MIN;
+    }
+
+    // Behavioral twins.
+    let mut twins: Vec<GaInstance> = (0..8)
+        .map(|b| {
+            let pop = io.pop[b * dims.n..(b + 1) * dims.n].to_vec();
+            let lfsr = io.lfsr[b * dims.lfsr_len()..(b + 1) * dims.lfsr_len()].to_vec();
+            let bank = LfsrBank::from_states(lfsr, dims.n, dims.p);
+            let (tables, maximize) = if b < 4 {
+                (tab_min.clone(), false)
+            } else {
+                (tab_max.clone(), true)
+            };
+            GaInstance::from_state(dims, tables, maximize, pop, bank)
+        })
+        .collect();
+
+    let out = exe.run(io).unwrap();
+    for (b, tw) in twins.iter_mut().enumerate() {
+        tw.run(exe.meta.k_chunk);
+        assert_eq!(
+            &out.pop[b * dims.n..(b + 1) * dims.n],
+            tw.population(),
+            "row {b} population"
+        );
+        assert_eq!(out.best_y[b], tw.best().y, "row {b} best");
+        let k = exe.meta.k_chunk as usize;
+        assert_eq!(&out.curve[b * k..(b + 1) * k], tw.curve(), "row {b} curve");
+    }
+}
+
+#[test]
+fn chained_chunks_equal_long_behavioral_run() {
+    let mut rt = runtime();
+    let dims = Dims::new(16, 20, 1);
+    let exe = rt.executable(&dims, 1).unwrap();
+    let (io0, tables) = chunk_io_for(&dims, 1, false, 99, &F3);
+
+    let bank = LfsrBank::from_states(io0.lfsr.clone(), dims.n, dims.p);
+    let mut inst = GaInstance::from_state(dims, tables, false, io0.pop.clone(), bank);
+
+    // 4 chained chunks = paper default K = 100.
+    let mut io = io0;
+    for _ in 0..4 {
+        io = exe.run(io).unwrap();
+    }
+    inst.run(100);
+    assert_eq!(io.pop, inst.population());
+    assert_eq!(io.best_y[0], inst.best().y);
+
+    let mut best = BestSoFar::new(false);
+    for (i, y) in inst.curve().iter().enumerate() {
+        best.offer(*y, i as u32);
+    }
+    assert_eq!(io.best_y[0], best.y);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let mut rt = runtime();
+    let dims = Dims::new(8, 20, 1);
+    let a = rt.executable(&dims, 1).unwrap();
+    let before = rt.compile_seconds;
+    let b = rt.executable(&dims, 1).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert_eq!(rt.compile_seconds, before, "second fetch must not recompile");
+    assert_eq!(rt.cached_count(), 1);
+}
+
+#[test]
+fn fig11_variant_n32_m26_runs() {
+    let mut rt = runtime();
+    let dims = Dims::new(32, 26, 1);
+    let exe = rt.executable(&dims, 1).unwrap();
+    let (io, _) = chunk_io_for(&dims, 1, false, 5, &fpga_ga::rom::F1);
+    let out = exe.run(io).unwrap();
+    // F1 minimum over m=26 (h=13 signed): f(-4096) = -68719986688 + 500...
+    let v: i64 = -(1 << 12);
+    let optimum = v * v * v - 15 * v * v + 500;
+    assert!(out.best_y[0] >= optimum, "cannot beat the domain minimum");
+}

@@ -1,5 +1,22 @@
-"""Pytest config: int64 fitness values require jax x64 mode (DESIGN.md SS5)."""
+"""Pytest config: int64 fitness values require jax x64 mode (DESIGN.md SS5).
+
+Also registers the deterministic `minihyp` fallback as `hypothesis` when the
+real package is not installed (offline image), so the property tests still
+run — with fixed-seed example draws instead of real fuzzing/shrinking.
+"""
+
+import sys
+from pathlib import Path
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    import minihyp
+
+    sys.modules["hypothesis"] = minihyp
+    sys.modules["hypothesis.strategies"] = minihyp.strategies

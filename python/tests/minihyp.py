@@ -1,0 +1,99 @@
+"""Deterministic fallback for the `hypothesis` subset these tests use.
+
+The offline image cannot `pip install hypothesis`; conftest.py registers
+this module as `hypothesis` (and `hypothesis.strategies`) only when the
+real package is missing, so environments that have hypothesis keep its
+full shrinking/fuzzing behavior. The fallback draws a fixed number of
+examples from a seeded PRNG — deterministic across runs, no shrinking.
+
+Supported surface: @given (positional + keyword strategies), @settings
+(max_examples, deadline — deadline ignored), st.integers(min_value,
+max_value), st.sampled_from(...), st.data() with .draw(strategy).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0x5EED_C0FF_EE
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rnd: random.Random):
+        return self._sample(rnd)
+
+
+def _integers(min_value=0, max_value=2**63 - 1):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def _sampled_from(options):
+    opts = list(options)
+    return _Strategy(lambda rnd: rnd.choice(opts))
+
+
+class _DataObject:
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.sample(self._rnd)
+
+
+def _data():
+    return _Strategy(lambda rnd: _DataObject(rnd))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+strategies.data = _data
+
+
+def settings(**kwargs):
+    def deco(f):
+        f._minihyp_settings = kwargs
+        return f
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(f):
+        max_examples = getattr(f, "_minihyp_settings", {}).get(
+            "max_examples", _DEFAULT_MAX_EXAMPLES
+        )
+
+        @functools.wraps(f)
+        def runner(*outer_args, **outer_kwargs):
+            # outer_args carries `self` for test methods; pytest passes
+            # nothing else because the advertised signature (below) hides
+            # every strategy-bound parameter.
+            rnd = random.Random(_SEED)
+            for _ in range(max_examples):
+                drawn = [s.sample(rnd) for s in arg_strategies]
+                drawn_kw = {k: s.sample(rnd) for k, s in kw_strategies.items()}
+                f(*outer_args, *drawn, **outer_kwargs, **drawn_kw)
+
+        # Hide strategy-bound parameters from pytest's fixture resolution:
+        # keep only the leading params (e.g. `self`) that the caller passes.
+        params = [
+            p
+            for p in inspect.signature(f).parameters.values()
+            if p.name not in kw_strategies
+        ]
+        if arg_strategies:
+            params = params[: len(params) - len(arg_strategies)]
+        runner.__signature__ = inspect.Signature(params)
+        if hasattr(runner, "__wrapped__"):
+            del runner.__wrapped__
+        return runner
+
+    return deco

@@ -1,0 +1,86 @@
+//! Execution-backend throughput: scalar vs batched-SoA stepping at batch
+//! sizes B ∈ {1, 2, 4, 8, 16} (N = 32, m = 20, F3, chunk = 25 generations —
+//! the coordinator's K_CHUNK).
+//!
+//! The claim under test (ISSUE 1 acceptance): per-job generation cost falls
+//! as B grows on the batched backend — the per-dispatch overhead (buffer
+//! setup, gather/scatter) amortizes across the batch, which is what makes
+//! the coordinator's `BatchPlan`s worth forming on the engine path at all.
+//!
+//! Emits the repo JSON bench format (`BENCH_JSON` line) as the trajectory
+//! baseline.
+
+use fpga_ga::bench_util::{bench, emit_json, fmt_count, BenchOpts, Table};
+use fpga_ga::config::GaParams;
+use fpga_ga::ga::{BackendKind, GaInstance, StepBackend};
+
+const N: usize = 32;
+const CHUNK: u32 = 25;
+const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+
+fn fleet(b: usize) -> Vec<GaInstance> {
+    (0..b)
+        .map(|i| {
+            GaInstance::from_params(&GaParams {
+                n: N,
+                m: 20,
+                k: 100,
+                function: "f3".into(),
+                seed: 42 + i as u64,
+                ..GaParams::default()
+            })
+            .unwrap()
+        })
+        .collect()
+}
+
+fn main() {
+    println!(
+        "=== Backend throughput: one {CHUNK}-generation chunk per dispatch, N={N}, m=20, F3 ===\n"
+    );
+    let mut t = Table::new([
+        "backend",
+        "B",
+        "ns/gen/job",
+        "aggregate gens/s",
+        "per-job vs B=1",
+    ]);
+    let mut json = Vec::new();
+
+    for kind in [BackendKind::Scalar, BackendKind::Batched] {
+        let backend = kind.instantiate();
+        let mut base_ns_per_gen_job = 0.0f64;
+        for b in BATCHES {
+            let mut insts = fleet(b);
+            let gens = vec![CHUNK; b];
+            let m = bench(
+                &format!("{}_b{}", kind.name(), b),
+                BenchOpts::default(),
+                || {
+                    let mut refs: Vec<&mut GaInstance> = insts.iter_mut().collect();
+                    backend.step_batch(&mut refs, &gens);
+                },
+            );
+            let gens_per_iter = CHUNK as f64 * b as f64;
+            let ns_per_gen_job = m.mean_ns() / gens_per_iter;
+            if b == 1 {
+                base_ns_per_gen_job = ns_per_gen_job;
+            }
+            t.row([
+                kind.name().to_string(),
+                b.to_string(),
+                format!("{ns_per_gen_job:.1}"),
+                fmt_count(m.throughput(gens_per_iter)),
+                format!("{:.2}x", base_ns_per_gen_job / ns_per_gen_job),
+            ]);
+            json.push(m.to_json(gens_per_iter));
+        }
+    }
+
+    t.print();
+    println!(
+        "\n(per-job cost on the batched backend should FALL as B grows — the dispatch\n\
+         overhead amortizes; the scalar row is flat by construction and is the seed baseline)"
+    );
+    emit_json("bench_backend", json);
+}

@@ -5,6 +5,7 @@
 //! paper's tables and figures all print in one consistent format (and are
 //! optionally dumped as JSON for EXPERIMENTS.md).
 
+use crate::jsonmini::{obj, to_string, Value};
 use std::time::{Duration, Instant};
 
 /// Result of measuring one benchmark case.
@@ -28,6 +29,37 @@ impl Measurement {
     pub fn throughput(&self, items: f64) -> f64 {
         items / self.mean.as_secs_f64()
     }
+
+    /// Machine-readable form for the JSON bench report ([`emit_json`]).
+    /// `items_per_iter` gives the throughput denominator (e.g. generations
+    /// per timed iteration).
+    pub fn to_json(&self, items_per_iter: f64) -> Value {
+        obj([
+            ("name", Value::from(self.name.clone())),
+            ("iters", Value::from(self.iters as i64)),
+            ("mean_ns", Value::from(self.mean_ns())),
+            ("median_ns", Value::from(self.median.as_secs_f64() * 1e9)),
+            ("p95_ns", Value::from(self.p95.as_secs_f64() * 1e9)),
+            ("min_ns", Value::from(self.min.as_secs_f64() * 1e9)),
+            ("stddev_ns", Value::from(self.stddev.as_secs_f64() * 1e9)),
+            ("items_per_iter", Value::from(items_per_iter)),
+            ("items_per_s", Value::from(self.throughput(items_per_iter))),
+        ])
+    }
+}
+
+/// The repo's machine-readable bench format: one line per bench target,
+/// `BENCH_JSON {"bench": <name>, "results": [<Measurement::to_json>...]}`,
+/// greppable out of the human-readable table output (EXPERIMENTS.md keeps
+/// these lines as the trajectory baselines).
+pub fn emit_json(bench: &str, results: Vec<Value>) {
+    println!(
+        "BENCH_JSON {}",
+        to_string(&obj([
+            ("bench", Value::from(bench)),
+            ("results", Value::Array(results)),
+        ]))
+    );
 }
 
 /// Harness configuration.
@@ -249,5 +281,24 @@ mod tests {
     fn table_row_width_checked() {
         let mut t = Table::new(["a", "b"]);
         t.row(["only-one"]);
+    }
+
+    #[test]
+    fn measurement_json_roundtrips() {
+        let m = Measurement {
+            name: "case".into(),
+            iters: 10,
+            mean: Duration::from_micros(2),
+            median: Duration::from_micros(2),
+            p95: Duration::from_micros(3),
+            min: Duration::from_micros(1),
+            stddev: Duration::from_nanos(100),
+        };
+        let v = m.to_json(100.0);
+        let parsed = crate::jsonmini::parse(&to_string(&v)).unwrap();
+        assert_eq!(parsed.req_str("name").unwrap(), "case");
+        assert_eq!(parsed.req_i64("iters").unwrap(), 10);
+        let thr = parsed.get("items_per_s").unwrap().as_f64().unwrap();
+        assert!((thr - 50_000_000.0).abs() < 1.0, "{thr}");
     }
 }

@@ -21,9 +21,10 @@ USAGE: fpga-ga <command> [options]
 COMMANDS:
   optimize    run one GA optimization
               --function f1|f2|f3  --n N  --m M  --k K  --seed S
-              --maximize  --pjrt  --config FILE
+              --maximize  --pjrt  --backend scalar|batched  --config FILE
   serve       start the coordinator and run a synthetic request trace
               --jobs J  --workers W  --batch B  --pjrt  --early-stop C
+              --backend scalar|batched
   rtl         run the cycle-accurate machine and report cycles
               --function F --n N --m M --k K --seed S
   table1      print Table 1 (synthesis model vs paper)
@@ -73,6 +74,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     let params = ga_params_from(args)?;
     let mut serve = crate::config::ServeParams::default();
     serve.use_pjrt = args.flag("pjrt");
+    serve.backend = args.opt_or("backend", serve.backend)?;
     let coord = Coordinator::builder(serve).start()?;
     let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("cli"));
     coord.shutdown();
@@ -107,6 +109,7 @@ fn cmd_serve(args: &Args) -> crate::Result<String> {
     serve.max_batch = args.opt_or("batch", serve.max_batch)?;
     serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
     serve.use_pjrt = args.flag("pjrt");
+    serve.backend = args.opt_or("backend", serve.backend)?;
     let params = ga_params_from(args)?;
 
     let coord = Coordinator::builder(serve).start()?;
@@ -294,6 +297,37 @@ mod tests {
         let out = run_cmd("serve --jobs 6 --workers 2 --function f3 --n 16 --k 25").unwrap();
         assert!(out.contains("served 6 jobs"), "{out}");
         assert!(out.contains("6 completed"), "{out}");
+    }
+
+    #[test]
+    fn optimize_batched_backend_matches_scalar() {
+        let scalar =
+            run_cmd("optimize --function f3 --n 16 --k 50 --seed 1 --backend scalar").unwrap();
+        let batched =
+            run_cmd("optimize --function f3 --n 16 --k 50 --seed 1 --backend batched").unwrap();
+        // Identical trajectories → identical report up to the latency line.
+        let fitness = |s: &str| {
+            s.lines()
+                .find(|l| l.contains("best fitness"))
+                .map(str::to_string)
+        };
+        assert_eq!(fitness(&scalar), fitness(&batched));
+        assert!(fitness(&scalar).is_some());
+    }
+
+    #[test]
+    fn serve_batched_backend_trace() {
+        let out = run_cmd(
+            "serve --jobs 6 --workers 2 --backend batched --function f3 --n 16 --k 25",
+        )
+        .unwrap();
+        assert!(out.contains("served 6 jobs"), "{out}");
+        assert!(out.contains("6 completed"), "{out}");
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        assert!(run_cmd("optimize --n 16 --backend warp").is_err());
     }
 
     #[test]

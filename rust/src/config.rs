@@ -4,6 +4,7 @@
 //! coordinator/serving knobs, and experiment sweeps. Defaults follow the
 //! paper's defaults (K = 100, MR = 2%, minimize, m = 20).
 
+use crate::ga::BackendKind;
 use crate::jsonmini::Value;
 use crate::rom::FnSpec;
 use anyhow::{anyhow, bail, Context, Result};
@@ -102,6 +103,10 @@ pub struct ServeParams {
     pub artifacts_dir: String,
     /// Use the PJRT path (false = behavioral engine; ablation knob).
     pub use_pjrt: bool,
+    /// Engine execution backend: `scalar` steps each job alone (the seed
+    /// behavior), `batched` fuses a whole same-variant `BatchPlan` into one
+    /// SoA dispatch (`rust/src/ga/backend.rs`).
+    pub backend: BackendKind,
 }
 
 impl Default for ServeParams {
@@ -113,6 +118,7 @@ impl Default for ServeParams {
             early_stop_chunks: 0,
             artifacts_dir: "artifacts".to_string(),
             use_pjrt: true,
+            backend: BackendKind::Scalar,
         }
     }
 }
@@ -213,6 +219,10 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
     get_u32(v, "early_stop_chunks", &mut s.early_stop_chunks)?;
     get_string(v, "artifacts_dir", &mut s.artifacts_dir)?;
     get_bool(v, "use_pjrt", &mut s.use_pjrt)?;
+    if let Some(x) = v.get("backend") {
+        let name = x.as_str().ok_or_else(|| anyhow!("`backend` must be a string"))?;
+        s.backend = name.parse().map_err(|e: String| anyhow!("{e}"))?;
+    }
     Ok(())
 }
 
@@ -265,6 +275,17 @@ use_pjrt = false
         assert_eq!(c.ga.function, "f1");
         assert_eq!(c.serve.workers, 4);
         assert!(!c.serve.use_pjrt);
+        assert_eq!(c.serve.backend, BackendKind::Scalar); // default preserved
+    }
+
+    #[test]
+    fn backend_key_parses_and_validates() {
+        let c = Config::from_toml("[serve]\nbackend = \"batched\"").unwrap();
+        assert_eq!(c.serve.backend, BackendKind::Batched);
+        let c = Config::from_toml("[serve]\nbackend = \"scalar\"").unwrap();
+        assert_eq!(c.serve.backend, BackendKind::Scalar);
+        let err = Config::from_toml("[serve]\nbackend = \"gpu\"").unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
     }
 
     #[test]

@@ -22,7 +22,10 @@ pub struct BatchPlan {
 /// Ready-queue per variant with window-based release.
 #[derive(Debug)]
 pub struct Batcher {
-    queues: BTreeMap<(usize, u32, usize), VecDeque<(JobId, Instant)>>,
+    /// Keyed by the FULL variant identity `(N, m, P, gamma_bits)` — every
+    /// component of [`Dims`]. Backends assert whole-`Dims` equality across
+    /// a plan, so the grouping key must never be coarser than `Dims`.
+    queues: BTreeMap<(usize, u32, usize, u32), VecDeque<(JobId, Instant)>>,
     /// Maximum batch the policy may form (≤ largest compiled B).
     max_batch: usize,
     /// How long a partial batch may wait for company.
@@ -38,8 +41,8 @@ impl Batcher {
         }
     }
 
-    fn key(dims: &Dims) -> (usize, u32, usize) {
-        (dims.n, dims.m, dims.p)
+    fn key(dims: &Dims) -> (usize, u32, usize, u32) {
+        (dims.n, dims.m, dims.p, dims.gamma_bits)
     }
 
     /// Mark a job ready for its next chunk.
@@ -60,7 +63,7 @@ impl Batcher {
     /// window. Returns plans in variant order (deterministic).
     pub fn drain_ready(&mut self, now: Instant) -> Vec<BatchPlan> {
         let mut plans = Vec::new();
-        for (&(n, m, p), q) in self.queues.iter_mut() {
+        for (&(n, m, p, gamma_bits), q) in self.queues.iter_mut() {
             loop {
                 if q.is_empty() {
                     break;
@@ -76,7 +79,7 @@ impl Batcher {
                 let take = q.len().min(self.max_batch);
                 let jobs = q.drain(..take).map(|(id, _)| id).collect();
                 plans.push(BatchPlan {
-                    dims: Dims::new(n, m, p),
+                    dims: Dims::new(n, m, p).with_gamma_bits(gamma_bits),
                     jobs,
                 });
             }
@@ -139,6 +142,22 @@ mod tests {
     }
 
     #[test]
+    fn gamma_bits_is_part_of_the_variant_key() {
+        // Backends assert whole-Dims equality per plan; mixed gamma_bits at
+        // equal (N, m, P) must therefore form separate plans.
+        let mut b = Batcher::new(8, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push(Dims::new(32, 20, 1), JobId(1), t0);
+        b.push(Dims::new(32, 20, 1).with_gamma_bits(14), JobId(2), t0);
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.jobs.len() == 1));
+        let mut gammas: Vec<u32> = plans.iter().map(|p| p.dims.gamma_bits).collect();
+        gammas.sort_unstable();
+        assert_eq!(gammas, vec![12, 14]);
+    }
+
+    #[test]
     fn oversubscribed_queue_splits_into_full_batches() {
         let mut b = Batcher::new(4, Duration::ZERO);
         let t0 = Instant::now();
@@ -173,5 +192,78 @@ mod tests {
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(50)));
         assert!(b.drain_ready(t0 + Duration::from_millis(49)).is_empty());
         assert_eq!(b.drain_ready(t0 + Duration::from_millis(50)).len(), 1);
+    }
+
+    #[test]
+    fn stragglers_ride_with_an_expired_partial() {
+        // Expiry is judged on the OLDEST member; younger jobs in the same
+        // queue flush with it rather than waiting their own window out.
+        let mut b = Batcher::new(4, Duration::from_millis(100));
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        b.push(dims(), JobId(2), t0 + Duration::from_millis(99));
+        let plans = b.drain_ready(t0 + Duration::from_millis(100));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs, vec![JobId(1), JobId(2)]);
+        assert_eq!(b.ready_count(), 0);
+    }
+
+    #[test]
+    fn expired_queue_never_exceeds_max_batch() {
+        // Even a fully-expired queue splits at max_batch; the remainder
+        // flushes as its own (expired) partial in the same drain.
+        let mut b = Batcher::new(4, Duration::from_millis(10));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(dims(), JobId(i), t0);
+        }
+        let plans = b.drain_ready(t0 + Duration::from_millis(11));
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].jobs.len(), 4);
+        assert_eq!(plans[1].jobs, vec![JobId(4)]);
+        assert_eq!(b.ready_count(), 0);
+    }
+
+    #[test]
+    fn young_partial_stays_after_full_batches_leave() {
+        let mut b = Batcher::new(2, Duration::from_millis(100));
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        b.push(dims(), JobId(2), t0);
+        b.push(dims(), JobId(3), t0 + Duration::from_millis(50));
+        let plans = b.drain_ready(t0 + Duration::from_millis(60));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs, vec![JobId(1), JobId(2)]);
+        assert_eq!(b.ready_count(), 1, "young partial must keep waiting");
+        // ...and flushes once ITS OWN window expires.
+        let plans = b.drain_ready(t0 + Duration::from_millis(150));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs, vec![JobId(3)]);
+    }
+
+    #[test]
+    fn fifo_preserved_across_interleaved_pushes_and_drains() {
+        let mut b = Batcher::new(3, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        b.push(dims(), JobId(2), t0);
+        let p1 = b.drain_ready(t0);
+        b.push(dims(), JobId(3), t0);
+        b.push(dims(), JobId(4), t0);
+        let p2 = b.drain_ready(t0);
+        assert_eq!(p1[0].jobs, vec![JobId(1), JobId(2)]);
+        assert_eq!(p2[0].jobs, vec![JobId(3), JobId(4)]);
+    }
+
+    #[test]
+    fn next_deadline_clears_when_drained() {
+        let mut b = Batcher::new(4, Duration::from_millis(10));
+        assert_eq!(b.next_deadline(), None);
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        assert!(b.next_deadline().is_some());
+        let plans = b.drain_ready(t0 + Duration::from_millis(10));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(b.next_deadline(), None);
     }
 }

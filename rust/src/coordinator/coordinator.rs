@@ -7,7 +7,7 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::workers::{
     spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, WorkMsg,
 };
-use crate::ga::GaInstance;
+use crate::ga::{BackendKind, GaInstance};
 use crate::runtime::Manifest;
 use std::collections::HashMap;
 use std::path::Path;
@@ -41,11 +41,13 @@ impl CoordinatorBuilder {
         let metrics = Arc::new(Metrics::new());
         let (sched_tx, sched_rx) = channel::<SchedMsg>();
 
-        // Behavioral pool (always available: it is also the pjrt fallback).
+        // Behavioral pool (always available: it is also the pjrt fallback),
+        // stepping through the configured execution backend.
         let (engine_tx, engine_rx) = channel::<WorkMsg>();
         let engine_rx = Arc::new(Mutex::new(engine_rx));
         let engine_threads = spawn_engine_pool(
             serve.workers.max(1),
+            serve.backend,
             engine_rx,
             sched_tx.clone(),
             metrics.clone(),
@@ -55,7 +57,13 @@ impl CoordinatorBuilder {
         let (pjrt_tx, pjrt_thread) = if serve.use_pjrt {
             let manifest = Manifest::load(Path::new(&serve.artifacts_dir))?;
             let (tx, rx) = channel::<WorkMsg>();
-            let th = spawn_pjrt_thread(manifest, rx, sched_tx.clone(), metrics.clone());
+            let th = spawn_pjrt_thread(
+                manifest,
+                serve.backend,
+                rx,
+                sched_tx.clone(),
+                metrics.clone(),
+            );
             (Some(tx), Some(th))
         } else {
             (None, None)
@@ -186,9 +194,11 @@ fn scheduler_loop(
 ) {
     let mut table: HashMap<JobId, JobEntry> = HashMap::new();
     let window = Duration::from_micros(serve.batch_window_us);
-    // Batching only pays on the PJRT path; the engine pool parallelizes
-    // across jobs instead (batch of 1, zero window).
-    let mut batcher = if pjrt_tx.is_some() {
+    // Batching pays wherever a backend can fuse a multi-job plan: the PJRT
+    // path and the batched SoA engine backend. The scalar engine pool
+    // parallelizes across jobs instead (batch of 1, zero window) — the seed
+    // behavior, preserved exactly under `--backend scalar`.
+    let mut batcher = if pjrt_tx.is_some() || serve.backend == BackendKind::Batched {
         Batcher::new(serve.max_batch, window)
     } else {
         Batcher::new(1, Duration::ZERO)

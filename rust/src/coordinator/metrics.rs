@@ -14,6 +14,10 @@ pub struct Metrics {
     pub chunks_dispatched: AtomicU64,
     pub pjrt_dispatches: AtomicU64,
     pub engine_dispatches: AtomicU64,
+    /// Jobs advanced by engine dispatches (one multi-job `BatchPlan` is ONE
+    /// backend call: this growing faster than `engine_dispatches` is the
+    /// observable proof that batched execution engaged).
+    pub engine_batch_jobs: AtomicU64,
     /// Total generations executed across all jobs.
     pub generations: AtomicU64,
     /// Batch-slot padding waste (padded rows dispatched).
@@ -65,6 +69,7 @@ impl Metrics {
             chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
             pjrt_dispatches: self.pjrt_dispatches.load(Ordering::Relaxed),
             engine_dispatches: self.engine_dispatches.load(Ordering::Relaxed),
+            engine_batch_jobs: self.engine_batch_jobs.load(Ordering::Relaxed),
             generations: self.generations.load(Ordering::Relaxed),
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
             latency_p50: pct(0.50),
@@ -87,6 +92,7 @@ pub struct MetricsSnapshot {
     pub chunks_dispatched: u64,
     pub pjrt_dispatches: u64,
     pub engine_dispatches: u64,
+    pub engine_batch_jobs: u64,
     pub generations: u64,
     pub padded_rows: u64,
     pub latency_p50: Duration,
@@ -102,7 +108,8 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "jobs: {} submitted, {} completed, {} early-stopped, {} failed\n\
-             chunks: {} dispatched ({} pjrt, {} engine), mean batch {:.2}, {} padded rows\n\
+             chunks: {} dispatched ({} pjrt, {} engine / {} batched jobs), \
+             mean batch {:.2}, {} padded rows\n\
              generations: {}\n\
              latency: p50 {:?}, p95 {:?}, p99 {:?}, max {:?} ({} samples)",
             self.jobs_submitted,
@@ -112,6 +119,7 @@ impl MetricsSnapshot {
             self.chunks_dispatched,
             self.pjrt_dispatches,
             self.engine_dispatches,
+            self.engine_batch_jobs,
             self.mean_batch,
             self.padded_rows,
             self.generations,

@@ -1,10 +1,11 @@
-//! Execution backends: the behavioral engine worker pool and the PJRT
-//! dispatcher thread. Both consume [`WorkMsg`] batches and return advanced
-//! job state via [`DoneMsg`]; the scheduler treats them uniformly.
+//! Execution backends behind the scheduler: the engine worker pool (driven
+//! by a pluggable [`StepBackend`]) and the PJRT dispatcher thread. Both
+//! consume [`WorkMsg`] batches and return advanced job state via
+//! [`DoneMsg`]; the scheduler treats them uniformly.
 
 use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
-use crate::ga::GaInstance;
+use crate::ga::{BackendKind, GaInstance, StepBackend};
 use crate::runtime::{ChunkIo, Manifest, Runtime};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
@@ -45,11 +46,45 @@ pub(crate) enum SchedMsg {
     Shutdown,
 }
 
-/// Spawn the behavioral worker pool: `count` threads sharing one queue.
-/// Each worker advances each job by `min(remaining, chunk)` generations —
-/// the engine path is exact in K (no chunk rounding).
+/// Advance a whole same-variant batch one chunk in ONE backend call: the
+/// `BatchPlan` executes as a unit. Each job runs `min(remaining, chunk)`
+/// generations — the engine path is exact in K (no chunk rounding).
+///
+/// Jobs with `executed > 0` are skipped: a partially-failed PJRT dispatch
+/// has already absorbed this chunk into them (sub-batch granularity), and
+/// advancing them again would silently run extra generations. Returns how
+/// many jobs this call actually advanced.
+pub(crate) fn run_engine_batch(
+    backend: &dyn StepBackend,
+    jobs: &mut [RunningJob],
+    chunk: u32,
+) -> usize {
+    let gens: Vec<u32> = jobs
+        .iter()
+        .map(|j| if j.executed > 0 { 0 } else { j.remaining.min(chunk) })
+        .collect();
+    {
+        let mut insts: Vec<&mut GaInstance> =
+            jobs.iter_mut().map(|j| &mut j.inst).collect();
+        backend.step_batch(&mut insts, &gens);
+    }
+    let mut advanced = 0;
+    for (job, g) in jobs.iter_mut().zip(gens) {
+        if g > 0 {
+            job.executed = g;
+            advanced += 1;
+        }
+    }
+    advanced
+}
+
+/// Spawn the behavioral worker pool: `count` threads sharing one queue,
+/// each owning one instance of the configured [`StepBackend`]. A multi-job
+/// batch is one `step_batch` call — observable as `engine_batch_jobs`
+/// growing faster than `engine_dispatches` in the metrics.
 pub(crate) fn spawn_engine_pool(
     count: usize,
+    backend: BackendKind,
     work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
@@ -61,30 +96,34 @@ pub(crate) fn spawn_engine_pool(
             let metrics = metrics.clone();
             std::thread::Builder::new()
                 .name(format!("ga-engine-{i}"))
-                .spawn(move || loop {
-                    let msg = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match msg {
-                        Ok(WorkMsg::Batch(mut jobs, chunk)) => {
-                            for job in &mut jobs {
-                                let gens = job.remaining.min(chunk);
-                                job.inst.run(gens);
-                                job.executed = gens;
+                .spawn(move || {
+                    let backend = backend.instantiate();
+                    loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(WorkMsg::Batch(mut jobs, chunk)) => {
+                                let advanced =
+                                    run_engine_batch(backend.as_ref(), &mut jobs, chunk);
+                                metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .engine_batch_jobs
+                                    .fetch_add(advanced as u64, Ordering::Relaxed);
+                                metrics.record_batch(advanced, 0);
+                                if tx
+                                    .send(SchedMsg::Done(DoneMsg {
+                                        jobs,
+                                        backend: "engine",
+                                    }))
+                                    .is_err()
+                                {
+                                    return; // scheduler gone
+                                }
                             }
-                            metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
-                            if tx
-                                .send(SchedMsg::Done(DoneMsg {
-                                    jobs,
-                                    backend: "engine",
-                                }))
-                                .is_err()
-                            {
-                                return; // scheduler gone
-                            }
+                            Ok(WorkMsg::Shutdown) | Err(_) => return,
                         }
-                        Ok(WorkMsg::Shutdown) | Err(_) => return,
                     }
                 })
                 .expect("spawn engine worker")
@@ -95,9 +134,12 @@ pub(crate) fn spawn_engine_pool(
 /// Spawn the PJRT dispatcher: ONE thread owning the non-`Send` Runtime.
 /// Batches are padded to the compiled batch size (padding rows replicate
 /// row 0 and are discarded); each dispatch advances every job by exactly
-/// `k_chunk` generations.
+/// `k_chunk` generations. If the PJRT runtime cannot initialize (no XLA in
+/// this build / environment), the thread stays up and executes every batch
+/// through the scalar engine instead — canonical state is never stranded.
 pub(crate) fn spawn_pjrt_thread(
     manifest: Manifest,
+    fallback: BackendKind,
     work_rx: Receiver<WorkMsg>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
@@ -105,28 +147,52 @@ pub(crate) fn spawn_pjrt_thread(
     std::thread::Builder::new()
         .name("ga-pjrt".into())
         .spawn(move || {
-            let mut rt = Runtime::new(manifest).expect("PJRT client");
+            let mut rt = match Runtime::new(manifest) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    log::warn!("PJRT runtime unavailable ({e}); dispatching to the engine instead");
+                    None
+                }
+            };
+            // Fallback executor honors the configured engine backend, so a
+            // batched deployment keeps its fused multi-job dispatches even
+            // when PJRT is absent or failing.
+            let fallback = fallback.instantiate();
+            let run_fallback = |jobs: &mut [RunningJob], chunk: u32| {
+                let advanced = run_engine_batch(fallback.as_ref(), jobs, chunk);
+                metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .engine_batch_jobs
+                    .fetch_add(advanced as u64, Ordering::Relaxed);
+                metrics.record_batch(advanced, 0);
+            };
             loop {
                 match work_rx.recv() {
-                    Ok(WorkMsg::Batch(mut jobs, _chunk)) => {
-                        match run_pjrt_batch(&mut rt, &mut jobs, &metrics) {
-                            Ok(()) => {}
-                            Err(e) => {
-                                // Fall back to the behavioral engine in-place:
-                                // the canonical state is untouched on failure.
-                                log::warn!("pjrt dispatch failed ({e}); engine fallback");
-                                for job in &mut jobs {
-                                    let gens = job.remaining.min(25);
-                                    job.inst.run(gens);
-                                    job.executed = gens;
+                    Ok(WorkMsg::Batch(mut jobs, chunk)) => {
+                        let executed_by = match rt.as_mut() {
+                            Some(rt) => match run_pjrt_batch(rt, &mut jobs, &metrics) {
+                                Ok(()) => {
+                                    metrics.pjrt_dispatches.fetch_add(1, Ordering::Relaxed);
+                                    "pjrt"
                                 }
+                                Err(e) => {
+                                    // Fall back to the engine in-place; jobs a
+                                    // successful sub-dispatch already advanced
+                                    // are skipped (run_engine_batch contract).
+                                    log::warn!("pjrt dispatch failed ({e}); engine fallback");
+                                    run_fallback(&mut jobs, chunk);
+                                    "engine"
+                                }
+                            },
+                            None => {
+                                run_fallback(&mut jobs, chunk);
+                                "engine"
                             }
-                        }
-                        metrics.pjrt_dispatches.fetch_add(1, Ordering::Relaxed);
+                        };
                         if done_tx
                             .send(SchedMsg::Done(DoneMsg {
                                 jobs,
-                                backend: "pjrt",
+                                backend: executed_by,
                             }))
                             .is_err()
                         {
@@ -204,9 +270,12 @@ fn run_pjrt_subbatch(
         io.best_y.push(inst.best().y);
         io.best_x.push(inst.best().x);
     }
-    metrics.record_batch(rows, b - rows);
 
     let out = exe.run(io)?;
+    // Recorded only after a successful dispatch: a failed sub-batch falls
+    // back to the engine, which records its own batch — counting both
+    // would double-book the same jobs.
+    metrics.record_batch(rows, b - rows);
     for (row, job) in jobs.iter_mut().enumerate().take(rows) {
         let d = &dims;
         job.inst.absorb_chunk(

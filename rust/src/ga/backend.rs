@@ -1,0 +1,387 @@
+//! Execution backends — the single seam between "advance these GA machines
+//! by K generations" and *how* that advancing is executed.
+//!
+//! The paper's FPGA evaluates every individual and every module in parallel
+//! each generation; the software twin recovers that throughput by batching:
+//! the coordinator's `Batcher` coalesces same-variant jobs into one
+//! [`BatchPlan`](crate::coordinator::BatchPlan), and a [`StepBackend`]
+//! executes the whole plan in ONE call. Two implementations ship:
+//!
+//! * [`ScalarBackend`] — today's per-instance hot path
+//!   ([`GaInstance::run`]), one job at a time. The reference.
+//! * [`BatchedSoaBackend`] — lays B instances × N individuals out as
+//!   structure-of-arrays (`pop: [B·N] u32`, LFSR bank `[B·L] u32` with
+//!   per-row stride L, one shared `Arc<RomTables>` per row) and runs each
+//!   generation as fused passes over the whole batch: FFM across B·N,
+//!   best-fold, SM/CM/MM per row over the contiguous SoA slices, then one
+//!   fused LFSR tick across the full `[B·L]` bank. Per-call overhead
+//!   (buffer setup, gather/scatter) amortizes across the batch, so per-job
+//!   cost falls as B grows (`benches/bench_backend.rs`).
+//!
+//! Invariant (test-enforced, `rust/tests/backend_equivalence.rs`): every
+//! backend is **bit-identical** to running each instance alone through the
+//! scalar engine — which is itself pinned to `python/compile/kernels/ref.py`
+//! by the golden vectors. Batching may never change a trajectory.
+//!
+//! The PJRT path (AOT-compiled chunk on the XLA runtime) is the third
+//! executor behind the same coordinator seam; it keeps its dedicated thread
+//! because the `Runtime` is not `Send` (see `coordinator/workers.rs`).
+
+use crate::ga::{engine, BestSoFar, Dims, GaInstance};
+use crate::lfsr::step as lfsr_step;
+use crate::rom::RomTables;
+use std::sync::Arc;
+
+/// Backend selector — config / CLI surface (`--backend {scalar,batched}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// Per-instance scalar stepping (the seed behavior, unchanged).
+    #[default]
+    Scalar,
+    /// Batched structure-of-arrays stepping.
+    Batched,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Batched => "batched",
+        }
+    }
+
+    /// Construct the backend this selector names.
+    pub fn instantiate(self) -> Box<dyn StepBackend> {
+        match self {
+            BackendKind::Scalar => Box::new(ScalarBackend),
+            BackendKind::Batched => Box::new(BatchedSoaBackend),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(BackendKind::Scalar),
+            "batched" | "batched-soa" | "soa" => Ok(BackendKind::Batched),
+            other => Err(format!(
+                "unknown backend `{other}` (expected `scalar` or `batched`)"
+            )),
+        }
+    }
+}
+
+/// One execution backend: advances a set of same-variant GA machines.
+pub trait StepBackend: Send + Sync {
+    /// Which selector this backend answers to.
+    fn kind(&self) -> BackendKind;
+
+    /// Advance `insts[i]` by `gens[i]` generations.
+    ///
+    /// Contract: `insts.len() == gens.len()`, and every instance shares one
+    /// [`Dims`] (one compiled variant — the batcher's grouping key). ROM
+    /// tables and optimization direction MAY differ per row. The resulting
+    /// trajectories (population, LFSR bank, best, curve, generation count)
+    /// must be bit-identical to `insts[i].run(gens[i])` in isolation.
+    fn step_batch(&self, insts: &mut [&mut GaInstance], gens: &[u32]);
+
+    /// Advance a single instance (convenience over [`Self::step_batch`]).
+    fn step_one(&self, inst: &mut GaInstance, gens: u32) {
+        self.step_batch(&mut [inst], &[gens]);
+    }
+}
+
+/// The seed behavior: each instance steps alone on its own scratch buffers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarBackend;
+
+impl StepBackend for ScalarBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Scalar
+    }
+
+    fn step_batch(&self, insts: &mut [&mut GaInstance], gens: &[u32]) {
+        assert_eq!(insts.len(), gens.len(), "one generation count per instance");
+        for (inst, &k) in insts.iter_mut().zip(gens) {
+            inst.run(k);
+        }
+    }
+}
+
+/// Batched structure-of-arrays backend (module docs above for the layout).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchedSoaBackend;
+
+impl StepBackend for BatchedSoaBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Batched
+    }
+
+    fn step_batch(&self, insts: &mut [&mut GaInstance], gens: &[u32]) {
+        assert_eq!(insts.len(), gens.len(), "one generation count per instance");
+        let Some(first) = insts.first() else { return };
+        let dims: Dims = *first.dims();
+        assert!(
+            insts.iter().all(|i| i.dims() == &dims),
+            "batched rows must share one variant (Dims)"
+        );
+        let max_gens = gens.iter().copied().max().unwrap_or(0);
+        if max_gens == 0 {
+            return;
+        }
+
+        let b = insts.len();
+        let n = dims.n;
+        let l = dims.lfsr_len();
+
+        // Gather the SoA state: row-major [B, N] population and [B, L] LFSR
+        // bank (stride L per row), plus per-row table/direction references.
+        let mut pop: Vec<u32> = Vec::with_capacity(b * n);
+        let mut lfsr: Vec<u32> = Vec::with_capacity(b * l);
+        let mut tables: Vec<Arc<RomTables>> = Vec::with_capacity(b);
+        let mut maximize: Vec<bool> = Vec::with_capacity(b);
+        for inst in insts.iter() {
+            pop.extend_from_slice(inst.population());
+            lfsr.extend_from_slice(inst.bank().states());
+            tables.push(inst.tables().clone());
+            maximize.push(inst.maximize());
+        }
+
+        let mut y = vec![0i64; b * n];
+        let mut w = vec![0u32; b * n];
+        let mut next = vec![0u32; b * n];
+        let mut bests: Vec<BestSoFar> =
+            maximize.iter().map(|&mx| BestSoFar::new(mx)).collect();
+        let mut curves: Vec<Vec<i64>> =
+            gens.iter().map(|&k| Vec::with_capacity(k as usize)).collect();
+
+        for g in 0..max_gens {
+            // Rows whose job requested fewer generations retire early; the
+            // common case (uniform chunk) keeps every row active throughout.
+            let all_active = gens.iter().all(|&k| k > g);
+
+            // FFM: score every input row (fused pass over [B, N]).
+            for row in 0..b {
+                if gens[row] <= g {
+                    continue;
+                }
+                let s = row * n;
+                engine::fitness_all(&pop[s..s + n], &tables[row], &mut y[s..s + n]);
+            }
+
+            // Best-of-generation fold over the INPUT population — the same
+            // accounting as `GaInstance::step` (L2 curve semantics).
+            for row in 0..b {
+                if gens[row] <= g {
+                    continue;
+                }
+                let s = row * n;
+                let mut gen_best = BestSoFar::new(maximize[row]);
+                for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
+                    gen_best.offer(*yy, *x);
+                }
+                bests[row].offer(gen_best.y, gen_best.x);
+                curves[row].push(gen_best.y);
+            }
+
+            // SM / CM / MM over each row's contiguous SoA slices.
+            for row in 0..b {
+                if gens[row] <= g {
+                    continue;
+                }
+                let s = row * n;
+                let states = &lfsr[row * l..(row + 1) * l];
+                engine::select_all_states(
+                    &pop[s..s + n],
+                    &y[s..s + n],
+                    states,
+                    maximize[row],
+                    &dims,
+                    &mut w[s..s + n],
+                );
+                engine::crossover_all_states(&w[s..s + n], states, &dims, &mut next[s..s + n]);
+                engine::mutate_all_states(&mut next[s..s + n], states, &dims);
+            }
+
+            // Commit the generation: publish offspring and advance every
+            // generator one tick — fused across the whole [B·L] bank when
+            // no row has retired (the vectorizable fast path).
+            if all_active {
+                std::mem::swap(&mut pop, &mut next);
+                for s in lfsr.iter_mut() {
+                    *s = lfsr_step(*s);
+                }
+            } else {
+                for row in 0..b {
+                    if gens[row] <= g {
+                        continue;
+                    }
+                    let s = row * n;
+                    pop[s..s + n].copy_from_slice(&next[s..s + n]);
+                    for st in lfsr[row * l..(row + 1) * l].iter_mut() {
+                        *st = lfsr_step(*st);
+                    }
+                }
+            }
+        }
+
+        // Scatter: thread each advanced row back into its instance exactly
+        // like a PJRT chunk round-trip does.
+        for (row, inst) in insts.iter_mut().enumerate() {
+            if gens[row] == 0 {
+                continue;
+            }
+            let s = row * n;
+            inst.absorb_chunk(
+                pop[s..s + n].to_vec(),
+                lfsr[row * l..(row + 1) * l].to_vec(),
+                bests[row].y,
+                bests[row].x,
+                &curves[row],
+                gens[row],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaParams;
+
+    fn inst(n: usize, m: u32, seed: u64, function: &str, maximize: bool) -> GaInstance {
+        GaInstance::from_params(&GaParams {
+            n,
+            m,
+            k: 1000,
+            function: function.into(),
+            seed,
+            maximize,
+            ..GaParams::default()
+        })
+        .unwrap()
+    }
+
+    fn assert_same(a: &GaInstance, b: &GaInstance) {
+        assert_eq!(a.population(), b.population(), "population");
+        assert_eq!(a.bank().states(), b.bank().states(), "lfsr bank");
+        assert_eq!(a.generation(), b.generation(), "generation");
+        assert_eq!(a.best().y, b.best().y, "best y");
+        assert_eq!(a.best().x, b.best().x, "best x");
+        assert_eq!(a.curve(), b.curve(), "curve");
+    }
+
+    #[test]
+    fn kind_parses_and_displays() {
+        assert_eq!("scalar".parse::<BackendKind>().unwrap(), BackendKind::Scalar);
+        assert_eq!("batched".parse::<BackendKind>().unwrap(), BackendKind::Batched);
+        assert_eq!("soa".parse::<BackendKind>().unwrap(), BackendKind::Batched);
+        assert!("vliw".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::Batched.to_string(), "batched");
+        assert_eq!(BackendKind::default(), BackendKind::Scalar);
+        assert_eq!(BackendKind::Scalar.instantiate().kind(), BackendKind::Scalar);
+        assert_eq!(BackendKind::Batched.instantiate().kind(), BackendKind::Batched);
+    }
+
+    #[test]
+    fn batched_single_row_equals_scalar() {
+        let mut a = inst(16, 20, 7, "f3", false);
+        let mut b = a.clone();
+        a.run(40);
+        BatchedSoaBackend.step_one(&mut b, 40);
+        assert_same(&a, &b);
+    }
+
+    #[test]
+    fn batched_rows_equal_isolated_runs() {
+        let mut scalar: Vec<GaInstance> =
+            (0..5).map(|s| inst(32, 20, 100 + s, "f3", false)).collect();
+        let mut batched: Vec<GaInstance> = scalar.clone();
+        for i in &mut scalar {
+            i.run(30);
+        }
+        let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
+        BatchedSoaBackend.step_batch(&mut refs, &[30; 5]);
+        for (a, b) in scalar.iter().zip(&batched) {
+            assert_same(a, b);
+        }
+    }
+
+    #[test]
+    fn ragged_generation_counts_respected() {
+        let gens = [7u32, 0, 25, 13];
+        let mut scalar: Vec<GaInstance> =
+            (0..4).map(|s| inst(8, 20, 50 + s, "f3", false)).collect();
+        let mut batched: Vec<GaInstance> = scalar.clone();
+        for (i, &k) in scalar.iter_mut().zip(gens.iter()) {
+            i.run(k);
+        }
+        let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
+        BatchedSoaBackend.step_batch(&mut refs, &gens);
+        for (a, b) in scalar.iter().zip(&batched) {
+            assert_same(a, b);
+        }
+    }
+
+    #[test]
+    fn mixed_tables_and_directions_in_one_batch() {
+        let mut scalar = vec![
+            inst(16, 20, 1, "f3", false),
+            inst(16, 20, 2, "f2", true),
+            inst(16, 20, 3, "f1", false),
+            inst(16, 20, 4, "f3", true),
+        ];
+        let mut batched: Vec<GaInstance> = scalar.clone();
+        for i in &mut scalar {
+            i.run(50);
+        }
+        let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
+        BatchedSoaBackend.step_batch(&mut refs, &[50; 4]);
+        for (a, b) in scalar.iter().zip(&batched) {
+            assert_same(a, b);
+        }
+    }
+
+    #[test]
+    fn chunked_batched_stepping_is_seamless() {
+        // 4 chunks of 25 through the batched backend == one scalar run(100).
+        let mut a = inst(32, 26, 9, "f1", false);
+        let mut b = a.clone();
+        a.run(100);
+        for _ in 0..4 {
+            BatchedSoaBackend.step_one(&mut b, 25);
+        }
+        assert_same(&a, &b);
+    }
+
+    #[test]
+    fn scalar_backend_is_the_reference_path() {
+        let mut a = inst(16, 20, 11, "f3", false);
+        let mut b = a.clone();
+        a.run(20);
+        ScalarBackend.step_one(&mut b, 20);
+        assert_same(&a, &b);
+    }
+
+    #[test]
+    #[should_panic(expected = "share one variant")]
+    fn mixed_dims_rejected() {
+        let mut a = inst(8, 20, 1, "f3", false);
+        let mut b = inst(16, 20, 2, "f3", false);
+        BatchedSoaBackend.step_batch(&mut [&mut a, &mut b], &[5, 5]);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        BatchedSoaBackend.step_batch(&mut [], &[]);
+        ScalarBackend.step_batch(&mut [], &[]);
+    }
+}

@@ -50,10 +50,25 @@ pub fn select_all(
     dims: &Dims,
     w: &mut [u32],
 ) {
+    select_all_states(pop, y, bank.states(), maximize, dims, w);
+}
+
+/// [`select_all`] over a raw state slice in the DESIGN.md §5 bank layout
+/// (`states[2j]`/`states[2j+1]` = SMLFSR1/2 of slot j). The slice form is
+/// what the SoA batched backend drives row-by-row — one implementation
+/// serves both entry points so the layouts cannot drift.
+pub fn select_all_states(
+    pop: &[u32],
+    y: &[i64],
+    states: &[u32],
+    maximize: bool,
+    dims: &Dims,
+    w: &mut [u32],
+) {
     let sel_bits = dims.sel_bits();
     for j in 0..dims.n {
-        let i1 = top_bits(bank.sm1(j), sel_bits) as usize;
-        let i2 = top_bits(bank.sm2(j), sel_bits) as usize;
+        let i1 = top_bits(states[2 * j], sel_bits) as usize;
+        let i2 = top_bits(states[2 * j + 1], sel_bits) as usize;
         let first_wins = if maximize {
             y[i1] > y[i2]
         } else {
@@ -66,6 +81,13 @@ pub fn select_all(
 /// CM: single-point crossover per variable half via shift masks
 /// (Eq. 12-20). Children overwrite `z` in population order.
 pub fn crossover_all(w: &[u32], bank: &LfsrBank, dims: &Dims, z: &mut [u32]) {
+    crossover_all_states(w, bank.states(), dims, z);
+}
+
+/// [`crossover_all`] over a raw state slice (`states[2N + 2i]`/`[2N + 2i + 1]`
+/// = cut-point generators of pair i).
+pub fn crossover_all_states(w: &[u32], states: &[u32], dims: &Dims, z: &mut [u32]) {
+    let n = dims.n;
     let h = dims.h();
     let ones = mask32(h);
     let cut_bits = dims.cut_bits();
@@ -78,8 +100,8 @@ pub fn crossover_all(w: &[u32], bank: &LfsrBank, dims: &Dims, z: &mut [u32]) {
         let (pw1, qw1) = split(wp[1], h);
 
         // Raw draw clamped to h (hardware mux don't-care pinned as clamp).
-        let shift_p = top_bits(bank.cm_p(i), cut_bits).min(h);
-        let shift_q = top_bits(bank.cm_q(i), cut_bits).min(h);
+        let shift_p = top_bits(states[2 * n + 2 * i], cut_bits).min(h);
+        let shift_q = top_bits(states[2 * n + 2 * i + 1], cut_bits).min(h);
         let mask_p = ones >> shift_p; // tail mask (Eq. 13)
         let mask_q = ones >> shift_q;
 
@@ -96,8 +118,13 @@ pub fn crossover_all(w: &[u32], bank: &LfsrBank, dims: &Dims, z: &mut [u32]) {
 
 /// MM: XOR the first P offspring with the top m bits of their LFSR (Eq. 21).
 pub fn mutate_all(z: &mut [u32], bank: &LfsrBank, dims: &Dims) {
+    mutate_all_states(z, bank.states(), dims);
+}
+
+/// [`mutate_all`] over a raw state slice (`states[3N + v]` = MMLFSR_v).
+pub fn mutate_all_states(z: &mut [u32], states: &[u32], dims: &Dims) {
     for v in 0..dims.p {
-        z[v] ^= top_bits(bank.mm(v), dims.m);
+        z[v] ^= top_bits(states[3 * dims.n + v], dims.m);
     }
 }
 

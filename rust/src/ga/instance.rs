@@ -190,6 +190,14 @@ impl GaInstance {
         self.best
     }
 
+    /// Run `k` generations through an execution backend (the coordinator's
+    /// chunk-stepping seam). `run_with(&ScalarBackend, k)` ≡ `run(k)`;
+    /// every backend is bit-identical by contract.
+    pub fn run_with(&mut self, backend: &dyn crate::ga::StepBackend, k: u32) -> BestSoFar {
+        backend.step_batch(&mut [&mut *self], &[k]);
+        self.best
+    }
+
     /// Overwrite one individual (island-model migration, [19]): the migrant
     /// enters the population as-is; fitness is computed next generation like
     /// any other chromosome.

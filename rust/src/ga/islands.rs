@@ -98,14 +98,23 @@ impl IslandGa {
 
     /// Run `k` generations with migration epochs; returns the global best.
     pub fn run(&mut self, k: u32) -> BestSoFar {
+        self.run_with(&crate::ga::ScalarBackend, k)
+    }
+
+    /// Like [`IslandGa::run`], but every epoch segment steps ALL M islands
+    /// as one same-variant batch through `backend` — the multi-FPGA analogy
+    /// made literal: one dispatch advances the whole ring, then migration
+    /// exchanges the bests. Bit-identical to [`IslandGa::run`] for every
+    /// backend (the backend contract), enforced by the islands tests.
+    pub fn run_with(&mut self, backend: &dyn crate::ga::StepBackend, k: u32) -> BestSoFar {
         let mut remaining = k;
         while remaining > 0 {
             let until_epoch = self.migration_interval
                 - (self.generations % self.migration_interval);
             let step = remaining.min(until_epoch);
-            for isl in &mut self.islands {
-                isl.run(step);
-            }
+            let gens = vec![step; self.islands.len()];
+            let mut refs: Vec<&mut GaInstance> = self.islands.iter_mut().collect();
+            backend.step_batch(&mut refs, &gens);
             self.generations += step;
             remaining -= step;
             if self.generations % self.migration_interval == 0 && remaining > 0 {
@@ -235,6 +244,25 @@ mod tests {
             wins + ties >= trials / 2,
             "migration lost too often: {wins} wins, {ties} ties of {trials}"
         );
+    }
+
+    #[test]
+    fn batched_backend_matches_scalar_islands() {
+        // One SoA dispatch per epoch segment == per-island scalar stepping,
+        // bit for bit, including migration interleaving.
+        let mut scalar = ring(4, 16, 10);
+        let mut batched = scalar.clone();
+        scalar.run(47);
+        batched.run_with(&crate::ga::BatchedSoaBackend, 47);
+        assert_eq!(scalar.best().y, batched.best().y);
+        assert_eq!(scalar.best().x, batched.best().x);
+        assert_eq!(scalar.curve(), batched.curve());
+        assert_eq!(scalar.migrations(), batched.migrations());
+        for (a, b) in scalar.islands().iter().zip(batched.islands()) {
+            assert_eq!(a.population(), b.population());
+            assert_eq!(a.bank().states(), b.bank().states());
+            assert_eq!(a.curve(), b.curve());
+        }
     }
 
     #[test]

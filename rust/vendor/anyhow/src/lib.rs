@@ -1,0 +1,189 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the subset the workspace uses — `Error`, `Result`,
+//! the `anyhow!` / `bail!` / `ensure!` macros and the `Context` extension
+//! trait — with eager message composition instead of a source chain.
+//! Display of a contextualized error prints `context: cause`, which is a
+//! superset of real anyhow's outermost-message Display; every `.contains()`
+//! assertion that passes against real anyhow passes here too.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::Error`: an eagerly-rendered error message plus the
+/// boxed source (kept only so `source()`-style inspection stays possible).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (the `anyhow!` macro target).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Wrap with higher-level context (the `Context` trait target).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The underlying source error, when one exists.
+    pub fn source_ref(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Drop-in for `anyhow::Context`: attach context to `Result` / `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Drop-in for `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Drop-in for `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Drop-in for `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_composes_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x.toml")).unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("reading x.toml"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").unwrap_err().to_string().contains("missing"));
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} of {}", 1, "2");
+        assert_eq!(e.to_string(), "bad 1 of 2");
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x > 1, "too small: {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(inner(0).is_err());
+        assert!(inner(11).is_err());
+        assert_eq!(inner(5).unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+        assert!(f().unwrap_err().source_ref().is_some());
+    }
+}

@@ -1,0 +1,32 @@
+//! Minimal offline stand-in for the `log` crate: the five level macros,
+//! rendered straight to stderr (no level filtering, no global logger).
+
+/// Backing sink for the level macros (stderr, one line per record).
+pub fn __emit(level: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{level}] {args}");
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", ::std::format_args!($($arg)*)) };
+}

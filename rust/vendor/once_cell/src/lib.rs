@@ -1,0 +1,51 @@
+//! Minimal offline stand-in for `once_cell`: only `sync::Lazy`, backed by
+//! `std::sync::OnceLock`. The initializer is a plain `fn` pointer (the one
+//! shape a `static` needs); non-capturing closures coerce.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Lazily-initialized, thread-safe static value.
+    pub struct Lazy<T> {
+        cell: OnceLock<T>,
+        init: fn() -> T,
+    }
+
+    impl<T> Lazy<T> {
+        pub const fn new(init: fn() -> T) -> Self {
+            Self {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+
+        /// Force initialization and return the value.
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(this.init)
+        }
+    }
+
+    impl<T> Deref for Lazy<T> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static COUNTER: Lazy<u32> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn initializes_once_and_derefs() {
+        assert_eq!(*COUNTER, 42);
+        assert_eq!(*COUNTER, 42);
+        let local: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+        assert_eq!(local.len(), 3);
+    }
+}

@@ -4,7 +4,7 @@ use crate::baseline::SoftwareGa;
 use crate::bench_util::Table;
 use crate::cli::Args;
 use crate::config::{Config, GaParams};
-use crate::coordinator::{Coordinator, OptimizeRequest};
+use crate::coordinator::{Coordinator, Gateway, OptimizeRequest};
 use crate::ga::{Dims, GaInstance};
 use crate::lfsr::LfsrBank;
 use crate::prng::{initial_population, seed_bank};
@@ -22,9 +22,13 @@ COMMANDS:
   optimize    run one GA optimization
               --function f1|f2|f3  --n N  --m M  --k K  --seed S
               --maximize  --pjrt  --backend scalar|batched  --config FILE
-  serve       start the coordinator and run a synthetic request trace
-              --jobs J  --workers W  --batch B  --pjrt  --early-stop C
-              --backend scalar|batched
+              --early-stop C (stop after C stale chunks; 0 = never)
+  serve       start the coordinator, run a synthetic request trace, and
+              (with --listen) expose the HTTP/JSON gateway (docs/api.md)
+              --jobs J (>= 1)  --workers W  --batch B  --pjrt
+              --early-stop C  --backend scalar|batched  --config FILE
+              --listen ADDR (e.g. 127.0.0.1:8080; also `[serve] listen`)
+              --serve-for SECS (keep the gateway up after the trace)
   rtl         run the cycle-accurate machine and report cycles
               --function F --n N --m M --k K --seed S
   table1      print Table 1 (synthesis model vs paper)
@@ -75,13 +79,14 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     let mut serve = crate::config::ServeParams::default();
     serve.use_pjrt = args.flag("pjrt");
     serve.backend = args.opt_or("backend", serve.backend)?;
+    serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
     let coord = Coordinator::builder(serve).start()?;
     let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("cli"));
     coord.shutdown();
     anyhow::ensure!(result.error.is_none(), "job failed: {:?}", result.error);
     let (px, qx) = result.decoded_vars(params.m);
     Ok(format!(
-        "function={} N={} m={} K={} direction={} backend={}\n\
+        "function={} N={} m={} K={} direction={} backend={} status={}\n\
          best fitness (fixed-point): {}\n\
          best chromosome: {:#x}  decoded (px, qx) = ({}, {})\n\
          generations executed: {}  latency: {:?}\n\
@@ -92,6 +97,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
         params.k,
         if params.maximize { "maximize" } else { "minimize" },
         result.backend,
+        result.status,
         result.best_y,
         result.best_x,
         px,
@@ -102,17 +108,60 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     ))
 }
 
-fn cmd_serve(args: &Args) -> crate::Result<String> {
-    let jobs: usize = args.opt_or("jobs", 32)?;
-    let mut serve = crate::config::ServeParams::default();
+/// Serve-layer knobs: the `[serve]` config section is the base (when
+/// `--config` is given), CLI options override. PJRT is opt-in on the CLI:
+/// it engages only via `--pjrt` or an explicit `use_pjrt = true` in the
+/// file — the library default (true) never leaks in through an omitted key,
+/// so `serve` and `serve --config` pick the same backend for the same
+/// settings.
+fn serve_params_from(args: &Args) -> crate::Result<crate::config::ServeParams> {
+    let mut serve = if let Some(path) = args.opt("config") {
+        Config::from_file(std::path::Path::new(path))?.serve
+    } else {
+        crate::config::ServeParams::default()
+    };
+    let config_pjrt = match args.opt("config") {
+        Some(path) => std::fs::read_to_string(path)
+            .ok()
+            .and_then(|src| crate::tomlmini::parse(&src).ok())
+            .and_then(|t| {
+                t.get("serve")
+                    .and_then(|s| s.get("use_pjrt"))
+                    .and_then(|v| v.as_bool())
+            })
+            .unwrap_or(false),
+        None => false,
+    };
+    serve.use_pjrt = args.flag("pjrt") || config_pjrt;
     serve.workers = args.opt_or("workers", serve.workers)?;
     serve.max_batch = args.opt_or("batch", serve.max_batch)?;
     serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
-    serve.use_pjrt = args.flag("pjrt");
     serve.backend = args.opt_or("backend", serve.backend)?;
+    if let Some(listen) = args.opt("listen") {
+        serve.listen = listen.to_string();
+    }
+    Ok(serve)
+}
+
+fn cmd_serve(args: &Args) -> crate::Result<String> {
+    let jobs: usize = args.opt_or("jobs", 32)?;
+    anyhow::ensure!(jobs >= 1, "--jobs must be >= 1, got {jobs}");
+    let serve = serve_params_from(args)?;
+    let serve_for_secs: u64 = args.opt_or("serve-for", 0)?;
     let params = ga_params_from(args)?;
 
-    let coord = Coordinator::builder(serve).start()?;
+    let coord = Arc::new(Coordinator::builder(serve.clone()).start()?);
+    // The gateway fronts the SAME coordinator the synthetic trace feeds:
+    // network jobs and trace jobs share one scheduler, one batcher, one
+    // metrics sink (docs/api.md).
+    let gateway = if serve.listen.is_empty() {
+        None
+    } else {
+        let gw = Gateway::bind(&serve.listen, coord.clone())?;
+        eprintln!("gateway listening on http://{}", gw.local_addr());
+        Some(gw)
+    };
+
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..jobs)
         .map(|i| {
@@ -128,10 +177,23 @@ fn cmd_serve(args: &Args) -> crate::Result<String> {
         best = best.min(r.best_y);
     }
     let wall = t0.elapsed();
+
+    let gateway_line = match gateway {
+        Some(mut gw) => {
+            let addr = gw.local_addr();
+            if serve_for_secs > 0 {
+                eprintln!("gateway serving on http://{addr} for {serve_for_secs}s");
+                std::thread::sleep(std::time::Duration::from_secs(serve_for_secs));
+            }
+            gw.shutdown();
+            format!("gateway: http://{addr} (closed)\n")
+        }
+        None => String::new(),
+    };
     let m = coord.metrics();
     coord.shutdown();
     Ok(format!(
-        "served {jobs} jobs in {wall:?} ({:.1} jobs/s)\nbest across trace: {best}\n{}",
+        "served {jobs} jobs in {wall:?} ({:.1} jobs/s)\nbest across trace: {best}\n{gateway_line}{}",
         jobs as f64 / wall.as_secs_f64(),
         m.render()
     ))
@@ -328,6 +390,52 @@ mod tests {
     #[test]
     fn unknown_backend_rejected() {
         assert!(run_cmd("optimize --n 16 --backend warp").is_err());
+    }
+
+    #[test]
+    fn serve_config_pjrt_is_explicit_opt_in() {
+        let dir = std::env::temp_dir().join("fpga_ga_serve_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let implicit = dir.join("implicit.toml");
+        std::fs::write(&implicit, "[serve]\nworkers = 3\n").unwrap();
+        let explicit = dir.join("explicit.toml");
+        std::fs::write(&explicit, "[serve]\nuse_pjrt = true\n").unwrap();
+
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from)).unwrap();
+        let s = serve_params_from(&parse(&format!("serve --config {}", implicit.display())))
+            .unwrap();
+        assert!(!s.use_pjrt, "omitted key must stay engine-only");
+        assert_eq!(s.workers, 3, "other config keys still apply");
+        let s = serve_params_from(&parse(&format!("serve --config {}", explicit.display())))
+            .unwrap();
+        assert!(s.use_pjrt, "explicit file opt-in honored");
+        assert!(serve_params_from(&parse("serve --pjrt")).unwrap().use_pjrt);
+        assert!(!serve_params_from(&parse("serve")).unwrap().use_pjrt);
+    }
+
+    #[test]
+    fn serve_rejects_zero_jobs() {
+        let err = run_cmd("serve --jobs 0 --function f3 --n 16 --k 25").unwrap_err();
+        assert!(err.to_string().contains("--jobs"), "{err}");
+    }
+
+    #[test]
+    fn optimize_accepts_early_stop() {
+        // Satellite regression: --early-stop was silently ignored on
+        // optimize (accepted only on serve). k huge + tiny space → stalls.
+        let out =
+            run_cmd("optimize --function f3 --n 32 --k 1000 --seed 5 --early-stop 2").unwrap();
+        assert!(out.contains("status=early_stopped"), "{out}");
+    }
+
+    #[test]
+    fn serve_with_listen_starts_gateway() {
+        let out = run_cmd(
+            "serve --jobs 2 --workers 2 --function f3 --n 16 --k 25 --listen 127.0.0.1:0",
+        )
+        .unwrap();
+        assert!(out.contains("served 2 jobs"), "{out}");
+        assert!(out.contains("gateway: http://127.0.0.1:"), "{out}");
     }
 
     #[test]

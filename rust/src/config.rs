@@ -103,6 +103,9 @@ pub struct ServeParams {
     pub artifacts_dir: String,
     /// Use the PJRT path (false = behavioral engine; ablation knob).
     pub use_pjrt: bool,
+    /// HTTP/JSON gateway bind address (e.g. `127.0.0.1:8080`; port 0 picks
+    /// a free port). Empty = no gateway.
+    pub listen: String,
     /// Engine execution backend: `scalar` steps each job alone (the seed
     /// behavior), `batched` fuses a whole same-variant `BatchPlan` into one
     /// SoA dispatch (`rust/src/ga/backend.rs`).
@@ -118,6 +121,7 @@ impl Default for ServeParams {
             early_stop_chunks: 0,
             artifacts_dir: "artifacts".to_string(),
             use_pjrt: true,
+            listen: String::new(),
             backend: BackendKind::Scalar,
         }
     }
@@ -200,7 +204,10 @@ fn get_string(v: &Value, key: &str, into: &mut String) -> Result<()> {
     Ok(())
 }
 
-fn apply_ga(ga: &mut GaParams, v: &Value) -> Result<()> {
+/// Apply the flat `[ga]`-section keys from a parsed value onto `ga`.
+/// Shared by the TOML config loader and the gateway's `POST /v1/jobs` body
+/// (both speak the same key set; unknown keys are ignored).
+pub(crate) fn apply_ga(ga: &mut GaParams, v: &Value) -> Result<()> {
     get_usize(v, "n", &mut ga.n)?;
     get_u32(v, "m", &mut ga.m)?;
     get_u32(v, "k", &mut ga.k)?;
@@ -219,6 +226,7 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
     get_u32(v, "early_stop_chunks", &mut s.early_stop_chunks)?;
     get_string(v, "artifacts_dir", &mut s.artifacts_dir)?;
     get_bool(v, "use_pjrt", &mut s.use_pjrt)?;
+    get_string(v, "listen", &mut s.listen)?;
     if let Some(x) = v.get("backend") {
         let name = x.as_str().ok_or_else(|| anyhow!("`backend` must be a string"))?;
         s.backend = name.parse().map_err(|e: String| anyhow!("{e}"))?;
@@ -286,6 +294,13 @@ use_pjrt = false
         assert_eq!(c.serve.backend, BackendKind::Scalar);
         let err = Config::from_toml("[serve]\nbackend = \"gpu\"").unwrap_err();
         assert!(err.to_string().contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn listen_key_parses() {
+        let c = Config::from_toml("[serve]\nlisten = \"127.0.0.1:8080\"").unwrap();
+        assert_eq!(c.serve.listen, "127.0.0.1:8080");
+        assert_eq!(Config::default().serve.listen, "");
     }
 
     #[test]

@@ -6,8 +6,14 @@
 //! compiled variant `(N, m, P)` into one dispatch of the largest compiled
 //! batch size that fits, padding the final partial batch only after the
 //! batching window has elapsed (latency/throughput knob).
+//!
+//! v2 queue ordering (docs/api.md): each variant keeps one FIFO lane per
+//! [`Priority`] class; a plan takes `High` before `Normal` before `Low`,
+//! FIFO within each class. A partial batch releases early when any waiting
+//! job's deadline falls inside the batching window — a deadline-bound job is
+//! never held back for company it cannot afford.
 
-use crate::coordinator::job::JobId;
+use crate::coordinator::job::{JobId, Priority};
 use crate::ga::Dims;
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -19,13 +25,25 @@ pub struct BatchPlan {
     pub jobs: Vec<JobId>,
 }
 
-/// Ready-queue per variant with window-based release.
+/// One waiting job: identity + ready-time + optional absolute deadline.
+#[derive(Debug, Clone, Copy)]
+struct Waiting {
+    id: JobId,
+    since: Instant,
+    deadline: Option<Instant>,
+}
+
+/// Number of priority classes (see [`Priority::class`]).
+const CLASSES: usize = 3;
+
+/// Ready-queues per variant with window-based release.
 #[derive(Debug)]
 pub struct Batcher {
     /// Keyed by the FULL variant identity `(N, m, P, gamma_bits)` — every
     /// component of [`Dims`]. Backends assert whole-`Dims` equality across
-    /// a plan, so the grouping key must never be coarser than `Dims`.
-    queues: BTreeMap<(usize, u32, usize, u32), VecDeque<(JobId, Instant)>>,
+    /// a plan, so the grouping key must never be coarser than `Dims`. Each
+    /// variant holds one FIFO lane per priority class.
+    queues: BTreeMap<(usize, u32, usize, u32), [VecDeque<Waiting>; CLASSES]>,
     /// Maximum batch the policy may form (≤ largest compiled B).
     max_batch: usize,
     /// How long a partial batch may wait for company.
@@ -45,39 +63,83 @@ impl Batcher {
         (dims.n, dims.m, dims.p, dims.gamma_bits)
     }
 
-    /// Mark a job ready for its next chunk.
+    /// Mark a job ready for its next chunk (normal priority, no deadline).
     pub fn push(&mut self, dims: Dims, id: JobId, now: Instant) {
-        self.queues
-            .entry(Self::key(&dims))
-            .or_default()
-            .push_back((id, now));
+        self.push_job(dims, id, now, Priority::Normal, None);
+    }
+
+    /// Mark a job ready for its next chunk, with scheduling class and an
+    /// optional absolute deadline.
+    pub fn push_job(
+        &mut self,
+        dims: Dims,
+        id: JobId,
+        now: Instant,
+        priority: Priority,
+        deadline: Option<Instant>,
+    ) {
+        self.queues.entry(Self::key(&dims)).or_default()[priority.class()].push_back(Waiting {
+            id,
+            since: now,
+            deadline,
+        });
+    }
+
+    /// Drop a waiting job (client cancel / terminal while parked) so the
+    /// ghost entry stops counting toward batch fullness, window expiry, or
+    /// deadline urgency for the jobs still queued behind it.
+    pub fn remove(&mut self, dims: &Dims, id: JobId) {
+        if let Some(lanes) = self.queues.get_mut(&Self::key(dims)) {
+            for q in lanes.iter_mut() {
+                q.retain(|w| w.id != id);
+            }
+        }
     }
 
     /// Number of ready jobs across all variants.
     pub fn ready_count(&self) -> usize {
-        self.queues.values().map(VecDeque::len).sum()
+        self.queues
+            .values()
+            .flat_map(|lanes| lanes.iter())
+            .map(VecDeque::len)
+            .sum()
     }
 
     /// Pull every batch that is ready to dispatch at `now`: full batches
-    /// always; partial batches only once their oldest member has waited the
-    /// window. Returns plans in variant order (deterministic).
+    /// always; partial batches once their oldest member has waited the
+    /// window OR any waiting member's deadline falls within the window.
+    /// Plans come out in variant order (deterministic); each plan lists
+    /// jobs priority-first, FIFO within a class.
     pub fn drain_ready(&mut self, now: Instant) -> Vec<BatchPlan> {
         let mut plans = Vec::new();
-        for (&(n, m, p, gamma_bits), q) in self.queues.iter_mut() {
+        for (&(n, m, p, gamma_bits), lanes) in self.queues.iter_mut() {
             loop {
-                if q.is_empty() {
+                let total: usize = lanes.iter().map(VecDeque::len).sum();
+                if total == 0 {
                     break;
                 }
-                let full = q.len() >= self.max_batch;
-                let expired = q
-                    .front()
-                    .map(|(_, t)| now.duration_since(*t) >= self.window)
+                let full = total >= self.max_batch;
+                let oldest = lanes.iter().filter_map(|q| q.front()).map(|w| w.since).min();
+                let expired = oldest
+                    .map(|t| now.duration_since(t) >= self.window)
                     .unwrap_or(false);
-                if !full && !expired {
+                let urgent = lanes
+                    .iter()
+                    .flat_map(|q| q.iter())
+                    .any(|w| w.deadline.is_some_and(|d| d <= now + self.window));
+                if !full && !expired && !urgent {
                     break;
                 }
-                let take = q.len().min(self.max_batch);
-                let jobs = q.drain(..take).map(|(id, _)| id).collect();
+                let take = total.min(self.max_batch);
+                let mut jobs = Vec::with_capacity(take);
+                for q in lanes.iter_mut() {
+                    while jobs.len() < take {
+                        match q.pop_front() {
+                            Some(w) => jobs.push(w.id),
+                            None => break,
+                        }
+                    }
+                }
                 plans.push(BatchPlan {
                     dims: Dims::new(n, m, p).with_gamma_bits(gamma_bits),
                     jobs,
@@ -87,13 +149,30 @@ impl Batcher {
         plans
     }
 
-    /// Earliest instant at which a currently-waiting partial batch expires
-    /// (scheduler sleep hint).
+    /// Earliest instant at which a currently-waiting job forces a release:
+    /// the oldest member of any lane plus the window, or any member's
+    /// deadline minus the window (scheduler sleep hint).
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queues
-            .values()
-            .filter_map(|q| q.front().map(|(_, t)| *t + self.window))
-            .min()
+        let mut best: Option<Instant> = None;
+        let mut consider = |t: Instant| {
+            best = Some(match best {
+                Some(b) => b.min(t),
+                None => t,
+            });
+        };
+        for lanes in self.queues.values() {
+            for q in lanes {
+                if let Some(w) = q.front() {
+                    consider(w.since + self.window);
+                }
+                for w in q {
+                    if let Some(d) = w.deadline {
+                        consider(d.checked_sub(self.window).unwrap_or(d));
+                    }
+                }
+            }
+        }
+        best
     }
 }
 
@@ -265,5 +344,143 @@ mod tests {
         let plans = b.drain_ready(t0 + Duration::from_millis(10));
         assert_eq!(plans.len(), 1);
         assert_eq!(b.next_deadline(), None);
+    }
+
+    // ---- v2 lifecycle: priority classes + deadline urgency ----
+
+    #[test]
+    fn priority_orders_within_a_plan() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push_job(dims(), JobId(1), t0, Priority::Low, None);
+        b.push_job(dims(), JobId(2), t0, Priority::Normal, None);
+        b.push_job(dims(), JobId(3), t0, Priority::High, None);
+        b.push_job(dims(), JobId(4), t0, Priority::Low, None);
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(
+            plans[0].jobs,
+            vec![JobId(3), JobId(2), JobId(1), JobId(4)],
+            "high before normal before low, FIFO within a class"
+        );
+    }
+
+    #[test]
+    fn high_priority_takes_the_scarce_batch_slots() {
+        // 4 ready, batch of 2: the first plan is the high-priority pair even
+        // though the low-priority jobs arrived first.
+        let mut b = Batcher::new(2, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push_job(dims(), JobId(1), t0, Priority::Low, None);
+        b.push_job(dims(), JobId(2), t0, Priority::Low, None);
+        b.push_job(dims(), JobId(3), t0, Priority::High, None);
+        b.push_job(dims(), JobId(4), t0, Priority::High, None);
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].jobs, vec![JobId(3), JobId(4)]);
+        assert_eq!(plans[1].jobs, vec![JobId(1), JobId(2)]);
+    }
+
+    #[test]
+    fn fifo_within_each_priority_class() {
+        let mut b = Batcher::new(8, Duration::ZERO);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push_job(dims(), JobId(10 + i), t0, Priority::High, None);
+            b.push_job(dims(), JobId(20 + i), t0, Priority::Low, None);
+        }
+        let plans = b.drain_ready(t0);
+        assert_eq!(
+            plans[0].jobs,
+            vec![
+                JobId(10),
+                JobId(11),
+                JobId(12),
+                JobId(20),
+                JobId(21),
+                JobId(22)
+            ]
+        );
+    }
+
+    #[test]
+    fn removed_job_no_longer_counts_toward_fullness_or_urgency() {
+        let mut b = Batcher::new(2, Duration::from_millis(100));
+        let t0 = Instant::now();
+        b.push_job(
+            dims(),
+            JobId(1),
+            t0,
+            Priority::Normal,
+            Some(t0 + Duration::from_millis(5)), // would force urgent release
+        );
+        b.remove(&dims(), JobId(1));
+        assert_eq!(b.ready_count(), 0);
+        // A later arrival must NOT read as a full batch of 2 (ghost gone)
+        // nor be urgency-released by the removed job's deadline...
+        b.push(dims(), JobId(2), t0 + Duration::from_millis(1));
+        assert!(b.drain_ready(t0 + Duration::from_millis(2)).is_empty());
+        // ...and still flushes once its own window expires.
+        let plans = b.drain_ready(t0 + Duration::from_millis(101));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs, vec![JobId(2)]);
+    }
+
+    #[test]
+    fn near_deadline_releases_a_partial_before_the_window() {
+        let mut b = Batcher::new(8, Duration::from_millis(100));
+        let t0 = Instant::now();
+        // Deadline 30ms out, window 100ms: holding the full window would
+        // burn the whole budget on queueing.
+        b.push_job(
+            dims(),
+            JobId(1),
+            t0,
+            Priority::Normal,
+            Some(t0 + Duration::from_millis(30)),
+        );
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 1, "deadline inside window → immediate release");
+        assert_eq!(plans[0].jobs, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn far_deadline_still_waits_for_the_window() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push_job(
+            dims(),
+            JobId(1),
+            t0,
+            Priority::Normal,
+            Some(t0 + Duration::from_secs(60)),
+        );
+        assert!(b.drain_ready(t0).is_empty(), "distant deadline: no urgency");
+        assert_eq!(b.drain_ready(t0 + Duration::from_millis(10)).len(), 1);
+    }
+
+    #[test]
+    fn next_deadline_accounts_for_job_deadlines() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push_job(
+            dims(),
+            JobId(1),
+            t0,
+            Priority::Normal,
+            Some(t0 + Duration::from_millis(30)),
+        );
+        // Wake hint = min(since + window, deadline - window) = t0 + 10ms.
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        let mut b = Batcher::new(8, Duration::from_millis(50));
+        b.push_job(
+            dims(),
+            JobId(2),
+            t0,
+            Priority::Normal,
+            Some(t0 + Duration::from_millis(30)),
+        );
+        // deadline - window < since + window → hint is the urgency point.
+        assert_eq!(b.next_deadline(), Some(t0 - Duration::from_millis(20)));
     }
 }

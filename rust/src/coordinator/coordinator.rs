@@ -1,15 +1,23 @@
-//! The coordinator: public submit/wait API + the scheduler thread.
+//! The coordinator: public submit/observe/cancel API + the scheduler thread.
+//!
+//! v2 lifecycle (docs/api.md): submissions carry priority, deadline and a
+//! progress cadence; the scheduler emits [`JobEvent`]s and maintains a shared
+//! [`JobSnapshot`] registry between chunks, honors cooperative cancellation
+//! and deadlines at chunk boundaries, and the batcher orders ready queues by
+//! priority class (FIFO within a class).
 
 use crate::config::ServeParams;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::job::{JobHandle, JobId, JobResult, JobStatus, OptimizeRequest};
+use crate::coordinator::job::{
+    JobEvent, JobHandle, JobId, JobPhase, JobResult, JobSnapshot, JobStatus, OptimizeRequest,
+};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::workers::{
     spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, WorkMsg,
 };
 use crate::ga::{BackendKind, GaInstance};
 use crate::runtime::Manifest;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -18,6 +26,13 @@ use std::time::{Duration, Instant};
 
 /// Generations per dispatch (must match the AOT artifacts' K_CHUNK).
 pub const K_CHUNK: u32 = 25;
+
+/// Shared job-state registry: written by the scheduler between chunks, read
+/// by [`Coordinator::job`] and the HTTP gateway.
+pub(crate) type Registry = Arc<Mutex<BTreeMap<JobId, JobSnapshot>>>;
+
+/// Terminal snapshots retained for polling clients before eviction.
+const REGISTRY_CAP: usize = 4096;
 
 /// Builder: configure then [`CoordinatorBuilder::start`].
 pub struct CoordinatorBuilder {
@@ -39,6 +54,7 @@ impl CoordinatorBuilder {
     pub fn start(self) -> crate::Result<Coordinator> {
         let serve = self.serve;
         let metrics = Arc::new(Metrics::new());
+        let registry: Registry = Arc::new(Mutex::new(BTreeMap::new()));
         let (sched_tx, sched_rx) = channel::<SchedMsg>();
 
         // Behavioral pool (always available: it is also the pjrt fallback),
@@ -70,6 +86,7 @@ impl CoordinatorBuilder {
         };
 
         let sched_metrics = metrics.clone();
+        let sched_registry = registry.clone();
         let sched_serve = serve.clone();
         let engine_tx_sched = engine_tx.clone();
         let pjrt_tx_sched = pjrt_tx.clone();
@@ -82,6 +99,7 @@ impl CoordinatorBuilder {
                     pjrt_tx_sched,
                     sched_serve,
                     sched_metrics,
+                    sched_registry,
                 )
             })
             .expect("spawn scheduler");
@@ -91,6 +109,7 @@ impl CoordinatorBuilder {
             engine_tx,
             pjrt_tx,
             metrics,
+            registry,
             next_id: AtomicU64::new(1),
             threads: Mutex::new(Some(JoinSet {
                 scheduler,
@@ -113,6 +132,7 @@ pub struct Coordinator {
     engine_tx: Sender<WorkMsg>,
     pjrt_tx: Option<Sender<WorkMsg>>,
     metrics: Arc<Metrics>,
+    registry: Registry,
     next_id: AtomicU64,
     threads: Mutex<Option<JoinSet>>,
 }
@@ -126,21 +146,98 @@ impl Coordinator {
     /// Submit a job; returns immediately with a handle.
     pub fn submit(&self, req: OptimizeRequest) -> JobHandle {
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        let (tx, rx) = channel();
+        let (result_tx, rx) = channel();
+        let (progress_tx, progress_rx) = channel();
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        {
+            // Register BEFORE handing the request to the scheduler so a
+            // client that submits-then-polls never sees "unknown job".
+            let mut reg = self.registry.lock().unwrap();
+            reg.insert(id, JobSnapshot::queued(id, req.tag.clone(), req.priority));
+            if reg.len() > REGISTRY_CAP {
+                let excess = reg.len() - REGISTRY_CAP;
+                let evict: Vec<JobId> = reg
+                    .iter()
+                    .filter(|(_, s)| s.phase == JobPhase::Done)
+                    .map(|(done_id, _)| *done_id)
+                    .take(excess)
+                    .collect();
+                for done_id in evict {
+                    reg.remove(&done_id);
+                }
+            }
+        }
         // A send failure means the scheduler is gone; the handle will then
         // report Failed via the dropped channel.
         let _ = self.sched_tx.send(SchedMsg::Submit {
             id,
             req,
-            result_tx: tx,
+            result_tx,
+            progress_tx,
         });
-        JobHandle { id, rx }
+        JobHandle {
+            id,
+            rx,
+            progress_rx,
+            sched_tx: Some(self.sched_tx.clone()),
+            cached: None,
+        }
     }
 
     /// Submit and block.
     pub fn optimize(&self, req: OptimizeRequest) -> JobResult {
         self.submit(req).wait()
+    }
+
+    /// Request cooperative cancellation by id (the gateway's `DELETE`).
+    /// Returns `false` when the job is unknown or already terminal.
+    pub fn cancel(&self, id: JobId) -> bool {
+        let live = self
+            .registry
+            .lock()
+            .unwrap()
+            .get(&id)
+            .is_some_and(|s| s.phase != JobPhase::Done);
+        if live {
+            let _ = self.sched_tx.send(SchedMsg::Cancel(id));
+        }
+        live
+    }
+
+    /// Point-in-time view of one job (status + curve-so-far). Terminal
+    /// snapshots are retained (bounded) so late pollers still see results.
+    pub fn job(&self, id: JobId) -> Option<JobSnapshot> {
+        self.registry.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Snapshot every known job, id-ascending. Clones full curves — prefer
+    /// [`Coordinator::job_summaries`] for listings.
+    pub fn jobs(&self) -> Vec<JobSnapshot> {
+        self.registry.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Curve-less snapshots, id-ascending (the gateway's job listing):
+    /// avoids deep-copying thousands of convergence curves under the
+    /// registry lock just to throw them away.
+    pub fn job_summaries(&self) -> Vec<JobSnapshot> {
+        self.registry
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| JobSnapshot {
+                id: s.id,
+                tag: s.tag.clone(),
+                priority: s.priority,
+                phase: s.phase,
+                status: s.status,
+                generations: s.generations,
+                best_y: s.best_y,
+                best_x: s.best_x,
+                curve: Vec::new(),
+                backend: s.backend,
+                error: s.error.clone(),
+            })
+            .collect()
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -176,6 +273,7 @@ impl Drop for Coordinator {
 struct JobEntry {
     tag: String,
     result_tx: Sender<JobResult>,
+    progress_tx: Sender<JobEvent>,
     submitted: Instant,
     requested_k: u32,
     early_stop_chunks: u32,
@@ -183,6 +281,103 @@ struct JobEntry {
     last_best: Option<i64>,
     inst: Option<GaInstance>,
     remaining: u32,
+    priority: crate::coordinator::job::Priority,
+    /// Absolute deadline (request-relative deadline + submit time).
+    deadline: Option<Instant>,
+    /// Emit a progress event every this many chunks (0 = never).
+    progress_every: u32,
+    chunks_done: u32,
+    /// Cancellation observed while a chunk was in flight; applied at the
+    /// chunk boundary.
+    cancelled: bool,
+}
+
+/// Count the terminal status, deliver the result, finalize the snapshot.
+#[allow(clippy::too_many_arguments)]
+fn finalize_job(
+    id: JobId,
+    entry: JobEntry,
+    inst: &GaInstance,
+    status: JobStatus,
+    backend: &'static str,
+    now: Instant,
+    metrics: &Metrics,
+    registry: &Registry,
+) {
+    let counter = match status {
+        JobStatus::Completed => &metrics.jobs_completed,
+        JobStatus::EarlyStopped => &metrics.jobs_early_stopped,
+        JobStatus::Cancelled => &metrics.jobs_cancelled,
+        JobStatus::DeadlineMiss => &metrics.deadline_misses,
+        JobStatus::Failed => &metrics.jobs_failed,
+    };
+    counter.fetch_add(1, Ordering::Relaxed);
+    let latency = now.duration_since(entry.submitted);
+    // Latency percentiles describe served work; cancelled / deadline-missed
+    // jobs would skew them with client behavior rather than system behavior.
+    if matches!(status, JobStatus::Completed | JobStatus::EarlyStopped) {
+        metrics.record_latency(latency);
+    }
+    let mut curve = inst.curve().to_vec();
+    curve.truncate(entry.requested_k as usize);
+    {
+        let mut reg = registry.lock().unwrap();
+        if let Some(s) = reg.get_mut(&id) {
+            s.phase = JobPhase::Done;
+            s.status = Some(status);
+            s.generations = inst.generation();
+            s.best_y = inst.best().y;
+            s.best_x = inst.best().x;
+            s.curve = curve.clone();
+            s.backend = backend;
+        }
+    }
+    let _ = entry.result_tx.send(JobResult {
+        id,
+        tag: entry.tag,
+        status,
+        best_y: inst.best().y,
+        best_x: inst.best().x,
+        generations: inst.generation(),
+        curve,
+        latency,
+        backend,
+        error: None,
+    });
+}
+
+/// Refresh the shared snapshot after a chunk (curve grows incrementally so
+/// long-running jobs don't re-copy their whole history every chunk).
+fn update_snapshot(
+    registry: &Registry,
+    id: JobId,
+    inst: &GaInstance,
+    backend: &'static str,
+    requested_k: u32,
+) {
+    let mut reg = registry.lock().unwrap();
+    if let Some(s) = reg.get_mut(&id) {
+        s.phase = JobPhase::Running;
+        s.generations = inst.generation();
+        s.best_y = inst.best().y;
+        s.best_x = inst.best().x;
+        let curve = inst.curve();
+        if curve.len() > s.curve.len() {
+            s.curve.extend_from_slice(&curve[s.curve.len()..]);
+            s.curve.truncate(requested_k as usize);
+        }
+        s.backend = backend;
+    }
+}
+
+/// Backend recorded on the job's snapshot ("none" before the first chunk).
+fn snapshot_backend(registry: &Registry, id: JobId) -> &'static str {
+    registry
+        .lock()
+        .unwrap()
+        .get(&id)
+        .map(|s| s.backend)
+        .unwrap_or("none")
 }
 
 fn scheduler_loop(
@@ -191,6 +386,7 @@ fn scheduler_loop(
     pjrt_tx: Option<Sender<WorkMsg>>,
     serve: ServeParams,
     metrics: Arc<Metrics>,
+    registry: Registry,
 ) {
     let mut table: HashMap<JobId, JobEntry> = HashMap::new();
     let window = Duration::from_micros(serve.batch_window_us);
@@ -221,16 +417,23 @@ fn scheduler_loop(
         let msg = rx.recv_timeout(timeout.max(Duration::from_micros(10)));
 
         match msg {
-            Ok(SchedMsg::Submit { id, req, result_tx }) => {
+            Ok(SchedMsg::Submit {
+                id,
+                req,
+                result_tx,
+                progress_tx,
+            }) => {
                 let now = Instant::now();
                 match GaInstance::from_params(&req.params) {
                     Ok(inst) => {
                         let dims = *inst.dims();
+                        let deadline = req.deadline.map(|d| now + d);
                         table.insert(
                             id,
                             JobEntry {
                                 tag: req.tag,
                                 result_tx,
+                                progress_tx,
                                 submitted: now,
                                 requested_k: req.params.k,
                                 early_stop_chunks: serve.early_stop_chunks,
@@ -238,12 +441,25 @@ fn scheduler_loop(
                                 last_best: None,
                                 inst: Some(inst),
                                 remaining: req.params.k,
+                                priority: req.priority,
+                                deadline,
+                                progress_every: req.progress_every,
+                                chunks_done: 0,
+                                cancelled: false,
                             },
                         );
-                        batcher.push(dims, id, now);
+                        batcher.push_job(dims, id, now, req.priority, deadline);
                     }
                     Err(e) => {
                         metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        {
+                            let mut reg = registry.lock().unwrap();
+                            if let Some(s) = reg.get_mut(&id) {
+                                s.phase = JobPhase::Done;
+                                s.status = Some(JobStatus::Failed);
+                                s.error = Some(e.to_string());
+                            }
+                        }
                         let _ = result_tx.send(JobResult {
                             id,
                             tag: req.tag,
@@ -259,6 +475,35 @@ fn scheduler_loop(
                     }
                 }
             }
+            Ok(SchedMsg::Cancel(id)) => {
+                // Cooperative: a parked job (between chunks / still queued)
+                // finalizes immediately; an in-flight job is flagged and
+                // finalizes when its chunk returns. Unknown ids (already
+                // terminal) are ignored — cancel is idempotent.
+                let parked = table.get(&id).map(|e| e.inst.is_some());
+                match parked {
+                    Some(true) => {
+                        let mut entry = table.remove(&id).unwrap();
+                        let inst = entry.inst.take().unwrap();
+                        // Purge the parked entry so it stops counting toward
+                        // batch fullness / urgency for jobs queued behind it.
+                        batcher.remove(inst.dims(), id);
+                        let backend = snapshot_backend(&registry, id);
+                        finalize_job(
+                            id,
+                            entry,
+                            &inst,
+                            JobStatus::Cancelled,
+                            backend,
+                            Instant::now(),
+                            &metrics,
+                            &registry,
+                        );
+                    }
+                    Some(false) => table.get_mut(&id).unwrap().cancelled = true,
+                    None => {}
+                }
+            }
             Ok(SchedMsg::Done(DoneMsg { jobs, backend })) => {
                 let now = Instant::now();
                 for job in jobs {
@@ -270,9 +515,25 @@ fn scheduler_loop(
                     } = job;
                     let Some(entry) = table.get_mut(&id) else { continue };
                     entry.remaining = entry.remaining.saturating_sub(executed);
+                    entry.chunks_done += 1;
                     metrics
                         .generations
                         .fetch_add(u64::from(executed), Ordering::Relaxed);
+
+                    // Between-chunks observability: shared snapshot + the
+                    // handle's progress stream.
+                    update_snapshot(&registry, id, &inst, backend, entry.requested_k);
+                    if entry.progress_every > 0 && entry.chunks_done % entry.progress_every == 0
+                    {
+                        let _ = entry.progress_tx.send(JobEvent {
+                            id,
+                            generations: inst.generation(),
+                            best_y: inst.best().y,
+                            best_x: inst.best().x,
+                            remaining: entry.remaining,
+                            backend,
+                        });
+                    }
 
                     // Early-stop accounting.
                     let best = inst.best().y;
@@ -282,38 +543,36 @@ fn scheduler_loop(
                         entry.stale_chunks = 0;
                         entry.last_best = Some(best);
                     }
-                    let early =
-                        entry.early_stop_chunks > 0 && entry.stale_chunks >= entry.early_stop_chunks;
+                    let early = entry.early_stop_chunks > 0
+                        && entry.stale_chunks >= entry.early_stop_chunks;
 
-                    if entry.remaining == 0 || early {
-                        let entry = table.remove(&id).unwrap();
-                        let status = if early && entry.remaining > 0 {
-                            metrics.jobs_early_stopped.fetch_add(1, Ordering::Relaxed);
-                            JobStatus::EarlyStopped
-                        } else {
-                            metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
-                            JobStatus::Completed
-                        };
-                        let latency = now.duration_since(entry.submitted);
-                        metrics.record_latency(latency);
-                        let mut curve = inst.curve().to_vec();
-                        curve.truncate(entry.requested_k as usize);
-                        let _ = entry.result_tx.send(JobResult {
-                            id,
-                            tag: entry.tag,
-                            status,
-                            best_y: inst.best().y,
-                            best_x: inst.best().x,
-                            generations: inst.generation(),
-                            curve,
-                            latency,
-                            backend,
-                            error: None,
-                        });
+                    // Terminal precedence: an explicit cancel always wins;
+                    // finished work beats a just-expired deadline.
+                    let status = if entry.cancelled {
+                        Some(JobStatus::Cancelled)
+                    } else if entry.remaining == 0 {
+                        Some(JobStatus::Completed)
+                    } else if early {
+                        Some(JobStatus::EarlyStopped)
+                    } else if entry.deadline.is_some_and(|d| now >= d) {
+                        Some(JobStatus::DeadlineMiss)
                     } else {
-                        let dims = *inst.dims();
-                        entry.inst = Some(inst);
-                        batcher.push(dims, id, now);
+                        None
+                    };
+                    match status {
+                        Some(status) => {
+                            let entry = table.remove(&id).unwrap();
+                            finalize_job(
+                                id, entry, &inst, status, backend, now, &metrics, &registry,
+                            );
+                        }
+                        None => {
+                            let dims = *inst.dims();
+                            let priority = entry.priority;
+                            let deadline = entry.deadline;
+                            entry.inst = Some(inst);
+                            batcher.push_job(dims, id, now, priority, deadline);
+                        }
                     }
                 }
             }
@@ -322,20 +581,44 @@ fn scheduler_loop(
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
         }
 
-        // Dispatch everything ready.
+        // Dispatch everything ready; a job whose deadline already passed is
+        // failed here rather than burning a backend dispatch.
         for plan in batcher.drain_ready(Instant::now()) {
+            let now = Instant::now();
             let mut running = Vec::with_capacity(plan.jobs.len());
             for id in plan.jobs {
-                if let Some(entry) = table.get_mut(&id) {
-                    if let Some(inst) = entry.inst.take() {
-                        running.push(RunningJob {
-                            id,
-                            inst,
-                            remaining: entry.remaining,
-                            executed: 0,
-                        });
+                // Stale batcher entries (cancelled / finalized jobs) have no
+                // table row or no parked instance; skip them.
+                let expired = match table.get(&id) {
+                    Some(entry) if entry.inst.is_some() => {
+                        entry.deadline.is_some_and(|d| now >= d)
                     }
+                    _ => continue,
+                };
+                if expired {
+                    let mut entry = table.remove(&id).unwrap();
+                    let inst = entry.inst.take().unwrap();
+                    let backend = snapshot_backend(&registry, id);
+                    finalize_job(
+                        id,
+                        entry,
+                        &inst,
+                        JobStatus::DeadlineMiss,
+                        backend,
+                        now,
+                        &metrics,
+                        &registry,
+                    );
+                    continue;
                 }
+                let entry = table.get_mut(&id).unwrap();
+                let inst = entry.inst.take().unwrap();
+                running.push(RunningJob {
+                    id,
+                    inst,
+                    remaining: entry.remaining,
+                    executed: 0,
+                });
             }
             if running.is_empty() {
                 continue;

@@ -1,0 +1,405 @@
+//! std-only HTTP/JSON gateway over the coordinator (docs/api.md).
+//!
+//! A `TcpListener`-based HTTP/1.1 server (no async runtime, no web
+//! framework — tokio/hyper are not in the offline crate set) exposing the
+//! v2 job lifecycle over the network:
+//!
+//! * `POST   /v1/jobs`     — submit (GA params + tag/priority/deadline_ms/
+//!   progress_every as flat JSON fields); `202` with the job id
+//! * `GET    /v1/jobs`     — list known jobs (phase + progress summary)
+//! * `GET    /v1/jobs/:id` — status + curve-so-far (`:id` is `7` or `job-7`)
+//! * `DELETE /v1/jobs/:id` — cooperative cancellation
+//! * `GET    /v1/metrics`  — serving counters + latency percentiles
+//!
+//! The gateway is a thin marshalling shim: every request lands on the SAME
+//! [`Coordinator::submit`] / [`Coordinator::job`] / [`Coordinator::cancel`]
+//! calls the in-process API uses, so a gateway-submitted job is bit-identical
+//! to an in-process one (rust/tests/gateway_roundtrip.rs). JSON goes through
+//! [`crate::jsonmini`]; one thread per connection, `Connection: close`.
+
+use crate::config::GaParams;
+use crate::coordinator::job::{JobId, JobSnapshot, OptimizeRequest, Priority};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::Coordinator;
+use crate::jsonmini::{self, obj, Value};
+use anyhow::Context as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Cap on header section / body size (requests here are tiny).
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A running HTTP gateway; dropping (or [`Gateway::shutdown`]) stops the
+/// accept loop. The coordinator it fronts is shared and outlives it.
+pub struct Gateway {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port) and
+    /// start serving the coordinator's v2 API.
+    pub fn bind(addr: &str, coord: Arc<Coordinator>) -> crate::Result<Gateway> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("gateway: binding `{addr}`"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("ga-gateway".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let coord = coord.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("ga-gateway-conn".into())
+                        .spawn(move || handle_connection(stream, &coord));
+                }
+            })
+            .context("gateway: spawning accept thread")?;
+        Ok(Gateway {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections (in-flight requests finish on their own).
+    pub fn shutdown(&mut self) {
+        if let Some(th) = self.accept_thread.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            // Poke the blocking accept so the loop observes the stop flag.
+            let _ = TcpStream::connect(self.addr);
+            let _ = th.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+struct Response {
+    status: u16,
+    body: String,
+}
+
+impl Response {
+    fn json(status: u16, v: Value) -> Self {
+        Self {
+            status,
+            body: jsonmini::to_string(&v),
+        }
+    }
+
+    fn error(status: u16, msg: impl std::fmt::Display) -> Self {
+        Self::json(status, obj([("error", Value::from(msg.to_string()))]))
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let reason = match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            _ => "Internal Server Error",
+        };
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            reason,
+            self.body.len(),
+            self.body
+        )?;
+        stream.flush()
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, coord: &Coordinator) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let response = match read_request(&mut stream) {
+        Ok(req) => route(&req, coord),
+        Err(e) => Response::error(400, e),
+    };
+    let _ = response.write_to(&mut stream);
+}
+
+/// Parse one HTTP/1.1 request: request line + headers (only Content-Length
+/// matters) + body. Byte-wise head read — requests here are a few hundred
+/// bytes, correctness beats throughput.
+fn read_request(stream: &mut TcpStream) -> crate::Result<Request> {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        anyhow::ensure!(head.len() < MAX_HEAD_BYTES, "header section too large");
+        let n = stream.read(&mut byte)?;
+        anyhow::ensure!(n == 1, "connection closed mid-request");
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8(head).map_err(|_| anyhow::anyhow!("non-UTF8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    anyhow::ensure!(
+        !method.is_empty() && path.starts_with('/'),
+        "malformed request line `{request_line}`"
+    );
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("invalid Content-Length"))?;
+            }
+        }
+    }
+    anyhow::ensure!(content_length <= MAX_BODY_BYTES, "body too large");
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+fn route(req: &Request, coord: &Coordinator) -> Response {
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("POST", "/v1/jobs") => post_job(&req.body, coord),
+        ("GET", "/v1/jobs") => {
+            let jobs: Vec<Value> = coord.job_summaries().iter().map(snapshot_summary).collect();
+            Response::json(200, obj([("jobs", Value::Array(jobs))]))
+        }
+        ("GET", "/v1/metrics") => Response::json(200, metrics_json(&coord.metrics())),
+        (method, p) => match p.strip_prefix("/v1/jobs/") {
+            Some(id_part) => match parse_job_id(id_part) {
+                Some(id) => match method {
+                    "GET" => match coord.job(id) {
+                        Some(s) => Response::json(200, snapshot_json(&s)),
+                        None => Response::error(404, format!("unknown job `{id}`")),
+                    },
+                    "DELETE" => delete_job(id, coord),
+                    _ => Response::error(405, format!("{method} not allowed on {p}")),
+                },
+                None => Response::error(400, format!("invalid job id `{id_part}`")),
+            },
+            None => Response::error(404, format!("no such endpoint {} {}", req.method, p)),
+        },
+    }
+}
+
+/// `:id` accepts both the bare integer (`7`) and the display form (`job-7`).
+fn parse_job_id(s: &str) -> Option<JobId> {
+    let digits = s.strip_prefix("job-").unwrap_or(s);
+    digits.parse::<u64>().ok().map(JobId)
+}
+
+fn post_job(body: &[u8], coord: &Coordinator) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body must be UTF-8 JSON"),
+    };
+    let v = if text.trim().is_empty() {
+        obj([])
+    } else {
+        match jsonmini::parse(text) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, format!("invalid JSON: {e}")),
+        }
+    };
+    // GA params: defaults overridden by the same flat keys the `[ga]` config
+    // section uses (n, m, k, seed, function, mutation_rate, maximize, ...).
+    let mut params = GaParams::default();
+    if let Err(e) = crate::config::apply_ga(&mut params, &v) {
+        return Response::error(400, e);
+    }
+    if let Err(e) = params.validate() {
+        return Response::error(400, e);
+    }
+    let mut req = OptimizeRequest::new(params);
+    if let Some(tag) = v.get("tag") {
+        match tag.as_str() {
+            Some(t) => req = req.with_tag(t),
+            None => return Response::error(400, "`tag` must be a string"),
+        }
+    }
+    if let Some(p) = v.get("priority") {
+        let parsed = p.as_str().map(|s| s.parse::<Priority>());
+        match parsed {
+            Some(Ok(prio)) => req = req.with_priority(prio),
+            Some(Err(e)) => return Response::error(400, e),
+            None => return Response::error(400, "`priority` must be a string"),
+        }
+    }
+    if let Some(d) = v.get("deadline_ms") {
+        match d.as_i64().filter(|&ms| ms >= 0) {
+            Some(ms) => req = req.with_deadline(Duration::from_millis(ms as u64)),
+            None => return Response::error(400, "`deadline_ms` must be a non-negative integer"),
+        }
+    }
+    if let Some(pe) = v.get("progress_every") {
+        match pe.as_u32() {
+            Some(n) => req = req.with_progress_every(n),
+            None => return Response::error(400, "`progress_every` must be a non-negative integer"),
+        }
+    }
+    // Network clients observe through the registry (GET /v1/jobs/:id); the
+    // in-process handle is dropped, which is safe by design.
+    let id = coord.submit(req).id;
+    Response::json(
+        202,
+        obj([
+            ("id", Value::Int(id.0 as i64)),
+            ("job", Value::from(id.to_string())),
+            ("href", Value::from(format!("/v1/jobs/{}", id.0))),
+        ]),
+    )
+}
+
+fn delete_job(id: JobId, coord: &Coordinator) -> Response {
+    if coord.cancel(id) {
+        return Response::json(
+            202,
+            obj([
+                ("id", Value::Int(id.0 as i64)),
+                ("cancelled", Value::Bool(true)),
+            ]),
+        );
+    }
+    match coord.job(id) {
+        Some(s) => Response::error(
+            409,
+            format!(
+                "job `{id}` already terminal ({})",
+                s.status.map(|st| st.as_str()).unwrap_or("unknown")
+            ),
+        ),
+        None => Response::error(404, format!("unknown job `{id}`")),
+    }
+}
+
+fn snapshot_json(s: &JobSnapshot) -> Value {
+    obj([
+        ("id", Value::Int(s.id.0 as i64)),
+        ("job", Value::from(s.id.to_string())),
+        ("tag", Value::from(s.tag.clone())),
+        ("priority", Value::from(s.priority.as_str())),
+        ("phase", Value::from(s.phase.as_str())),
+        (
+            "status",
+            s.status.map(|st| Value::from(st.as_str())).unwrap_or(Value::Null),
+        ),
+        ("generations", Value::Int(i64::from(s.generations))),
+        ("best_y", Value::Int(s.best_y)),
+        ("best_x", Value::Int(i64::from(s.best_x))),
+        (
+            "curve",
+            Value::Array(s.curve.iter().map(|&y| Value::Int(y)).collect()),
+        ),
+        ("backend", Value::from(s.backend)),
+        (
+            "error",
+            s.error.clone().map(Value::from).unwrap_or(Value::Null),
+        ),
+    ])
+}
+
+/// Listing row: progress without the (possibly long) curve.
+fn snapshot_summary(s: &JobSnapshot) -> Value {
+    obj([
+        ("id", Value::Int(s.id.0 as i64)),
+        ("job", Value::from(s.id.to_string())),
+        ("tag", Value::from(s.tag.clone())),
+        ("priority", Value::from(s.priority.as_str())),
+        ("phase", Value::from(s.phase.as_str())),
+        (
+            "status",
+            s.status.map(|st| Value::from(st.as_str())).unwrap_or(Value::Null),
+        ),
+        ("generations", Value::Int(i64::from(s.generations))),
+        ("best_y", Value::Int(s.best_y)),
+    ])
+}
+
+fn metrics_json(m: &MetricsSnapshot) -> Value {
+    obj([
+        ("jobs_submitted", Value::Int(m.jobs_submitted as i64)),
+        ("jobs_completed", Value::Int(m.jobs_completed as i64)),
+        (
+            "jobs_early_stopped",
+            Value::Int(m.jobs_early_stopped as i64),
+        ),
+        ("jobs_cancelled", Value::Int(m.jobs_cancelled as i64)),
+        ("deadline_misses", Value::Int(m.deadline_misses as i64)),
+        ("jobs_failed", Value::Int(m.jobs_failed as i64)),
+        ("chunks_dispatched", Value::Int(m.chunks_dispatched as i64)),
+        ("pjrt_dispatches", Value::Int(m.pjrt_dispatches as i64)),
+        ("engine_dispatches", Value::Int(m.engine_dispatches as i64)),
+        ("engine_batch_jobs", Value::Int(m.engine_batch_jobs as i64)),
+        ("generations", Value::Int(m.generations as i64)),
+        ("padded_rows", Value::Int(m.padded_rows as i64)),
+        ("latency_p50_us", Value::Int(m.latency_p50.as_micros() as i64)),
+        ("latency_p95_us", Value::Int(m.latency_p95.as_micros() as i64)),
+        ("latency_p99_us", Value::Int(m.latency_p99.as_micros() as i64)),
+        ("latency_max_us", Value::Int(m.latency_max.as_micros() as i64)),
+        ("mean_batch", Value::Float(m.mean_batch)),
+        ("samples", Value::Int(m.samples as i64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_id_forms() {
+        assert_eq!(parse_job_id("7"), Some(JobId(7)));
+        assert_eq!(parse_job_id("job-7"), Some(JobId(7)));
+        assert_eq!(parse_job_id("job-"), None);
+        assert_eq!(parse_job_id("nope"), None);
+        assert_eq!(parse_job_id(""), None);
+    }
+
+    #[test]
+    fn snapshot_serializes_null_status_until_done() {
+        let s = JobSnapshot::queued(JobId(3), "t".into(), Priority::Low);
+        let out = jsonmini::to_string(&snapshot_json(&s));
+        assert!(out.contains("\"status\":null"), "{out}");
+        assert!(out.contains("\"phase\":\"queued\""), "{out}");
+        assert!(out.contains("\"priority\":\"low\""), "{out}");
+    }
+
+    #[test]
+    fn metrics_json_has_v2_counters() {
+        let m = crate::coordinator::Metrics::new();
+        let out = jsonmini::to_string(&metrics_json(&m.snapshot()));
+        assert!(out.contains("\"jobs_cancelled\":0"), "{out}");
+        assert!(out.contains("\"deadline_misses\":0"), "{out}");
+    }
+}

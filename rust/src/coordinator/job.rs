@@ -1,7 +1,18 @@
-//! Job types: requests, ids, results, client-side handles.
+//! Job lifecycle API v2: typed requests, ids, results, progress events, and
+//! client-side handles with cancellation.
+//!
+//! The v2 surface (see docs/api.md) turns the fire-and-forget v1 pair into a
+//! full lifecycle: requests carry [`Priority`], an optional relative deadline
+//! and a progress cadence; handles support [`JobHandle::cancel`],
+//! [`JobHandle::wait_timeout`], a repeatable [`JobHandle::try_wait`] (the
+//! terminal [`JobResult`] is cached in the handle) and a [`JobHandle::progress`]
+//! event stream fed by the scheduler between chunks. [`JobSnapshot`] is the
+//! observable mid-flight state shared with the HTTP gateway.
 
 use crate::config::GaParams;
+use crate::coordinator::workers::SchedMsg;
 use std::sync::mpsc;
+use std::sync::mpsc::Sender;
 use std::time::Duration;
 
 /// Unique job identifier (monotone per coordinator).
@@ -14,12 +25,74 @@ impl std::fmt::Display for JobId {
     }
 }
 
+/// Scheduling priority class. The batcher dispatches `High` before `Normal`
+/// before `Low`; ordering *within* a class stays same-variant FIFO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Dense index (0 = most urgent) — the batcher's queue selector.
+    pub fn class(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => Err(format!(
+                "unknown priority `{other}` (expected high|normal|low)"
+            )),
+        }
+    }
+}
+
 /// A client request: optimize `params.function` with the paper's machine.
+///
+/// Built fluently: `OptimizeRequest::new(p).with_priority(Priority::High)
+/// .with_deadline(Duration::from_millis(50)).with_progress_every(1)`.
 #[derive(Debug, Clone)]
 pub struct OptimizeRequest {
     pub params: GaParams,
     /// Free-form tag echoed in the result (trace correlation).
     pub tag: String,
+    /// Queue-ordering class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Relative deadline from submission. A job still unfinished when it
+    /// expires is stopped between chunks with [`JobStatus::DeadlineMiss`].
+    pub deadline: Option<Duration>,
+    /// Emit a [`JobEvent`] every this many completed chunks. 0 (the
+    /// default) disables the stream — events buffer unboundedly in the
+    /// handle until drained, so streaming is strictly opt-in.
+    pub progress_every: u32,
 }
 
 impl OptimizeRequest {
@@ -27,11 +100,29 @@ impl OptimizeRequest {
         Self {
             params,
             tag: String::new(),
+            priority: Priority::Normal,
+            deadline: None,
+            progress_every: 0,
         }
     }
 
     pub fn with_tag(mut self, tag: impl Into<String>) -> Self {
         self.tag = tag.into();
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_progress_every(mut self, chunks: u32) -> Self {
+        self.progress_every = chunks;
         self
     }
 }
@@ -43,8 +134,32 @@ pub enum JobStatus {
     Completed,
     /// Stopped early: best stale for `early_stop_chunks` consecutive chunks.
     EarlyStopped,
+    /// Stopped by a client [`JobHandle::cancel`] / `DELETE /v1/jobs/:id`
+    /// (between chunks; partial results are delivered).
+    Cancelled,
+    /// Stopped because the request's deadline expired before completion
+    /// (between chunks; partial results are delivered).
+    DeadlineMiss,
     /// Rejected or failed (reason in `JobResult::error`).
     Failed,
+}
+
+impl JobStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStatus::Completed => "completed",
+            JobStatus::EarlyStopped => "early_stopped",
+            JobStatus::Cancelled => "cancelled",
+            JobStatus::DeadlineMiss => "deadline_miss",
+            JobStatus::Failed => "failed",
+        }
+    }
+}
+
+impl std::fmt::Display for JobStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 /// Final result delivered to the client.
@@ -78,16 +193,106 @@ impl JobResult {
     }
 }
 
-/// Client-side handle: blocks for the result.
+/// A progress event: one completed chunk's state, emitted by the scheduler
+/// between chunks (cadence set by [`OptimizeRequest::with_progress_every`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobEvent {
+    pub id: JobId,
+    /// Generations executed so far.
+    pub generations: u32,
+    /// Best fitness so far.
+    pub best_y: i64,
+    /// Best chromosome so far.
+    pub best_x: u32,
+    /// Generations still requested after this chunk.
+    pub remaining: u32,
+    /// Backend that executed this chunk ("pjrt" / "engine").
+    pub backend: &'static str,
+}
+
+/// Observable lifecycle phase (the gateway's `phase` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Accepted; waiting in the batcher for its first chunk.
+    Queued,
+    /// At least one chunk executed (or in flight).
+    Running,
+    /// Terminal; `status` is set and the result fields are final.
+    Done,
+}
+
+impl JobPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+        }
+    }
+}
+
+impl std::fmt::Display for JobPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Point-in-time view of a job, maintained by the scheduler between chunks
+/// and read by [`crate::coordinator::Coordinator::job`] and the HTTP
+/// gateway (`GET /v1/jobs/:id` — status + curve-so-far).
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    pub id: JobId,
+    pub tag: String,
+    pub priority: Priority,
+    pub phase: JobPhase,
+    /// Terminal status once `phase == Done`.
+    pub status: Option<JobStatus>,
+    pub generations: u32,
+    pub best_y: i64,
+    pub best_x: u32,
+    /// Convergence curve so far (full curve once terminal).
+    pub curve: Vec<i64>,
+    pub backend: &'static str,
+    pub error: Option<String>,
+}
+
+impl JobSnapshot {
+    pub(crate) fn queued(id: JobId, tag: String, priority: Priority) -> Self {
+        Self {
+            id,
+            tag,
+            priority,
+            phase: JobPhase::Queued,
+            status: None,
+            generations: 0,
+            best_y: 0,
+            best_x: 0,
+            curve: Vec::new(),
+            backend: "none",
+            error: None,
+        }
+    }
+}
+
+/// Client-side handle to a submitted job.
+///
+/// The terminal [`JobResult`] is cached after first receipt, so
+/// [`JobHandle::try_wait`] / [`JobHandle::wait_timeout`] may be called
+/// repeatedly and a final [`JobHandle::wait`] never blocks on an
+/// already-consumed channel.
 pub struct JobHandle {
     pub id: JobId,
     pub(crate) rx: mpsc::Receiver<JobResult>,
+    pub(crate) progress_rx: mpsc::Receiver<JobEvent>,
+    /// Scheduler inbox for cancellation (absent only in unit tests).
+    pub(crate) sched_tx: Option<Sender<SchedMsg>>,
+    pub(crate) cached: Option<JobResult>,
 }
 
 impl JobHandle {
-    /// Block until the job finishes.
-    pub fn wait(self) -> JobResult {
-        self.rx.recv().unwrap_or_else(|_| JobResult {
+    fn dropped_channel_result(&self) -> JobResult {
+        JobResult {
             id: self.id,
             tag: String::new(),
             status: JobStatus::Failed,
@@ -98,49 +303,196 @@ impl JobHandle {
             latency: Duration::ZERO,
             backend: "none",
             error: Some("coordinator dropped the job channel".into()),
-        })
+        }
     }
 
-    /// Non-blocking poll.
-    pub fn try_wait(&self) -> Option<JobResult> {
-        self.rx.try_recv().ok()
+    /// Block until the job finishes.
+    pub fn wait(mut self) -> JobResult {
+        if let Some(r) = self.cached.take() {
+            return r;
+        }
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => self.dropped_channel_result(),
+        }
+    }
+
+    /// Block up to `timeout` for the result. Returns `None` on timeout; the
+    /// result (once received) is cached, so later calls return it again.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<JobResult> {
+        if self.cached.is_none() {
+            match self.rx.recv_timeout(timeout) {
+                Ok(r) => self.cached = Some(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => return None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.cached = Some(self.dropped_channel_result());
+                }
+            }
+        }
+        self.cached.clone()
+    }
+
+    /// Non-blocking poll. Caches the terminal result: polling repeatedly —
+    /// or polling and then calling [`JobHandle::wait`] — is safe.
+    pub fn try_wait(&mut self) -> Option<JobResult> {
+        if self.cached.is_none() {
+            match self.rx.try_recv() {
+                Ok(r) => self.cached = Some(r),
+                Err(mpsc::TryRecvError::Empty) => return None,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.cached = Some(self.dropped_channel_result());
+                }
+            }
+        }
+        self.cached.clone()
+    }
+
+    /// Request cooperative cancellation: the scheduler stops the job between
+    /// chunks and delivers a [`JobStatus::Cancelled`] result with the
+    /// progress so far. Idempotent; a no-op once the job is terminal.
+    pub fn cancel(&self) {
+        if let Some(tx) = &self.sched_tx {
+            let _ = tx.send(SchedMsg::Cancel(self.id));
+        }
+    }
+
+    /// Drain all progress events currently available (non-blocking).
+    pub fn progress(&self) -> mpsc::TryIter<'_, JobEvent> {
+        self.progress_rx.try_iter()
+    }
+
+    /// Block up to `timeout` for the next progress event. `None` on timeout
+    /// or once the job is terminal and the stream has drained.
+    pub fn next_progress(&self, timeout: Duration) -> Option<JobEvent> {
+        self.progress_rx.recv_timeout(timeout).ok()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc::channel;
 
-    #[test]
-    fn decoded_vars_two_complement() {
-        let r = JobResult {
-            id: JobId(1),
+    fn detached_handle(id: JobId) -> (Sender<JobResult>, Sender<JobEvent>, JobHandle) {
+        let (tx, rx) = channel();
+        let (ptx, prx) = channel();
+        (
+            tx,
+            ptx,
+            JobHandle {
+                id,
+                rx,
+                progress_rx: prx,
+                sched_tx: None,
+                cached: None,
+            },
+        )
+    }
+
+    fn result(id: JobId) -> JobResult {
+        JobResult {
+            id,
             tag: String::new(),
             status: JobStatus::Completed,
-            best_y: 0,
-            best_x: crate::bits::concat(1023, 5, 10), // px=-1, qx=5 at m=20
-            generations: 0,
-            curve: vec![],
+            best_y: -7,
+            best_x: 3,
+            generations: 25,
+            curve: vec![-7; 25],
             latency: Duration::ZERO,
             backend: "engine",
             error: None,
-        };
+        }
+    }
+
+    #[test]
+    fn decoded_vars_two_complement() {
+        let mut r = result(JobId(1));
+        r.best_x = crate::bits::concat(1023, 5, 10); // px=-1, qx=5 at m=20
         assert_eq!(r.decoded_vars(20), (-1, 5));
     }
 
     #[test]
     fn handle_reports_dropped_channel() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, _ptx, h) = detached_handle(JobId(9));
         drop(tx);
-        let h = JobHandle { id: JobId(9), rx };
         let r = h.wait();
         assert_eq!(r.status, JobStatus::Failed);
         assert!(r.error.is_some());
     }
 
     #[test]
+    fn try_wait_then_wait_regression() {
+        // v1 bug: try_wait() consumed the channel message and dropped it, so
+        // a later wait() blocked forever. v2 caches the terminal result.
+        let (tx, _ptx, mut h) = detached_handle(JobId(3));
+        tx.send(result(JobId(3))).unwrap();
+        let polled = loop {
+            if let Some(r) = h.try_wait() {
+                break r;
+            }
+        };
+        assert_eq!(polled.status, JobStatus::Completed);
+        // Repeat polls keep answering...
+        assert!(h.try_wait().is_some());
+        assert!(h.wait_timeout(Duration::ZERO).is_some());
+        // ...and the consuming wait() returns instantly with the same result.
+        let waited = h.wait();
+        assert_eq!(waited.best_y, polled.best_y);
+        assert_eq!(waited.curve, polled.curve);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_delivers() {
+        let (tx, _ptx, mut h) = detached_handle(JobId(4));
+        assert!(h.wait_timeout(Duration::from_millis(1)).is_none());
+        tx.send(result(JobId(4))).unwrap();
+        assert!(h.wait_timeout(Duration::from_secs(5)).is_some());
+    }
+
+    #[test]
+    fn progress_stream_drains_in_order() {
+        let (_tx, ptx, h) = detached_handle(JobId(5));
+        for g in [25u32, 50, 75] {
+            ptx.send(JobEvent {
+                id: JobId(5),
+                generations: g,
+                best_y: -1,
+                best_x: 0,
+                remaining: 100 - g,
+                backend: "engine",
+            })
+            .unwrap();
+        }
+        let gens: Vec<u32> = h.progress().map(|e| e.generations).collect();
+        assert_eq!(gens, vec![25, 50, 75]);
+        assert!(h.next_progress(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
     fn request_builder() {
-        let r = OptimizeRequest::new(GaParams::default()).with_tag("t1");
+        let r = OptimizeRequest::new(GaParams::default())
+            .with_tag("t1")
+            .with_priority(Priority::High)
+            .with_deadline(Duration::from_millis(250))
+            .with_progress_every(4);
         assert_eq!(r.tag, "t1");
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(r.progress_every, 4);
+        // Defaults: normal priority, no deadline, progress stream off.
+        let d = OptimizeRequest::new(GaParams::default());
+        assert_eq!(d.priority, Priority::Normal);
+        assert_eq!(d.deadline, None);
+        assert_eq!(d.progress_every, 0);
+    }
+
+    #[test]
+    fn priority_and_status_strings_round_trip() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(p.as_str().parse::<Priority>().unwrap(), p);
+        }
+        assert!("urgent".parse::<Priority>().is_err());
+        assert_eq!(JobStatus::DeadlineMiss.to_string(), "deadline_miss");
+        assert_eq!(JobPhase::Queued.to_string(), "queued");
     }
 }

@@ -10,6 +10,11 @@ pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub jobs_early_stopped: AtomicU64,
+    /// Jobs stopped by client cancellation (handle `cancel()` or gateway
+    /// `DELETE /v1/jobs/:id`), cooperatively between chunks.
+    pub jobs_cancelled: AtomicU64,
+    /// Jobs stopped because their deadline expired before completion.
+    pub deadline_misses: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub chunks_dispatched: AtomicU64,
     pub pjrt_dispatches: AtomicU64,
@@ -65,6 +70,8 @@ impl Metrics {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             jobs_early_stopped: self.jobs_early_stopped.load(Ordering::Relaxed),
+            jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
             pjrt_dispatches: self.pjrt_dispatches.load(Ordering::Relaxed),
@@ -88,6 +95,8 @@ pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
     pub jobs_early_stopped: u64,
+    pub jobs_cancelled: u64,
+    pub deadline_misses: u64,
     pub jobs_failed: u64,
     pub chunks_dispatched: u64,
     pub pjrt_dispatches: u64,
@@ -107,7 +116,8 @@ impl MetricsSnapshot {
     /// Render a human-readable summary block.
     pub fn render(&self) -> String {
         format!(
-            "jobs: {} submitted, {} completed, {} early-stopped, {} failed\n\
+            "jobs: {} submitted, {} completed, {} early-stopped, {} cancelled, \
+             {} deadline-missed, {} failed\n\
              chunks: {} dispatched ({} pjrt, {} engine / {} batched jobs), \
              mean batch {:.2}, {} padded rows\n\
              generations: {}\n\
@@ -115,6 +125,8 @@ impl MetricsSnapshot {
             self.jobs_submitted,
             self.jobs_completed,
             self.jobs_early_stopped,
+            self.jobs_cancelled,
+            self.deadline_misses,
             self.jobs_failed,
             self.chunks_dispatched,
             self.pjrt_dispatches,

@@ -18,18 +18,31 @@
 //!  clients ◀─JobHandle───┘
 //! ```
 //!
-//! The canonical job state is always the behavioral [`GaInstance`]; the
+//! The canonical job state is always the behavioral
+//! [`GaInstance`](crate::ga::GaInstance); the
 //! PJRT path marshals it into literals and absorbs the advanced state back,
 //! so both backends are interchangeable mid-job (and bit-identical — see
 //! rust/tests/coordinator_integration.rs).
+//!
+//! The v2 lifecycle surface (docs/api.md) layers steering and observability
+//! on the chunk boundary: requests carry [`Priority`] / deadline /
+//! progress-cadence, handles stream [`JobEvent`]s and cancel cooperatively,
+//! [`JobSnapshot`]s expose mid-flight state, and the std-only [`Gateway`]
+//! serves the same lifecycle over HTTP/JSON (`POST /v1/jobs`,
+//! `GET /v1/jobs/:id`, `DELETE /v1/jobs/:id`, `GET /v1/metrics`).
 
 mod batcher;
 mod coordinator;
+mod gateway;
 mod job;
 mod metrics;
 mod workers;
 
 pub use batcher::{BatchPlan, Batcher};
 pub use coordinator::{Coordinator, CoordinatorBuilder};
-pub use job::{JobHandle, JobId, JobResult, JobStatus, OptimizeRequest};
+pub use gateway::Gateway;
+pub use job::{
+    JobEvent, JobHandle, JobId, JobPhase, JobResult, JobSnapshot, JobStatus, OptimizeRequest,
+    Priority,
+};
 pub use metrics::{Metrics, MetricsSnapshot};

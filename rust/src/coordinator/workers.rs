@@ -35,13 +35,17 @@ pub(crate) struct DoneMsg {
     pub backend: &'static str,
 }
 
-/// Scheduler inbox message (submissions share the channel with completions).
+/// Scheduler inbox message (submissions and cancellations share the channel
+/// with completions, so lifecycle transitions happen between chunks only).
 pub(crate) enum SchedMsg {
     Submit {
         id: JobId,
         req: crate::coordinator::job::OptimizeRequest,
         result_tx: Sender<crate::coordinator::job::JobResult>,
+        progress_tx: Sender<crate::coordinator::job::JobEvent>,
     },
+    /// Cooperative cancellation: takes effect at the next chunk boundary.
+    Cancel(JobId),
     Done(DoneMsg),
     Shutdown,
 }

@@ -1,0 +1,223 @@
+//! Gateway round-trip: an HTTP client submits, observes progress, cancels,
+//! and fetches metrics; a gateway-submitted job must be bit-identical
+//! (best_y, best_x, curve) to the same request through the in-process API,
+//! on both engine backends (ISSUE 2 acceptance).
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, Gateway, JobStatus, OptimizeRequest};
+use fpga_ga::ga::BackendKind;
+use fpga_ga::jsonmini::{self, Value};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn coordinator(backend: BackendKind) -> Arc<Coordinator> {
+    let serve = ServeParams {
+        workers: 2,
+        use_pjrt: false,
+        backend,
+        ..ServeParams::default()
+    };
+    Arc::new(Coordinator::builder(serve).start().unwrap())
+}
+
+/// Minimal HTTP/1.1 client: one request, `Connection: close`, parsed JSON.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed response: {raw}"))
+        .parse()
+        .unwrap();
+    let payload = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    let v = if payload.is_empty() {
+        Value::Null
+    } else {
+        jsonmini::parse(payload).unwrap()
+    };
+    (status, v)
+}
+
+/// Poll `GET /v1/jobs/:id` until the job reports `phase == done`.
+fn poll_done(addr: SocketAddr, id: i64) -> Value {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (code, v) = http(addr, "GET", &format!("/v1/jobs/{id}"), "");
+        assert_eq!(code, 200, "{v:?}");
+        if v.req_str("phase").unwrap() == "done" {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "job {id} never finished");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn roundtrip_bit_identical(backend: BackendKind) {
+    let coord = coordinator(backend);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    let (code, v) = http(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"function":"f3","n":16,"m":20,"k":50,"seed":11,"tag":"net"}"#,
+    );
+    assert_eq!(code, 202, "{v:?}");
+    let id = v.req_i64("id").unwrap();
+    assert_eq!(v.req_str("job").unwrap(), format!("job-{id}"));
+
+    let done = poll_done(addr, id);
+    assert_eq!(done.req_str("status").unwrap(), "completed");
+    assert_eq!(done.req_str("tag").unwrap(), "net");
+    assert_eq!(done.req_i64("generations").unwrap(), 50);
+
+    // The SAME request through the in-process API must match bit for bit.
+    let p = GaParams {
+        n: 16,
+        m: 20,
+        k: 50,
+        seed: 11,
+        function: "f3".into(),
+        ..GaParams::default()
+    };
+    let r = coord.optimize(OptimizeRequest::new(p));
+    assert_eq!(r.status, JobStatus::Completed);
+    assert_eq!(done.req_i64("best_y").unwrap(), r.best_y);
+    assert_eq!(done.req_i64("best_x").unwrap(), i64::from(r.best_x));
+    assert_eq!(done.req_i64_vec("curve").unwrap(), r.curve);
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn gateway_matches_in_process_scalar() {
+    roundtrip_bit_identical(BackendKind::Scalar);
+}
+
+#[test]
+fn gateway_matches_in_process_batched() {
+    roundtrip_bit_identical(BackendKind::Batched);
+}
+
+#[test]
+fn gateway_cancel_and_metrics() {
+    let coord = coordinator(BackendKind::Scalar);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    // A job too long to finish: cancel it over HTTP mid-run.
+    let (code, v) = http(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"function":"f3","n":16,"k":1000000000,"seed":3}"#,
+    );
+    assert_eq!(code, 202);
+    let id = v.req_i64("id").unwrap();
+
+    let (code, v) = http(addr, "DELETE", &format!("/v1/jobs/{id}"), "");
+    assert_eq!(code, 202, "{v:?}");
+    assert_eq!(v.get("cancelled").and_then(Value::as_bool), Some(true));
+
+    let done = poll_done(addr, id);
+    assert_eq!(done.req_str("status").unwrap(), "cancelled");
+
+    // Cancelling a terminal job conflicts; unknown jobs are 404.
+    let (code, _) = http(addr, "DELETE", &format!("/v1/jobs/{id}"), "");
+    assert_eq!(code, 409);
+    let (code, _) = http(addr, "DELETE", "/v1/jobs/424242", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "GET", "/v1/jobs/424242", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "GET", "/v1/jobs/not-a-number", "");
+    assert_eq!(code, 400);
+
+    // Metrics reflect the lifecycle counters.
+    let (code, m) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(code, 200);
+    assert!(m.req_i64("jobs_submitted").unwrap() >= 1);
+    assert_eq!(m.req_i64("jobs_cancelled").unwrap(), 1);
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn gateway_deadline_and_listing() {
+    let coord = coordinator(BackendKind::Scalar);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    let (code, v) = http(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"function":"f3","n":16,"k":1000000000,"seed":5,"deadline_ms":0,"tag":"dl"}"#,
+    );
+    assert_eq!(code, 202);
+    let id = v.req_i64("id").unwrap();
+    let done = poll_done(addr, id);
+    assert_eq!(done.req_str("status").unwrap(), "deadline_miss");
+
+    let (code, listing) = http(addr, "GET", "/v1/jobs", "");
+    assert_eq!(code, 200);
+    let jobs = listing.req_array("jobs").unwrap();
+    assert!(!jobs.is_empty());
+    assert!(jobs
+        .iter()
+        .any(|j| j.get("tag").and_then(Value::as_str) == Some("dl")));
+
+    let (code, m) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(code, 200);
+    assert_eq!(m.req_i64("deadline_misses").unwrap(), 1);
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn gateway_rejects_malformed_requests() {
+    let coord = coordinator(BackendKind::Scalar);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    // Invalid GA parameters (N must be a power of two).
+    let (code, v) = http(addr, "POST", "/v1/jobs", r#"{"n":3}"#);
+    assert_eq!(code, 400, "{v:?}");
+    // Malformed JSON.
+    let (code, _) = http(addr, "POST", "/v1/jobs", "{not json");
+    assert_eq!(code, 400);
+    // Unknown priority class.
+    let (code, _) = http(addr, "POST", "/v1/jobs", r#"{"priority":"urgent"}"#);
+    assert_eq!(code, 400);
+    // Negative deadline.
+    let (code, _) = http(addr, "POST", "/v1/jobs", r#"{"deadline_ms":-5}"#);
+    assert_eq!(code, 400);
+    // Unknown endpoint + wrong method.
+    let (code, _) = http(addr, "GET", "/v2/nope", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "PATCH", "/v1/jobs/1", "");
+    assert_eq!(code, 405);
+    // Rejections must not leak into the job table.
+    assert_eq!(coord.metrics().jobs_submitted, 0);
+    assert!(coord.jobs().is_empty());
+
+    gw.shutdown();
+    coord.shutdown();
+}

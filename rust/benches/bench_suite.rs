@@ -1,0 +1,102 @@
+//! Problem-suite throughput: lowering cost (the multivar ROM compiler,
+//! cold vs cached) and V-ROM stepping cost across field counts — the
+//! perf trajectory of the problems subsystem (ISSUE 3).
+//!
+//! Emits the repo JSON bench format (`BENCH_JSON` line) as BENCH_suite.json
+//! content; CI runs it in check mode (`--check`: one quick pass, assert the
+//! line prints) so the bench trajectory stays green without burning CI
+//! minutes on full measurement.
+
+use fpga_ga::bench_util::{bench, emit_json, fmt_duration, BenchOpts, Table};
+use fpga_ga::ga::{MultiDims, MultiVarGa};
+use fpga_ga::problems::{by_name, cached_lowered, default_m, lower};
+use fpga_ga::rom::GAMMA_BITS_DEFAULT;
+
+const CHUNK: u32 = 25;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let check = argv.iter().any(|a| a == "--check");
+    let out_path = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_suite.json".to_string());
+    let opts = if check {
+        BenchOpts {
+            warmup: std::time::Duration::from_millis(5),
+            measure: std::time::Duration::from_millis(20),
+            max_iters: 1000,
+            min_iters: 1,
+        }
+    } else {
+        BenchOpts::quick()
+    };
+
+    println!("=== Problem suite: ROM lowering + V-ROM stepping ===\n");
+    let mut t = Table::new(["case", "mean", "p95", "notes"]);
+    let mut json = Vec::new();
+
+    // Lowering cost, cold (per build) vs cached (per lookup).
+    for name in ["sphere", "rastrigin", "ackley-sep"] {
+        let p = by_name(name).unwrap();
+        let m_cold = bench(&format!("lower_{name}_v4"), opts, || {
+            std::hint::black_box(lower(p, 4, default_m(4), GAMMA_BITS_DEFAULT));
+        });
+        t.row([
+            format!("lower {name} V=4"),
+            fmt_duration(m_cold.mean),
+            fmt_duration(m_cold.p95),
+            "cold build".to_string(),
+        ]);
+        json.push(m_cold.to_json(1.0));
+
+        let m_hot = bench(&format!("cached_{name}_v4"), opts, || {
+            std::hint::black_box(cached_lowered(p, 4, default_m(4), GAMMA_BITS_DEFAULT));
+        });
+        t.row([
+            format!("cached {name} V=4"),
+            fmt_duration(m_hot.mean),
+            fmt_duration(m_hot.p95),
+            "cache hit".to_string(),
+        ]);
+        json.push(m_hot.to_json(1.0));
+    }
+
+    // V-ROM machine stepping across field counts (one 25-gen chunk, N=32).
+    let p = by_name("rastrigin").unwrap();
+    for v in [2u32, 4, 8] {
+        let m_bits = default_m(v);
+        let dims = MultiDims::new(32, m_bits, v, 1);
+        let rom = cached_lowered(p, v, m_bits, GAMMA_BITS_DEFAULT);
+        let mut ga = MultiVarGa::new(dims, rom, false, 77);
+        let meas = bench(&format!("step_rastrigin_v{v}"), opts, || {
+            ga.run(CHUNK);
+        });
+        let gens = CHUNK as f64;
+        t.row([
+            format!("step rastrigin V={v} (chunk={CHUNK})"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("m={m_bits}"),
+        ]);
+        json.push(meas.to_json(gens));
+    }
+
+    t.print();
+    // The greppable trajectory line AND the on-disk artifact.
+    let report = fpga_ga::jsonmini::obj([
+        ("bench", fpga_ga::jsonmini::Value::from("bench_suite")),
+        ("results", fpga_ga::jsonmini::Value::Array(json.clone())),
+    ]);
+    if let Err(e) = std::fs::write(&out_path, fpga_ga::jsonmini::to_string(&report)) {
+        eprintln!("warning: could not write {out_path}: {e}");
+    } else {
+        println!("wrote {out_path}");
+    }
+    emit_json("bench_suite", json);
+    if check {
+        println!("bench_suite check mode: OK");
+    }
+}

@@ -20,9 +20,17 @@ USAGE: fpga-ga <command> [options]
 
 COMMANDS:
   optimize    run one GA optimization
-              --function f1|f2|f3  --n N  --m M  --k K  --seed S
+              --function NAME (f1|f2|f3 or any `problems` entry)
+              --vars V (chromosome fields, 2..8; V != 2 uses the V-ROM machine)
+              --n N  --m M  --k K  --seed S
               --maximize  --pjrt  --backend scalar|batched  --config FILE
               --early-stop C (stop after C stale chunks; 0 = never)
+  suite       accuracy-evaluation suite: (problem x V x N) grid through the
+              coordinator; reports success rate / |error| / gens-to-threshold
+              --problems a,b,...|all  --vars 2,4  --pops 32,64  --k K
+              --seeds S  --tol-pct P  --backend scalar|batched
+              --out FILE (write the JSON report)  --smoke (small CI grid)
+  problems    list the registered benchmark problems
   serve       start the coordinator, run a synthetic request trace, and
               (with --listen) expose the HTTP/JSON gateway (docs/api.md)
               --jobs J (>= 1)  --workers W  --batch B  --pjrt
@@ -52,6 +60,7 @@ fn ga_params_from(args: &Args) -> crate::Result<GaParams> {
     p.m = args.opt_or("m", p.m)?;
     p.k = args.opt_or("k", p.k)?;
     p.seed = args.opt_or("seed", p.seed)?;
+    p.vars = args.opt_or("vars", p.vars)?;
     if args.flag("maximize") {
         p.maximize = true;
     }
@@ -64,6 +73,8 @@ pub fn run(args: Args) -> crate::Result<String> {
     match args.command.as_str() {
         "optimize" => cmd_optimize(&args),
         "serve" => cmd_serve(&args),
+        "suite" => cmd_suite(&args),
+        "problems" => Ok(render_problems()),
         "rtl" => cmd_rtl(&args),
         "table1" => Ok(render_table1()),
         "table2" => Ok(render_table2()),
@@ -84,24 +95,32 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("cli"));
     coord.shutdown();
     anyhow::ensure!(result.error.is_none(), "job failed: {:?}", result.error);
-    let (px, qx) = result.decoded_vars(params.m);
+    let decoded = if params.vars == 2 {
+        let (px, qx) = result.decoded_vars(params.m);
+        format!("decoded (px, qx) = ({px}, {qx})")
+    } else {
+        format!(
+            "decoded fields = {:?}",
+            result.decoded_fields(params.m, params.vars)
+        )
+    };
     Ok(format!(
-        "function={} N={} m={} K={} direction={} backend={} status={}\n\
+        "function={} N={} m={} V={} K={} direction={} backend={} status={}\n\
          best fitness (fixed-point): {}\n\
-         best chromosome: {:#x}  decoded (px, qx) = ({}, {})\n\
+         best chromosome: {:#x}  {}\n\
          generations executed: {}  latency: {:?}\n\
          convergence (every 10th gen): {:?}",
         params.function,
         params.n,
         params.m,
+        params.vars,
         params.k,
         if params.maximize { "maximize" } else { "minimize" },
         result.backend,
         result.status,
         result.best_y,
         result.best_x,
-        px,
-        qx,
+        decoded,
         result.generations,
         result.latency,
         result.curve.iter().step_by(10).collect::<Vec<_>>(),
@@ -233,6 +252,87 @@ fn cmd_rtl(args: &Args) -> crate::Result<String> {
         synth::tg_ns(d),
         twin.best().y,
     ))
+}
+
+/// Parse a comma-separated option into a vec, with a default.
+fn csv_opt<T: std::str::FromStr>(
+    args: &Args,
+    name: &str,
+    default: Vec<T>,
+) -> crate::Result<Vec<T>> {
+    match args.opt(name) {
+        None => Ok(default),
+        Some(raw) => raw
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|_| anyhow::anyhow!("invalid value in --{name}: `{s}`"))
+            })
+            .collect(),
+    }
+}
+
+fn cmd_suite(args: &Args) -> crate::Result<String> {
+    let mut cfg = if args.flag("smoke") {
+        crate::problems::SuiteConfig::smoke()
+    } else {
+        crate::problems::SuiteConfig::default()
+    };
+    match args.opt("problems") {
+        None | Some("all") => {}
+        Some(list) => {
+            cfg.problems = list.split(',').map(|s| s.trim().to_string()).collect();
+        }
+    }
+    cfg.vars = csv_opt(args, "vars", cfg.vars)?;
+    cfg.pops = csv_opt(args, "pops", cfg.pops)?;
+    cfg.k = args.opt_or("k", cfg.k)?;
+    cfg.seeds = args.opt_or("seeds", cfg.seeds)?;
+    cfg.tol_pct = args.opt_or("tol-pct", cfg.tol_pct)?;
+    cfg.backend = args.opt_or("backend", cfg.backend)?;
+    cfg.workers = args.opt_or("workers", cfg.workers)?;
+
+    let report = crate::problems::run_suite(&cfg)?;
+    let mut out = report.render();
+    if let Some(path) = args.opt("out") {
+        let json = crate::jsonmini::to_string(&report.to_json());
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("writing report `{path}`: {e}"))?;
+        out.push_str(&format!("\nreport written to {path}\n"));
+    }
+    let total: u64 = report.cells.iter().map(|c| c.seeds).sum();
+    out.push_str(&format!(
+        "suite: {} cells, {} jobs, backend={}\n",
+        report.cells.len(),
+        total,
+        report.backend
+    ));
+    Ok(out)
+}
+
+fn render_problems() -> String {
+    let mut t = Table::new(["name", "domain", "out_frac", "gamma", "optimum", "summary"]);
+    for p in crate::problems::all() {
+        let domain = match p.domain {
+            crate::problems::Domain::Raw => "raw codes".to_string(),
+            crate::problems::Domain::Sym(w) => format!("[-{w}, {w})"),
+        };
+        t.row([
+            p.name.to_string(),
+            domain,
+            p.out_frac.to_string(),
+            if p.gamma_bypass { "bypass" } else { "LUT" }.to_string(),
+            p.optimum
+                .map(|o| format!("f({}) = {}", o.x, o.y))
+                .unwrap_or_else(|| "edge".into()),
+            p.summary.to_string(),
+        ]);
+    }
+    format!(
+        "Problem registry — γ(Σ ρ_v) benchmark functions (docs/problems.md)\n{}",
+        t.render()
+    )
 }
 
 fn cmd_baseline(args: &Args) -> crate::Result<String> {
@@ -441,5 +541,46 @@ mod tests {
     #[test]
     fn bad_params_rejected() {
         assert!(run_cmd("optimize --n 3").is_err());
+        assert!(run_cmd("optimize --vars 3").is_err()); // m = 20 % 3 != 0
+        assert!(run_cmd("optimize --function warp").is_err());
+    }
+
+    #[test]
+    fn problems_lists_the_registry() {
+        let out = run_cmd("problems").unwrap();
+        for name in ["sphere", "rastrigin", "schwefel", "f1", "f3"] {
+            assert!(out.contains(name), "{out}");
+        }
+    }
+
+    #[test]
+    fn optimize_registry_problem_at_v4() {
+        let out =
+            run_cmd("optimize --function sphere --vars 4 --m 20 --n 16 --k 30 --seed 2")
+                .unwrap();
+        assert!(out.contains("V=4"), "{out}");
+        assert!(out.contains("decoded fields"), "{out}");
+        assert!(out.contains("best fitness"), "{out}");
+    }
+
+    #[test]
+    fn suite_small_grid_runs_and_writes_json() {
+        let path = std::env::temp_dir().join("fpga_ga_suite_test.json");
+        let out = run_cmd(&format!(
+            "suite --problems sphere,f3 --vars 2,4 --pops 16 --k 25 --seeds 2 --out {}",
+            path.display()
+        ))
+        .unwrap();
+        assert!(out.contains("sphere"), "{out}");
+        assert!(out.contains("4 cells"), "{out}");
+        let json = std::fs::read_to_string(&path).unwrap();
+        let v = crate::jsonmini::parse(&json).unwrap();
+        assert_eq!(v.req_str("suite").unwrap(), "problems-accuracy");
+        assert_eq!(v.req_array("cells").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn suite_rejects_unknown_problem() {
+        assert!(run_cmd("suite --problems warp --k 5 --seeds 1").is_err());
     }
 }

@@ -23,12 +23,17 @@ pub struct GaParams {
     pub mutation_rate: f64,
     /// Optimization direction.
     pub maximize: bool,
-    /// Fitness function name ("f1"/"f2"/"f3").
+    /// Fitness function name: "f1"/"f2"/"f3" or any entry of the problem
+    /// registry ([`crate::problems`], e.g. "sphere", "rastrigin").
     pub function: String,
     /// γ ROM size exponent.
     pub gamma_bits: u32,
     /// Master seed for population + LFSR bank derivation.
     pub seed: u64,
+    /// Number of chromosome fields V (the paper's stated multi-variable
+    /// extension). V = 2 is the verified two-ROM machine; V in [3, 8] runs
+    /// the V-ROM + adder-tree machine ([`crate::ga::MultiVarGa`]).
+    pub vars: u32,
 }
 
 impl Default for GaParams {
@@ -42,6 +47,7 @@ impl Default for GaParams {
             function: "f3".to_string(),
             gamma_bits: crate::rom::GAMMA_BITS_DEFAULT,
             seed: 42,
+            vars: 2,
         }
     }
 }
@@ -82,6 +88,16 @@ impl GaParams {
         }
         if self.gamma_bits == 0 || self.gamma_bits > 20 {
             bail!("gamma_bits must be in [1, 20]");
+        }
+        if !(2..=8).contains(&self.vars) {
+            bail!("vars must be in [2, 8], got {}", self.vars);
+        }
+        if self.m % self.vars != 0 {
+            bail!(
+                "m = {} must split into vars = {} equal fields",
+                self.m,
+                self.vars
+            );
         }
         Ok(())
     }
@@ -216,6 +232,7 @@ pub(crate) fn apply_ga(ga: &mut GaParams, v: &Value) -> Result<()> {
     get_string(v, "function", &mut ga.function)?;
     get_u32(v, "gamma_bits", &mut ga.gamma_bits)?;
     get_u64(v, "seed", &mut ga.seed)?;
+    get_u32(v, "vars", &mut ga.vars)?;
     Ok(())
 }
 
@@ -311,6 +328,9 @@ use_pjrt = false
             "[ga]\nk = 0",      // zero generations
             "[ga]\nmutation_rate = 1.5",
             "[ga]\ngamma_bits = 0",
+            "[ga]\nvars = 9",       // beyond the V-ROM machine's range
+            "[ga]\nvars = 1",       // single-field: use V = 2 + single_var
+            "[ga]\nvars = 3",       // default m = 20 does not split by 3
         ] {
             assert!(Config::from_toml(toml).is_err(), "{toml}");
         }
@@ -325,5 +345,13 @@ use_pjrt = false
     #[test]
     fn empty_config_is_default() {
         assert_eq!(Config::from_toml("").unwrap(), Config::default());
+    }
+
+    #[test]
+    fn vars_key_parses_and_validates() {
+        let c = Config::from_toml("[ga]\nm = 24\nvars = 4\nfunction = \"sphere\"").unwrap();
+        assert_eq!(c.ga.vars, 4);
+        assert_eq!(c.ga.m, 24);
+        assert_eq!(Config::default().ga.vars, 2);
     }
 }

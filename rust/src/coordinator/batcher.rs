@@ -2,10 +2,12 @@
 //!
 //! Policy (the paper-era analogue of vLLM continuous batching, simplified to
 //! chunk granularity): jobs become *ready* when submitted or when their
-//! previous chunk completes; the batcher coalesces ready jobs that share a
-//! compiled variant `(N, m, P)` into one dispatch of the largest compiled
-//! batch size that fits, padding the final partial batch only after the
-//! batching window has elapsed (latency/throughput knob).
+//! previous chunk completes; the batcher coalesces ready jobs that share an
+//! execution variant ([`VariantKey`]: N, m, P, gamma_bits AND the field
+//! count V — two-variable engine jobs and V-ROM multivar jobs never mix)
+//! into one dispatch of the largest compiled batch size that fits, padding
+//! the final partial batch only after the batching window has elapsed
+//! (latency/throughput knob).
 //!
 //! v2 queue ordering (docs/api.md): each variant keeps one FIFO lane per
 //! [`Priority`] class; a plan takes `High` before `Normal` before `Low`,
@@ -14,14 +16,14 @@
 //! never held back for company it cannot afford.
 
 use crate::coordinator::job::{JobId, Priority};
-use crate::ga::Dims;
+use crate::ga::VariantKey;
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 /// A dispatch plan: jobs to run together in one chunk execution.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchPlan {
-    pub dims: Dims,
+    pub variant: VariantKey,
     pub jobs: Vec<JobId>,
 }
 
@@ -39,11 +41,11 @@ const CLASSES: usize = 3;
 /// Ready-queues per variant with window-based release.
 #[derive(Debug)]
 pub struct Batcher {
-    /// Keyed by the FULL variant identity `(N, m, P, gamma_bits)` — every
-    /// component of [`Dims`]. Backends assert whole-`Dims` equality across
-    /// a plan, so the grouping key must never be coarser than `Dims`. Each
+    /// Keyed by the FULL variant identity ([`VariantKey`]: N, m, P,
+    /// gamma_bits, V). Backends assert whole-variant equality across a
+    /// plan, so the grouping key must never be coarser than the key. Each
     /// variant holds one FIFO lane per priority class.
-    queues: BTreeMap<(usize, u32, usize, u32), [VecDeque<Waiting>; CLASSES]>,
+    queues: BTreeMap<VariantKey, [VecDeque<Waiting>; CLASSES]>,
     /// Maximum batch the policy may form (≤ largest compiled B).
     max_batch: usize,
     /// How long a partial batch may wait for company.
@@ -59,26 +61,22 @@ impl Batcher {
         }
     }
 
-    fn key(dims: &Dims) -> (usize, u32, usize, u32) {
-        (dims.n, dims.m, dims.p, dims.gamma_bits)
-    }
-
     /// Mark a job ready for its next chunk (normal priority, no deadline).
-    pub fn push(&mut self, dims: Dims, id: JobId, now: Instant) {
-        self.push_job(dims, id, now, Priority::Normal, None);
+    pub fn push(&mut self, variant: VariantKey, id: JobId, now: Instant) {
+        self.push_job(variant, id, now, Priority::Normal, None);
     }
 
     /// Mark a job ready for its next chunk, with scheduling class and an
     /// optional absolute deadline.
     pub fn push_job(
         &mut self,
-        dims: Dims,
+        variant: VariantKey,
         id: JobId,
         now: Instant,
         priority: Priority,
         deadline: Option<Instant>,
     ) {
-        self.queues.entry(Self::key(&dims)).or_default()[priority.class()].push_back(Waiting {
+        self.queues.entry(variant).or_default()[priority.class()].push_back(Waiting {
             id,
             since: now,
             deadline,
@@ -88,8 +86,8 @@ impl Batcher {
     /// Drop a waiting job (client cancel / terminal while parked) so the
     /// ghost entry stops counting toward batch fullness, window expiry, or
     /// deadline urgency for the jobs still queued behind it.
-    pub fn remove(&mut self, dims: &Dims, id: JobId) {
-        if let Some(lanes) = self.queues.get_mut(&Self::key(dims)) {
+    pub fn remove(&mut self, variant: &VariantKey, id: JobId) {
+        if let Some(lanes) = self.queues.get_mut(variant) {
             for q in lanes.iter_mut() {
                 q.retain(|w| w.id != id);
             }
@@ -112,7 +110,7 @@ impl Batcher {
     /// jobs priority-first, FIFO within a class.
     pub fn drain_ready(&mut self, now: Instant) -> Vec<BatchPlan> {
         let mut plans = Vec::new();
-        for (&(n, m, p, gamma_bits), lanes) in self.queues.iter_mut() {
+        for (&variant, lanes) in self.queues.iter_mut() {
             loop {
                 let total: usize = lanes.iter().map(VecDeque::len).sum();
                 if total == 0 {
@@ -140,10 +138,7 @@ impl Batcher {
                         }
                     }
                 }
-                plans.push(BatchPlan {
-                    dims: Dims::new(n, m, p).with_gamma_bits(gamma_bits),
-                    jobs,
-                });
+                plans.push(BatchPlan { variant, jobs });
             }
         }
         plans
@@ -179,9 +174,10 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ga::Dims;
 
-    fn dims() -> Dims {
-        Dims::new(32, 20, 1)
+    fn dims() -> VariantKey {
+        VariantKey::from_dims(&Dims::new(32, 20, 1))
     }
 
     #[test]
@@ -213,8 +209,8 @@ mod tests {
     fn variants_do_not_mix() {
         let mut b = Batcher::new(8, Duration::ZERO);
         let t0 = Instant::now();
-        b.push(Dims::new(32, 20, 1), JobId(1), t0);
-        b.push(Dims::new(64, 20, 2), JobId(2), t0);
+        b.push(VariantKey::from_dims(&Dims::new(32, 20, 1)), JobId(1), t0);
+        b.push(VariantKey::from_dims(&Dims::new(64, 20, 2)), JobId(2), t0);
         let plans = b.drain_ready(t0);
         assert_eq!(plans.len(), 2);
         assert!(plans.iter().all(|p| p.jobs.len() == 1));
@@ -222,18 +218,39 @@ mod tests {
 
     #[test]
     fn gamma_bits_is_part_of_the_variant_key() {
-        // Backends assert whole-Dims equality per plan; mixed gamma_bits at
-        // equal (N, m, P) must therefore form separate plans.
+        // Backends assert whole-variant equality per plan; mixed gamma_bits
+        // at equal (N, m, P) must therefore form separate plans.
         let mut b = Batcher::new(8, Duration::ZERO);
         let t0 = Instant::now();
-        b.push(Dims::new(32, 20, 1), JobId(1), t0);
-        b.push(Dims::new(32, 20, 1).with_gamma_bits(14), JobId(2), t0);
+        b.push(VariantKey::from_dims(&Dims::new(32, 20, 1)), JobId(1), t0);
+        b.push(
+            VariantKey::from_dims(&Dims::new(32, 20, 1).with_gamma_bits(14)),
+            JobId(2),
+            t0,
+        );
         let plans = b.drain_ready(t0);
         assert_eq!(plans.len(), 2);
         assert!(plans.iter().all(|p| p.jobs.len() == 1));
-        let mut gammas: Vec<u32> = plans.iter().map(|p| p.dims.gamma_bits).collect();
+        let mut gammas: Vec<u32> = plans.iter().map(|p| p.variant.gamma_bits).collect();
         gammas.sort_unstable();
         assert_eq!(gammas, vec![12, 14]);
+    }
+
+    #[test]
+    fn field_count_is_part_of_the_variant_key() {
+        // A V = 4 multivar job must never share a plan with a V = 2 engine
+        // job of the same (N, m, P): different machines, different LFSR
+        // bank layouts.
+        let mut b = Batcher::new(8, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push(dims(), JobId(1), t0);
+        b.push(VariantKey { v: 4, ..dims() }, JobId(2), t0);
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.jobs.len() == 1));
+        let mut vs: Vec<u32> = plans.iter().map(|p| p.variant.v).collect();
+        vs.sort_unstable();
+        assert_eq!(vs, vec![2, 4]);
     }
 
     #[test]

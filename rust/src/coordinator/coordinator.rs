@@ -15,7 +15,7 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::workers::{
     spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, WorkMsg,
 };
-use crate::ga::{BackendKind, GaInstance};
+use crate::ga::{AnyGa, BackendKind};
 use crate::runtime::Manifest;
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
@@ -279,7 +279,9 @@ struct JobEntry {
     early_stop_chunks: u32,
     stale_chunks: u32,
     last_best: Option<i64>,
-    inst: Option<GaInstance>,
+    /// The parked machine between chunks: either the verified two-variable
+    /// engine or the V-ROM multivar machine ([`AnyGa`]).
+    inst: Option<AnyGa>,
     remaining: u32,
     priority: crate::coordinator::job::Priority,
     /// Absolute deadline (request-relative deadline + submit time).
@@ -297,7 +299,7 @@ struct JobEntry {
 fn finalize_job(
     id: JobId,
     entry: JobEntry,
-    inst: &GaInstance,
+    inst: &AnyGa,
     status: JobStatus,
     backend: &'static str,
     now: Instant,
@@ -351,7 +353,7 @@ fn finalize_job(
 fn update_snapshot(
     registry: &Registry,
     id: JobId,
-    inst: &GaInstance,
+    inst: &AnyGa,
     backend: &'static str,
     requested_k: u32,
 ) {
@@ -400,11 +402,13 @@ fn scheduler_loop(
         Batcher::new(1, Duration::ZERO)
     };
 
-    let dispatch = |plan_jobs: Vec<RunningJob>| {
+    let dispatch = |plan_jobs: Vec<RunningJob>, multi: bool| {
         let msg = WorkMsg::Batch(plan_jobs, K_CHUNK);
         match &pjrt_tx {
-            Some(tx) => tx.send(msg).is_ok(),
-            None => engine_tx.send(msg).is_ok(),
+            // The AOT artifacts are V = 2 lowerings: multivar plans always
+            // execute on the engine pool, PJRT or not.
+            Some(tx) if !multi => tx.send(msg).is_ok(),
+            _ => engine_tx.send(msg).is_ok(),
         }
     };
 
@@ -424,9 +428,9 @@ fn scheduler_loop(
                 progress_tx,
             }) => {
                 let now = Instant::now();
-                match GaInstance::from_params(&req.params) {
+                match AnyGa::from_params(&req.params) {
                     Ok(inst) => {
-                        let dims = *inst.dims();
+                        let variant = inst.variant();
                         let deadline = req.deadline.map(|d| now + d);
                         table.insert(
                             id,
@@ -448,7 +452,7 @@ fn scheduler_loop(
                                 cancelled: false,
                             },
                         );
-                        batcher.push_job(dims, id, now, req.priority, deadline);
+                        batcher.push_job(variant, id, now, req.priority, deadline);
                     }
                     Err(e) => {
                         metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -487,7 +491,7 @@ fn scheduler_loop(
                         let inst = entry.inst.take().unwrap();
                         // Purge the parked entry so it stops counting toward
                         // batch fullness / urgency for jobs queued behind it.
-                        batcher.remove(inst.dims(), id);
+                        batcher.remove(&inst.variant(), id);
                         let backend = snapshot_backend(&registry, id);
                         finalize_job(
                             id,
@@ -567,11 +571,11 @@ fn scheduler_loop(
                             );
                         }
                         None => {
-                            let dims = *inst.dims();
+                            let variant = inst.variant();
                             let priority = entry.priority;
                             let deadline = entry.deadline;
                             entry.inst = Some(inst);
-                            batcher.push_job(dims, id, now, priority, deadline);
+                            batcher.push_job(variant, id, now, priority, deadline);
                         }
                     }
                 }
@@ -585,6 +589,7 @@ fn scheduler_loop(
         // failed here rather than burning a backend dispatch.
         for plan in batcher.drain_ready(Instant::now()) {
             let now = Instant::now();
+            let multi = plan.variant.is_multi();
             let mut running = Vec::with_capacity(plan.jobs.len());
             for id in plan.jobs {
                 // Stale batcher entries (cancelled / finalized jobs) have no
@@ -624,7 +629,7 @@ fn scheduler_loop(
                 continue;
             }
             metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
-            if !dispatch(running) {
+            if !dispatch(running, multi) {
                 return; // backend gone
             }
         }

@@ -5,7 +5,8 @@
 //! v2 job lifecycle over the network:
 //!
 //! * `POST   /v1/jobs`     — submit (GA params + tag/priority/deadline_ms/
-//!   progress_every as flat JSON fields); `202` with the job id
+//!   progress_every as flat JSON fields; `function` takes any problem-
+//!   registry name and `vars` any V in [2, 8]); `202` with the job id
 //! * `GET    /v1/jobs`     — list known jobs (phase + progress summary)
 //! * `GET    /v1/jobs/:id` — status + curve-so-far (`:id` is `7` or `job-7`)
 //! * `DELETE /v1/jobs/:id` — cooperative cancellation
@@ -207,7 +208,10 @@ fn route(req: &Request, coord: &Coordinator) -> Response {
                     "DELETE" => delete_job(id, coord),
                     _ => Response::error(405, format!("{method} not allowed on {p}")),
                 },
-                None => Response::error(400, format!("invalid job id `{id_part}`")),
+                // An unparseable id names a job that cannot exist: that is
+                // a missing resource (404), not a malformed request (400) —
+                // same answer a well-formed-but-unknown id gets.
+                None => Response::error(404, format!("unknown job `{id_part}`")),
             },
             None => Response::error(404, format!("no such endpoint {} {}", req.method, p)),
         },
@@ -234,12 +238,18 @@ fn post_job(body: &[u8], coord: &Coordinator) -> Response {
         }
     };
     // GA params: defaults overridden by the same flat keys the `[ga]` config
-    // section uses (n, m, k, seed, function, mutation_rate, maximize, ...).
+    // section uses (n, m, k, seed, function, vars, mutation_rate, ...).
     let mut params = GaParams::default();
     if let Err(e) = crate::config::apply_ga(&mut params, &v) {
         return Response::error(400, e);
     }
     if let Err(e) = params.validate() {
+        return Response::error(400, e);
+    }
+    // Resolve the function against the problem registry NOW so a typo is a
+    // 400 at submission, not a Failed job the client discovers by polling
+    // (same resolver — and message — the scheduler uses).
+    if let Err(e) = crate::problems::resolve(&params.function) {
         return Response::error(400, e);
     }
     let mut req = OptimizeRequest::new(params);

@@ -191,6 +191,20 @@ impl JobResult {
         let (px, qx) = crate::bits::split(self.best_x, h);
         (crate::bits::to_signed(px, h), crate::bits::to_signed(qx, h))
     }
+
+    /// Decode best_x into `vars` signed field values, most-significant
+    /// field first (the V-ROM machine's layout; `decoded_fields(m, 2)` is
+    /// `decoded_vars(m)` as a vec).
+    pub fn decoded_fields(&self, m: u32, vars: u32) -> Vec<i64> {
+        assert!(vars >= 1 && m % vars == 0, "m must split into vars fields");
+        let h = m / vars;
+        (0..vars)
+            .map(|v| {
+                let field = (self.best_x >> ((vars - 1 - v) * h)) & crate::bits::mask32(h);
+                crate::bits::to_signed(field, h)
+            })
+            .collect()
+    }
 }
 
 /// A progress event: one completed chunk's state, emitted by the scheduler
@@ -409,6 +423,15 @@ mod tests {
         let mut r = result(JobId(1));
         r.best_x = crate::bits::concat(1023, 5, 10); // px=-1, qx=5 at m=20
         assert_eq!(r.decoded_vars(20), (-1, 5));
+        assert_eq!(r.decoded_fields(20, 2), vec![-1, 5]);
+    }
+
+    #[test]
+    fn decoded_fields_multivar_layout() {
+        let mut r = result(JobId(2));
+        // m=24, V=4, h=6: fields 0x3F (-1), 0x01 (1), 0x20 (-32), 0x00 (0).
+        r.best_x = (0x3F << 18) | (0x01 << 12) | (0x20 << 6);
+        assert_eq!(r.decoded_fields(24, 4), vec![-1, 1, -32, 0]);
     }
 
     #[test]

@@ -18,11 +18,15 @@
 //!  clients ◀─JobHandle───┘
 //! ```
 //!
-//! The canonical job state is always the behavioral
-//! [`GaInstance`](crate::ga::GaInstance); the
-//! PJRT path marshals it into literals and absorbs the advanced state back,
-//! so both backends are interchangeable mid-job (and bit-identical — see
-//! rust/tests/coordinator_integration.rs).
+//! The canonical job state is always a behavioral machine
+//! ([`AnyGa`](crate::ga::AnyGa): the two-variable
+//! [`GaInstance`](crate::ga::GaInstance) at V = 2, the V-ROM
+//! [`MultiVarGa`](crate::ga::MultiVarGa) otherwise); the PJRT path marshals
+//! V = 2 state into literals and absorbs the advanced state back, so both
+//! backends are interchangeable mid-job (and bit-identical — see
+//! rust/tests/coordinator_integration.rs). Multivar plans always execute on
+//! the engine pool — the batcher's [`VariantKey`](crate::ga::VariantKey)
+//! grouping (which includes V) keeps every dispatch machine-homogeneous.
 //!
 //! The v2 lifecycle surface (docs/api.md) layers steering and observability
 //! on the chunk boundary: requests carry [`Priority`] / deadline /

@@ -5,18 +5,20 @@
 
 use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
-use crate::ga::{BackendKind, GaInstance, StepBackend};
+use crate::ga::{AnyGa, BackendKind, GaInstance, MultiVarGa, StepBackend};
 use crate::runtime::{ChunkIo, Manifest, Runtime};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// A job in flight: canonical behavioral state + chunk accounting.
+/// A job in flight: canonical behavioral state + chunk accounting. The
+/// machine is an [`AnyGa`]: the batcher's [`crate::ga::VariantKey`] keying
+/// guarantees every job in one `WorkMsg::Batch` is the same kind.
 #[derive(Debug)]
 pub(crate) struct RunningJob {
     pub id: JobId,
-    pub inst: GaInstance,
+    pub inst: AnyGa,
     /// Generations still requested.
     pub remaining: u32,
     /// Generations executed by the just-finished chunk (set by backend).
@@ -67,9 +69,28 @@ pub(crate) fn run_engine_batch(
         .iter()
         .map(|j| if j.executed > 0 { 0 } else { j.remaining.min(chunk) })
         .collect();
-    {
-        let mut insts: Vec<&mut GaInstance> =
-            jobs.iter_mut().map(|j| &mut j.inst).collect();
+    // Batches are variant-homogeneous (batcher key includes V), so one
+    // machine-kind downcast serves the whole plan.
+    let multi = jobs.first().is_some_and(|j| matches!(j.inst, AnyGa::Multi(_)));
+    if multi {
+        let mut insts: Vec<&mut MultiVarGa> = jobs
+            .iter_mut()
+            .map(|j| {
+                j.inst
+                    .as_multi_mut()
+                    .expect("batched rows must share one machine kind")
+            })
+            .collect();
+        backend.step_multi_batch(&mut insts, &gens);
+    } else {
+        let mut insts: Vec<&mut GaInstance> = jobs
+            .iter_mut()
+            .map(|j| {
+                j.inst
+                    .as_two_mut()
+                    .expect("batched rows must share one machine kind")
+            })
+            .collect();
         backend.step_batch(&mut insts, &gens);
     }
     let mut advanced = 0;
@@ -221,11 +242,18 @@ fn run_pjrt_batch(
     metrics: &Metrics,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!jobs.is_empty(), "empty batch");
+    // The AOT artifacts are V = 2 lowerings; the scheduler routes multivar
+    // plans to the engine pool, so this is a defensive belt — a V-ROM job
+    // that somehow lands here falls back to the engine in-place.
+    anyhow::ensure!(
+        jobs.iter().all(|j| matches!(j.inst, AnyGa::Two(_))),
+        "multivar jobs are not supported on the PJRT path"
+    );
     let mut start = 0;
     while start < jobs.len() {
         let remaining = jobs.len() - start;
         let end = {
-            let dims = *jobs[start].inst.dims();
+            let dims = *jobs[start].inst.as_two().expect("checked above").dims();
             let exe_batch = rt.executable(&dims, remaining)?.meta.batch;
             start + remaining.min(exe_batch)
         };
@@ -242,7 +270,11 @@ fn run_pjrt_subbatch(
     jobs: &mut [RunningJob],
     metrics: &Metrics,
 ) -> anyhow::Result<()> {
-    let dims = *jobs[0].inst.dims();
+    let dims = *jobs[0]
+        .inst
+        .as_two()
+        .expect("run_pjrt_batch admits V = 2 only")
+        .dims();
     let exe = rt.executable(&dims, jobs.len())?;
     let b = exe.meta.batch;
     let k = exe.meta.k_chunk;
@@ -263,7 +295,10 @@ fn run_pjrt_subbatch(
     for row in 0..b {
         // Padding rows replicate row 0's state; their outputs are ignored.
         let src = &jobs[if row < rows { row } else { 0 }];
-        let inst = &src.inst;
+        let inst = src
+            .inst
+            .as_two()
+            .expect("run_pjrt_batch admits V = 2 only");
         io.pop.extend_from_slice(inst.population());
         io.lfsr.extend_from_slice(inst.bank().states());
         io.alpha.extend_from_slice(&inst.tables().alpha);
@@ -282,7 +317,11 @@ fn run_pjrt_subbatch(
     metrics.record_batch(rows, b - rows);
     for (row, job) in jobs.iter_mut().enumerate().take(rows) {
         let d = &dims;
-        job.inst.absorb_chunk(
+        let inst = job
+            .inst
+            .as_two_mut()
+            .expect("run_pjrt_batch admits V = 2 only");
+        inst.absorb_chunk(
             out.pop[row * d.n..(row + 1) * d.n].to_vec(),
             out.lfsr[row * d.lfsr_len()..(row + 1) * d.lfsr_len()].to_vec(),
             out.best_y[row],

@@ -1,0 +1,234 @@
+//! [`AnyGa`]: one job-level machine over both chromosome layouts — the
+//! golden-verified two-variable engine ([`GaInstance`]) and the V-ROM
+//! multi-variable machine ([`MultiVarGa`]).
+//!
+//! The coordinator parks, batches and observes jobs through this enum so a
+//! registry problem submitted at any V ∈ [2, 8] rides the SAME lifecycle
+//! (priorities, deadlines, progress events, snapshots) as the paper's
+//! two-variable functions. Dispatch stays statically typed underneath: the
+//! batcher groups jobs by [`VariantKey`] (which includes V), so a formed
+//! plan is always homogeneous and backends downcast once per batch, not per
+//! row.
+
+use crate::config::GaParams;
+use crate::ga::{BestSoFar, Dims, GaInstance, MultiDims, MultiVarGa};
+
+/// Execution-variant identity: everything that fixes array shapes across a
+/// batch. The superset of [`Dims`] — `v` distinguishes the two-variable
+/// machine (`v == 2`) from V-ROM lowerings, which have different LFSR-bank
+/// layouts and FFM structures and may never share a dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantKey {
+    pub n: usize,
+    pub m: u32,
+    pub p: usize,
+    pub gamma_bits: u32,
+    pub v: u32,
+}
+
+impl VariantKey {
+    /// The two-variable engine's variant for a [`Dims`].
+    pub fn from_dims(dims: &Dims) -> Self {
+        Self {
+            n: dims.n,
+            m: dims.m,
+            p: dims.p,
+            gamma_bits: dims.gamma_bits,
+            v: 2,
+        }
+    }
+
+    pub fn from_multi_dims(dims: &MultiDims) -> Self {
+        Self {
+            n: dims.n,
+            m: dims.m,
+            p: dims.p,
+            gamma_bits: dims.gamma_bits,
+            v: dims.v,
+        }
+    }
+
+    /// True when this variant runs the V-ROM machine rather than the
+    /// two-variable engine (and therefore cannot take the PJRT path).
+    pub fn is_multi(&self) -> bool {
+        self.v != 2
+    }
+}
+
+/// A live optimization on either machine.
+#[derive(Debug, Clone)]
+pub enum AnyGa {
+    /// The verified two-variable engine (V = 2; PJRT-eligible).
+    Two(GaInstance),
+    /// The V-ROM + adder-tree machine (V ≠ 2; engine backends only).
+    Multi(MultiVarGa),
+}
+
+impl AnyGa {
+    /// Build the machine a request's parameters call for: the fitness
+    /// function is resolved through the problem registry
+    /// ([`crate::problems`]), lowered to ROM tables at `params.vars`
+    /// (process-wide cached), and mounted on the matching machine.
+    pub fn from_params(params: &GaParams) -> crate::Result<AnyGa> {
+        params.validate()?;
+        let problem = crate::problems::resolve(&params.function)?;
+        if params.vars == 2 {
+            let dims = Dims::from_params(params);
+            let tables =
+                crate::problems::cached_problem_tables(problem, params.m, params.gamma_bits);
+            Ok(AnyGa::Two(GaInstance::new(
+                dims,
+                tables,
+                params.maximize,
+                params.seed,
+            )))
+        } else {
+            let dims = MultiDims::new(params.n, params.m, params.vars, params.p())
+                .with_gamma_bits(params.gamma_bits);
+            let rom = crate::problems::cached_lowered(
+                problem,
+                params.vars,
+                params.m,
+                params.gamma_bits,
+            );
+            Ok(AnyGa::Multi(MultiVarGa::new(
+                dims,
+                rom,
+                params.maximize,
+                params.seed,
+            )))
+        }
+    }
+
+    /// The batcher's grouping key for this machine.
+    pub fn variant(&self) -> VariantKey {
+        match self {
+            AnyGa::Two(inst) => VariantKey::from_dims(inst.dims()),
+            AnyGa::Multi(inst) => VariantKey::from_multi_dims(inst.dims()),
+        }
+    }
+
+    pub fn best(&self) -> &BestSoFar {
+        match self {
+            AnyGa::Two(inst) => inst.best(),
+            AnyGa::Multi(inst) => inst.best(),
+        }
+    }
+
+    pub fn curve(&self) -> &[i64] {
+        match self {
+            AnyGa::Two(inst) => inst.curve(),
+            AnyGa::Multi(inst) => inst.curve(),
+        }
+    }
+
+    pub fn generation(&self) -> u32 {
+        match self {
+            AnyGa::Two(inst) => inst.generation(),
+            AnyGa::Multi(inst) => inst.generation(),
+        }
+    }
+
+    pub fn population(&self) -> &[u32] {
+        match self {
+            AnyGa::Two(inst) => inst.population(),
+            AnyGa::Multi(inst) => inst.population(),
+        }
+    }
+
+    /// Run `k` generations on whichever machine this is (scalar stepping;
+    /// the coordinator path batches through a backend instead).
+    pub fn run(&mut self, k: u32) -> BestSoFar {
+        match self {
+            AnyGa::Two(inst) => inst.run(k),
+            AnyGa::Multi(inst) => inst.run(k),
+        }
+    }
+
+    pub fn as_two(&self) -> Option<&GaInstance> {
+        match self {
+            AnyGa::Two(inst) => Some(inst),
+            AnyGa::Multi(_) => None,
+        }
+    }
+
+    pub fn as_two_mut(&mut self) -> Option<&mut GaInstance> {
+        match self {
+            AnyGa::Two(inst) => Some(inst),
+            AnyGa::Multi(_) => None,
+        }
+    }
+
+    pub fn as_multi_mut(&mut self) -> Option<&mut MultiVarGa> {
+        match self {
+            AnyGa::Two(_) => None,
+            AnyGa::Multi(inst) => Some(inst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(function: &str, vars: u32, m: u32) -> GaParams {
+        GaParams {
+            n: 16,
+            m,
+            k: 30,
+            function: function.into(),
+            vars,
+            seed: 9,
+            ..GaParams::default()
+        }
+    }
+
+    #[test]
+    fn v2_builds_the_verified_engine() {
+        let ga = AnyGa::from_params(&params("f3", 2, 20)).unwrap();
+        assert!(matches!(ga, AnyGa::Two(_)));
+        let v = ga.variant();
+        assert_eq!((v.n, v.m, v.v), (16, 20, 2));
+        assert!(!v.is_multi());
+    }
+
+    #[test]
+    fn v4_builds_the_multivar_machine() {
+        let mut ga = AnyGa::from_params(&params("sphere", 4, 20)).unwrap();
+        assert!(matches!(ga, AnyGa::Multi(_)));
+        assert!(ga.variant().is_multi());
+        ga.run(30);
+        assert_eq!(ga.generation(), 30);
+        assert_eq!(ga.curve().len(), 30);
+        assert!(ga.population().len() == 16);
+    }
+
+    #[test]
+    fn identical_trajectory_to_direct_ga_instance_at_v2() {
+        let p = params("f3", 2, 20);
+        let mut a = AnyGa::from_params(&p).unwrap();
+        let mut b = GaInstance::from_params(&p).unwrap();
+        a.run(30);
+        b.run(30);
+        assert_eq!(a.population(), b.population());
+        assert_eq!(a.best().y, b.best().y);
+        assert_eq!(a.curve(), b.curve());
+    }
+
+    #[test]
+    fn unknown_function_and_bad_vars_rejected() {
+        assert!(AnyGa::from_params(&params("nope", 2, 20)).is_err());
+        assert!(AnyGa::from_params(&params("sphere", 3, 20)).is_err()); // 20 % 3 != 0
+        let err = AnyGa::from_params(&params("warp", 2, 20)).unwrap_err();
+        assert!(err.to_string().contains("sphere"), "lists known names: {err}");
+    }
+
+    #[test]
+    fn variant_key_orders_and_separates_v() {
+        let a = VariantKey { n: 16, m: 20, p: 1, gamma_bits: 12, v: 2 };
+        let b = VariantKey { v: 4, ..a };
+        assert_ne!(a, b);
+        assert!(a < b);
+        assert_eq!(VariantKey::from_dims(&Dims::new(16, 20, 1)), a);
+    }
+}

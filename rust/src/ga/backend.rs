@@ -27,7 +27,8 @@
 //! executor behind the same coordinator seam; it keeps its dedicated thread
 //! because the `Runtime` is not `Send` (see `coordinator/workers.rs`).
 
-use crate::ga::{engine, BestSoFar, Dims, GaInstance};
+use crate::ga::multivar::{generation_pass, MultiDims, MultiRom};
+use crate::ga::{engine, BestSoFar, Dims, GaInstance, MultiVarGa};
 use crate::lfsr::step as lfsr_step;
 use crate::rom::RomTables;
 use std::sync::Arc;
@@ -96,6 +97,18 @@ pub trait StepBackend: Send + Sync {
     /// Advance a single instance (convenience over [`Self::step_batch`]).
     fn step_one(&self, inst: &mut GaInstance, gens: u32) {
         self.step_batch(&mut [inst], &[gens]);
+    }
+
+    /// Advance `insts[i]` by `gens[i]` generations on the V-ROM
+    /// multi-variable machine (same contract as [`Self::step_batch`]: one
+    /// shared [`MultiDims`] per call, bit-identical to isolated
+    /// [`MultiVarGa::run`]). Default: per-row scalar stepping, which IS the
+    /// reference; [`BatchedSoaBackend`] overrides with fused SoA passes.
+    fn step_multi_batch(&self, insts: &mut [&mut MultiVarGa], gens: &[u32]) {
+        assert_eq!(insts.len(), gens.len(), "one generation count per instance");
+        for (inst, &k) in insts.iter_mut().zip(gens) {
+            inst.run(k);
+        }
     }
 }
 
@@ -250,6 +263,121 @@ impl StepBackend for BatchedSoaBackend {
             );
         }
     }
+
+    /// The V-ROM machine batched the same way: row-major `[B, N]`
+    /// population + `[B, L]` bank (multi-V layout, stride L), per-row
+    /// `Arc<MultiRom>`; each generation runs the multivar generation pass
+    /// per row over the contiguous SoA slices — the SAME code the scalar
+    /// [`MultiVarGa::step`] drives — then one fused LFSR tick across the
+    /// whole bank. Bit-identical by construction.
+    fn step_multi_batch(&self, insts: &mut [&mut MultiVarGa], gens: &[u32]) {
+        assert_eq!(insts.len(), gens.len(), "one generation count per instance");
+        let Some(first) = insts.first() else { return };
+        let dims: MultiDims = *first.dims();
+        assert!(
+            insts.iter().all(|i| i.dims() == &dims),
+            "batched rows must share one variant (MultiDims)"
+        );
+        let max_gens = gens.iter().copied().max().unwrap_or(0);
+        if max_gens == 0 {
+            return;
+        }
+
+        let b = insts.len();
+        let n = dims.n;
+        let l = dims.lfsr_len();
+
+        let mut pop: Vec<u32> = Vec::with_capacity(b * n);
+        let mut lfsr: Vec<u32> = Vec::with_capacity(b * l);
+        let mut roms: Vec<Arc<MultiRom>> = Vec::with_capacity(b);
+        let mut maximize: Vec<bool> = Vec::with_capacity(b);
+        for inst in insts.iter() {
+            pop.extend_from_slice(inst.population());
+            lfsr.extend_from_slice(inst.bank().states());
+            roms.push(inst.rom().clone());
+            maximize.push(inst.maximize());
+        }
+
+        let mut y = vec![0i64; b * n];
+        let mut w = vec![0u32; b * n];
+        let mut next = vec![0u32; b * n];
+        let mut bests: Vec<BestSoFar> =
+            maximize.iter().map(|&mx| BestSoFar::new(mx)).collect();
+        let mut curves: Vec<Vec<i64>> =
+            gens.iter().map(|&k| Vec::with_capacity(k as usize)).collect();
+
+        for g in 0..max_gens {
+            let all_active = gens.iter().all(|&k| k > g);
+
+            // FFM + SM + CM + MM per row over the contiguous SoA slices.
+            for row in 0..b {
+                if gens[row] <= g {
+                    continue;
+                }
+                let s = row * n;
+                generation_pass(
+                    &dims,
+                    &roms[row],
+                    maximize[row],
+                    &pop[s..s + n],
+                    &lfsr[row * l..(row + 1) * l],
+                    &mut y[s..s + n],
+                    &mut w[s..s + n],
+                    &mut next[s..s + n],
+                );
+            }
+
+            // Best-of-generation fold over the INPUT population (same
+            // accounting as `MultiVarGa::step`).
+            for row in 0..b {
+                if gens[row] <= g {
+                    continue;
+                }
+                let s = row * n;
+                let mut gen_best = BestSoFar::new(maximize[row]);
+                for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
+                    gen_best.offer(*yy, *x);
+                }
+                bests[row].offer(gen_best.y, gen_best.x);
+                curves[row].push(gen_best.y);
+            }
+
+            // Commit: publish offspring + one fused tick when every row is
+            // still active (the vectorizable fast path).
+            if all_active {
+                std::mem::swap(&mut pop, &mut next);
+                for s in lfsr.iter_mut() {
+                    *s = lfsr_step(*s);
+                }
+            } else {
+                for row in 0..b {
+                    if gens[row] <= g {
+                        continue;
+                    }
+                    let s = row * n;
+                    pop[s..s + n].copy_from_slice(&next[s..s + n]);
+                    for st in lfsr[row * l..(row + 1) * l].iter_mut() {
+                        *st = lfsr_step(*st);
+                    }
+                }
+            }
+        }
+
+        for (row, inst) in insts.iter_mut().enumerate() {
+            if gens[row] == 0 {
+                continue;
+            }
+            let s = row * n;
+            inst.absorb_chunk(
+                pop[s..s + n].to_vec(),
+                lfsr[row * l..(row + 1) * l].to_vec(),
+                bests[row].y,
+                bests[row].x,
+                &curves[row],
+                gens[row],
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -383,5 +511,83 @@ mod tests {
     fn empty_batch_is_a_no_op() {
         BatchedSoaBackend.step_batch(&mut [], &[]);
         ScalarBackend.step_batch(&mut [], &[]);
+        BatchedSoaBackend.step_multi_batch(&mut [], &[]);
+        ScalarBackend.step_multi_batch(&mut [], &[]);
+    }
+
+    // ---- multivar (V-ROM machine) batching ----
+
+    fn multi_fleet(count: usize, maximize: bool) -> Vec<MultiVarGa> {
+        let d = MultiDims::new(16, 24, 4, 1);
+        let sq = |x: f64| x * x;
+        let rom = Arc::new(MultiRom::build(&d, &[&sq, &sq, &sq, &sq], |g| g, true));
+        (0..count)
+            .map(|i| MultiVarGa::new(d, rom.clone(), maximize, 700 + i as u64))
+            .collect()
+    }
+
+    fn assert_same_multi(a: &MultiVarGa, b: &MultiVarGa) {
+        assert_eq!(a.population(), b.population(), "population");
+        assert_eq!(a.bank().states(), b.bank().states(), "lfsr bank");
+        assert_eq!(a.generation(), b.generation(), "generation");
+        assert_eq!(a.best().y, b.best().y, "best y");
+        assert_eq!(a.best().x, b.best().x, "best x");
+        assert_eq!(a.curve(), b.curve(), "curve");
+    }
+
+    #[test]
+    fn batched_multi_rows_equal_isolated_runs() {
+        let mut scalar = multi_fleet(5, false);
+        let mut batched = scalar.clone();
+        for i in &mut scalar {
+            i.run(30);
+        }
+        let mut refs: Vec<&mut MultiVarGa> = batched.iter_mut().collect();
+        BatchedSoaBackend.step_multi_batch(&mut refs, &[30; 5]);
+        for (a, b) in scalar.iter().zip(&batched) {
+            assert_same_multi(a, b);
+        }
+    }
+
+    #[test]
+    fn ragged_multi_generation_counts_respected() {
+        let gens = [7u32, 0, 25, 13];
+        let mut scalar = multi_fleet(4, true);
+        let mut batched = scalar.clone();
+        for (i, &k) in scalar.iter_mut().zip(gens.iter()) {
+            i.run(k);
+        }
+        let mut refs: Vec<&mut MultiVarGa> = batched.iter_mut().collect();
+        BatchedSoaBackend.step_multi_batch(&mut refs, &gens);
+        for (a, b) in scalar.iter().zip(&batched) {
+            assert_same_multi(a, b);
+        }
+    }
+
+    #[test]
+    fn scalar_backend_multi_is_the_reference_path() {
+        let mut fleet = multi_fleet(2, false);
+        let mut direct = fleet.clone();
+        for i in &mut direct {
+            i.run(20);
+        }
+        let mut refs: Vec<&mut MultiVarGa> = fleet.iter_mut().collect();
+        ScalarBackend.step_multi_batch(&mut refs, &[20; 2]);
+        for (a, b) in direct.iter().zip(&fleet) {
+            assert_same_multi(a, b);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "share one variant")]
+    fn mixed_multi_dims_rejected() {
+        let sq = |x: f64| x * x;
+        let d1 = MultiDims::new(8, 24, 4, 1);
+        let d2 = MultiDims::new(16, 24, 4, 1);
+        let r1 = MultiRom::build(&d1, &[&sq, &sq, &sq, &sq], |g| g, true);
+        let r2 = MultiRom::build(&d2, &[&sq, &sq, &sq, &sq], |g| g, true);
+        let mut a = MultiVarGa::new(d1, r1, false, 1);
+        let mut b = MultiVarGa::new(d2, r2, false, 2);
+        BatchedSoaBackend.step_multi_batch(&mut [&mut a, &mut b], &[5, 5]);
     }
 }

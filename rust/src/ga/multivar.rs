@@ -20,11 +20,17 @@
 //!
 //! LFSR bank layout generalizes DESIGN.md §5: `[2N selection, (N/2)·V
 //! crossover, P mutation]`, length `N·(2 + V/2) + P`.
+//!
+//! The single-generation work is factored into [`generation_pass`], a pure
+//! function over raw state slices: [`MultiVarGa::step`] and the batched SoA
+//! backend ([`crate::ga::BatchedSoaBackend`]) drive the SAME code, so the
+//! scalar and batched multivar trajectories cannot drift.
 
 use crate::bits::{mask32, top_bits};
 use crate::ga::{BestSoFar, Dims};
 use crate::lfsr::LfsrBank;
 use crate::rom::RomTables;
+use std::sync::Arc;
 
 /// Multi-variable dimensions: V equal-width fields.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,6 +54,11 @@ impl MultiDims {
             p,
             gamma_bits: crate::rom::GAMMA_BITS_DEFAULT,
         }
+    }
+
+    pub fn with_gamma_bits(mut self, gamma_bits: u32) -> Self {
+        self.gamma_bits = gamma_bits;
+        self
     }
 
     /// Bits per field.
@@ -81,7 +92,7 @@ impl MultiDims {
 }
 
 /// Per-variable ROM set + γ rescale (the V-ROM FFM).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MultiRom {
     /// ρ_v tables, each 2^h entries.
     pub roms: Vec<Vec<i64>>,
@@ -146,11 +157,9 @@ impl MultiRom {
         }
     }
 
-    /// V-ROM FFM evaluation: γ(Σ ρ_v(field_v)).
-    pub fn evaluate(&self, dims: &MultiDims, x: u32) -> i64 {
-        let delta: i64 = (0..dims.v)
-            .map(|v| self.roms[v as usize][dims.field(x, v) as usize])
-            .sum();
+    /// Map an adder-tree sum δ through the γ stage (bypass or LUT bucket).
+    #[inline]
+    pub fn finish(&self, delta: i64) -> i64 {
         if self.gamma_bypass {
             delta
         } else {
@@ -159,23 +168,133 @@ impl MultiRom {
             self.gamma[gidx as usize]
         }
     }
+
+    /// V-ROM FFM evaluation: γ(Σ ρ_v(field_v)).
+    pub fn evaluate(&self, dims: &MultiDims, x: u32) -> i64 {
+        let delta: i64 = (0..dims.v)
+            .map(|v| self.roms[v as usize][dims.field(x, v) as usize])
+            .sum();
+        self.finish(delta)
+    }
+
+    /// Best achievable fitness over the whole chromosome space. Fields are
+    /// independent, so the extremal δ is the sum of per-ROM extrema; valid
+    /// whenever γ is monotone non-decreasing (true for every registry
+    /// problem — asserted by `rust/tests/problems_suite.rs`).
+    pub fn ideal(&self, maximize: bool) -> i64 {
+        let delta: i64 = self
+            .roms
+            .iter()
+            .map(|r| {
+                if maximize {
+                    *r.iter().max().unwrap()
+                } else {
+                    *r.iter().min().unwrap()
+                }
+            })
+            .sum();
+        self.finish(delta)
+    }
+
+    /// Reachable fixed-point output range `[lo, hi]` (γ-mapped δ extrema;
+    /// same monotone-γ assumption as [`MultiRom::ideal`]).
+    pub fn output_range(&self) -> (i64, i64) {
+        let lo = self.ideal(false);
+        let hi = self.ideal(true);
+        (lo.min(hi), lo.max(hi))
+    }
+}
+
+/// FFM + SM + CM + MM for one multivar row over raw state slices in the
+/// multi-V bank layout (module docs). Writes the input population's fitness
+/// into `y`, tournament winners into `w` and the offspring into `z`; does
+/// NOT advance the LFSR bank or fold the running best — callers commit the
+/// generation. One implementation serves [`MultiVarGa::step`] and the
+/// batched SoA backend so the layouts cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn generation_pass(
+    d: &MultiDims,
+    rom: &MultiRom,
+    maximize: bool,
+    pop: &[u32],
+    states: &[u32],
+    y: &mut [i64],
+    w: &mut [u32],
+    z: &mut [u32],
+) {
+    let n = d.n;
+    debug_assert_eq!(pop.len(), n);
+    debug_assert_eq!(states.len(), d.lfsr_len());
+    let h = d.h();
+    let ones = mask32(h);
+
+    // FFM: V-ROM evaluation.
+    for (x, yy) in pop.iter().zip(y.iter_mut()) {
+        *yy = rom.evaluate(d, *x);
+    }
+
+    // SM (unchanged from the 2-var machine).
+    let sel_bits = d.sel_bits();
+    for (j, wj) in w.iter_mut().enumerate().take(n) {
+        let i1 = top_bits(states[2 * j], sel_bits) as usize;
+        let i2 = top_bits(states[2 * j + 1], sel_bits) as usize;
+        let first = if maximize { y[i1] > y[i2] } else { y[i1] < y[i2] };
+        *wj = if first { pop[i1] } else { pop[i2] };
+    }
+
+    // CM: one cut LFSR + mask network per field per pair.
+    let cut_bits = d.cut_bits();
+    let mbits = mask32(d.m);
+    let cm_base = 2 * n;
+    for i in 0..n / 2 {
+        let (w0, w1) = (w[2 * i], w[2 * i + 1]);
+        let mut c0 = 0u32;
+        let mut c1 = 0u32;
+        for v in 0..d.v {
+            let state = states[cm_base + i * d.v as usize + v as usize];
+            let shift = top_bits(state, cut_bits).min(h);
+            let mask = ones >> shift;
+            let f0 = d.field(w0, v);
+            let f1 = d.field(w1, v);
+            let off = (d.v - 1 - v) * h;
+            c0 |= (((f0 & !mask) | (f1 & mask)) & ones) << off;
+            c1 |= (((f1 & !mask) | (f0 & mask)) & ones) << off;
+        }
+        z[2 * i] = c0 & mbits;
+        z[2 * i + 1] = c1 & mbits;
+    }
+
+    // MM (unchanged).
+    let mm_base = cm_base + (n / 2) * d.v as usize;
+    for p in 0..d.p {
+        z[p] ^= top_bits(states[mm_base + p], d.m);
+    }
 }
 
 /// The V-variable machine (behavioral; structured like [`crate::ga`]).
 #[derive(Debug, Clone)]
 pub struct MultiVarGa {
     dims: MultiDims,
-    rom: MultiRom,
+    rom: Arc<MultiRom>,
     maximize: bool,
     pop: Vec<u32>,
     bank: LfsrBank,
     best: BestSoFar,
     generation: u32,
     curve: Vec<i64>,
+    // Scratch buffers reused across generations (hot path: no allocation).
+    scratch_y: Vec<i64>,
+    scratch_w: Vec<u32>,
+    scratch_next: Vec<u32>,
 }
 
 impl MultiVarGa {
-    pub fn new(dims: MultiDims, rom: MultiRom, maximize: bool, seed: u64) -> Self {
+    pub fn new(
+        dims: MultiDims,
+        rom: impl Into<Arc<MultiRom>>,
+        maximize: bool,
+        seed: u64,
+    ) -> Self {
         let pop = crate::prng::initial_population(seed, dims.n, dims.m);
         // Same stream tag as GaInstance so V=2 equivalence holds per seed.
         let states =
@@ -185,7 +304,7 @@ impl MultiVarGa {
 
     pub fn from_state(
         dims: MultiDims,
-        rom: MultiRom,
+        rom: impl Into<Arc<MultiRom>>,
         maximize: bool,
         pop: Vec<u32>,
         bank_states: Vec<u32>,
@@ -197,14 +316,37 @@ impl MultiVarGa {
         let bank = LfsrBank::from_states_unchecked(bank_states);
         Self {
             dims,
-            rom,
+            rom: rom.into(),
             maximize,
             pop,
             bank,
             best: BestSoFar::new(maximize),
             generation: 0,
             curve: Vec::new(),
+            scratch_y: vec![0; dims.n],
+            scratch_w: vec![0; dims.n],
+            scratch_next: vec![0; dims.n],
         }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> &MultiDims {
+        &self.dims
+    }
+
+    #[inline]
+    pub fn rom(&self) -> &Arc<MultiRom> {
+        &self.rom
+    }
+
+    #[inline]
+    pub fn maximize(&self) -> bool {
+        self.maximize
+    }
+
+    #[inline]
+    pub fn bank(&self) -> &LfsrBank {
+        &self.bank
     }
 
     pub fn population(&self) -> &[u32] {
@@ -226,62 +368,26 @@ impl MultiVarGa {
     /// One generation (Algorithm 1 generalized to V fields).
     pub fn step(&mut self) {
         let d = self.dims;
-        let n = d.n;
-        let h = d.h();
-        let ones = mask32(h);
-        let states = self.bank.states();
-
-        // FFM: V-ROM evaluation.
-        let y: Vec<i64> = self.pop.iter().map(|&x| self.rom.evaluate(&d, x)).collect();
-
-        // SM (unchanged from the 2-var machine).
-        let sel_bits = d.sel_bits();
-        let mut w = vec![0u32; n];
-        for j in 0..n {
-            let i1 = top_bits(states[2 * j], sel_bits) as usize;
-            let i2 = top_bits(states[2 * j + 1], sel_bits) as usize;
-            let first = if self.maximize { y[i1] > y[i2] } else { y[i1] < y[i2] };
-            w[j] = if first { self.pop[i1] } else { self.pop[i2] };
-        }
-
-        // CM: one cut LFSR + mask network per field per pair.
-        let cut_bits = d.cut_bits();
-        let mbits = mask32(d.m);
-        let cm_base = 2 * n;
-        let mut z = vec![0u32; n];
-        for i in 0..n / 2 {
-            let (w0, w1) = (w[2 * i], w[2 * i + 1]);
-            let mut c0 = 0u32;
-            let mut c1 = 0u32;
-            for v in 0..d.v {
-                let state = states[cm_base + i * d.v as usize + v as usize];
-                let shift = top_bits(state, cut_bits).min(h);
-                let mask = ones >> shift;
-                let f0 = d.field(w0, v);
-                let f1 = d.field(w1, v);
-                let off = (d.v - 1 - v) * h;
-                c0 |= (((f0 & !mask) | (f1 & mask)) & ones) << off;
-                c1 |= (((f1 & !mask) | (f0 & mask)) & ones) << off;
-            }
-            z[2 * i] = c0 & mbits;
-            z[2 * i + 1] = c1 & mbits;
-        }
-
-        // MM (unchanged).
-        let mm_base = cm_base + (n / 2) * d.v as usize;
-        for p in 0..d.p {
-            z[p] ^= top_bits(states[mm_base + p], d.m);
-        }
+        generation_pass(
+            &d,
+            &self.rom,
+            self.maximize,
+            &self.pop,
+            self.bank.states(),
+            &mut self.scratch_y,
+            &mut self.scratch_w,
+            &mut self.scratch_next,
+        );
 
         // Best tracking over the input population + LFSR advance.
         let mut gen_best = BestSoFar::new(self.maximize);
-        for (x, yy) in self.pop.iter().zip(&y) {
+        for (x, yy) in self.pop.iter().zip(&self.scratch_y) {
             gen_best.offer(*yy, *x);
         }
         self.best.offer(gen_best.y, gen_best.x);
         self.curve.push(gen_best.y);
         self.bank.tick_all_flat();
-        self.pop = z;
+        std::mem::swap(&mut self.pop, &mut self.scratch_next);
         self.generation += 1;
     }
 
@@ -290,6 +396,27 @@ impl MultiVarGa {
             self.step();
         }
         self.best
+    }
+
+    /// Overwrite state from a batched-path round trip (pop + bank after a
+    /// chunk, plus the chunk's best and curve slice) — the multivar twin of
+    /// [`crate::ga::GaInstance::absorb_chunk`].
+    pub fn absorb_chunk(
+        &mut self,
+        pop: Vec<u32>,
+        bank_states: Vec<u32>,
+        best_y: i64,
+        best_x: u32,
+        curve: &[i64],
+        generations: u32,
+    ) {
+        assert_eq!(pop.len(), self.dims.n);
+        assert_eq!(bank_states.len(), self.dims.lfsr_len());
+        self.pop = pop;
+        self.bank = LfsrBank::from_states_unchecked(bank_states);
+        self.best.offer(best_y, best_x);
+        self.curve.extend_from_slice(curve);
+        self.generation += generations;
     }
 }
 
@@ -374,6 +501,33 @@ mod tests {
         let best = ga.run(100);
         assert!(best.y >= 0);
         assert!(best.y < 60, "best {}", best.y);
+    }
+
+    #[test]
+    fn ideal_and_range_from_per_rom_extrema() {
+        let d = MultiDims::new(8, 24, 3, 1);
+        let sq = |x: f64| x * x;
+        let rom = MultiRom::build(&d, &[&sq, &sq, &sq], |g| g, true);
+        assert_eq!(rom.ideal(false), 0); // all three fields at 0
+        assert_eq!(rom.ideal(true), 3 * 128 * 128); // all at -128
+        assert_eq!(rom.output_range(), (0, 3 * 128 * 128));
+        assert_eq!(rom.finish(7), 7); // bypass: identity
+    }
+
+    #[test]
+    fn absorb_chunk_threads_state() {
+        let d = MultiDims::new(4, 20, 4, 1);
+        let id = |x: f64| x;
+        let rom = MultiRom::build(&d, &[&id, &id, &id, &id], |g| g, true);
+        let mut ga = MultiVarGa::new(d, rom, false, 5);
+        let pop = vec![1u32, 2, 3, 4];
+        let bank = vec![9u32; d.lfsr_len()];
+        ga.absorb_chunk(pop.clone(), bank, -100, 7, &[-50, -100], 2);
+        assert_eq!(ga.population(), &pop[..]);
+        assert_eq!(ga.generation(), 2);
+        assert_eq!(ga.best().y, -100);
+        assert_eq!(ga.best().x, 7);
+        assert_eq!(ga.curve(), &[-50, -100]);
     }
 
     #[test]

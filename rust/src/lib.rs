@@ -15,6 +15,10 @@
 //!
 //! [`coordinator`] is the serving layer gluing it together: routing,
 //! dynamic batching, chunked execution with early stopping, metrics.
+//! [`problems`] is the workload layer above it: a registry of n-variable
+//! benchmark functions in the paper's γ(Σ ρ_v) decomposition, the ROM
+//! compiler lowering them onto either machine, and the accuracy-evaluation
+//! suite (docs/problems.md).
 //! [`synth`] reproduces the paper's synthesis results (Table 1, Figs 13-16)
 //! from structural area/timing models over the RTL netlist.
 //!
@@ -31,6 +35,7 @@ pub mod ga;
 pub mod jsonmini;
 pub mod lfsr;
 pub mod prng;
+pub mod problems;
 pub mod rom;
 pub mod rtl;
 pub mod runtime;

@@ -1,0 +1,265 @@
+//! The multivar ROM compiler: lowers any registry [`Problem`] at any
+//! V ∈ [2, 8] and field width h = m/V into the V-ROM + adder-tree tables
+//! the machines consume, with process-wide caching (generalizing the
+//! `rom::cache` table cache through the shared [`RomKey`] keyspace).
+//!
+//! Lowering mirrors [`crate::rom::build_tables`] exactly — signed field
+//! decode, `py_round` quantization to 2^out_frac steps, γ bucket-midpoint
+//! sampling — so a V = 2 lowering of f1/f2/f3 is bit-identical to the seed
+//! tables (test-pinned), and a V = 2 lowering of ANY problem yields
+//! [`RomTables`] the verified two-variable engine (and the PJRT path, which
+//! takes tables as runtime inputs) can run unchanged.
+
+use crate::ga::MultiRom;
+use crate::problems::registry::Problem;
+use crate::rom::{RomKey, RomTables};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The V-ROM machine's supported field counts.
+pub const MIN_VARS: u32 = 2;
+pub const MAX_VARS: u32 = 8;
+
+/// Lower `problem` at `v` fields over an m-bit chromosome: V ρ-ROMs of
+/// 2^(m/v) entries plus the γ LUT and its rescale constants.
+///
+/// Panics when the shape is invalid (`m % v != 0`, or v outside the
+/// [`MIN_VARS`]..=[`MAX_VARS`] range); config validation rejects those
+/// upstream.
+pub fn lower(problem: &Problem, v: u32, m: u32, gamma_bits: u32) -> MultiRom {
+    assert!(
+        (MIN_VARS..=MAX_VARS).contains(&v),
+        "v must be in [{MIN_VARS}, {MAX_VARS}], got {v}"
+    );
+    assert!(m % v == 0, "m = {m} must split into v = {v} equal fields");
+    let h = m / v;
+    let size = 1usize << h;
+    let scale = problem.scale(h);
+    let out_scale = (1i64 << problem.out_frac) as f64;
+    let quantize = |x: f64| -> i64 { crate::fixed::py_round(x * out_scale) };
+
+    let roms: Vec<Vec<i64>> = (0..v)
+        .map(|vi| {
+            (0..size as u32)
+                .map(|u| {
+                    let x = crate::bits::to_signed(u, h) as f64 * scale;
+                    quantize(problem.rho(vi, v, x))
+                })
+                .collect()
+        })
+        .collect();
+
+    let dmin: i64 = roms.iter().map(|r| r.iter().min().unwrap()).sum();
+    let dmax: i64 = roms.iter().map(|r| r.iter().max().unwrap()).sum();
+    let g = 1i64 << gamma_bits;
+    let span = dmax - dmin + 1;
+    let gshift = if span > g {
+        // ceil(log2(span / g)) exactly as build_tables computes it.
+        (span as f64 / g as f64).log2().ceil().max(0.0) as i64
+    } else {
+        0
+    };
+    let gamma: Vec<i64> = (0..g)
+        .map(|i| {
+            let mid = dmin + (i << gshift) + ((1i64 << gshift) >> 1);
+            quantize(problem.gamma(v, mid as f64 / out_scale))
+        })
+        .collect();
+
+    MultiRom {
+        roms,
+        gamma,
+        gmin: dmin,
+        gshift,
+        gamma_bypass: problem.gamma_bypass,
+    }
+}
+
+/// Reshape a V = 2 lowering into the engine's table layout (ρ_0 → α,
+/// ρ_1 → β).
+fn tables_from_lowered(problem: &Problem, m: u32, gamma_bits: u32, mr: &MultiRom) -> RomTables {
+    debug_assert_eq!(mr.roms.len(), 2, "engine tables are a V = 2 shape");
+    RomTables {
+        spec_name: problem.name.to_string(),
+        m,
+        gamma_bits,
+        alpha: mr.roms[0].clone(),
+        beta: mr.roms[1].clone(),
+        gamma: mr.gamma.clone(),
+        gmin: mr.gmin,
+        gshift: mr.gshift,
+        gamma_bypass: mr.gamma_bypass,
+    }
+}
+
+/// A V = 2 lowering reshaped into the engine's [`RomTables`] (ρ_0 → α,
+/// ρ_1 → β) — any registry problem on the golden-verified machine.
+pub fn lower_tables(problem: &Problem, m: u32, gamma_bits: u32) -> RomTables {
+    tables_from_lowered(problem, m, gamma_bits, &lower(problem, 2, m, gamma_bits))
+}
+
+fn key(problem: &Problem, v: u32, m: u32, gamma_bits: u32) -> RomKey {
+    RomKey {
+        kind: "problem",
+        name: problem.name.to_string(),
+        v,
+        m,
+        gamma_bits,
+    }
+}
+
+static LOWERED: Lazy<Mutex<HashMap<RomKey, Arc<MultiRom>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Cached [`lower`] — the compiler's equivalent of
+/// [`crate::rom::cached_tables`], keyed by the full structural identity
+/// (problem, V, m, gamma_bits) so lowerings at different V never collide.
+pub fn cached_lowered(problem: &Problem, v: u32, m: u32, gamma_bits: u32) -> Arc<MultiRom> {
+    let mut cache = LOWERED.lock().unwrap();
+    cache
+        .entry(key(problem, v, m, gamma_bits))
+        .or_insert_with(|| Arc::new(lower(problem, v, m, gamma_bits)))
+        .clone()
+}
+
+/// Cached engine-shape tables for a problem at V = 2. The paper trio
+/// delegates to [`crate::rom::cached_tables`] so legacy `FnSpec` call sites
+/// and registry call sites share one build (and one `Arc`); other problems
+/// reshape the (cached) V = 2 [`cached_lowered`] build rather than lowering
+/// a second time — one structural build serves both table shapes.
+pub fn cached_problem_tables(problem: &Problem, m: u32, gamma_bits: u32) -> Arc<RomTables> {
+    if let Some(spec) = problem.fnspec() {
+        return crate::rom::cached_tables(spec, m, gamma_bits);
+    }
+    crate::rom::cached_tables_keyed(key(problem, 2, m, gamma_bits), || {
+        let mr = cached_lowered(problem, 2, m, gamma_bits);
+        tables_from_lowered(problem, m, gamma_bits, &mr)
+    })
+}
+
+/// Default chromosome width for a V-field lowering. Keeps the total search
+/// space paper-sized (m ≈ 20–28, the paper's sweep range) rather than
+/// maxing out the field width: accuracy comparisons across V then hold the
+/// problem difficulty roughly constant while the FFM structure varies.
+pub fn default_m(v: u32) -> u32 {
+    let h = match v {
+        2 => 10, // the paper's m = 20 baseline
+        3 => 8,
+        4 => 5,
+        5 => 4,
+        6 => 4,
+        7 => 4,
+        _ => 3,
+    };
+    v * h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::MultiDims;
+    use crate::problems::registry::by_name;
+    use crate::rom::{build_tables, F1, F2, F3, GAMMA_BITS_DEFAULT};
+
+    #[test]
+    fn trio_v2_lowering_is_bit_identical_to_build_tables() {
+        for (name, spec) in [("f1", &F1), ("f2", &F2), ("f3", &F3)] {
+            let p = by_name(name).unwrap();
+            for m in [20u32, 26] {
+                let seed = build_tables(spec, m, GAMMA_BITS_DEFAULT);
+                let ours = lower_tables(p, m, GAMMA_BITS_DEFAULT);
+                assert_eq!(ours.alpha, seed.alpha, "{name} m={m} alpha");
+                assert_eq!(ours.beta, seed.beta, "{name} m={m} beta");
+                assert_eq!(ours.gamma, seed.gamma, "{name} m={m} gamma");
+                assert_eq!(ours.gmin, seed.gmin, "{name} m={m} gmin");
+                assert_eq!(ours.gshift, seed.gshift, "{name} m={m} gshift");
+                assert_eq!(ours.gamma_bypass, seed.gamma_bypass);
+            }
+        }
+    }
+
+    #[test]
+    fn lowering_shapes_scale_with_v() {
+        let p = by_name("sphere").unwrap();
+        for v in [2u32, 4, 8] {
+            let m = default_m(v);
+            let rom = lower(p, v, m, GAMMA_BITS_DEFAULT);
+            assert_eq!(rom.roms.len(), v as usize);
+            for r in &rom.roms {
+                assert_eq!(r.len(), 1usize << (m / v));
+            }
+            assert_eq!(rom.gamma.len(), 1 << GAMMA_BITS_DEFAULT);
+        }
+    }
+
+    #[test]
+    fn cached_lowered_shares_one_build_per_key() {
+        let p = by_name("rastrigin").unwrap();
+        let a = cached_lowered(p, 4, 20, 12);
+        let b = cached_lowered(p, 4, 20, 12);
+        assert!(Arc::ptr_eq(&a, &b));
+        // A different V is a different cache slot — the collision the
+        // hardened key exists to prevent.
+        let c = cached_lowered(p, 2, 20, 12);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_ne!(a.roms[0].len(), c.roms[0].len());
+    }
+
+    #[test]
+    fn trio_problem_tables_share_the_spec_cache() {
+        let p = by_name("f3").unwrap();
+        let via_problem = cached_problem_tables(p, 20, 12);
+        let via_spec = crate::rom::cached_tables(&F3, 20, 12);
+        assert!(Arc::ptr_eq(&via_problem, &via_spec));
+    }
+
+    #[test]
+    fn registry_tables_cache_and_run_on_the_engine() {
+        let p = by_name("sphere").unwrap();
+        let t1 = cached_problem_tables(p, 20, 12);
+        let t2 = cached_problem_tables(p, 20, 12);
+        assert!(Arc::ptr_eq(&t1, &t2));
+        let dims = crate::ga::Dims::new(16, 20, 1);
+        let mut inst = crate::ga::GaInstance::new(dims, t1, false, 3);
+        inst.run(25);
+        assert_eq!(inst.generation(), 25);
+    }
+
+    #[test]
+    fn sphere_ideal_is_zero_everywhere() {
+        let p = by_name("sphere").unwrap();
+        for v in [2u32, 4, 8] {
+            let rom = lower(p, v, default_m(v), GAMMA_BITS_DEFAULT);
+            assert_eq!(rom.ideal(false), 0, "V={v}");
+            assert!(rom.ideal(true) > 0);
+        }
+    }
+
+    #[test]
+    fn default_m_is_even_divisible_and_bounded() {
+        for v in MIN_VARS..=MAX_VARS {
+            let m = default_m(v);
+            assert!(m % 2 == 0, "v={v} m={m}");
+            assert!(m % v == 0, "v={v} m={m}");
+            assert!((2..=32).contains(&m), "v={v} m={m}");
+        }
+        assert_eq!(default_m(2), 20);
+        assert_eq!(default_m(4), 20);
+        assert_eq!(default_m(8), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal fields")]
+    fn indivisible_lowering_rejected() {
+        lower(by_name("sphere").unwrap(), 3, 20, 12);
+    }
+
+    #[test]
+    fn multidims_accepts_every_default_shape() {
+        for v in MIN_VARS..=MAX_VARS {
+            let d = MultiDims::new(16, default_m(v), v, 1);
+            assert_eq!(d.h(), default_m(v) / v);
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! Accuracy-evaluation harness: the paper's GA-response accuracy study,
+//! generalized from {f1, f2, f3} × V=2 to the whole problem registry at any
+//! field count.
+//!
+//! A suite run fans a (problem × V × population-size) grid through the
+//! coordinator as batched jobs — `seeds` independent replicas per cell —
+//! and reports, per cell:
+//!
+//! * **success rate** — fraction of replicas whose final best landed
+//!   within tolerance of the cell's table-exact optimum,
+//! * **absolute error** — mean |best − ideal| in fixed-point and real
+//!   units,
+//! * **generations-to-threshold** — mean first generation whose
+//!   best-of-generation entered the tolerance band (over the replicas
+//!   that got there).
+//!
+//! The ideal is computed from the lowered ROMs themselves
+//! ([`crate::ga::MultiRom::ideal`]): fields are independent, so the best *achievable*
+//! fixed-point fitness is exact — the study measures the GA, not the
+//! quantization. Tolerance is `tol_pct` percent of the cell's reachable
+//! output range (≥ 1 LSB).
+//!
+//! Reports are machine-readable JSON ([`SuiteReport::to_json`], schema in
+//! docs/problems.md) and human-readable tables ([`SuiteReport::render`]).
+
+use crate::config::{GaParams, ServeParams};
+use crate::coordinator::{Coordinator, OptimizeRequest};
+use crate::ga::BackendKind;
+use crate::jsonmini::{obj, Value};
+use crate::problems::{by_name, cached_lowered, default_m, resolve};
+
+/// Grid + execution knobs for one suite run.
+#[derive(Debug, Clone)]
+pub struct SuiteConfig {
+    /// Registry names to evaluate (default: the whole registry).
+    pub problems: Vec<String>,
+    /// Field counts per problem (default: [2, 4]).
+    pub vars: Vec<u32>,
+    /// Population sizes per (problem, V) pair.
+    pub pops: Vec<usize>,
+    /// Generations per job.
+    pub k: u32,
+    /// Independent replicas (distinct seeds) per cell.
+    pub seeds: u64,
+    /// First replica seed.
+    pub seed0: u64,
+    /// Success tolerance, percent of the cell's reachable output range.
+    pub tol_pct: f64,
+    /// Engine execution backend the coordinator dispatches through.
+    pub backend: BackendKind,
+    pub workers: usize,
+    pub max_batch: usize,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        Self {
+            problems: names().iter().map(|s| s.to_string()).collect(),
+            vars: vec![2, 4],
+            pops: vec![32],
+            k: 100,
+            seeds: 5,
+            seed0: 1000,
+            tol_pct: 1.0,
+            backend: BackendKind::Batched,
+            workers: 2,
+            max_batch: 8,
+        }
+    }
+}
+
+impl SuiteConfig {
+    /// CI profile: the full registry at V ∈ {2, 4}, but small populations,
+    /// short runs and two replicas — the whole grid in well under a second.
+    pub fn smoke() -> Self {
+        Self {
+            pops: vec![16],
+            k: 50,
+            seeds: 2,
+            ..Self::default()
+        }
+    }
+}
+
+/// Accuracy metrics of one (problem, V, N) cell.
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    pub problem: String,
+    pub vars: u32,
+    pub m: u32,
+    pub n: usize,
+    pub seeds: u64,
+    /// Best achievable fixed-point fitness (table-exact).
+    pub ideal: i64,
+    /// Success tolerance in fixed-point LSBs.
+    pub tol: i64,
+    /// Replicas whose final best is within `tol` of `ideal`.
+    pub successes: u64,
+    /// Mean |best − ideal| in fixed-point LSBs.
+    pub mean_abs_err: f64,
+    /// Mean |best − ideal| in real units (LSBs / 2^out_frac).
+    pub mean_abs_err_real: f64,
+    /// Smallest |best − ideal| across replicas.
+    pub min_err: i64,
+    /// Mean first generation inside the tolerance band, over the replicas
+    /// that reached it (None when none did).
+    pub mean_gens_to_tol: Option<f64>,
+    /// How many replicas reached the band at any point of their curve.
+    pub reached: u64,
+}
+
+impl CellReport {
+    pub fn success_rate(&self) -> f64 {
+        self.successes as f64 / self.seeds.max(1) as f64
+    }
+}
+
+/// A complete suite run.
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    pub backend: BackendKind,
+    pub k: u32,
+    pub tol_pct: f64,
+    pub cells: Vec<CellReport>,
+}
+
+impl SuiteReport {
+    /// Machine-readable form (schema: docs/problems.md).
+    pub fn to_json(&self) -> Value {
+        let cells: Vec<Value> = self
+            .cells
+            .iter()
+            .map(|c| {
+                obj([
+                    ("problem", Value::from(c.problem.clone())),
+                    ("vars", Value::Int(i64::from(c.vars))),
+                    ("m", Value::Int(i64::from(c.m))),
+                    ("n", Value::Int(c.n as i64)),
+                    ("seeds", Value::Int(c.seeds as i64)),
+                    ("ideal", Value::Int(c.ideal)),
+                    ("tol", Value::Int(c.tol)),
+                    ("successes", Value::Int(c.successes as i64)),
+                    ("success_rate", Value::from(c.success_rate())),
+                    ("mean_abs_err", Value::from(c.mean_abs_err)),
+                    ("mean_abs_err_real", Value::from(c.mean_abs_err_real)),
+                    ("min_err", Value::Int(c.min_err)),
+                    (
+                        "mean_gens_to_tol",
+                        c.mean_gens_to_tol.map(Value::from).unwrap_or(Value::Null),
+                    ),
+                    ("reached", Value::Int(c.reached as i64)),
+                ])
+            })
+            .collect();
+        obj([
+            ("suite", Value::from("problems-accuracy")),
+            ("backend", Value::from(self.backend.name())),
+            ("k", Value::Int(i64::from(self.k))),
+            ("tol_pct", Value::from(self.tol_pct)),
+            ("cells", Value::Array(cells)),
+        ])
+    }
+
+    /// Paper-style table.
+    pub fn render(&self) -> String {
+        let mut t = crate::bench_util::Table::new([
+            "problem",
+            "V",
+            "m",
+            "N",
+            "ideal",
+            "tol",
+            "success",
+            "mean |err|",
+            "mean |err| real",
+            "gens→tol",
+        ]);
+        for c in &self.cells {
+            t.row([
+                c.problem.clone(),
+                c.vars.to_string(),
+                c.m.to_string(),
+                c.n.to_string(),
+                c.ideal.to_string(),
+                c.tol.to_string(),
+                format!("{}/{}", c.successes, c.seeds),
+                format!("{:.1}", c.mean_abs_err),
+                format!("{:.4}", c.mean_abs_err_real),
+                c.mean_gens_to_tol
+                    .map(|g| format!("{g:.1}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        format!(
+            "Accuracy suite — backend={}, K={}, tol={}% of output range\n{}",
+            self.backend,
+            self.k,
+            self.tol_pct,
+            t.render()
+        )
+    }
+}
+
+/// Run the suite: one coordinator, every cell's replicas submitted as
+/// ordinary jobs (same-variant replicas batch together on the batched
+/// backend), accuracy folded per cell as results land.
+pub fn run_suite(cfg: &SuiteConfig) -> crate::Result<SuiteReport> {
+    // Resolve every name up front: a typo should fail the run, not cell 17.
+    for name in &cfg.problems {
+        resolve(name)?;
+    }
+    anyhow::ensure!(!cfg.vars.is_empty(), "suite needs at least one V");
+    anyhow::ensure!(!cfg.pops.is_empty(), "suite needs at least one N");
+    anyhow::ensure!(cfg.seeds >= 1, "suite needs at least one replica");
+
+    let serve = ServeParams {
+        workers: cfg.workers,
+        max_batch: cfg.max_batch,
+        use_pjrt: false,
+        backend: cfg.backend,
+        ..ServeParams::default()
+    };
+    let coord = Coordinator::builder(serve).start()?;
+
+    let mut cells = Vec::new();
+    for name in &cfg.problems {
+        let problem = by_name(name).expect("validated above");
+        for &v in &cfg.vars {
+            let m = default_m(v);
+            let rom = cached_lowered(problem, v, m, crate::rom::GAMMA_BITS_DEFAULT);
+            let ideal = rom.ideal(false);
+            let (lo, hi) = rom.output_range();
+            let span = (hi - lo).max(1);
+            let tol = ((span as f64) * cfg.tol_pct / 100.0).ceil() as i64;
+            let tol = tol.max(1);
+            for &n in &cfg.pops {
+                let handles: Vec<_> = (0..cfg.seeds)
+                    .map(|s| {
+                        let params = GaParams {
+                            n,
+                            m,
+                            k: cfg.k,
+                            function: name.clone(),
+                            vars: v,
+                            seed: cfg.seed0 + s,
+                            maximize: false,
+                            ..GaParams::default()
+                        };
+                        coord.submit(
+                            OptimizeRequest::new(params)
+                                .with_tag(format!("suite/{name}/v{v}/n{n}/s{s}")),
+                        )
+                    })
+                    .collect();
+
+                let mut successes = 0u64;
+                let mut err_sum = 0f64;
+                let mut min_err = i64::MAX;
+                let mut gens_sum = 0f64;
+                let mut reached = 0u64;
+                let out_scale = (1i64 << problem.out_frac) as f64;
+                for h in handles {
+                    let r = h.wait();
+                    if let Some(e) = r.error {
+                        coord.shutdown();
+                        anyhow::bail!("suite job {} failed: {e}", r.tag);
+                    }
+                    let err = (r.best_y - ideal).abs();
+                    err_sum += err as f64;
+                    min_err = min_err.min(err);
+                    if err <= tol {
+                        successes += 1;
+                    }
+                    if let Some(g) =
+                        r.curve.iter().position(|&y| (y - ideal).abs() <= tol)
+                    {
+                        reached += 1;
+                        gens_sum += (g + 1) as f64;
+                    }
+                }
+                cells.push(CellReport {
+                    problem: name.clone(),
+                    vars: v,
+                    m,
+                    n,
+                    seeds: cfg.seeds,
+                    ideal,
+                    tol,
+                    successes,
+                    mean_abs_err: err_sum / cfg.seeds as f64,
+                    mean_abs_err_real: err_sum / cfg.seeds as f64 / out_scale,
+                    min_err,
+                    mean_gens_to_tol: (reached > 0).then(|| gens_sum / reached as f64),
+                    reached,
+                });
+            }
+        }
+    }
+    coord.shutdown();
+    Ok(SuiteReport {
+        backend: cfg.backend,
+        k: cfg.k,
+        tol_pct: cfg.tol_pct,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_config_covers_the_registry_at_two_and_four_vars() {
+        let cfg = SuiteConfig::smoke();
+        assert!(cfg.problems.len() >= 6 + 3);
+        assert_eq!(cfg.vars, vec![2, 4]);
+        assert!(cfg.seeds >= 2);
+    }
+
+    #[test]
+    fn unknown_problem_fails_fast() {
+        let cfg = SuiteConfig {
+            problems: vec!["warp".into()],
+            ..SuiteConfig::smoke()
+        };
+        let err = run_suite(&cfg).unwrap_err();
+        assert!(err.to_string().contains("unknown fitness function"), "{err}");
+    }
+
+    #[test]
+    fn tiny_grid_runs_and_reports() {
+        let cfg = SuiteConfig {
+            problems: vec!["sphere".into(), "f3".into()],
+            vars: vec![2, 4],
+            pops: vec![16],
+            k: 30,
+            seeds: 2,
+            ..SuiteConfig::default()
+        };
+        let report = run_suite(&cfg).unwrap();
+        assert_eq!(report.cells.len(), 4);
+        for c in &report.cells {
+            assert_eq!(c.seeds, 2);
+            assert!(c.tol >= 1);
+            assert!(c.mean_abs_err >= 0.0);
+            assert!(c.success_rate() >= 0.0 && c.success_rate() <= 1.0);
+        }
+        // sphere (γ bypass) has a table-exact ideal of 0 at every V; f3's
+        // ideal is the γ LUT's bucket-0 midpoint (√128 ≈ 11 at m = 20) —
+        // the machine's own value at the optimum, not an error.
+        for c in &report.cells {
+            match c.problem.as_str() {
+                "sphere" => assert_eq!(c.ideal, 0, "V={}", c.vars),
+                "f3" => assert!(c.ideal >= 0, "V={}", c.vars),
+                _ => unreachable!(),
+            }
+        }
+        let json = crate::jsonmini::to_string(&report.to_json());
+        let parsed = crate::jsonmini::parse(&json).unwrap();
+        assert_eq!(parsed.req_str("suite").unwrap(), "problems-accuracy");
+        assert_eq!(parsed.req_array("cells").unwrap().len(), 4);
+        assert!(report.render().contains("sphere"));
+    }
+}

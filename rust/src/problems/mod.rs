@@ -1,0 +1,30 @@
+//! Problem suite: n-variable benchmark registry, ROM compiler, and the
+//! accuracy-evaluation harness (docs/problems.md).
+//!
+//! The paper dedicates a results section to the *accuracy* of the GA
+//! response on two-variable test functions and claims the architecture
+//! extends to more variables by adjusting the FFM. This subsystem makes
+//! both concrete:
+//!
+//! * [`registry`] — named separable benchmark functions declared as
+//!   per-field ρ_v components + γ in the paper's γ(Σ ρ_v) decomposition
+//!   (sphere, rastrigin, rosenbrock-sep, ackley-sep, schwefel,
+//!   griewank-sep, plus the paper's f1/f2/f3), each with domain, default
+//!   fixed-point parameterization and known optimum;
+//! * [`compile`] — lowers any entry at any V ∈ [2, 8] into the V-ROM +
+//!   adder-tree tables ([`crate::ga::MultiRom`]) or, at V = 2, into the
+//!   verified engine's [`crate::rom::RomTables`], with process-wide
+//!   caching keyed by the full structural identity;
+//! * [`eval`] — fans a (problem × V × N) grid through the coordinator as
+//!   batched jobs and reports success rate / absolute error / generations-
+//!   to-threshold as machine-readable JSON (the `suite` CLI command).
+
+pub mod compile;
+pub mod eval;
+pub mod registry;
+
+pub use compile::{
+    cached_lowered, cached_problem_tables, default_m, lower, lower_tables, MAX_VARS, MIN_VARS,
+};
+pub use eval::{run_suite, CellReport, SuiteConfig, SuiteReport};
+pub use registry::{all, by_name, names, resolve, Domain, Optimum, Problem};

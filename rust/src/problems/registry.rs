@@ -1,0 +1,372 @@
+//! The benchmark-problem registry: named n-variable test functions declared
+//! in the paper's γ(Σ ρ_v) decomposition.
+//!
+//! Every entry is *data about a separable function*: per-field component
+//! functions ρ_v over the real domain, an optional outer γ, the canonical
+//! domain, the default fixed-point parameterization (output fractional
+//! bits), and the known optimum. The ROM compiler
+//! ([`crate::problems::compile`]) lowers an entry at any V ∈ [2, 8] and any
+//! field width h = m/V into the V-ROM + adder-tree tables the machines
+//! consume — the registry itself never touches bits.
+//!
+//! The paper's three evaluation functions (f1/f2/f3) are members too, with
+//! `Domain::Raw` (field codes ARE the integer domain, exactly the seed's
+//! LUT parameterization), so lowering them at V = 2 reproduces
+//! [`crate::rom::build_tables`] bit-for-bit — asserted by
+//! `rust/tests/problems_suite.rs`.
+//!
+//! Non-separable classics ship as their standard separable forms
+//! (rosenbrock-sep, ackley-sep, griewank-sep): every cross-term is dropped
+//! or folded into γ so the function fits the FFM's γ(Σ ρ_v) structure —
+//! the same structural constraint the FPGA's ROM-adder FFM imposes.
+//! docs/problems.md records each form.
+
+/// How field codes map to real inputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Domain {
+    /// The signed field code is the input (x = to_signed(u, h)); the
+    /// paper's LUT parameterization for f1/f2/f3.
+    Raw,
+    /// Symmetric real domain [-w, w): x = to_signed(u, h) · w / 2^(h-1).
+    Sym(f64),
+}
+
+/// Known optimum of the *minimization* problem: the per-field location
+/// x* (every ρ_v attains its minimum there unless noted) and the function
+/// value at the optimum, independent of V for every registry entry that
+/// carries one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Optimum {
+    /// Per-field optimizer in the real domain.
+    pub x: f64,
+    /// f(x*, ..., x*).
+    pub y: f64,
+}
+
+/// Dispatch tag for the component formulas (data, not closures, so the
+/// registry is `'static` and hashable by name).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    F1,
+    F2,
+    F3,
+    Sphere,
+    Rastrigin,
+    RosenbrockSep,
+    AckleySep,
+    Schwefel,
+    GriewankSep,
+}
+
+/// One registered benchmark function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Problem {
+    pub name: &'static str,
+    /// One-line formula sketch for listings / docs.
+    pub summary: &'static str,
+    kind: Kind,
+    pub domain: Domain,
+    /// Output fixed point: ρ/γ values are quantized to 2^out_frac steps.
+    pub out_frac: u32,
+    /// γ is the identity → bypass the γ ROM (exact fitness).
+    pub gamma_bypass: bool,
+    /// Known minimum (None when it depends on the lowering, e.g. f2's
+    /// domain-edge optimum; the compiler's table-exact ideal covers those).
+    pub optimum: Option<Optimum>,
+}
+
+impl Problem {
+    /// Input scale: real x per field code unit at field width `h`.
+    pub fn scale(&self, h: u32) -> f64 {
+        match self.domain {
+            Domain::Raw => 1.0,
+            Domain::Sym(w) => w / (1u64 << (h - 1)) as f64,
+        }
+    }
+
+    /// Component function ρ_v of field `v` (0-based) in a `vars`-field
+    /// lowering, over the real input domain.
+    pub fn rho(&self, v: u32, vars: u32, x: f64) -> f64 {
+        match self.kind {
+            // f1 is the paper's single-variable cubic: only the last
+            // (least-significant) field carries data, like the seed's
+            // `single_var` mode generalized to V fields.
+            Kind::F1 => {
+                if v == vars - 1 {
+                    x * x * x - 15.0 * x * x + 500.0
+                } else {
+                    0.0
+                }
+            }
+            // f2 alternates the paper's two linear components across the
+            // fields; the constant rides on the last field so it is added
+            // exactly once. At V = 2 this is literally α = 8x, β = -4x+1020.
+            Kind::F2 => {
+                let linear = if v % 2 == 0 { 8.0 * x } else { -4.0 * x };
+                if v == vars - 1 {
+                    linear + 1020.0
+                } else {
+                    linear
+                }
+            }
+            Kind::F3 | Kind::Sphere | Kind::AckleySep => x * x,
+            Kind::Rastrigin => {
+                x * x - 10.0 * (2.0 * std::f64::consts::PI * x).cos() + 10.0
+            }
+            Kind::RosenbrockSep => {
+                let a = x * x - x;
+                100.0 * a * a + (1.0 - x) * (1.0 - x)
+            }
+            Kind::Schwefel => 418.9829 - x * x.abs().sqrt().sin(),
+            Kind::GriewankSep => {
+                let c = (x / ((v + 1) as f64).sqrt()).cos();
+                x * x / 4000.0 + 1.0 - c
+            }
+        }
+    }
+
+    /// Outer function γ over the real adder-tree sum δ. Identity for
+    /// bypass entries; every non-bypass γ here is monotone non-decreasing
+    /// (the compiler's table-exact ideal relies on it; test-asserted).
+    pub fn gamma(&self, vars: u32, d: f64) -> f64 {
+        match self.kind {
+            Kind::F3 => {
+                if d > 0.0 {
+                    d.sqrt()
+                } else {
+                    0.0
+                }
+            }
+            Kind::AckleySep => {
+                // Ackley's exponential envelope over the quadratic sum
+                // (the cosine modulation term is dropped — it is not
+                // expressible as γ over ONE sum). Optimum stays f(0) = 0.
+                20.0 - 20.0 * (-0.2 * (d.max(0.0) / vars as f64).sqrt()).exp()
+            }
+            _ => d,
+        }
+    }
+
+    /// The seed [`crate::rom::FnSpec`] constant this entry mirrors, when it
+    /// is one of the paper's three functions (keeps the V = 2 table cache
+    /// shared with every legacy `FnSpec::by_name` call site).
+    pub fn fnspec(&self) -> Option<&'static crate::rom::FnSpec> {
+        match self.kind {
+            Kind::F1 => Some(&crate::rom::F1),
+            Kind::F2 => Some(&crate::rom::F2),
+            Kind::F3 => Some(&crate::rom::F3),
+            _ => None,
+        }
+    }
+}
+
+/// The registry. Order is the suite's default evaluation order.
+pub static PROBLEMS: [Problem; 9] = [
+    Problem {
+        name: "sphere",
+        summary: "Σ x_v²  (De Jong F1)",
+        kind: Kind::Sphere,
+        domain: Domain::Sym(5.12),
+        out_frac: 8,
+        gamma_bypass: true,
+        optimum: Some(Optimum { x: 0.0, y: 0.0 }),
+    },
+    Problem {
+        name: "rastrigin",
+        summary: "Σ (x_v² − 10·cos(2πx_v) + 10)",
+        kind: Kind::Rastrigin,
+        domain: Domain::Sym(5.12),
+        out_frac: 8,
+        gamma_bypass: true,
+        optimum: Some(Optimum { x: 0.0, y: 0.0 }),
+    },
+    Problem {
+        name: "rosenbrock-sep",
+        summary: "Σ (100·(x_v² − x_v)² + (1 − x_v)²)  (separable form)",
+        kind: Kind::RosenbrockSep,
+        domain: Domain::Sym(2.048),
+        out_frac: 8,
+        gamma_bypass: true,
+        optimum: Some(Optimum { x: 1.0, y: 0.0 }),
+    },
+    Problem {
+        name: "ackley-sep",
+        summary: "20 − 20·exp(−0.2·√(Σ x_v² / V))  (separable form, γ LUT)",
+        kind: Kind::AckleySep,
+        domain: Domain::Sym(32.0),
+        out_frac: 8,
+        gamma_bypass: false,
+        optimum: Some(Optimum { x: 0.0, y: 0.0 }),
+    },
+    Problem {
+        name: "schwefel",
+        summary: "Σ (418.9829 − x_v·sin(√|x_v|))",
+        kind: Kind::Schwefel,
+        domain: Domain::Sym(512.0),
+        out_frac: 4,
+        gamma_bypass: true,
+        optimum: Some(Optimum { x: 420.9687, y: 0.0 }),
+    },
+    Problem {
+        name: "griewank-sep",
+        summary: "Σ (x_v²/4000 + 1 − cos(x_v/√(v+1)))  (separable form)",
+        kind: Kind::GriewankSep,
+        domain: Domain::Sym(64.0),
+        out_frac: 10,
+        gamma_bypass: true,
+        optimum: Some(Optimum { x: 0.0, y: 0.0 }),
+    },
+    Problem {
+        name: "f1",
+        summary: "x³ − 15x² + 500  (paper Eq. 24, single variable)",
+        kind: Kind::F1,
+        domain: Domain::Raw,
+        out_frac: 0,
+        gamma_bypass: true,
+        optimum: None, // domain-edge minimum; depends on the field width
+    },
+    Problem {
+        name: "f2",
+        summary: "8x − 4y + 1020  (paper Eq. 25)",
+        kind: Kind::F2,
+        domain: Domain::Raw,
+        out_frac: 0,
+        gamma_bypass: true,
+        optimum: None, // linear: domain-edge minimum
+    },
+    Problem {
+        name: "f3",
+        summary: "√(x² + y²)  (paper Eq. 26, γ LUT)",
+        kind: Kind::F3,
+        domain: Domain::Raw,
+        out_frac: 0,
+        gamma_bypass: false,
+        optimum: Some(Optimum { x: 0.0, y: 0.0 }),
+    },
+];
+
+/// Look an entry up by its registry name.
+pub fn by_name(name: &str) -> Option<&'static Problem> {
+    PROBLEMS.iter().find(|p| p.name == name)
+}
+
+/// [`by_name`] with the canonical "unknown fitness function" error listing
+/// the known set — ONE message shared by the scheduler
+/// ([`crate::ga::AnyGa`]), the gateway's 400 pre-check and the suite's
+/// up-front validation, so the three layers can never accept different
+/// name sets.
+pub fn resolve(name: &str) -> crate::Result<&'static Problem> {
+    by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown fitness function `{name}` (known: {})",
+            names().join(", ")
+        )
+    })
+}
+
+/// All registered entries, suite order.
+pub fn all() -> &'static [Problem] {
+    &PROBLEMS
+}
+
+/// Registered names, suite order.
+pub fn names() -> Vec<&'static str> {
+    PROBLEMS.iter().map(|p| p.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_name() {
+        for p in all() {
+            assert_eq!(by_name(p.name).unwrap().name, p.name);
+        }
+        assert!(by_name("nope").is_none());
+        assert_eq!(names().len(), 9);
+    }
+
+    #[test]
+    fn resolve_shares_the_canonical_error() {
+        assert_eq!(resolve("sphere").unwrap().name, "sphere");
+        let err = resolve("warp").unwrap_err().to_string();
+        assert!(err.contains("unknown fitness function"), "{err}");
+        assert!(err.contains("rastrigin"), "{err}");
+    }
+
+    #[test]
+    fn trio_components_match_the_seed_spec() {
+        // ρ/γ of f1/f2/f3 at V = 2 must equal FnSpec::alpha/beta/gamma.
+        for p in ["f1", "f2", "f3"] {
+            let prob = by_name(p).unwrap();
+            let spec = prob.fnspec().unwrap();
+            for x in [-7.0, -1.5, 0.0, 2.0, 9.0] {
+                assert_eq!(prob.rho(0, 2, x), spec.alpha(x), "{p} alpha({x})");
+                assert_eq!(prob.rho(1, 2, x), spec.beta(x), "{p} beta({x})");
+                assert_eq!(prob.gamma(2, x), spec.gamma(x), "{p} gamma({x})");
+            }
+        }
+    }
+
+    #[test]
+    fn optima_are_component_minima() {
+        // At the registered optimum, every ρ_v attains (approximately) its
+        // per-field share of the optimal value.
+        for p in all() {
+            let Some(opt) = p.optimum else { continue };
+            for vars in [2u32, 4, 8] {
+                let total: f64 = (0..vars).map(|v| p.rho(v, vars, opt.x)).sum();
+                let y = if p.gamma_bypass {
+                    total
+                } else {
+                    p.gamma(vars, total)
+                };
+                assert!(
+                    (y - opt.y).abs() < 1e-3,
+                    "{} at V={vars}: f(x*)={y}, registered {}",
+                    p.name,
+                    opt.y
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scale_maps_codes_onto_the_domain() {
+        let sphere = by_name("sphere").unwrap();
+        // h = 10: code 512 (= -2^9) decodes to -5.12.
+        assert!((sphere.scale(10) * 512.0 - 5.12).abs() < 1e-12);
+        let f3 = by_name("f3").unwrap();
+        assert_eq!(f3.scale(10), 1.0);
+    }
+
+    #[test]
+    fn f2_constant_added_exactly_once() {
+        for vars in [2u32, 3, 4, 8] {
+            let f2 = by_name("f2").unwrap();
+            let at_zero: f64 = (0..vars).map(|v| f2.rho(v, vars, 0.0)).sum();
+            assert_eq!(at_zero, 1020.0, "V={vars}");
+        }
+    }
+
+    #[test]
+    fn griewank_components_differ_per_field() {
+        let g = by_name("griewank-sep").unwrap();
+        let a = g.rho(0, 4, 3.0);
+        let b = g.rho(1, 4, 3.0);
+        assert_ne!(a, b, "per-field frequencies must differ");
+    }
+
+    #[test]
+    fn ackley_gamma_monotone_and_zero_at_origin() {
+        let a = by_name("ackley-sep").unwrap();
+        assert!(a.gamma(4, 0.0).abs() < 1e-12);
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..100 {
+            let y = a.gamma(4, i as f64 * 10.0);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+}

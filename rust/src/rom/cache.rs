@@ -4,34 +4,75 @@
 //! hundreds of microseconds for m = 26. Doing that per job submission
 //! stalled the scheduler long enough to blow every batching window
 //! (EXPERIMENTS.md §Perf iter 4). Named functions are pure, so their tables
-//! are cached per (name, m, gamma_bits) for the life of the process.
+//! are cached per [`RomKey`] for the life of the process.
 //! Custom (closure) specs are not cached — the cache cannot see through
 //! the closure identity.
 
-use super::{build_tables, FnSpec, RomTables};
+use super::{build_tables, FnKind, FnSpec, RomTables};
 use once_cell::sync::Lazy;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-static CACHE: Lazy<Mutex<HashMap<(String, u32, u32), Arc<RomTables>>>> =
+/// Cache key for lowered ROM contents. The key carries the *structural*
+/// identity of the build, not just the display name: `kind` separates
+/// namespaces (builtin spec constants vs registry problems vs anything a
+/// future layer adds), and `v` separates lowerings of the same function at
+/// different variable counts — a custom spec named "f1" or a V = 4 lowering
+/// of "sphere" can never collide with the cached V = 2 tables.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RomKey {
+    /// Namespace tag (e.g. `"spec:F1"`, `"problem"`).
+    pub kind: &'static str,
+    /// Function / problem name within the namespace.
+    pub name: String,
+    /// Variable count the tables were lowered for.
+    pub v: u32,
+    /// Chromosome bits.
+    pub m: u32,
+    /// γ ROM size exponent.
+    pub gamma_bits: u32,
+}
+
+/// Namespace tag of a [`FnKind`] (the structural part of the identity the
+/// old name-string key was missing).
+fn kind_tag(kind: &FnKind) -> &'static str {
+    match kind {
+        FnKind::F1 => "spec:F1",
+        FnKind::F2 => "spec:F2",
+        FnKind::F3 => "spec:F3",
+        FnKind::Custom { .. } => "spec:Custom",
+    }
+}
+
+static CACHE: Lazy<Mutex<HashMap<RomKey, Arc<RomTables>>>> =
     Lazy::new(|| Mutex::new(HashMap::new()));
 
 /// Cached table build for *named* specs (f1/f2/f3). Falls back to an
 /// uncached build for custom specs.
 pub fn cached_tables(spec: &FnSpec, m: u32, gamma_bits: u32) -> Arc<RomTables> {
-    let cacheable = matches!(
-        spec.kind,
-        super::FnKind::F1 | super::FnKind::F2 | super::FnKind::F3
-    );
+    let cacheable = matches!(spec.kind, FnKind::F1 | FnKind::F2 | FnKind::F3);
     if !cacheable {
         return Arc::new(build_tables(spec, m, gamma_bits));
     }
-    let key = (spec.name.to_string(), m, gamma_bits);
+    let key = RomKey {
+        kind: kind_tag(&spec.kind),
+        name: spec.name.to_string(),
+        v: 2,
+        m,
+        gamma_bits,
+    };
+    cached_tables_keyed(key, || build_tables(spec, m, gamma_bits))
+}
+
+/// Shared keyed entry point: other table producers (the problem-registry
+/// ROM compiler, [`crate::problems::compile`]) cache through the same map
+/// under their own [`RomKey::kind`] namespace.
+pub(crate) fn cached_tables_keyed(
+    key: RomKey,
+    build: impl FnOnce() -> RomTables,
+) -> Arc<RomTables> {
     let mut cache = CACHE.lock().unwrap();
-    cache
-        .entry(key)
-        .or_insert_with(|| Arc::new(build_tables(spec, m, gamma_bits)))
-        .clone()
+    cache.entry(key).or_insert_with(|| Arc::new(build())).clone()
 }
 
 #[cfg(test)]
@@ -75,5 +116,33 @@ mod tests {
         let cached = cached_tables(&F3, 24, 12);
         let direct = build_tables(&F3, 24, 12);
         assert_eq!(*cached, direct);
+    }
+
+    #[test]
+    fn key_separates_kind_name_and_v() {
+        // Same display name, different structural identity: never collide.
+        let base = RomKey {
+            kind: "spec:F1",
+            name: "f1".into(),
+            v: 2,
+            m: 20,
+            gamma_bits: 12,
+        };
+        let other_kind = RomKey {
+            kind: "problem",
+            ..base.clone()
+        };
+        let other_v = RomKey { v: 4, ..base.clone() };
+        assert_ne!(base, other_kind);
+        assert_ne!(base, other_v);
+
+        // And through the live cache: a "problem"-namespace entry named
+        // "f1" is a distinct slot from the FnSpec-built "f1".
+        let spec_tables = cached_tables(&crate::rom::F1, 20, 12);
+        let shadow = cached_tables_keyed(other_kind, || {
+            build_tables(&crate::rom::F2, 20, 12)
+        });
+        assert!(!StdArc::ptr_eq(&spec_tables, &shadow));
+        assert_ne!(spec_tables.beta, shadow.beta);
     }
 }

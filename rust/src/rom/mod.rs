@@ -13,7 +13,8 @@ mod cache;
 mod spec;
 mod tables;
 
-pub use cache::cached_tables;
+pub use cache::{cached_tables, RomKey};
+pub(crate) use cache::cached_tables_keyed;
 pub use spec::{FnKind, FnSpec, F1, F2, F3};
 pub use tables::{build_tables, RomTables, GAMMA_BITS_DEFAULT};
 

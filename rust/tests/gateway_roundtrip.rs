@@ -145,8 +145,12 @@ fn gateway_cancel_and_metrics() {
     assert_eq!(code, 404);
     let (code, _) = http(addr, "GET", "/v1/jobs/424242", "");
     assert_eq!(code, 404);
+    // ...including ids that cannot name any job: a missing resource, not a
+    // malformed request (ISSUE 3 satellite: 404, not 400).
     let (code, _) = http(addr, "GET", "/v1/jobs/not-a-number", "");
-    assert_eq!(code, 400);
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "DELETE", "/v1/jobs/not-a-number", "");
+    assert_eq!(code, 404);
 
     // Metrics reflect the lifecycle counters.
     let (code, m) = http(addr, "GET", "/v1/metrics", "");
@@ -209,6 +213,16 @@ fn gateway_rejects_malformed_requests() {
     // Negative deadline.
     let (code, _) = http(addr, "POST", "/v1/jobs", r#"{"deadline_ms":-5}"#);
     assert_eq!(code, 400);
+    // Unknown fitness function: rejected at submission with the known set.
+    let (code, v) = http(addr, "POST", "/v1/jobs", r#"{"function":"warp"}"#);
+    assert_eq!(code, 400);
+    assert!(
+        v.req_str("error").unwrap().contains("sphere"),
+        "error should list registry names: {v:?}"
+    );
+    // vars must divide m.
+    let (code, _) = http(addr, "POST", "/v1/jobs", r#"{"vars":3}"#);
+    assert_eq!(code, 400);
     // Unknown endpoint + wrong method.
     let (code, _) = http(addr, "GET", "/v2/nope", "");
     assert_eq!(code, 404);
@@ -217,6 +231,40 @@ fn gateway_rejects_malformed_requests() {
     // Rejections must not leak into the job table.
     assert_eq!(coord.metrics().jobs_submitted, 0);
     assert!(coord.jobs().is_empty());
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn gateway_runs_registry_problem_at_v4() {
+    // ISSUE 3 satellite: POST {"function": <registry-name>, "vars": V}
+    // submits a V-ROM multivar job; the result is bit-identical to a direct
+    // in-process multivar run.
+    let coord = coordinator(BackendKind::Batched);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    let (code, v) = http(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"function":"sphere","vars":4,"m":20,"n":16,"k":50,"seed":11,"tag":"mv"}"#,
+    );
+    assert_eq!(code, 202, "{v:?}");
+    let id = v.req_i64("id").unwrap();
+    let done = poll_done(addr, id);
+    assert_eq!(done.req_str("status").unwrap(), "completed");
+    assert_eq!(done.req_i64("generations").unwrap(), 50);
+
+    let problem = fpga_ga::problems::by_name("sphere").unwrap();
+    let rom = fpga_ga::problems::cached_lowered(problem, 4, 20, 12);
+    let dims = fpga_ga::ga::MultiDims::new(16, 20, 4, 1);
+    let mut direct = fpga_ga::ga::MultiVarGa::new(dims, rom, false, 11);
+    direct.run(50);
+    assert_eq!(done.req_i64("best_y").unwrap(), direct.best().y);
+    assert_eq!(done.req_i64("best_x").unwrap(), i64::from(direct.best().x));
+    assert_eq!(done.req_i64_vec("curve").unwrap(), direct.curve());
 
     gw.shutdown();
     coord.shutdown();

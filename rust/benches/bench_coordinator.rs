@@ -3,14 +3,26 @@
 //! This is the L3 contribution's own evaluation (not a paper table — the
 //! paper has no serving layer — but the deployment scenario its intro
 //! motivates).
+//!
+//! The steady-state section compares the per-chunk gather/scatter batched
+//! path against the resident-SoA store (`--resident-store`) on a 64-job
+//! same-variant workload — the copy the ResidentStore eliminates — and
+//! emits both readings on one `BENCH_JSON` line (ISSUE 4 acceptance).
 
-use fpga_ga::bench_util::Table;
+use fpga_ga::bench_util::{emit_json, Table};
 use fpga_ga::config::{GaParams, ServeParams};
 use fpga_ga::coordinator::{Coordinator, OptimizeRequest};
+use fpga_ga::ga::BackendKind;
+use fpga_ga::jsonmini::{obj, Value};
 use std::time::Instant;
 
 const JOBS: usize = 48;
 const K: u32 = 100;
+
+/// Steady-state workload: 64 same-variant jobs, K large enough that chunk
+/// time dominates admission/eviction.
+const STEADY_JOBS: usize = 64;
+const STEADY_K: u32 = 2000;
 
 fn run_config(name: &str, serve: ServeParams, t: &mut Table) {
     let coord = match Coordinator::builder(serve.clone()).start() {
@@ -54,6 +66,63 @@ fn params(seed: u64) -> GaParams {
         seed,
         ..GaParams::default()
     }
+}
+
+/// One steady-state run: wall time, per-chunk time, throughput. Returns the
+/// machine-readable reading for the BENCH_JSON line.
+fn run_steady(name: &str, resident: bool, t: &mut Table) -> Value {
+    let serve = ServeParams {
+        workers: 1,
+        max_batch: STEADY_JOBS,
+        batch_window_us: 200,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: resident,
+        ..ServeParams::default()
+    };
+    let coord = Coordinator::builder(serve).start().unwrap();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..STEADY_JOBS)
+        .map(|i| {
+            let mut p = params(1000 + i as u64);
+            p.k = STEADY_K;
+            coord.submit(OptimizeRequest::new(p))
+        })
+        .collect();
+    for h in handles {
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.generations, STEADY_K);
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    coord.shutdown();
+    let chunks = m.chunks_dispatched.max(1);
+    let chunk_us = wall.as_secs_f64() * 1e6 / chunks as f64;
+    let total_gens = (STEADY_JOBS as u64) * u64::from(STEADY_K);
+    let gens_per_s = total_gens as f64 / wall.as_secs_f64();
+    t.row([
+        name.into(),
+        format!("{:.2}", wall.as_secs_f64()),
+        format!("{:.1}", STEADY_JOBS as f64 / wall.as_secs_f64()),
+        format!("{:.1}", m.latency_p50.as_secs_f64() * 1e3),
+        format!("{:.1}", m.latency_p95.as_secs_f64() * 1e3),
+        format!(
+            "{} chunks, {:.1} µs/chunk, mean batch {:.2}",
+            chunks, chunk_us, m.mean_batch
+        ),
+    ]);
+    obj([
+        ("name", Value::from(name)),
+        ("resident", Value::Bool(resident)),
+        ("jobs", Value::Int(STEADY_JOBS as i64)),
+        ("k", Value::Int(i64::from(STEADY_K))),
+        ("wall_s", Value::from(wall.as_secs_f64())),
+        ("chunks", Value::Int(chunks as i64)),
+        ("chunk_us", Value::from(chunk_us)),
+        ("generations_per_s", Value::from(gens_per_s)),
+        ("mean_batch", Value::from(m.mean_batch)),
+    ])
 }
 
 fn main() {
@@ -118,8 +187,31 @@ fn main() {
     );
     t.print();
 
+    println!(
+        "\n=== Steady-state chunk time: {STEADY_JOBS} same-variant jobs x K={STEADY_K}, \
+         batched backend, 1 worker ===\n"
+    );
+    let mut st = Table::new([
+        "config", "wall s", "jobs/s", "p50 ms", "p95 ms", "details",
+    ]);
+    let gather = run_steady("batched, gather/scatter per chunk", false, &mut st);
+    let resident = run_steady("batched, resident SoA store", true, &mut st);
+    st.print();
+    let speedup = gather
+        .get("chunk_us")
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0)
+        / resident
+            .get("chunk_us")
+            .and_then(Value::as_f64)
+            .unwrap_or(1.0)
+            .max(1e-9);
+    println!("\nresident vs gather/scatter chunk-time speedup: {speedup:.2}x");
+    emit_json("coordinator_steady", vec![gather, resident]);
+
     println!("\nablation readings:");
     println!("* engine 4 vs 1 workers → job-level parallelism of the behavioral path.");
     println!("* pjrt B=8 vs B=1 → dynamic batching amortizes XLA dispatch overhead.");
     println!("* early-stop → generations saved when jobs converge before K.");
+    println!("* resident vs gather/scatter → per-chunk SoA copies eliminated for parked jobs.");
 }

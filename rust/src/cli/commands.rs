@@ -25,6 +25,8 @@ COMMANDS:
               --n N  --m M  --k K  --seed S
               --maximize  --pjrt  --backend scalar|batched  --config FILE
               --early-stop C (stop after C stale chunks; 0 = never)
+              --resident-store (park jobs in SoA slabs between chunks;
+              zero-copy chunk dispatch + High-preempts-Low scheduling)
   suite       accuracy-evaluation suite: (problem x V x N) grid through the
               coordinator; reports success rate / |error| / gens-to-threshold
               --problems a,b,...|all  --vars 2,4  --pops 32,64  --k K
@@ -35,6 +37,7 @@ COMMANDS:
               (with --listen) expose the HTTP/JSON gateway (docs/api.md)
               --jobs J (>= 1)  --workers W  --batch B  --pjrt
               --early-stop C  --backend scalar|batched  --config FILE
+              --resident-store (also `[serve] resident_store = true`)
               --listen ADDR (e.g. 127.0.0.1:8080; also `[serve] listen`)
               --serve-for SECS (keep the gateway up after the trace)
   rtl         run the cycle-accurate machine and report cycles
@@ -91,6 +94,9 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     serve.use_pjrt = args.flag("pjrt");
     serve.backend = args.opt_or("backend", serve.backend)?;
     serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
+    if args.flag("resident-store") {
+        serve.resident_store = true;
+    }
     let coord = Coordinator::builder(serve).start()?;
     let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("cli"));
     coord.shutdown();
@@ -156,6 +162,9 @@ fn serve_params_from(args: &Args) -> crate::Result<crate::config::ServeParams> {
     serve.max_batch = args.opt_or("batch", serve.max_batch)?;
     serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
     serve.backend = args.opt_or("backend", serve.backend)?;
+    if args.flag("resident-store") {
+        serve.resident_store = true;
+    }
     if let Some(listen) = args.opt("listen") {
         serve.listen = listen.to_string();
     }
@@ -490,6 +499,40 @@ mod tests {
     #[test]
     fn unknown_backend_rejected() {
         assert!(run_cmd("optimize --n 16 --backend warp").is_err());
+    }
+
+    #[test]
+    fn optimize_resident_store_matches_plain_batched() {
+        let plain =
+            run_cmd("optimize --function f3 --n 16 --k 50 --seed 1 --backend batched").unwrap();
+        let resident = run_cmd(
+            "optimize --function f3 --n 16 --k 50 --seed 1 --backend batched --resident-store",
+        )
+        .unwrap();
+        let fitness = |s: &str| {
+            s.lines()
+                .find(|l| l.contains("best fitness"))
+                .map(str::to_string)
+        };
+        assert_eq!(fitness(&plain), fitness(&resident));
+        assert!(fitness(&plain).is_some());
+    }
+
+    #[test]
+    fn resident_store_rejects_pjrt() {
+        let err = run_cmd("optimize --n 16 --k 25 --pjrt --resident-store").unwrap_err();
+        assert!(err.to_string().contains("resident_store"), "{err}");
+    }
+
+    #[test]
+    fn serve_resident_store_trace() {
+        let out = run_cmd(
+            "serve --jobs 6 --workers 2 --backend batched --resident-store \
+             --function f3 --n 16 --k 25",
+        )
+        .unwrap();
+        assert!(out.contains("served 6 jobs"), "{out}");
+        assert!(out.contains("6 completed"), "{out}");
     }
 
     #[test]

@@ -126,6 +126,11 @@ pub struct ServeParams {
     /// behavior), `batched` fuses a whole same-variant `BatchPlan` into one
     /// SoA dispatch (`rust/src/ga/backend.rs`).
     pub backend: BackendKind,
+    /// Keep parked jobs resident in SoA slabs between chunks (zero-copy
+    /// chunk dispatch) and let High-priority jobs preempt Low-priority
+    /// jobs at chunk boundaries (docs/backends.md §Resident store).
+    /// Engine-path only — incompatible with `use_pjrt`.
+    pub resident_store: bool,
 }
 
 impl Default for ServeParams {
@@ -139,6 +144,7 @@ impl Default for ServeParams {
             use_pjrt: true,
             listen: String::new(),
             backend: BackendKind::Scalar,
+            resident_store: false,
         }
     }
 }
@@ -248,6 +254,7 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
         let name = x.as_str().ok_or_else(|| anyhow!("`backend` must be a string"))?;
         s.backend = name.parse().map_err(|e: String| anyhow!("{e}"))?;
     }
+    get_bool(v, "resident_store", &mut s.resident_store)?;
     Ok(())
 }
 
@@ -311,6 +318,14 @@ use_pjrt = false
         assert_eq!(c.serve.backend, BackendKind::Scalar);
         let err = Config::from_toml("[serve]\nbackend = \"gpu\"").unwrap_err();
         assert!(err.to_string().contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn resident_store_key_parses() {
+        let c = Config::from_toml("[serve]\nresident_store = true").unwrap();
+        assert!(c.serve.resident_store);
+        assert!(!Config::default().serve.resident_store);
+        assert!(Config::from_toml("[serve]\nresident_store = 3").is_err());
     }
 
     #[test]

@@ -94,6 +94,22 @@ impl Batcher {
         }
     }
 
+    /// Pull EVERY waiting job of one priority class out of the ready
+    /// queues, returning `(variant, id)` pairs in variant-then-FIFO order.
+    /// The preemption seam: when a High job arrives, the scheduler pauses
+    /// the ready Low backlog (their state stays resident in the slab) and
+    /// re-pushes it once the High work drains.
+    pub fn pause_class(&mut self, priority: Priority) -> Vec<(VariantKey, JobId)> {
+        let class = priority.class();
+        let mut paused = Vec::new();
+        for (&variant, lanes) in self.queues.iter_mut() {
+            for w in lanes[class].drain(..) {
+                paused.push((variant, w.id));
+            }
+        }
+        paused
+    }
+
     /// Number of ready jobs across all variants.
     pub fn ready_count(&self) -> usize {
         self.queues
@@ -441,6 +457,28 @@ mod tests {
         let plans = b.drain_ready(t0 + Duration::from_millis(101));
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].jobs, vec![JobId(2)]);
+    }
+
+    #[test]
+    fn pause_class_pulls_only_that_class_in_fifo_order() {
+        let mut b = Batcher::new(8, Duration::ZERO);
+        let t0 = Instant::now();
+        b.push_job(dims(), JobId(1), t0, Priority::Low, None);
+        b.push_job(dims(), JobId(2), t0, Priority::High, None);
+        b.push_job(dims(), JobId(3), t0, Priority::Low, None);
+        b.push_job(dims(), JobId(4), t0, Priority::Normal, None);
+        let paused = b.pause_class(Priority::Low);
+        assert_eq!(
+            paused,
+            vec![(dims(), JobId(1)), (dims(), JobId(3))],
+            "low jobs out, FIFO order"
+        );
+        // High and Normal still dispatch; the paused jobs are gone.
+        let plans = b.drain_ready(t0);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].jobs, vec![JobId(2), JobId(4)]);
+        assert_eq!(b.ready_count(), 0);
+        assert!(b.pause_class(Priority::Low).is_empty());
     }
 
     #[test]

@@ -5,19 +5,30 @@
 //! [`JobSnapshot`] registry between chunks, honors cooperative cancellation
 //! and deadlines at chunk boundaries, and the batcher orders ready queues by
 //! priority class (FIFO within a class).
+//!
+//! With `resident_store` enabled (docs/backends.md §Resident store), parked
+//! jobs live in per-variant SoA slabs ([`ResidentStore`]) instead of AoS
+//! machines: a chunk dispatch moves the slab through the work channel and
+//! the backend advances selected rows in place — no per-chunk gather or
+//! scatter. On the same seam, High-priority jobs preempt Low-priority jobs
+//! at chunk boundaries: a displaced Low job pauses (state stays resident)
+//! and resumes when the High backlog drains, bounding High tail latency
+//! under overload.
 
 use crate::config::ServeParams;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::job::{
     JobEvent, JobHandle, JobId, JobPhase, JobResult, JobSnapshot, JobStatus, OptimizeRequest,
+    Priority,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::resident::ResidentStore;
 use crate::coordinator::workers::{
-    spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, WorkMsg,
+    spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, SlabTask, WorkMsg,
 };
-use crate::ga::{AnyGa, BackendKind};
+use crate::ga::{AnyGa, BackendKind, VariantKey};
 use crate::runtime::Manifest;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -50,9 +61,24 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Keep parked jobs resident in SoA slabs between chunks and enable
+    /// chunk-boundary preemption. Implies the engine path: PJRT is
+    /// disabled (the two are mutually exclusive — see
+    /// [`CoordinatorBuilder::start`]).
+    pub fn resident_store(mut self) -> Self {
+        self.serve.resident_store = true;
+        self.serve.use_pjrt = false;
+        self
+    }
+
     /// Spawn scheduler + backends.
     pub fn start(self) -> crate::Result<Coordinator> {
         let serve = self.serve;
+        anyhow::ensure!(
+            !(serve.resident_store && serve.use_pjrt),
+            "resident_store keeps job state in engine SoA slabs and cannot be \
+             combined with use_pjrt; disable one of them"
+        );
         let metrics = Arc::new(Metrics::new());
         let registry: Registry = Arc::new(Mutex::new(BTreeMap::new()));
         let (sched_tx, sched_rx) = channel::<SchedMsg>();
@@ -279,11 +305,15 @@ struct JobEntry {
     early_stop_chunks: u32,
     stale_chunks: u32,
     last_best: Option<i64>,
-    /// The parked machine between chunks: either the verified two-variable
-    /// engine or the V-ROM multivar machine ([`AnyGa`]).
+    /// The AoS-parked machine between chunks ([`AnyGa`]). `None` while the
+    /// job is in flight — or while its state lives in the [`ResidentStore`]
+    /// instead (resident mode).
     inst: Option<AnyGa>,
     remaining: u32,
-    priority: crate::coordinator::job::Priority,
+    priority: Priority,
+    /// Execution-variant key (fixed for the job's life; the batcher's
+    /// grouping key and the resident store's slab key).
+    variant: VariantKey,
     /// Absolute deadline (request-relative deadline + submit time).
     deadline: Option<Instant>,
     /// Emit a progress event every this many chunks (0 = never).
@@ -292,6 +322,11 @@ struct JobEntry {
     /// Cancellation observed while a chunk was in flight; applied at the
     /// chunk boundary.
     cancelled: bool,
+    /// A chunk currently executing is advancing this job.
+    in_flight: bool,
+    /// Displaced by active High-priority work (preemption); state stays
+    /// resident, the job is outside the ready queue until resumed.
+    paused: bool,
 }
 
 /// Count the terminal status, deliver the result, finalize the snapshot.
@@ -349,21 +384,26 @@ fn finalize_job(
 }
 
 /// Refresh the shared snapshot after a chunk (curve grows incrementally so
-/// long-running jobs don't re-copy their whole history every chunk).
+/// long-running jobs don't re-copy their whole history every chunk). Takes
+/// raw progress values so both the AoS and resident completion paths feed
+/// it without materializing a machine.
+#[allow(clippy::too_many_arguments)]
 fn update_snapshot(
     registry: &Registry,
     id: JobId,
-    inst: &AnyGa,
+    generations: u32,
+    best_y: i64,
+    best_x: u32,
+    curve: &[i64],
     backend: &'static str,
     requested_k: u32,
 ) {
     let mut reg = registry.lock().unwrap();
     if let Some(s) = reg.get_mut(&id) {
         s.phase = JobPhase::Running;
-        s.generations = inst.generation();
-        s.best_y = inst.best().y;
-        s.best_x = inst.best().x;
-        let curve = inst.curve();
+        s.generations = generations;
+        s.best_y = best_y;
+        s.best_x = best_x;
         if curve.len() > s.curve.len() {
             s.curve.extend_from_slice(&curve[s.curve.len()..]);
             s.curve.truncate(requested_k as usize);
@@ -380,6 +420,82 @@ fn snapshot_backend(registry: &Registry, id: JobId) -> &'static str {
         .get(&id)
         .map(|s| s.backend)
         .unwrap_or("none")
+}
+
+/// Post-chunk accounting + terminal decision, shared by the AoS and slab
+/// completion paths. Terminal precedence: an explicit cancel always wins;
+/// finished work beats a just-expired deadline.
+fn post_chunk_status(entry: &mut JobEntry, best_y: i64, now: Instant) -> Option<JobStatus> {
+    if entry.last_best == Some(best_y) {
+        entry.stale_chunks += 1;
+    } else {
+        entry.stale_chunks = 0;
+        entry.last_best = Some(best_y);
+    }
+    let early = entry.early_stop_chunks > 0 && entry.stale_chunks >= entry.early_stop_chunks;
+    if entry.cancelled {
+        Some(JobStatus::Cancelled)
+    } else if entry.remaining == 0 {
+        Some(JobStatus::Completed)
+    } else if early {
+        Some(JobStatus::EarlyStopped)
+    } else if entry.deadline.is_some_and(|d| now >= d) {
+        Some(JobStatus::DeadlineMiss)
+    } else {
+        None
+    }
+}
+
+/// Re-enqueue every paused (preempted) job — called when the last active
+/// High-priority job leaves the table.
+fn resume_paused(
+    paused: &mut Vec<JobId>,
+    table: &mut HashMap<JobId, JobEntry>,
+    batcher: &mut Batcher,
+    now: Instant,
+) {
+    for id in paused.drain(..) {
+        if let Some(entry) = table.get_mut(&id) {
+            if entry.paused {
+                entry.paused = false;
+                batcher.push_job(entry.variant, id, now, entry.priority, entry.deadline);
+            }
+        }
+    }
+}
+
+/// Preempt one job: out of the ready queue, state left resident, counted.
+/// Resumed by [`resume_paused`] when the High backlog drains.
+fn pause_job(
+    id: JobId,
+    table: &mut HashMap<JobId, JobEntry>,
+    paused: &mut Vec<JobId>,
+    metrics: &Metrics,
+) {
+    if let Some(e) = table.get_mut(&id) {
+        e.paused = true;
+        paused.push(id);
+        metrics.jobs_preempted.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Bookkeeping after ANY job finalizes: when the last active High-priority
+/// job leaves the table, the paused (preempted) backlog resumes. One
+/// helper so every terminal path in `scheduler_loop` stays in lockstep.
+fn on_job_terminal(
+    priority: Priority,
+    high_active: &mut usize,
+    paused: &mut Vec<JobId>,
+    table: &mut HashMap<JobId, JobEntry>,
+    batcher: &mut Batcher,
+    now: Instant,
+) {
+    if priority == Priority::High {
+        *high_active = high_active.saturating_sub(1);
+        if *high_active == 0 {
+            resume_paused(paused, table, batcher, now);
+        }
+    }
 }
 
 fn scheduler_loop(
@@ -401,6 +517,15 @@ fn scheduler_loop(
     } else {
         Batcher::new(1, Duration::ZERO)
     };
+    // Resident mode (engine path only — the builder rejects PJRT + resident):
+    // parked jobs live in per-variant SoA slabs, and High-priority work
+    // preempts Low-priority jobs at chunk boundaries.
+    let resident = serve.resident_store && pjrt_tx.is_none();
+    let mut store = ResidentStore::new(metrics.clone());
+    // Low jobs displaced by active High work (FIFO); resumed when the last
+    // High job leaves the table.
+    let mut paused: Vec<JobId> = Vec::new();
+    let mut high_active: usize = 0;
 
     let dispatch = |plan_jobs: Vec<RunningJob>, multi: bool| {
         let msg = WorkMsg::Batch(plan_jobs, K_CHUNK);
@@ -432,6 +557,7 @@ fn scheduler_loop(
                     Ok(inst) => {
                         let variant = inst.variant();
                         let deadline = req.deadline.map(|d| now + d);
+                        let priority = req.priority;
                         table.insert(
                             id,
                             JobEntry {
@@ -445,14 +571,29 @@ fn scheduler_loop(
                                 last_best: None,
                                 inst: Some(inst),
                                 remaining: req.params.k,
-                                priority: req.priority,
+                                priority,
+                                variant,
                                 deadline,
                                 progress_every: req.progress_every,
                                 chunks_done: 0,
                                 cancelled: false,
+                                in_flight: false,
+                                paused: false,
                             },
                         );
-                        batcher.push_job(variant, id, now, req.priority, deadline);
+                        if priority == Priority::High {
+                            high_active += 1;
+                            if resident {
+                                // Preemption: displace the READY Low
+                                // backlog before this job queues; in-flight
+                                // Low chunks finish and pause at their
+                                // boundary (Done handling).
+                                for (_, low_id) in batcher.pause_class(Priority::Low) {
+                                    pause_job(low_id, &mut table, &mut paused, &metrics);
+                                }
+                            }
+                        }
+                        batcher.push_job(variant, id, now, priority, deadline);
                     }
                     Err(e) => {
                         metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -480,102 +621,253 @@ fn scheduler_loop(
                 }
             }
             Ok(SchedMsg::Cancel(id)) => {
-                // Cooperative: a parked job (between chunks / still queued)
-                // finalizes immediately; an in-flight job is flagged and
-                // finalizes when its chunk returns. Unknown ids (already
-                // terminal) are ignored — cancel is idempotent.
-                let parked = table.get(&id).map(|e| e.inst.is_some());
-                match parked {
+                // Cooperative: a parked job (AoS-parked, resident-parked or
+                // paused) finalizes immediately; a job whose chunk — or
+                // whose slab — is in flight is flagged and finalizes at the
+                // boundary. Unknown ids (already terminal) are ignored —
+                // cancel is idempotent.
+                let parked_now = table.get(&id).map(|e| {
+                    !e.in_flight
+                        && !(store.is_resident(id) && store.variant_in_flight(&e.variant))
+                });
+                match parked_now {
                     Some(true) => {
                         let mut entry = table.remove(&id).unwrap();
-                        let inst = entry.inst.take().unwrap();
+                        let inst = entry
+                            .inst
+                            .take()
+                            .or_else(|| store.evict(id))
+                            .expect("parked job has state");
                         // Purge the parked entry so it stops counting toward
                         // batch fullness / urgency for jobs queued behind it.
-                        batcher.remove(&inst.variant(), id);
+                        batcher.remove(&entry.variant, id);
+                        paused.retain(|&p| p != id);
+                        let priority = entry.priority;
                         let backend = snapshot_backend(&registry, id);
+                        let now = Instant::now();
                         finalize_job(
                             id,
                             entry,
                             &inst,
                             JobStatus::Cancelled,
                             backend,
-                            Instant::now(),
+                            now,
                             &metrics,
                             &registry,
+                        );
+                        on_job_terminal(
+                            priority,
+                            &mut high_active,
+                            &mut paused,
+                            &mut table,
+                            &mut batcher,
+                            now,
                         );
                     }
                     Some(false) => table.get_mut(&id).unwrap().cancelled = true,
                     None => {}
                 }
             }
-            Ok(SchedMsg::Done(DoneMsg { jobs, backend })) => {
+            Ok(SchedMsg::Done(done)) => {
                 let now = Instant::now();
-                for job in jobs {
-                    let RunningJob {
-                        id,
-                        inst,
-                        executed,
-                        ..
-                    } = job;
-                    let Some(entry) = table.get_mut(&id) else { continue };
-                    entry.remaining = entry.remaining.saturating_sub(executed);
-                    entry.chunks_done += 1;
-                    metrics
-                        .generations
-                        .fetch_add(u64::from(executed), Ordering::Relaxed);
+                match done {
+                    DoneMsg::Batch { jobs, backend } => {
+                        for job in jobs {
+                            let RunningJob {
+                                id,
+                                inst,
+                                executed,
+                                ..
+                            } = job;
+                            let Some(entry) = table.get_mut(&id) else { continue };
+                            entry.in_flight = false;
+                            entry.remaining = entry.remaining.saturating_sub(executed);
+                            entry.chunks_done += 1;
+                            metrics
+                                .generations
+                                .fetch_add(u64::from(executed), Ordering::Relaxed);
 
-                    // Between-chunks observability: shared snapshot + the
-                    // handle's progress stream.
-                    update_snapshot(&registry, id, &inst, backend, entry.requested_k);
-                    if entry.progress_every > 0 && entry.chunks_done % entry.progress_every == 0
-                    {
-                        let _ = entry.progress_tx.send(JobEvent {
-                            id,
-                            generations: inst.generation(),
-                            best_y: inst.best().y,
-                            best_x: inst.best().x,
-                            remaining: entry.remaining,
-                            backend,
-                        });
-                    }
-
-                    // Early-stop accounting.
-                    let best = inst.best().y;
-                    if entry.last_best == Some(best) {
-                        entry.stale_chunks += 1;
-                    } else {
-                        entry.stale_chunks = 0;
-                        entry.last_best = Some(best);
-                    }
-                    let early = entry.early_stop_chunks > 0
-                        && entry.stale_chunks >= entry.early_stop_chunks;
-
-                    // Terminal precedence: an explicit cancel always wins;
-                    // finished work beats a just-expired deadline.
-                    let status = if entry.cancelled {
-                        Some(JobStatus::Cancelled)
-                    } else if entry.remaining == 0 {
-                        Some(JobStatus::Completed)
-                    } else if early {
-                        Some(JobStatus::EarlyStopped)
-                    } else if entry.deadline.is_some_and(|d| now >= d) {
-                        Some(JobStatus::DeadlineMiss)
-                    } else {
-                        None
-                    };
-                    match status {
-                        Some(status) => {
-                            let entry = table.remove(&id).unwrap();
-                            finalize_job(
-                                id, entry, &inst, status, backend, now, &metrics, &registry,
+                            // Between-chunks observability: shared snapshot
+                            // + the handle's progress stream.
+                            update_snapshot(
+                                &registry,
+                                id,
+                                inst.generation(),
+                                inst.best().y,
+                                inst.best().x,
+                                inst.curve(),
+                                backend,
+                                entry.requested_k,
                             );
+                            if entry.progress_every > 0
+                                && entry.chunks_done % entry.progress_every == 0
+                            {
+                                let _ = entry.progress_tx.send(JobEvent {
+                                    id,
+                                    generations: inst.generation(),
+                                    best_y: inst.best().y,
+                                    best_x: inst.best().x,
+                                    remaining: entry.remaining,
+                                    backend,
+                                });
+                            }
+
+                            match post_chunk_status(entry, inst.best().y, now) {
+                                Some(status) => {
+                                    let entry = table.remove(&id).unwrap();
+                                    let priority = entry.priority;
+                                    finalize_job(
+                                        id, entry, &inst, status, backend, now, &metrics,
+                                        &registry,
+                                    );
+                                    on_job_terminal(
+                                        priority,
+                                        &mut high_active,
+                                        &mut paused,
+                                        &mut table,
+                                        &mut batcher,
+                                        now,
+                                    );
+                                }
+                                None => {
+                                    let variant = entry.variant;
+                                    let priority = entry.priority;
+                                    let deadline = entry.deadline;
+                                    if resident {
+                                        // Park resident: the machine moves
+                                        // into the variant slab (or stays
+                                        // AoS one more round if the slab is
+                                        // mid-flight).
+                                        if let Err(inst) = store.admit_parked(id, inst) {
+                                            table.get_mut(&id).unwrap().inst = Some(inst);
+                                        }
+                                    } else {
+                                        entry.inst = Some(inst);
+                                    }
+                                    if resident
+                                        && priority == Priority::Low
+                                        && high_active > 0
+                                    {
+                                        // Chunk-boundary preemption: the
+                                        // next chunk is displaced by active
+                                        // High work.
+                                        pause_job(id, &mut table, &mut paused, &metrics);
+                                    } else {
+                                        batcher.push_job(variant, id, now, priority, deadline);
+                                    }
+                                }
+                            }
                         }
-                        None => {
-                            let variant = inst.variant();
-                            let priority = entry.priority;
-                            let deadline = entry.deadline;
-                            entry.inst = Some(inst);
-                            batcher.push_job(variant, id, now, priority, deadline);
+                    }
+                    DoneMsg::Slab { task, backend } => {
+                        let SlabTask { rslab, gens } = task;
+                        let ids = rslab.ids.clone();
+                        store.finish_dispatch(rslab);
+                        for (row, id) in ids.into_iter().enumerate() {
+                            let executed = gens[row];
+                            let Some(entry) = table.get_mut(&id) else { continue };
+                            if executed == 0 {
+                                // Rider row (parked or paused while the slab
+                                // flew): apply any cancellation / paused
+                                // deadline that landed meanwhile, now that
+                                // the slab is evictable again.
+                                let expired =
+                                    entry.paused && entry.deadline.is_some_and(|d| now >= d);
+                                let status = if entry.cancelled {
+                                    Some(JobStatus::Cancelled)
+                                } else if expired {
+                                    Some(JobStatus::DeadlineMiss)
+                                } else {
+                                    None
+                                };
+                                if let Some(status) = status {
+                                    let entry = table.remove(&id).unwrap();
+                                    let priority = entry.priority;
+                                    batcher.remove(&entry.variant, id);
+                                    paused.retain(|&p| p != id);
+                                    let inst =
+                                        store.evict(id).expect("rider row is resident");
+                                    let prev = snapshot_backend(&registry, id);
+                                    finalize_job(
+                                        id, entry, &inst, status, prev, now, &metrics,
+                                        &registry,
+                                    );
+                                    on_job_terminal(
+                                        priority,
+                                        &mut high_active,
+                                        &mut paused,
+                                        &mut table,
+                                        &mut batcher,
+                                        now,
+                                    );
+                                }
+                                continue;
+                            }
+                            entry.in_flight = false;
+                            entry.remaining = entry.remaining.saturating_sub(executed);
+                            entry.chunks_done += 1;
+                            metrics
+                                .generations
+                                .fetch_add(u64::from(executed), Ordering::Relaxed);
+
+                            let Some((generations, best_y, best_x, curve)) =
+                                store.row_progress(id)
+                            else {
+                                continue;
+                            };
+                            update_snapshot(
+                                &registry,
+                                id,
+                                generations,
+                                best_y,
+                                best_x,
+                                curve,
+                                backend,
+                                entry.requested_k,
+                            );
+                            if entry.progress_every > 0
+                                && entry.chunks_done % entry.progress_every == 0
+                            {
+                                let _ = entry.progress_tx.send(JobEvent {
+                                    id,
+                                    generations,
+                                    best_y,
+                                    best_x,
+                                    remaining: entry.remaining,
+                                    backend,
+                                });
+                            }
+
+                            match post_chunk_status(entry, best_y, now) {
+                                Some(status) => {
+                                    let entry = table.remove(&id).unwrap();
+                                    let priority = entry.priority;
+                                    let inst =
+                                        store.evict(id).expect("advanced row is resident");
+                                    finalize_job(
+                                        id, entry, &inst, status, backend, now, &metrics,
+                                        &registry,
+                                    );
+                                    on_job_terminal(
+                                        priority,
+                                        &mut high_active,
+                                        &mut paused,
+                                        &mut table,
+                                        &mut batcher,
+                                        now,
+                                    );
+                                }
+                                None => {
+                                    let variant = entry.variant;
+                                    let priority = entry.priority;
+                                    let deadline = entry.deadline;
+                                    if priority == Priority::Low && high_active > 0 {
+                                        pause_job(id, &mut table, &mut paused, &metrics);
+                                    } else {
+                                        batcher.push_job(variant, id, now, priority, deadline);
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -585,52 +877,219 @@ fn scheduler_loop(
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
         }
 
+        // Paused (preempted) jobs sit outside the batcher; enforce their
+        // deadlines here. Riders whose slab is in flight defer to the slab's
+        // return (their state cannot be evicted mid-flight).
+        if !paused.is_empty() {
+            let now = Instant::now();
+            paused.retain(|id| table.contains_key(id));
+            let expired: Vec<JobId> = paused
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    let Some(e) = table.get(&id) else { return false };
+                    e.deadline.is_some_and(|d| now >= d)
+                        && !(store.is_resident(id) && store.variant_in_flight(&e.variant))
+                })
+                .collect();
+            for id in expired {
+                paused.retain(|&p| p != id);
+                let mut entry = table.remove(&id).unwrap();
+                let inst = entry
+                    .inst
+                    .take()
+                    .or_else(|| store.evict(id))
+                    .expect("paused job has state");
+                let backend = snapshot_backend(&registry, id);
+                finalize_job(
+                    id,
+                    entry,
+                    &inst,
+                    JobStatus::DeadlineMiss,
+                    backend,
+                    now,
+                    &metrics,
+                    &registry,
+                );
+            }
+        }
+
         // Dispatch everything ready; a job whose deadline already passed is
         // failed here rather than burning a backend dispatch.
-        for plan in batcher.drain_ready(Instant::now()) {
-            let now = Instant::now();
-            let multi = plan.variant.is_multi();
-            let mut running = Vec::with_capacity(plan.jobs.len());
-            for id in plan.jobs {
-                // Stale batcher entries (cancelled / finalized jobs) have no
-                // table row or no parked instance; skip them.
-                let expired = match table.get(&id) {
-                    Some(entry) if entry.inst.is_some() => {
-                        entry.deadline.is_some_and(|d| now >= d)
+        let plans = batcher.drain_ready(Instant::now());
+        if !resident {
+            for plan in plans {
+                let now = Instant::now();
+                let multi = plan.variant.is_multi();
+                let mut running = Vec::with_capacity(plan.jobs.len());
+                for id in plan.jobs {
+                    // Stale batcher entries (cancelled / finalized jobs)
+                    // have no table row or no parked instance; skip them.
+                    let expired = match table.get(&id) {
+                        Some(entry) if entry.inst.is_some() => {
+                            entry.deadline.is_some_and(|d| now >= d)
+                        }
+                        _ => continue,
+                    };
+                    if expired {
+                        let mut entry = table.remove(&id).unwrap();
+                        let inst = entry.inst.take().unwrap();
+                        let priority = entry.priority;
+                        let backend = snapshot_backend(&registry, id);
+                        finalize_job(
+                            id,
+                            entry,
+                            &inst,
+                            JobStatus::DeadlineMiss,
+                            backend,
+                            now,
+                            &metrics,
+                            &registry,
+                        );
+                        on_job_terminal(
+                            priority,
+                            &mut high_active,
+                            &mut paused,
+                            &mut table,
+                            &mut batcher,
+                            now,
+                        );
+                        continue;
                     }
-                    _ => continue,
-                };
-                if expired {
-                    let mut entry = table.remove(&id).unwrap();
+                    let entry = table.get_mut(&id).unwrap();
                     let inst = entry.inst.take().unwrap();
-                    let backend = snapshot_backend(&registry, id);
-                    finalize_job(
+                    entry.in_flight = true;
+                    running.push(RunningJob {
                         id,
-                        entry,
-                        &inst,
-                        JobStatus::DeadlineMiss,
-                        backend,
-                        now,
-                        &metrics,
-                        &registry,
-                    );
+                        inst,
+                        remaining: entry.remaining,
+                        executed: 0,
+                    });
+                }
+                if running.is_empty() {
                     continue;
                 }
-                let entry = table.get_mut(&id).unwrap();
-                let inst = entry.inst.take().unwrap();
-                running.push(RunningJob {
-                    id,
-                    inst,
-                    remaining: entry.remaining,
-                    executed: 0,
-                });
+                metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
+                if !dispatch(running, multi) {
+                    return; // backend gone
+                }
             }
-            if running.is_empty() {
-                continue;
+        } else {
+            // Resident mode: same-variant plans merge into ONE slab dispatch
+            // — the variant's cohort steps as a unit, zero-copy. max_batch
+            // still bounds the AoS fallback batches below.
+            let mut merged: BTreeMap<VariantKey, Vec<JobId>> = BTreeMap::new();
+            for plan in plans {
+                merged.entry(plan.variant).or_default().extend(plan.jobs);
             }
-            metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
-            if !dispatch(running, multi) {
-                return; // backend gone
+            for (variant, plan_ids) in merged {
+                let now = Instant::now();
+                let mut ready: Vec<JobId> = Vec::new();
+                for id in plan_ids {
+                    let expired = match table.get(&id) {
+                        Some(entry)
+                            if entry.inst.is_some() || store.is_resident(id) =>
+                        {
+                            entry.deadline.is_some_and(|d| now >= d)
+                        }
+                        _ => continue, // stale batcher entry
+                    };
+                    if expired {
+                        if store.is_resident(id) && store.variant_in_flight(&variant) {
+                            // State is mid-flight: re-queue; the deadline
+                            // finalizes next round once the slab returns.
+                            let e = table.get_mut(&id).unwrap();
+                            batcher.push_job(variant, id, now, e.priority, e.deadline);
+                            continue;
+                        }
+                        let mut entry = table.remove(&id).unwrap();
+                        let priority = entry.priority;
+                        let inst = entry
+                            .inst
+                            .take()
+                            .or_else(|| store.evict(id))
+                            .expect("ready job has state");
+                        let backend = snapshot_backend(&registry, id);
+                        finalize_job(
+                            id,
+                            entry,
+                            &inst,
+                            JobStatus::DeadlineMiss,
+                            backend,
+                            now,
+                            &metrics,
+                            &registry,
+                        );
+                        on_job_terminal(
+                            priority,
+                            &mut high_active,
+                            &mut paused,
+                            &mut table,
+                            &mut batcher,
+                            now,
+                        );
+                        continue;
+                    }
+                    ready.push(id);
+                }
+                if ready.is_empty() {
+                    continue;
+                }
+                if store.variant_in_flight(&variant) {
+                    // Slab busy: resident members wait for its return; fresh
+                    // jobs run as a plain AoS batch this round and are
+                    // admitted at their next boundary.
+                    let multi = variant.is_multi();
+                    let mut running = Vec::new();
+                    for id in ready {
+                        let entry = table.get_mut(&id).unwrap();
+                        if store.is_resident(id) {
+                            batcher.push_job(variant, id, now, entry.priority, entry.deadline);
+                        } else {
+                            let inst = entry.inst.take().unwrap();
+                            entry.in_flight = true;
+                            running.push(RunningJob {
+                                id,
+                                inst,
+                                remaining: entry.remaining,
+                                executed: 0,
+                            });
+                        }
+                    }
+                    if !running.is_empty() {
+                        metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
+                        if !dispatch(running, multi) {
+                            return;
+                        }
+                    }
+                    continue;
+                }
+                // Assemble the slab dispatch: admit fresh jobs (the only
+                // AoS→SoA copy in a resident job's life), then select rows.
+                let mut rslab = store.begin_dispatch(variant);
+                for &id in &ready {
+                    if !store.is_resident(id) {
+                        let entry = table.get_mut(&id).unwrap();
+                        let inst = entry.inst.take().expect("fresh ready job parked AoS");
+                        store.admit_into(&mut rslab, id, inst);
+                    }
+                }
+                // O(B) row selection: cohorts merge every same-variant job
+                // into one slab, so membership must not be a linear scan
+                // per row.
+                let ready_set: HashSet<JobId> = ready.iter().copied().collect();
+                let mut gens = vec![0u32; rslab.ids.len()];
+                for (row, rid) in rslab.ids.iter().enumerate() {
+                    if ready_set.contains(rid) {
+                        let entry = table.get_mut(rid).unwrap();
+                        entry.in_flight = true;
+                        gens[row] = entry.remaining.min(K_CHUNK);
+                    }
+                }
+                metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
+                if engine_tx.send(WorkMsg::Slab(SlabTask { rslab, gens })).is_err() {
+                    return; // backend gone
+                }
             }
         }
     }

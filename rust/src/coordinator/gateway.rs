@@ -367,6 +367,8 @@ fn metrics_json(m: &MetricsSnapshot) -> Value {
         ),
         ("jobs_cancelled", Value::Int(m.jobs_cancelled as i64)),
         ("deadline_misses", Value::Int(m.deadline_misses as i64)),
+        ("jobs_preempted", Value::Int(m.jobs_preempted as i64)),
+        ("resident_bytes", Value::Int(m.resident_bytes as i64)),
         ("jobs_failed", Value::Int(m.jobs_failed as i64)),
         ("chunks_dispatched", Value::Int(m.chunks_dispatched as i64)),
         ("pjrt_dispatches", Value::Int(m.pjrt_dispatches as i64)),
@@ -411,5 +413,7 @@ mod tests {
         let out = jsonmini::to_string(&metrics_json(&m.snapshot()));
         assert!(out.contains("\"jobs_cancelled\":0"), "{out}");
         assert!(out.contains("\"deadline_misses\":0"), "{out}");
+        assert!(out.contains("\"jobs_preempted\":0"), "{out}");
+        assert!(out.contains("\"resident_bytes\":0"), "{out}");
     }
 }

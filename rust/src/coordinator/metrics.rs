@@ -15,6 +15,14 @@ pub struct Metrics {
     pub jobs_cancelled: AtomicU64,
     /// Jobs stopped because their deadline expired before completion.
     pub deadline_misses: AtomicU64,
+    /// Chunk-boundary preemptions: a Low-priority job whose next chunk was
+    /// displaced by active High-priority work (paused resident, resumed
+    /// when the High backlog drains). One count per pause event.
+    pub jobs_preempted: AtomicU64,
+    /// Gauge: bytes of population + LFSR-bank state currently parked in
+    /// resident SoA slabs (`--resident-store`). Rises at admission, falls
+    /// at eviction; 0 when the resident store is off or empty.
+    pub resident_bytes: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub chunks_dispatched: AtomicU64,
     pub pjrt_dispatches: AtomicU64,
@@ -72,6 +80,8 @@ impl Metrics {
             jobs_early_stopped: self.jobs_early_stopped.load(Ordering::Relaxed),
             jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            jobs_preempted: self.jobs_preempted.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
             pjrt_dispatches: self.pjrt_dispatches.load(Ordering::Relaxed),
@@ -97,6 +107,8 @@ pub struct MetricsSnapshot {
     pub jobs_early_stopped: u64,
     pub jobs_cancelled: u64,
     pub deadline_misses: u64,
+    pub jobs_preempted: u64,
+    pub resident_bytes: u64,
     pub jobs_failed: u64,
     pub chunks_dispatched: u64,
     pub pjrt_dispatches: u64,
@@ -117,9 +129,9 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "jobs: {} submitted, {} completed, {} early-stopped, {} cancelled, \
-             {} deadline-missed, {} failed\n\
+             {} deadline-missed, {} preempted, {} failed\n\
              chunks: {} dispatched ({} pjrt, {} engine / {} batched jobs), \
-             mean batch {:.2}, {} padded rows\n\
+             mean batch {:.2}, {} padded rows, {} resident bytes\n\
              generations: {}\n\
              latency: p50 {:?}, p95 {:?}, p99 {:?}, max {:?} ({} samples)",
             self.jobs_submitted,
@@ -127,6 +139,7 @@ impl MetricsSnapshot {
             self.jobs_early_stopped,
             self.jobs_cancelled,
             self.deadline_misses,
+            self.jobs_preempted,
             self.jobs_failed,
             self.chunks_dispatched,
             self.pjrt_dispatches,
@@ -134,6 +147,7 @@ impl MetricsSnapshot {
             self.engine_batch_jobs,
             self.mean_batch,
             self.padded_rows,
+            self.resident_bytes,
             self.generations,
             self.latency_p50,
             self.latency_p95,

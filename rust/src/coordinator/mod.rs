@@ -34,12 +34,19 @@
 //! [`JobSnapshot`]s expose mid-flight state, and the std-only [`Gateway`]
 //! serves the same lifecycle over HTTP/JSON (`POST /v1/jobs`,
 //! `GET /v1/jobs/:id`, `DELETE /v1/jobs/:id`, `GET /v1/metrics`).
+//!
+//! With `resident_store` (docs/backends.md §Resident store), parked engine
+//! jobs rest in per-variant SoA slabs (`resident::ResidentStore`): chunk
+//! dispatch moves the slab — not copies of every job's state — through the
+//! work channel, and High-priority jobs preempt Low-priority jobs at chunk
+//! boundaries (`jobs_preempted` / `resident_bytes` metrics).
 
 mod batcher;
 mod coordinator;
 mod gateway;
 mod job;
 mod metrics;
+mod resident;
 mod workers;
 
 pub use batcher::{BatchPlan, Batcher};

@@ -1,0 +1,244 @@
+//! The resident-SoA job store: parked jobs live in [`SoaSlab`]s between
+//! chunks, keyed by [`VariantKey`].
+//!
+//! With `--resident-store` the scheduler parks every engine-path job here
+//! instead of re-materializing an AoS machine after each chunk. A variant's
+//! whole cohort is ONE slab; at dispatch the slab *moves* through the work
+//! channel (three `Vec` pointer moves — zero state copies), the backend's
+//! `step_slab` advances the selected rows in place, and the slab moves
+//! back. AoS materialization happens only on admission (first dispatch),
+//! eviction (terminal jobs / cancellation) and result extraction — the
+//! per-chunk gather/scatter of the plain batched path is gone.
+//!
+//! While a slab is in flight its variant is marked busy; newly arriving
+//! same-variant jobs dispatch as a plain AoS batch that round and are
+//! admitted at their next chunk boundary. The `resident_bytes` gauge tracks
+//! the population + bank footprint of every resident row (parked or in
+//! flight).
+
+use crate::coordinator::job::JobId;
+use crate::coordinator::metrics::Metrics;
+use crate::ga::{AnyGa, SoaSlab, VariantKey};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// One variant's resident cohort: the SoA slab plus the job ids of its
+/// rows (`ids[row]` owns slab row `row`).
+#[derive(Debug)]
+pub(crate) struct ResidentSlab {
+    pub key: VariantKey,
+    pub ids: Vec<JobId>,
+    pub slab: SoaSlab,
+}
+
+impl ResidentSlab {
+    fn new(key: VariantKey) -> Self {
+        Self {
+            key,
+            ids: Vec::new(),
+            slab: SoaSlab::new(key),
+        }
+    }
+
+    /// Row index of a job in this slab.
+    pub fn row_of(&self, id: JobId) -> Option<usize> {
+        self.ids.iter().position(|&j| j == id)
+    }
+}
+
+/// Scheduler-owned registry of resident slabs.
+#[derive(Debug)]
+pub(crate) struct ResidentStore {
+    /// Parked slabs only; an in-flight slab is moved into the `WorkMsg`.
+    parked: HashMap<VariantKey, ResidentSlab>,
+    /// Variants whose slab is currently in flight.
+    in_flight: HashSet<VariantKey>,
+    /// Which variant each resident job lives in (parked or in flight).
+    homes: HashMap<JobId, VariantKey>,
+    metrics: Arc<Metrics>,
+}
+
+impl ResidentStore {
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        Self {
+            parked: HashMap::new(),
+            in_flight: HashSet::new(),
+            homes: HashMap::new(),
+            metrics,
+        }
+    }
+
+    /// Is this job's state resident (in any slab, parked or in flight)?
+    pub fn is_resident(&self, id: JobId) -> bool {
+        self.homes.contains_key(&id)
+    }
+
+    /// Is this variant's slab currently executing a chunk?
+    pub fn variant_in_flight(&self, key: &VariantKey) -> bool {
+        self.in_flight.contains(key)
+    }
+
+    /// Take the variant's slab for a dispatch (empty slab if none yet) and
+    /// mark the variant busy until [`ResidentStore::finish_dispatch`].
+    pub fn begin_dispatch(&mut self, key: VariantKey) -> ResidentSlab {
+        debug_assert!(!self.in_flight.contains(&key), "slab already in flight");
+        self.in_flight.insert(key);
+        self.parked
+            .remove(&key)
+            .unwrap_or_else(|| ResidentSlab::new(key))
+    }
+
+    /// Admit a parked AoS machine into a (taken) slab as a new row.
+    pub fn admit_into(&mut self, rslab: &mut ResidentSlab, id: JobId, inst: AnyGa) {
+        let row = rslab.slab.admit(inst);
+        debug_assert_eq!(row, rslab.ids.len());
+        rslab.ids.push(id);
+        self.homes.insert(id, rslab.key);
+        self.metrics
+            .resident_bytes
+            .fetch_add(rslab.slab.row_state_bytes() as u64, Ordering::Relaxed);
+    }
+
+    /// Admit a machine into the variant's PARKED slab (creating it if
+    /// needed). Returns the machine back when the slab is in flight — the
+    /// caller parks AoS for one round and retries at the next boundary.
+    pub fn admit_parked(&mut self, id: JobId, inst: AnyGa) -> Result<(), AnyGa> {
+        let key = inst.variant();
+        if self.in_flight.contains(&key) {
+            return Err(inst);
+        }
+        let rslab = self
+            .parked
+            .entry(key)
+            .or_insert_with(|| ResidentSlab::new(key));
+        let row = rslab.slab.admit(inst);
+        debug_assert_eq!(row, rslab.ids.len());
+        rslab.ids.push(id);
+        self.homes.insert(id, key);
+        self.metrics
+            .resident_bytes
+            .fetch_add(rslab.slab.row_state_bytes() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Park a slab back after its chunk (or after assembly, when nothing
+    /// was dispatched). Empty slabs are dropped rather than parked.
+    pub fn finish_dispatch(&mut self, rslab: ResidentSlab) {
+        self.in_flight.remove(&rslab.key);
+        if !rslab.ids.is_empty() {
+            self.parked.insert(rslab.key, rslab);
+        }
+    }
+
+    /// Evict one job from its PARKED slab, rebuilding the AoS machine
+    /// (terminal jobs, cancellation, result extraction). Returns `None`
+    /// when the job is not resident. Panics if the slab is in flight —
+    /// callers gate on [`ResidentStore::variant_in_flight`].
+    pub fn evict(&mut self, id: JobId) -> Option<AnyGa> {
+        let key = self.homes.remove(&id)?;
+        assert!(
+            !self.in_flight.contains(&key),
+            "cannot evict from an in-flight slab"
+        );
+        let rslab = self.parked.get_mut(&key).expect("resident slab parked");
+        let row = rslab.row_of(id).expect("resident job has a row");
+        let inst = rslab.slab.evict(row);
+        // evict() swap-removes: the former last row now sits at `row`.
+        rslab.ids.swap_remove(row);
+        self.metrics
+            .resident_bytes
+            .fetch_sub(rslab.slab.row_state_bytes() as u64, Ordering::Relaxed);
+        if rslab.ids.is_empty() {
+            self.parked.remove(&key);
+        }
+        Some(inst)
+    }
+
+    /// Progress view of a resident job's row (parked slabs only):
+    /// `(generations, best_y, best_x, curve)`.
+    pub fn row_progress(&self, id: JobId) -> Option<(u32, i64, u32, &[i64])> {
+        let key = self.homes.get(&id)?;
+        let rslab = self.parked.get(key)?;
+        let row = rslab.row_of(id)?;
+        let (y, x) = rslab.slab.row_best(row);
+        Some((
+            rslab.slab.row_generation(row),
+            y,
+            x,
+            rslab.slab.row_curve(row),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaParams;
+    use crate::ga::{BatchedSoaBackend, StepBackend};
+
+    fn job(seed: u64) -> AnyGa {
+        AnyGa::from_params(&GaParams {
+            n: 16,
+            m: 20,
+            k: 100,
+            function: "f3".into(),
+            seed,
+            ..GaParams::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn admit_step_evict_lifecycle_and_gauge() {
+        let metrics = Arc::new(Metrics::new());
+        let mut store = ResidentStore::new(metrics.clone());
+        let a = job(1);
+        let key = a.variant();
+        let mut reference = a.clone();
+        reference.run(25);
+
+        let mut rslab = store.begin_dispatch(key);
+        store.admit_into(&mut rslab, JobId(1), a);
+        assert!(store.is_resident(JobId(1)));
+        assert!(store.variant_in_flight(&key));
+        let per_row = rslab.slab.row_state_bytes() as u64;
+        assert_eq!(metrics.resident_bytes.load(Ordering::Relaxed), per_row);
+
+        BatchedSoaBackend.step_slab(&mut rslab.slab, &[25]);
+        store.finish_dispatch(rslab);
+        assert!(!store.variant_in_flight(&key));
+
+        let (gens, best_y, _, curve) = store.row_progress(JobId(1)).unwrap();
+        assert_eq!(gens, 25);
+        assert_eq!(best_y, reference.best().y);
+        assert_eq!(curve, reference.curve());
+
+        let back = store.evict(JobId(1)).unwrap();
+        assert_eq!(back.population(), reference.population());
+        assert_eq!(metrics.resident_bytes.load(Ordering::Relaxed), 0);
+        assert!(!store.is_resident(JobId(1)));
+        assert!(store.evict(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn eviction_remaps_swapped_row_ids() {
+        let metrics = Arc::new(Metrics::new());
+        let mut store = ResidentStore::new(metrics);
+        let jobs: Vec<AnyGa> = (0..3).map(|s| job(10 + s)).collect();
+        let key = jobs[0].variant();
+        let mut rslab = store.begin_dispatch(key);
+        for (i, j) in jobs.iter().enumerate() {
+            store.admit_into(&mut rslab, JobId(i as u64), j.clone());
+        }
+        store.finish_dispatch(rslab);
+        // Evict the FIRST job: the last row (JobId 2) must move into its
+        // slot and stay addressable.
+        let first = store.evict(JobId(0)).unwrap();
+        assert_eq!(first.population(), jobs[0].population());
+        let moved = store.evict(JobId(2)).unwrap();
+        assert_eq!(moved.population(), jobs[2].population());
+        let mid = store.evict(JobId(1)).unwrap();
+        assert_eq!(mid.population(), jobs[1].population());
+    }
+}

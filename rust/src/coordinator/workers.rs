@@ -5,6 +5,7 @@
 
 use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::resident::ResidentSlab;
 use crate::ga::{AnyGa, BackendKind, GaInstance, MultiVarGa, StepBackend};
 use crate::runtime::{ChunkIo, Manifest, Runtime};
 use std::sync::atomic::Ordering;
@@ -25,16 +26,32 @@ pub(crate) struct RunningJob {
     pub executed: u32,
 }
 
-/// Work sent to a backend: same-variant jobs to advance one chunk.
+/// A resident-slab chunk: the variant's whole cohort moves through the
+/// channel (Vec pointer moves — no state copies); `gens[row]` selects which
+/// rows advance this chunk (0 = row rides along parked).
+pub(crate) struct SlabTask {
+    pub rslab: ResidentSlab,
+    pub gens: Vec<u32>,
+}
+
+/// Work sent to a backend: same-variant jobs to advance one chunk — either
+/// materialized AoS machines (`Batch`) or a resident SoA slab (`Slab`).
 pub(crate) enum WorkMsg {
     Batch(Vec<RunningJob>, u32),
+    Slab(SlabTask),
     Shutdown,
 }
 
 /// Completion sent back to the scheduler.
-pub(crate) struct DoneMsg {
-    pub jobs: Vec<RunningJob>,
-    pub backend: &'static str,
+pub(crate) enum DoneMsg {
+    Batch {
+        jobs: Vec<RunningJob>,
+        backend: &'static str,
+    },
+    Slab {
+        task: SlabTask,
+        backend: &'static str,
+    },
 }
 
 /// Scheduler inbox message (submissions and cancellations share the channel
@@ -103,6 +120,13 @@ pub(crate) fn run_engine_batch(
     advanced
 }
 
+/// Advance a resident slab's selected rows IN PLACE through the backend's
+/// slab entry point. Returns how many rows advanced (`gens[row] > 0`).
+pub(crate) fn run_slab_task(backend: &dyn StepBackend, task: &mut SlabTask) -> usize {
+    backend.step_slab(&mut task.rslab.slab, &task.gens);
+    task.gens.iter().filter(|&&g| g > 0).count()
+}
+
 /// Spawn the behavioral worker pool: `count` threads sharing one queue,
 /// each owning one instance of the configured [`StepBackend`]. A multi-job
 /// batch is one `step_batch` call — observable as `engine_batch_jobs`
@@ -138,8 +162,25 @@ pub(crate) fn spawn_engine_pool(
                                     .fetch_add(advanced as u64, Ordering::Relaxed);
                                 metrics.record_batch(advanced, 0);
                                 if tx
-                                    .send(SchedMsg::Done(DoneMsg {
+                                    .send(SchedMsg::Done(DoneMsg::Batch {
                                         jobs,
+                                        backend: "engine",
+                                    }))
+                                    .is_err()
+                                {
+                                    return; // scheduler gone
+                                }
+                            }
+                            Ok(WorkMsg::Slab(mut task)) => {
+                                let advanced = run_slab_task(backend.as_ref(), &mut task);
+                                metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .engine_batch_jobs
+                                    .fetch_add(advanced as u64, Ordering::Relaxed);
+                                metrics.record_batch(advanced, 0);
+                                if tx
+                                    .send(SchedMsg::Done(DoneMsg::Slab {
+                                        task,
                                         backend: "engine",
                                     }))
                                     .is_err()
@@ -215,9 +256,29 @@ pub(crate) fn spawn_pjrt_thread(
                             }
                         };
                         if done_tx
-                            .send(SchedMsg::Done(DoneMsg {
+                            .send(SchedMsg::Done(DoneMsg::Batch {
                                 jobs,
                                 backend: executed_by,
+                            }))
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    // Defensive: the scheduler routes slab work to the
+                    // engine pool (resident mode excludes PJRT), but a slab
+                    // that lands here still executes correctly.
+                    Ok(WorkMsg::Slab(mut task)) => {
+                        let advanced = run_slab_task(fallback.as_ref(), &mut task);
+                        metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .engine_batch_jobs
+                            .fetch_add(advanced as u64, Ordering::Relaxed);
+                        metrics.record_batch(advanced, 0);
+                        if done_tx
+                            .send(SchedMsg::Done(DoneMsg::Slab {
+                                task,
+                                backend: "engine",
                             }))
                             .is_err()
                         {

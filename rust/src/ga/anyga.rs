@@ -159,10 +159,25 @@ impl AnyGa {
         }
     }
 
+    pub fn as_multi(&self) -> Option<&MultiVarGa> {
+        match self {
+            AnyGa::Two(_) => None,
+            AnyGa::Multi(inst) => Some(inst),
+        }
+    }
+
     pub fn as_multi_mut(&mut self) -> Option<&mut MultiVarGa> {
         match self {
             AnyGa::Two(_) => None,
             AnyGa::Multi(inst) => Some(inst),
+        }
+    }
+
+    /// Raw LFSR bank states (layout depends on the machine kind).
+    pub fn bank_states(&self) -> &[u32] {
+        match self {
+            AnyGa::Two(inst) => inst.bank().states(),
+            AnyGa::Multi(inst) => inst.bank().states(),
         }
     }
 }

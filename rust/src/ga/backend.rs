@@ -26,12 +26,14 @@
 //! The PJRT path (AOT-compiled chunk on the XLA runtime) is the third
 //! executor behind the same coordinator seam; it keeps its dedicated thread
 //! because the `Runtime` is not `Send` (see `coordinator/workers.rs`).
+//!
+//! Both batched entry points are thin shells over ONE fused implementation,
+//! [`SoaSlab::fused_step`](crate::ga::SoaSlab): `step_batch` gathers into a
+//! transient slab and scatters back per chunk, while
+//! [`StepBackend::step_slab`] advances a *resident* slab in place with no
+//! per-chunk copies at all (the coordinator's `ResidentStore` path).
 
-use crate::ga::multivar::{generation_pass, MultiDims, MultiRom};
-use crate::ga::{engine, BestSoFar, Dims, GaInstance, MultiVarGa};
-use crate::lfsr::step as lfsr_step;
-use crate::rom::RomTables;
-use std::sync::Arc;
+use crate::ga::{AnyGa, Dims, GaInstance, MultiDims, MultiVarGa, SoaSlab, VariantKey};
 
 /// Backend selector — config / CLI surface (`--backend {scalar,batched}`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -110,6 +112,26 @@ pub trait StepBackend: Send + Sync {
             inst.run(k);
         }
     }
+
+    /// Advance row `row` of a resident SoA slab by `gens[row]` generations
+    /// IN PLACE (0 = leave the row untouched). Same bit-identity contract
+    /// as [`Self::step_batch`], extended to the slab representation: after
+    /// the call, each advanced row must equal its isolated scalar
+    /// trajectory. Default: per-row AoS materialization through
+    /// [`Self::step_batch`] / [`Self::step_multi_batch`] — the reference.
+    /// [`BatchedSoaBackend`] overrides with zero-copy fused passes.
+    fn step_slab(&self, slab: &mut SoaSlab, gens: &[u32]) {
+        assert_eq!(slab.len(), gens.len(), "one generation count per row");
+        for (row, &k) in gens.iter().enumerate() {
+            if k == 0 {
+                continue;
+            }
+            slab.with_row_materialized(row, |inst| match inst {
+                AnyGa::Two(g) => self.step_batch(&mut [g], &[k]),
+                AnyGa::Multi(g) => self.step_multi_batch(&mut [g], &[k]),
+            });
+        }
+    }
 }
 
 /// The seed behavior: each instance steps alone on its own scratch buffers.
@@ -146,121 +168,24 @@ impl StepBackend for BatchedSoaBackend {
             insts.iter().all(|i| i.dims() == &dims),
             "batched rows must share one variant (Dims)"
         );
-        let max_gens = gens.iter().copied().max().unwrap_or(0);
-        if max_gens == 0 {
+        if gens.iter().all(|&k| k == 0) {
             return;
         }
 
-        let b = insts.len();
-        let n = dims.n;
-        let l = dims.lfsr_len();
-
-        // Gather the SoA state: row-major [B, N] population and [B, L] LFSR
-        // bank (stride L per row), plus per-row table/direction references.
-        let mut pop: Vec<u32> = Vec::with_capacity(b * n);
-        let mut lfsr: Vec<u32> = Vec::with_capacity(b * l);
-        let mut tables: Vec<Arc<RomTables>> = Vec::with_capacity(b);
-        let mut maximize: Vec<bool> = Vec::with_capacity(b);
+        // Gather into a transient SoA slab, run the SAME fused passes the
+        // resident path uses, scatter back through `absorb_chunk` exactly
+        // like a PJRT chunk round-trip. The gather/scatter copies are the
+        // per-chunk cost the coordinator's ResidentStore eliminates.
+        let mut slab = SoaSlab::new(VariantKey::from_dims(&dims));
         for inst in insts.iter() {
-            pop.extend_from_slice(inst.population());
-            lfsr.extend_from_slice(inst.bank().states());
-            tables.push(inst.tables().clone());
-            maximize.push(inst.maximize());
+            slab.gather_row_two(&**inst);
         }
-
-        let mut y = vec![0i64; b * n];
-        let mut w = vec![0u32; b * n];
-        let mut next = vec![0u32; b * n];
-        let mut bests: Vec<BestSoFar> =
-            maximize.iter().map(|&mx| BestSoFar::new(mx)).collect();
-        let mut curves: Vec<Vec<i64>> =
-            gens.iter().map(|&k| Vec::with_capacity(k as usize)).collect();
-
-        for g in 0..max_gens {
-            // Rows whose job requested fewer generations retire early; the
-            // common case (uniform chunk) keeps every row active throughout.
-            let all_active = gens.iter().all(|&k| k > g);
-
-            // FFM: score every input row (fused pass over [B, N]).
-            for row in 0..b {
-                if gens[row] <= g {
-                    continue;
-                }
-                let s = row * n;
-                engine::fitness_all(&pop[s..s + n], &tables[row], &mut y[s..s + n]);
-            }
-
-            // Best-of-generation fold over the INPUT population — the same
-            // accounting as `GaInstance::step` (L2 curve semantics).
-            for row in 0..b {
-                if gens[row] <= g {
-                    continue;
-                }
-                let s = row * n;
-                let mut gen_best = BestSoFar::new(maximize[row]);
-                for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
-                    gen_best.offer(*yy, *x);
-                }
-                bests[row].offer(gen_best.y, gen_best.x);
-                curves[row].push(gen_best.y);
-            }
-
-            // SM / CM / MM over each row's contiguous SoA slices.
-            for row in 0..b {
-                if gens[row] <= g {
-                    continue;
-                }
-                let s = row * n;
-                let states = &lfsr[row * l..(row + 1) * l];
-                engine::select_all_states(
-                    &pop[s..s + n],
-                    &y[s..s + n],
-                    states,
-                    maximize[row],
-                    &dims,
-                    &mut w[s..s + n],
-                );
-                engine::crossover_all_states(&w[s..s + n], states, &dims, &mut next[s..s + n]);
-                engine::mutate_all_states(&mut next[s..s + n], states, &dims);
-            }
-
-            // Commit the generation: publish offspring and advance every
-            // generator one tick — fused across the whole [B·L] bank when
-            // no row has retired (the vectorizable fast path).
-            if all_active {
-                std::mem::swap(&mut pop, &mut next);
-                for s in lfsr.iter_mut() {
-                    *s = lfsr_step(*s);
-                }
-            } else {
-                for row in 0..b {
-                    if gens[row] <= g {
-                        continue;
-                    }
-                    let s = row * n;
-                    pop[s..s + n].copy_from_slice(&next[s..s + n]);
-                    for st in lfsr[row * l..(row + 1) * l].iter_mut() {
-                        *st = lfsr_step(*st);
-                    }
-                }
-            }
-        }
-
-        // Scatter: thread each advanced row back into its instance exactly
-        // like a PJRT chunk round-trip does.
+        slab.fused_step(gens);
         for (row, inst) in insts.iter_mut().enumerate() {
             if gens[row] == 0 {
                 continue;
             }
-            let s = row * n;
-            inst.absorb_chunk(
-                pop[s..s + n].to_vec(),
-                lfsr[row * l..(row + 1) * l].to_vec(),
-                bests[row].y,
-                bests[row].x,
-                &curves[row],
-                gens[row],
-            );
+            slab.scatter_row_two(row, inst, gens[row]);
         }
     }
 
@@ -278,105 +203,28 @@ impl StepBackend for BatchedSoaBackend {
             insts.iter().all(|i| i.dims() == &dims),
             "batched rows must share one variant (MultiDims)"
         );
-        let max_gens = gens.iter().copied().max().unwrap_or(0);
-        if max_gens == 0 {
+        if gens.iter().all(|&k| k == 0) {
             return;
         }
 
-        let b = insts.len();
-        let n = dims.n;
-        let l = dims.lfsr_len();
-
-        let mut pop: Vec<u32> = Vec::with_capacity(b * n);
-        let mut lfsr: Vec<u32> = Vec::with_capacity(b * l);
-        let mut roms: Vec<Arc<MultiRom>> = Vec::with_capacity(b);
-        let mut maximize: Vec<bool> = Vec::with_capacity(b);
+        let mut slab = SoaSlab::new(VariantKey::from_multi_dims(&dims));
         for inst in insts.iter() {
-            pop.extend_from_slice(inst.population());
-            lfsr.extend_from_slice(inst.bank().states());
-            roms.push(inst.rom().clone());
-            maximize.push(inst.maximize());
+            slab.gather_row_multi(&**inst);
         }
-
-        let mut y = vec![0i64; b * n];
-        let mut w = vec![0u32; b * n];
-        let mut next = vec![0u32; b * n];
-        let mut bests: Vec<BestSoFar> =
-            maximize.iter().map(|&mx| BestSoFar::new(mx)).collect();
-        let mut curves: Vec<Vec<i64>> =
-            gens.iter().map(|&k| Vec::with_capacity(k as usize)).collect();
-
-        for g in 0..max_gens {
-            let all_active = gens.iter().all(|&k| k > g);
-
-            // FFM + SM + CM + MM per row over the contiguous SoA slices.
-            for row in 0..b {
-                if gens[row] <= g {
-                    continue;
-                }
-                let s = row * n;
-                generation_pass(
-                    &dims,
-                    &roms[row],
-                    maximize[row],
-                    &pop[s..s + n],
-                    &lfsr[row * l..(row + 1) * l],
-                    &mut y[s..s + n],
-                    &mut w[s..s + n],
-                    &mut next[s..s + n],
-                );
-            }
-
-            // Best-of-generation fold over the INPUT population (same
-            // accounting as `MultiVarGa::step`).
-            for row in 0..b {
-                if gens[row] <= g {
-                    continue;
-                }
-                let s = row * n;
-                let mut gen_best = BestSoFar::new(maximize[row]);
-                for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
-                    gen_best.offer(*yy, *x);
-                }
-                bests[row].offer(gen_best.y, gen_best.x);
-                curves[row].push(gen_best.y);
-            }
-
-            // Commit: publish offspring + one fused tick when every row is
-            // still active (the vectorizable fast path).
-            if all_active {
-                std::mem::swap(&mut pop, &mut next);
-                for s in lfsr.iter_mut() {
-                    *s = lfsr_step(*s);
-                }
-            } else {
-                for row in 0..b {
-                    if gens[row] <= g {
-                        continue;
-                    }
-                    let s = row * n;
-                    pop[s..s + n].copy_from_slice(&next[s..s + n]);
-                    for st in lfsr[row * l..(row + 1) * l].iter_mut() {
-                        *st = lfsr_step(*st);
-                    }
-                }
-            }
-        }
-
+        slab.fused_step(gens);
         for (row, inst) in insts.iter_mut().enumerate() {
             if gens[row] == 0 {
                 continue;
             }
-            let s = row * n;
-            inst.absorb_chunk(
-                pop[s..s + n].to_vec(),
-                lfsr[row * l..(row + 1) * l].to_vec(),
-                bests[row].y,
-                bests[row].x,
-                &curves[row],
-                gens[row],
-            );
+            slab.scatter_row_multi(row, inst, gens[row]);
         }
+    }
+
+    /// The resident entry point: the slab IS the state — fused passes run
+    /// directly over its `[B·N]` / `[B·L]` arrays, so a chunk costs zero
+    /// gather/scatter copies.
+    fn step_slab(&self, slab: &mut SoaSlab, gens: &[u32]) {
+        slab.fused_step(gens);
     }
 }
 
@@ -384,6 +232,8 @@ impl StepBackend for BatchedSoaBackend {
 mod tests {
     use super::*;
     use crate::config::GaParams;
+    use crate::ga::MultiRom;
+    use std::sync::Arc;
 
     fn inst(n: usize, m: u32, seed: u64, function: &str, maximize: bool) -> GaInstance {
         GaInstance::from_params(&GaParams {
@@ -575,6 +425,36 @@ mod tests {
         ScalarBackend.step_multi_batch(&mut refs, &[20; 2]);
         for (a, b) in direct.iter().zip(&fleet) {
             assert_same_multi(a, b);
+        }
+    }
+
+    #[test]
+    fn step_slab_agrees_across_backends() {
+        // The default (materializing) step_slab and the fused override must
+        // both replay the scalar trajectory on a resident slab.
+        use crate::ga::{AnyGa, SoaSlab};
+        let p = GaParams {
+            n: 16,
+            m: 20,
+            k: 1000,
+            function: "f3".into(),
+            seed: 21,
+            ..GaParams::default()
+        };
+        let inst = AnyGa::from_params(&p).unwrap();
+        let mut reference = inst.clone();
+        reference.run(50);
+        for backend in [BackendKind::Scalar, BackendKind::Batched] {
+            let mut slab = SoaSlab::new(inst.variant());
+            let row = slab.admit(inst.clone());
+            let b = backend.instantiate();
+            b.step_slab(&mut slab, &[25]);
+            b.step_slab(&mut slab, &[25]);
+            let got = slab.evict(row);
+            assert_eq!(got.population(), reference.population(), "{backend}");
+            assert_eq!(got.curve(), reference.curve(), "{backend}");
+            assert_eq!(got.best().y, reference.best().y, "{backend}");
+            assert_eq!(got.generation(), 50, "{backend}");
         }
     }
 

@@ -87,6 +87,37 @@ impl GaInstance {
         Self::from_state(dims, tables, maximize, pop, bank)
     }
 
+    /// Resume a mid-flight machine from resident-slab state: explicit
+    /// population and bank states PLUS the running best, curve and
+    /// generation count the slab carried between chunks. Inverse of
+    /// [`GaInstance::into_resident_parts`] (`ga::SoaSlab` eviction).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_resident(
+        dims: Dims,
+        tables: Arc<RomTables>,
+        maximize: bool,
+        pop: Vec<u32>,
+        bank_states: Vec<u32>,
+        best_y: i64,
+        best_x: u32,
+        curve: Vec<i64>,
+        generations: u32,
+    ) -> Self {
+        let bank = LfsrBank::from_states(bank_states, dims.n, dims.p);
+        let mut inst = Self::from_state(dims, tables, maximize, pop, bank);
+        inst.best.offer(best_y, best_x);
+        inst.curve = curve;
+        inst.generation = generations;
+        inst
+    }
+
+    /// Decompose into the resident-slab state vectors (population, LFSR
+    /// bank states), consuming the instance. Read the metadata accessors
+    /// (best / curve / generation) before calling.
+    pub fn into_resident_parts(self) -> (Vec<u32>, Vec<u32>) {
+        (self.pop, self.bank.into_states())
+    }
+
     /// Resume from explicit state (golden replay, PJRT round-trips).
     pub fn from_state(
         dims: Dims,

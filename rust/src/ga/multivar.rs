@@ -302,6 +302,33 @@ impl MultiVarGa {
         Self::from_state(dims, rom, maximize, pop, states)
     }
 
+    /// Resume a mid-flight machine from resident-slab state — the multivar
+    /// twin of [`crate::ga::GaInstance::from_resident`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_resident(
+        dims: MultiDims,
+        rom: impl Into<Arc<MultiRom>>,
+        maximize: bool,
+        pop: Vec<u32>,
+        bank_states: Vec<u32>,
+        best_y: i64,
+        best_x: u32,
+        curve: Vec<i64>,
+        generations: u32,
+    ) -> Self {
+        let mut inst = Self::from_state(dims, rom, maximize, pop, bank_states);
+        inst.best.offer(best_y, best_x);
+        inst.curve = curve;
+        inst.generation = generations;
+        inst
+    }
+
+    /// Decompose into the resident-slab state vectors (population, LFSR
+    /// bank states), consuming the machine.
+    pub fn into_resident_parts(self) -> (Vec<u32>, Vec<u32>) {
+        (self.pop, self.bank.into_states())
+    }
+
     pub fn from_state(
         dims: MultiDims,
         rom: impl Into<Arc<MultiRom>>,

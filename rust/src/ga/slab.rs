@@ -1,0 +1,604 @@
+//! Resident SoA slabs — structure-of-arrays as the *resting* representation.
+//!
+//! The paper's speedup comes from keeping the whole population resident in
+//! hardware between generations; the batched backend used to recover only
+//! the per-chunk half of that — it gathered every parked machine into SoA
+//! form at dispatch and scattered it back at completion, every chunk. A
+//! [`SoaSlab`] removes that copy for long-running jobs: same-variant
+//! machines live *in* the slab between chunks (`pop: [B·N] u32`, LFSR bank
+//! `[B·L] u32`, per-row ROM/best/curve metadata), and
+//! [`StepBackend::step_slab`](crate::ga::StepBackend::step_slab) advances
+//! selected rows in place. AoS machines ([`GaInstance`] / [`MultiVarGa`])
+//! are materialized only on admission, eviction and result extraction.
+//!
+//! One fused implementation ([`SoaSlab::fused_step`]) serves both execution
+//! modes: the gather/scatter path
+//! ([`BatchedSoaBackend::step_batch`](crate::ga::BatchedSoaBackend)) builds
+//! a transient slab per chunk, the resident path
+//! (`coordinator::ResidentStore`) keeps the slab alive across chunks — so
+//! the two trajectories cannot drift. Bit-identity with isolated scalar
+//! stepping is pinned by `rust/tests/differential_backend.rs`.
+
+use crate::ga::multivar::generation_pass;
+use crate::ga::{
+    engine, AnyGa, BestSoFar, Dims, GaInstance, MultiDims, MultiRom, MultiVarGa, VariantKey,
+};
+use crate::lfsr::step as lfsr_step;
+use crate::rom::RomTables;
+use std::sync::Arc;
+
+/// Which machine a slab row runs (the same split as [`AnyGa`]).
+#[derive(Debug, Clone)]
+pub enum RowRom {
+    /// Two-variable engine tables (V = 2).
+    Two(Arc<RomTables>),
+    /// V-ROM multivar tables (V ≠ 2).
+    Multi(Arc<MultiRom>),
+}
+
+/// Per-row metadata riding beside the SoA state arrays.
+#[derive(Debug, Clone)]
+pub struct SlabRow {
+    pub rom: RowRom,
+    pub maximize: bool,
+    /// Running best over the row's accounted life. A row admitted via
+    /// [`SoaSlab::admit`] carries its job-lifetime best; a row gathered
+    /// fresh for one chunk ([`SoaSlab::gather_row_two`]) starts at the
+    /// identity, so after the chunk it holds the *chunk* best — exactly
+    /// what `absorb_chunk` expects.
+    pub best: BestSoFar,
+    /// Convergence curve over the same accounting span as `best`.
+    pub curve: Vec<i64>,
+    /// Generations executed over the same accounting span.
+    pub generation: u32,
+}
+
+/// A structure-of-arrays slab holding the live state of B same-variant GA
+/// machines: row-major `[B·N]` population and `[B·L]` LFSR bank (stride L
+/// per row), plus per-row metadata. All rows share one [`VariantKey`] —
+/// array strides are fixed per slab, and the batcher's grouping guarantees
+/// a dispatch never mixes variants.
+#[derive(Debug, Clone)]
+pub struct SoaSlab {
+    key: VariantKey,
+    n: usize,
+    l: usize,
+    pop: Vec<u32>,
+    lfsr: Vec<u32>,
+    rows: Vec<SlabRow>,
+}
+
+impl SoaSlab {
+    /// Empty slab for one execution variant.
+    pub fn new(key: VariantKey) -> Self {
+        // Bank length 2N + (N/2)·V + P — equals the two-variable 3N + P
+        // layout at V = 2 (DESIGN.md §5 / ga::multivar module docs).
+        let l = 2 * key.n + (key.n / 2) * key.v as usize + key.p;
+        Self {
+            key,
+            n: key.n,
+            l,
+            pop: Vec::new(),
+            lfsr: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn key(&self) -> VariantKey {
+        self.key
+    }
+
+    /// Number of resident rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Resident footprint of the state arrays (population + bank), bytes.
+    pub fn state_bytes(&self) -> usize {
+        (self.pop.len() + self.lfsr.len()) * std::mem::size_of::<u32>()
+    }
+
+    /// State-array bytes one row of this variant occupies.
+    pub fn row_state_bytes(&self) -> usize {
+        (self.n + self.l) * std::mem::size_of::<u32>()
+    }
+
+    /// Row's running best as `(y, x)`.
+    pub fn row_best(&self, row: usize) -> (i64, u32) {
+        let b = &self.rows[row].best;
+        (b.y, b.x)
+    }
+
+    pub fn row_generation(&self, row: usize) -> u32 {
+        self.rows[row].generation
+    }
+
+    pub fn row_curve(&self, row: usize) -> &[i64] {
+        &self.rows[row].curve
+    }
+
+    /// Row's population slice (tests / observability).
+    pub fn row_population(&self, row: usize) -> &[u32] {
+        &self.pop[row * self.n..(row + 1) * self.n]
+    }
+
+    /// Row's LFSR bank slice (tests / observability).
+    pub fn row_lfsr(&self, row: usize) -> &[u32] {
+        &self.lfsr[row * self.l..(row + 1) * self.l]
+    }
+
+    /// Move a parked machine into the slab with its full accounting
+    /// (best / curve / generation ride along); returns the row index.
+    /// Panics if the machine's variant differs from the slab's key.
+    pub fn admit(&mut self, inst: AnyGa) -> usize {
+        assert_eq!(
+            inst.variant(),
+            self.key,
+            "admitted machine must match the slab variant"
+        );
+        let row = self.rows.len();
+        let (best_y, best_x) = (inst.best().y, inst.best().x);
+        let generation = inst.generation();
+        let curve = inst.curve().to_vec();
+        let (maximize, rom, pop, states) = match inst {
+            AnyGa::Two(g) => {
+                let maximize = g.maximize();
+                let rom = RowRom::Two(g.tables().clone());
+                let (pop, states) = g.into_resident_parts();
+                (maximize, rom, pop, states)
+            }
+            AnyGa::Multi(g) => {
+                let maximize = g.maximize();
+                let rom = RowRom::Multi(g.rom().clone());
+                let (pop, states) = g.into_resident_parts();
+                (maximize, rom, pop, states)
+            }
+        };
+        self.pop.extend_from_slice(&pop);
+        self.lfsr.extend_from_slice(&states);
+        let mut best = BestSoFar::new(maximize);
+        best.offer(best_y, best_x);
+        self.rows.push(SlabRow {
+            rom,
+            maximize,
+            best,
+            curve,
+            generation,
+        });
+        row
+    }
+
+    /// Remove row `row`, rebuilding its AoS machine with the accumulated
+    /// best / curve / generation. The LAST row moves into the vacated slot
+    /// (swap-remove) — callers tracking row indices must remap the moved
+    /// row.
+    pub fn evict(&mut self, row: usize) -> AnyGa {
+        assert!(row < self.rows.len(), "row out of range");
+        let (n, l) = (self.n, self.l);
+        let last = self.rows.len() - 1;
+        let pop = self.pop[row * n..(row + 1) * n].to_vec();
+        let states = self.lfsr[row * l..(row + 1) * l].to_vec();
+        if row != last {
+            self.pop.copy_within(last * n..(last + 1) * n, row * n);
+            self.lfsr.copy_within(last * l..(last + 1) * l, row * l);
+        }
+        self.pop.truncate(last * n);
+        self.lfsr.truncate(last * l);
+        let meta = self.rows.swap_remove(row);
+        self.rebuild(meta, pop, states)
+    }
+
+    /// Build the AoS machine a row describes from explicit state vectors.
+    fn rebuild(&self, meta: SlabRow, pop: Vec<u32>, states: Vec<u32>) -> AnyGa {
+        let key = self.key;
+        match meta.rom {
+            RowRom::Two(tables) => {
+                let dims = Dims::new(key.n, key.m, key.p).with_gamma_bits(key.gamma_bits);
+                AnyGa::Two(GaInstance::from_resident(
+                    dims,
+                    tables,
+                    meta.maximize,
+                    pop,
+                    states,
+                    meta.best.y,
+                    meta.best.x,
+                    meta.curve,
+                    meta.generation,
+                ))
+            }
+            RowRom::Multi(rom) => {
+                let dims =
+                    MultiDims::new(key.n, key.m, key.v, key.p).with_gamma_bits(key.gamma_bits);
+                AnyGa::Multi(MultiVarGa::from_resident(
+                    dims,
+                    rom,
+                    meta.maximize,
+                    pop,
+                    states,
+                    meta.best.y,
+                    meta.best.x,
+                    meta.curve,
+                    meta.generation,
+                ))
+            }
+        }
+    }
+
+    /// Materialize row `row` as its AoS machine, run `f` on it, and write
+    /// the advanced state back — the reference (non-fused) slab stepping
+    /// path behind the [`crate::ga::StepBackend::step_slab`] default.
+    pub fn with_row_materialized(&mut self, row: usize, f: impl FnOnce(&mut AnyGa)) {
+        let (n, l) = (self.n, self.l);
+        let meta = self.rows[row].clone();
+        let pop = self.pop[row * n..(row + 1) * n].to_vec();
+        let states = self.lfsr[row * l..(row + 1) * l].to_vec();
+        let mut inst = self.rebuild(meta, pop, states);
+        f(&mut inst);
+        let meta = &mut self.rows[row];
+        let mut best = BestSoFar::new(meta.maximize);
+        best.offer(inst.best().y, inst.best().x);
+        meta.best = best;
+        meta.curve.clear();
+        meta.curve.extend_from_slice(inst.curve());
+        meta.generation = inst.generation();
+        let (pop, states) = match inst {
+            AnyGa::Two(g) => g.into_resident_parts(),
+            AnyGa::Multi(g) => g.into_resident_parts(),
+        };
+        self.pop[row * n..(row + 1) * n].copy_from_slice(&pop);
+        self.lfsr[row * l..(row + 1) * l].copy_from_slice(&states);
+    }
+
+    /// Copy a two-variable instance's state in as a new row with FRESH
+    /// chunk accounting (identity best, empty curve): the gather side of
+    /// the per-chunk gather/scatter path. Resident parking uses
+    /// [`SoaSlab::admit`] instead.
+    pub fn gather_row_two(&mut self, inst: &GaInstance) -> usize {
+        assert_eq!(
+            VariantKey::from_dims(inst.dims()),
+            self.key,
+            "gathered instance must match the slab variant"
+        );
+        let row = self.rows.len();
+        self.pop.extend_from_slice(inst.population());
+        self.lfsr.extend_from_slice(inst.bank().states());
+        self.rows.push(SlabRow {
+            rom: RowRom::Two(inst.tables().clone()),
+            maximize: inst.maximize(),
+            best: BestSoFar::new(inst.maximize()),
+            curve: Vec::new(),
+            generation: 0,
+        });
+        row
+    }
+
+    /// Multivar twin of [`SoaSlab::gather_row_two`].
+    pub fn gather_row_multi(&mut self, inst: &MultiVarGa) -> usize {
+        assert_eq!(
+            VariantKey::from_multi_dims(inst.dims()),
+            self.key,
+            "gathered instance must match the slab variant"
+        );
+        let row = self.rows.len();
+        self.pop.extend_from_slice(inst.population());
+        self.lfsr.extend_from_slice(inst.bank().states());
+        self.rows.push(SlabRow {
+            rom: RowRom::Multi(inst.rom().clone()),
+            maximize: inst.maximize(),
+            best: BestSoFar::new(inst.maximize()),
+            curve: Vec::new(),
+            generation: 0,
+        });
+        row
+    }
+
+    /// Scatter a freshly-gathered row advanced by [`SoaSlab::fused_step`]
+    /// back into its source instance via `absorb_chunk` (the row's best /
+    /// curve hold the chunk best / chunk curve because the row was
+    /// gathered with fresh accounting).
+    pub fn scatter_row_two(&self, row: usize, inst: &mut GaInstance, gens: u32) {
+        let (n, l) = (self.n, self.l);
+        let meta = &self.rows[row];
+        inst.absorb_chunk(
+            self.pop[row * n..(row + 1) * n].to_vec(),
+            self.lfsr[row * l..(row + 1) * l].to_vec(),
+            meta.best.y,
+            meta.best.x,
+            &meta.curve,
+            gens,
+        );
+    }
+
+    /// Multivar twin of [`SoaSlab::scatter_row_two`].
+    pub fn scatter_row_multi(&self, row: usize, inst: &mut MultiVarGa, gens: u32) {
+        let (n, l) = (self.n, self.l);
+        let meta = &self.rows[row];
+        inst.absorb_chunk(
+            self.pop[row * n..(row + 1) * n].to_vec(),
+            self.lfsr[row * l..(row + 1) * l].to_vec(),
+            meta.best.y,
+            meta.best.x,
+            &meta.curve,
+            gens,
+        );
+    }
+
+    /// Advance row `row` by `gens[row]` generations IN PLACE with the fused
+    /// SoA passes (0 = leave the row untouched). Bit-identical to stepping
+    /// each row's machine alone: same kernels, same per-generation order as
+    /// `GaInstance::step` / `MultiVarGa::step`.
+    pub(crate) fn fused_step(&mut self, gens: &[u32]) {
+        assert_eq!(self.rows.len(), gens.len(), "one generation count per row");
+        let max_gens = gens.iter().copied().max().unwrap_or(0);
+        if max_gens == 0 {
+            return;
+        }
+        let key = self.key;
+        let n = self.n;
+        let l = self.l;
+        let b = self.rows.len();
+        let mut y = vec![0i64; b * n];
+        let mut w = vec![0u32; b * n];
+        let mut next = vec![0u32; b * n];
+        let SoaSlab {
+            pop, lfsr, rows, ..
+        } = self;
+
+        if key.v == 2 {
+            let dims = Dims::new(key.n, key.m, key.p).with_gamma_bits(key.gamma_bits);
+            for g in 0..max_gens {
+                // FFM + best-of-generation fold over the INPUT population
+                // (the same accounting as `GaInstance::step` — L2 curve
+                // semantics), row by row over the contiguous SoA slices.
+                for (row, meta) in rows.iter_mut().enumerate() {
+                    if gens[row] <= g {
+                        continue;
+                    }
+                    let s = row * n;
+                    let RowRom::Two(tables) = &meta.rom else {
+                        panic!("two-variable slab row carries multivar tables");
+                    };
+                    engine::fitness_all(&pop[s..s + n], tables, &mut y[s..s + n]);
+                    let mut gen_best = BestSoFar::new(meta.maximize);
+                    for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
+                        gen_best.offer(*yy, *x);
+                    }
+                    meta.best.offer(gen_best.y, gen_best.x);
+                    meta.curve.push(gen_best.y);
+                }
+
+                // SM / CM / MM over each row's contiguous SoA slices.
+                for (row, meta) in rows.iter().enumerate() {
+                    if gens[row] <= g {
+                        continue;
+                    }
+                    let s = row * n;
+                    let states = &lfsr[row * l..(row + 1) * l];
+                    engine::select_all_states(
+                        &pop[s..s + n],
+                        &y[s..s + n],
+                        states,
+                        meta.maximize,
+                        &dims,
+                        &mut w[s..s + n],
+                    );
+                    engine::crossover_all_states(&w[s..s + n], states, &dims, &mut next[s..s + n]);
+                    engine::mutate_all_states(&mut next[s..s + n], states, &dims);
+                }
+
+                commit_generation(gens, g, n, l, pop, lfsr, &mut next);
+            }
+        } else {
+            let mdims = MultiDims::new(key.n, key.m, key.v, key.p).with_gamma_bits(key.gamma_bits);
+            for g in 0..max_gens {
+                for (row, meta) in rows.iter_mut().enumerate() {
+                    if gens[row] <= g {
+                        continue;
+                    }
+                    let s = row * n;
+                    let RowRom::Multi(rom) = &meta.rom else {
+                        panic!("multivar slab row carries two-variable tables");
+                    };
+                    generation_pass(
+                        &mdims,
+                        rom,
+                        meta.maximize,
+                        &pop[s..s + n],
+                        &lfsr[row * l..(row + 1) * l],
+                        &mut y[s..s + n],
+                        &mut w[s..s + n],
+                        &mut next[s..s + n],
+                    );
+                    let mut gen_best = BestSoFar::new(meta.maximize);
+                    for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
+                        gen_best.offer(*yy, *x);
+                    }
+                    meta.best.offer(gen_best.y, gen_best.x);
+                    meta.curve.push(gen_best.y);
+                }
+
+                commit_generation(gens, g, n, l, pop, lfsr, &mut next);
+            }
+        }
+
+        for (row, meta) in rows.iter_mut().enumerate() {
+            meta.generation += gens[row];
+        }
+    }
+}
+
+/// Commit one generation: publish offspring and advance every active row's
+/// generators one tick — fused across the whole `[B·L]` bank while no row
+/// has retired (the vectorizable fast path).
+fn commit_generation(
+    gens: &[u32],
+    g: u32,
+    n: usize,
+    l: usize,
+    pop: &mut Vec<u32>,
+    lfsr: &mut [u32],
+    next: &mut Vec<u32>,
+) {
+    let all_active = gens.iter().all(|&k| k > g);
+    if all_active {
+        std::mem::swap(pop, next);
+        for s in lfsr.iter_mut() {
+            *s = lfsr_step(*s);
+        }
+    } else {
+        for (row, &k) in gens.iter().enumerate() {
+            if k <= g {
+                continue;
+            }
+            let s = row * n;
+            pop[s..s + n].copy_from_slice(&next[s..s + n]);
+            for st in lfsr[row * l..(row + 1) * l].iter_mut() {
+                *st = lfsr_step(*st);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaParams;
+
+    fn params(seed: u64, vars: u32) -> GaParams {
+        GaParams {
+            n: 16,
+            m: 20,
+            k: 1000,
+            function: if vars == 2 { "f3".into() } else { "sphere".into() },
+            seed,
+            vars,
+            ..GaParams::default()
+        }
+    }
+
+    fn assert_same(a: &AnyGa, b: &AnyGa) {
+        assert_eq!(a.population(), b.population(), "population");
+        assert_eq!(a.bank_states(), b.bank_states(), "lfsr bank");
+        assert_eq!(a.generation(), b.generation(), "generation");
+        assert_eq!(a.best().y, b.best().y, "best y");
+        assert_eq!(a.best().x, b.best().x, "best x");
+        assert_eq!(a.curve(), b.curve(), "curve");
+    }
+
+    #[test]
+    fn admit_evict_round_trips_bit_identically() {
+        for vars in [2u32, 4] {
+            let mut inst = AnyGa::from_params(&params(7, vars)).unwrap();
+            inst.run(13); // mid-flight state: best/curve/generation non-trivial
+            let reference = inst.clone();
+            let mut slab = SoaSlab::new(inst.variant());
+            let row = slab.admit(inst);
+            assert_eq!(slab.len(), 1);
+            assert!(slab.state_bytes() > 0);
+            let back = slab.evict(row);
+            assert!(slab.is_empty());
+            assert_eq!(slab.state_bytes(), 0);
+            assert_same(&reference, &back);
+        }
+    }
+
+    #[test]
+    fn fused_step_matches_isolated_runs() {
+        for vars in [2u32, 4] {
+            let insts: Vec<AnyGa> = (0..5)
+                .map(|s| AnyGa::from_params(&params(100 + s, vars)).unwrap())
+                .collect();
+            let mut slab = SoaSlab::new(insts[0].variant());
+            for inst in &insts {
+                slab.admit(inst.clone());
+            }
+            // Two chunks through the slab == one continuous scalar run.
+            slab.fused_step(&[25; 5]);
+            slab.fused_step(&[15; 5]);
+            // Evict from the back so swap-remove never reorders rows.
+            for row in (0..insts.len()).rev() {
+                let got = slab.evict(row);
+                let mut reference = insts[row].clone();
+                reference.run(40);
+                assert_same(&reference, &got);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_gens_leave_zero_rows_untouched() {
+        let a = AnyGa::from_params(&params(1, 2)).unwrap();
+        let b = AnyGa::from_params(&params(2, 2)).unwrap();
+        let b_before = b.clone();
+        let mut slab = SoaSlab::new(a.variant());
+        slab.admit(a.clone());
+        slab.admit(b);
+        slab.fused_step(&[20, 0]);
+        let mut a_ref = a;
+        a_ref.run(20);
+        // Row 1 (gens = 0) is bit-untouched; row 0 advanced exactly 20.
+        let b_back = slab.evict(1);
+        assert_same(&b_before, &b_back);
+        let a_back = slab.evict(0);
+        assert_same(&a_ref, &a_back);
+    }
+
+    #[test]
+    fn with_row_materialized_is_the_reference_path() {
+        let inst = AnyGa::from_params(&params(9, 4)).unwrap();
+        let mut reference = inst.clone();
+        reference.run(30);
+        let mut slab = SoaSlab::new(inst.variant());
+        let row = slab.admit(inst);
+        slab.with_row_materialized(row, |m| {
+            m.run(30);
+        });
+        let back = slab.evict(row);
+        assert_same(&reference, &back);
+    }
+
+    #[test]
+    fn evict_swap_remove_moves_last_row_into_hole() {
+        let insts: Vec<AnyGa> = (0..3)
+            .map(|s| AnyGa::from_params(&params(200 + s, 2)).unwrap())
+            .collect();
+        let mut slab = SoaSlab::new(insts[0].variant());
+        for inst in &insts {
+            slab.admit(inst.clone());
+        }
+        let evicted = slab.evict(0);
+        assert_same(&insts[0], &evicted);
+        assert_eq!(slab.len(), 2);
+        // Former last row (seed 202) now occupies row 0.
+        assert_eq!(slab.row_population(0), insts[2].population());
+        assert_eq!(slab.row_population(1), insts[1].population());
+    }
+
+    #[test]
+    #[should_panic(expected = "must match the slab variant")]
+    fn variant_mismatch_rejected_at_admission() {
+        let a = AnyGa::from_params(&params(1, 2)).unwrap();
+        let mut p = params(2, 2);
+        p.n = 32;
+        let b = AnyGa::from_params(&p).unwrap();
+        let mut slab = SoaSlab::new(a.variant());
+        slab.admit(b);
+    }
+
+    #[test]
+    fn row_state_bytes_counts_pop_and_bank() {
+        let a = AnyGa::from_params(&params(1, 2)).unwrap();
+        let mut slab = SoaSlab::new(a.variant());
+        // N = 16, L = 3·16 + 1 = 49 → (16 + 49) · 4 bytes.
+        assert_eq!(slab.row_state_bytes(), (16 + 49) * 4);
+        slab.admit(a);
+        assert_eq!(slab.state_bytes(), slab.row_state_bytes());
+    }
+}

@@ -71,6 +71,13 @@ impl LfsrBank {
         &self.states
     }
 
+    /// Consume the bank, returning the flat state vector (resident-slab
+    /// admission moves the states instead of copying them).
+    #[inline]
+    pub fn into_states(self) -> Vec<u32> {
+        self.states
+    }
+
     /// First tournament generator of selection module j (SMLFSR1_j).
     #[inline]
     pub fn sm1(&self, j: usize) -> u32 {

@@ -1,0 +1,384 @@
+//! Property-style differential harness (ISSUE 4): seeded random
+//! `GaParams` / problem / V / priority mixes asserting **scalar ≡ batched ≡
+//! resident** bit-identity — final best, full population + LFSR-bank state,
+//! convergence curve and generation count — including mid-run extraction
+//! (the cancel / result-extraction seam) and coordinator-level runs with
+//! cancellation and deadlines.
+//!
+//! The generator is a seeded SplitMix64 stream (the rust twin of
+//! `python/tests/minihyp.py`): every case is reproducible from the printed
+//! case seed. ≥ 200 cases run in CI (`cargo test --test
+//! differential_backend`).
+
+use fpga_ga::config::{GaParams, ServeParams};
+use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest, Priority};
+use fpga_ga::ga::{
+    AnyGa, BackendKind, BatchedSoaBackend, GaInstance, MultiVarGa, SoaSlab, StepBackend,
+};
+use std::time::Duration;
+
+/// SplitMix64 — the same generator the repo's PRNG seeding is built on.
+struct Rng(u64);
+
+impl Rng {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    fn flag(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+const FUNCTIONS: &[&str] = &[
+    "sphere",
+    "rastrigin",
+    "rosenbrock-sep",
+    "ackley-sep",
+    "schwefel",
+    "griewank-sep",
+    "f1",
+    "f2",
+    "f3",
+];
+
+/// Random valid GA parameters. `vars` constrains which m values divide.
+fn random_params(rng: &mut Rng) -> GaParams {
+    let vars = *rng.pick(&[2u32, 2, 4, 8]); // weight toward the verified V=2
+    let m = match vars {
+        8 => 24,
+        _ => *rng.pick(&[20u32, 24]),
+    };
+    GaParams {
+        n: *rng.pick(&[8usize, 16, 32]),
+        m,
+        k: 1 + rng.below(120) as u32,
+        mutation_rate: *rng.pick(&[0.02, 0.05, 0.1]),
+        maximize: rng.flag(),
+        function: rng.pick(FUNCTIONS).to_string(),
+        seed: rng.next_u64(),
+        vars,
+        ..GaParams::default()
+    }
+}
+
+fn assert_state_eq(a: &AnyGa, b: &AnyGa, ctx: &str) {
+    assert_eq!(a.population(), b.population(), "population ({ctx})");
+    assert_eq!(a.bank_states(), b.bank_states(), "lfsr bank ({ctx})");
+    assert_eq!(a.generation(), b.generation(), "generation ({ctx})");
+    assert_eq!(a.best().y, b.best().y, "best y ({ctx})");
+    assert_eq!(a.best().x, b.best().x, "best x ({ctx})");
+    assert_eq!(a.curve(), b.curve(), "curve ({ctx})");
+}
+
+/// Advance one machine through a backend's batch entry point.
+fn step_any(backend: &dyn StepBackend, inst: &mut AnyGa, k: u32) {
+    match inst {
+        AnyGa::Two(g) => backend.step_batch(&mut [g], &[k]),
+        AnyGa::Multi(g) => backend.step_multi_batch(&mut [g], &[k]),
+    }
+}
+
+/// 25-generation chunk schedule for k total generations.
+fn chunks(k: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut done = 0;
+    while done < k {
+        let c = (k - done).min(25);
+        out.push(c);
+        done += c;
+    }
+    out
+}
+
+/// One random single-machine case: scalar run ≡ chunked batched stepping ≡
+/// resident slab stepping (with a mid-run evict/re-admit interruption — the
+/// cancel / result-extraction seam — on half the cases).
+fn single_case(rng: &mut Rng) {
+    let params = random_params(rng);
+    let ctx = format!(
+        "fn={} n={} m={} V={} k={} mr={} max={} seed={}",
+        params.function,
+        params.n,
+        params.m,
+        params.vars,
+        params.k,
+        params.mutation_rate,
+        params.maximize,
+        params.seed
+    );
+    let base = AnyGa::from_params(&params).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+    let k = params.k;
+
+    let mut scalar = base.clone();
+    scalar.run(k);
+
+    let mut batched = base.clone();
+    for c in chunks(k) {
+        step_any(&BatchedSoaBackend, &mut batched, c);
+    }
+    assert_state_eq(&scalar, &batched, &format!("batched, {ctx}"));
+
+    // Resident path through a random backend's step_slab (Scalar exercises
+    // the materializing default, Batched the zero-copy fused override).
+    let backend = rng.pick(&[BackendKind::Scalar, BackendKind::Batched]).instantiate();
+    let interrupt = if rng.flag() && k > 25 {
+        Some(25 * (1 + rng.below((k as u64 - 1) / 25)))
+    } else {
+        None
+    };
+    let mut slab = SoaSlab::new(base.variant());
+    slab.admit(base.clone());
+    let mut done = 0u64;
+    for c in chunks(k) {
+        backend.step_slab(&mut slab, &[c]);
+        done += u64::from(c);
+        if interrupt == Some(done) {
+            // Mid-run extraction must be a bit-exact scalar prefix, and
+            // re-admission must resume seamlessly (pause/resume seam).
+            let snapshot = slab.evict(0);
+            let mut prefix = base.clone();
+            prefix.run(done as u32);
+            assert_state_eq(&prefix, &snapshot, &format!("mid-run evict @{done}, {ctx}"));
+            slab.admit(snapshot);
+        }
+    }
+    let resident = slab.evict(0);
+    assert_state_eq(&scalar, &resident, &format!("resident, {ctx}"));
+}
+
+/// One random multi-row case: B same-variant machines with ragged
+/// generation counts, stepped as one batch and as one resident slab.
+fn batch_case(rng: &mut Rng) {
+    let vars = *rng.pick(&[2u32, 4]);
+    let shared = GaParams {
+        n: *rng.pick(&[8usize, 16]),
+        m: 20,
+        mutation_rate: *rng.pick(&[0.02, 0.1]),
+        vars,
+        ..GaParams::default()
+    };
+    let b = 2 + rng.below(5) as usize;
+    let mut insts: Vec<AnyGa> = Vec::with_capacity(b);
+    let mut gens: Vec<u32> = Vec::with_capacity(b);
+    for _ in 0..b {
+        let p = GaParams {
+            function: rng.pick(FUNCTIONS).to_string(),
+            maximize: rng.flag(),
+            seed: rng.next_u64(),
+            k: 1000,
+            ..shared.clone()
+        };
+        insts.push(AnyGa::from_params(&p).unwrap());
+        // Ragged: some rows retire early, some never start.
+        gens.push(rng.below(61) as u32);
+    }
+    let ctx = format!("batch b={b} V={vars} n={} gens={gens:?}", shared.n);
+
+    // Scalar reference: each machine alone.
+    let mut scalar = insts.clone();
+    for (i, &g) in scalar.iter_mut().zip(&gens) {
+        i.run(g);
+    }
+
+    // One ragged batched call.
+    let mut batched = insts.clone();
+    if vars == 2 {
+        let mut refs: Vec<&mut GaInstance> = batched
+            .iter_mut()
+            .map(|a| a.as_two_mut().unwrap())
+            .collect();
+        BatchedSoaBackend.step_batch(&mut refs, &gens);
+    } else {
+        let mut refs: Vec<&mut MultiVarGa> = batched
+            .iter_mut()
+            .map(|a| a.as_multi_mut().unwrap())
+            .collect();
+        BatchedSoaBackend.step_multi_batch(&mut refs, &gens);
+    }
+    for (row, (a, b)) in scalar.iter().zip(&batched).enumerate() {
+        assert_state_eq(a, b, &format!("batched row {row}, {ctx}"));
+    }
+
+    // Resident slab, chunk-scheduled with per-row remaining counts (rows
+    // park with gens 0 once done — exactly the coordinator's ragged mix).
+    let mut slab = SoaSlab::new(insts[0].variant());
+    for inst in &insts {
+        slab.admit(inst.clone());
+    }
+    let mut done = vec![0u32; b];
+    loop {
+        let step: Vec<u32> = gens
+            .iter()
+            .zip(&done)
+            .map(|(&g, &d)| (g - d).min(25))
+            .collect();
+        if step.iter().all(|&c| c == 0) {
+            break;
+        }
+        BatchedSoaBackend.step_slab(&mut slab, &step);
+        for (d, c) in done.iter_mut().zip(&step) {
+            *d += c;
+        }
+    }
+    for row in (0..b).rev() {
+        let got = slab.evict(row);
+        assert_state_eq(&scalar[row], &got, &format!("resident row {row}, {ctx}"));
+    }
+}
+
+fn coordinator(backend: BackendKind, resident: bool) -> Coordinator {
+    let serve = ServeParams {
+        workers: 2,
+        max_batch: 8,
+        batch_window_us: 100,
+        use_pjrt: false,
+        backend,
+        resident_store: resident,
+        ..ServeParams::default()
+    };
+    Coordinator::builder(serve).start().unwrap()
+}
+
+/// One random coordinator mix: the same priority-mixed job set through the
+/// scalar, batched and resident configurations must produce bit-identical
+/// results per job. Returns the number of jobs (cases) covered.
+fn coordinator_mix_case(rng: &mut Rng) -> usize {
+    let jobs: Vec<(GaParams, Priority)> = (0..6)
+        .map(|_| {
+            let mut p = random_params(rng);
+            p.n = *rng.pick(&[8usize, 16]);
+            p.vars = *rng.pick(&[2u32, 4]);
+            p.m = 20;
+            p.k = 1 + rng.below(150) as u32;
+            let prio = *rng.pick(&[Priority::High, Priority::Normal, Priority::Low]);
+            (p, prio)
+        })
+        .collect();
+
+    let mut per_config: Vec<Vec<fpga_ga::coordinator::JobResult>> = Vec::new();
+    for (backend, resident) in [
+        (BackendKind::Scalar, false),
+        (BackendKind::Batched, false),
+        (BackendKind::Batched, true),
+    ] {
+        let coord = coordinator(backend, resident);
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|(p, prio)| {
+                coord.submit(OptimizeRequest::new(p.clone()).with_priority(*prio))
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+        coord.shutdown();
+        per_config.push(results);
+    }
+    let reference = &per_config[0];
+    for (cfg, results) in per_config.iter().enumerate().skip(1) {
+        for (i, (a, b)) in reference.iter().zip(results).enumerate() {
+            let ctx = format!("mix cfg={cfg} job={i} fn={} k={}", jobs[i].0.function, jobs[i].0.k);
+            assert_eq!(a.status, JobStatus::Completed, "{ctx}");
+            assert_eq!(b.status, JobStatus::Completed, "{ctx}");
+            assert_eq!(a.best_y, b.best_y, "best_y ({ctx})");
+            assert_eq!(a.best_x, b.best_x, "best_x ({ctx})");
+            assert_eq!(a.generations, b.generations, "generations ({ctx})");
+            assert_eq!(a.curve, b.curve, "curve ({ctx})");
+        }
+    }
+    jobs.len()
+}
+
+/// Mid-run cancel (or deadline) through the coordinator: the partial result
+/// must be a bit-exact scalar prefix at whatever chunk boundary it stopped.
+fn interrupted_case(rng: &mut Rng, resident: bool, use_deadline: bool) {
+    let mut p = random_params(rng);
+    p.n = 16;
+    p.vars = 2;
+    p.m = 20;
+    p.k = 10_000_000; // cannot finish: the run ends by cancel/deadline only
+    let coord = coordinator(BackendKind::Batched, resident);
+    let mut req = OptimizeRequest::new(p.clone()).with_progress_every(1);
+    if use_deadline {
+        req = req.with_deadline(Duration::from_millis(40));
+    }
+    let h = coord.submit(req);
+    if !use_deadline {
+        let ev = h
+            .next_progress(Duration::from_secs(120))
+            .expect("first progress event");
+        assert!(ev.generations >= 25);
+        h.cancel();
+    }
+    let r = h.wait();
+    let expected = if use_deadline {
+        JobStatus::DeadlineMiss
+    } else {
+        JobStatus::Cancelled
+    };
+    let ctx = format!(
+        "interrupted resident={resident} deadline={use_deadline} fn={} seed={}",
+        p.function, p.seed
+    );
+    assert_eq!(r.status, expected, "{ctx}");
+    assert!(r.generations < p.k, "{ctx}");
+    if !use_deadline {
+        // Cancelled after an observed progress event: at least one chunk ran.
+        assert!(r.generations >= 25, "{ctx}");
+    }
+    // The engine path is exact in K: replaying the scalar reference for the
+    // generations actually executed must reproduce the result bit-for-bit.
+    let mut reference = AnyGa::from_params(&p).unwrap();
+    reference.run(r.generations);
+    assert_eq!(r.curve.len() as u32, r.generations, "{ctx}");
+    assert_eq!(r.curve, reference.curve(), "curve ({ctx})");
+    assert_eq!(r.best_y, reference.best().y, "best_y ({ctx})");
+    assert_eq!(r.best_x, reference.best().x, "best_x ({ctx})");
+    coord.shutdown();
+}
+
+#[test]
+fn differential_scalar_batched_resident() {
+    // One fixed master seed: fully reproducible, prints per-case context on
+    // failure. ≥ 200 random cases total (ISSUE 4 acceptance).
+    let mut rng = Rng(0x5EED_D1FF_0000_0004);
+    let mut cases = 0usize;
+
+    for _ in 0..140 {
+        single_case(&mut rng);
+        cases += 1;
+    }
+    for _ in 0..40 {
+        batch_case(&mut rng);
+        cases += 1;
+    }
+    for _ in 0..4 {
+        cases += coordinator_mix_case(&mut rng);
+    }
+    for resident in [false, true] {
+        for use_deadline in [false, true] {
+            interrupted_case(&mut rng, resident, use_deadline);
+            cases += 1;
+        }
+    }
+    // Two extra resident cancel replicas: the preemption-adjacent seam the
+    // failure-injection tests exercise deterministically.
+    for _ in 0..2 {
+        interrupted_case(&mut rng, true, false);
+        cases += 1;
+    }
+
+    println!("differential harness: {cases} random cases, bit-identical");
+    assert!(cases >= 200, "harness must cover >= 200 cases, ran {cases}");
+}

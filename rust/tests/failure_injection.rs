@@ -1,10 +1,13 @@
 //! Failure injection: the runtime and coordinator must fail loudly and
-//! cleanly on broken inputs — no hangs, no silent wrong answers.
+//! cleanly on broken inputs — no hangs, no silent wrong answers. Includes
+//! the preemption seam (ISSUE 4): a preempted-then-resumed job converges
+//! bit-identically, and cancellation frees resident slab state.
 
 use fpga_ga::config::{GaParams, ServeParams};
-use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest};
-use fpga_ga::ga::Dims;
+use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest, Priority};
+use fpga_ga::ga::{AnyGa, BackendKind, Dims};
 use fpga_ga::runtime::{ChunkIo, Manifest, Runtime};
+use std::time::Duration;
 
 fn write(dir: &std::path::Path, name: &str, content: &str) {
     std::fs::write(dir.join(name), content).unwrap();
@@ -149,6 +152,107 @@ fn coordinator_handles_zero_k_validation() {
     p.k = 0;
     let r = coord.optimize(OptimizeRequest::new(p));
     assert_eq!(r.status, JobStatus::Failed);
+    coord.shutdown();
+}
+
+/// Resident-store coordinator: 1 worker so preemption ordering is
+/// observable, batched backend, small batching window.
+fn resident_coordinator() -> Coordinator {
+    Coordinator::builder(ServeParams {
+        workers: 1,
+        max_batch: 8,
+        batch_window_us: 100,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: true,
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap()
+}
+
+#[test]
+fn high_preempts_low_at_chunk_boundary_and_resumed_job_converges_identically() {
+    let coord = resident_coordinator();
+    let low_params = GaParams {
+        n: 16,
+        m: 20,
+        k: 2000,
+        function: "f3".into(),
+        seed: 31,
+        ..GaParams::default()
+    };
+    let low = coord.submit(
+        OptimizeRequest::new(low_params.clone())
+            .with_priority(Priority::Low)
+            .with_progress_every(1),
+    );
+    // Wait until the Low job demonstrably runs (first chunk completed)...
+    let ev = low
+        .next_progress(Duration::from_secs(120))
+        .expect("low job started");
+    assert!(ev.generations >= 25);
+    // ...then submit a High job long enough (20 chunks) to still be active
+    // when the Low job's in-flight chunk returns: the Low job's NEXT chunk
+    // is displaced (pause = slab row stays resident) and resumes after the
+    // High job finishes.
+    let high = coord.submit(
+        OptimizeRequest::new(GaParams {
+            n: 16,
+            m: 20,
+            k: 500,
+            function: "f1".into(),
+            seed: 32,
+            ..GaParams::default()
+        })
+        .with_priority(Priority::High),
+    );
+    let hr = high.wait();
+    assert_eq!(hr.status, JobStatus::Completed, "{:?}", hr.error);
+    let lr = low.wait();
+    assert_eq!(lr.status, JobStatus::Completed, "{:?}", lr.error);
+    assert_eq!(lr.generations, 2000);
+    let m = coord.metrics();
+    assert!(m.jobs_preempted >= 1, "low job was never preempted");
+    // The resumed run converges bit-identically to an unpreempted run.
+    let mut reference = AnyGa::from_params(&low_params).unwrap();
+    reference.run(2000);
+    assert_eq!(lr.best_y, reference.best().y);
+    assert_eq!(lr.best_x, reference.best().x);
+    assert_eq!(lr.curve, reference.curve());
+    coord.shutdown();
+}
+
+#[test]
+fn cancel_while_parked_resident_frees_the_slab() {
+    let coord = resident_coordinator();
+    let h = coord.submit(
+        OptimizeRequest::new(GaParams {
+            n: 16,
+            m: 20,
+            k: 1_000_000_000,
+            function: "f3".into(),
+            seed: 33,
+            ..GaParams::default()
+        })
+        .with_progress_every(1),
+    );
+    let ev = h
+        .next_progress(Duration::from_secs(120))
+        .expect("job running");
+    assert!(ev.generations >= 25);
+    let m = coord.metrics();
+    assert!(
+        m.resident_bytes > 0,
+        "population + bank must be slab-resident while the job runs"
+    );
+    h.cancel();
+    let r = h.wait();
+    assert_eq!(r.status, JobStatus::Cancelled);
+    assert!(r.generations >= 25, "partial progress delivered");
+    let m = coord.metrics();
+    assert_eq!(m.resident_bytes, 0, "cancellation must free the slab row");
+    assert_eq!(m.jobs_cancelled, 1);
     coord.shutdown();
 }
 

@@ -237,6 +237,104 @@ fn gateway_rejects_malformed_requests() {
 }
 
 #[test]
+fn gateway_stress_concurrent_mixed_priority_no_lost_jobs() {
+    // ISSUE 4 satellite: N concurrent connections submitting mixed-priority
+    // jobs while polling `GET /v1/jobs/:id` — no lost jobs, monotone
+    // progress, and (resident store on) every slab row freed at the end.
+    const THREADS: usize = 8;
+    const JOBS_PER_THREAD: usize = 4;
+    let serve = ServeParams {
+        workers: 2,
+        max_batch: 8,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: true,
+        ..ServeParams::default()
+    };
+    let coord = Arc::new(Coordinator::builder(serve).start().unwrap());
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    let clients: Vec<_> = (0..THREADS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let prios = ["high", "normal", "low", "normal"];
+                let mut ids = Vec::new();
+                for j in 0..JOBS_PER_THREAD {
+                    let body = format!(
+                        r#"{{"function":"f3","n":16,"k":100,"seed":{},"priority":"{}","tag":"stress-{t}-{j}"}}"#,
+                        t * 100 + j,
+                        prios[j % prios.len()]
+                    );
+                    let (code, v) = http(addr, "POST", "/v1/jobs", &body);
+                    assert_eq!(code, 202, "{v:?}");
+                    ids.push(v.req_i64("id").unwrap());
+                }
+                // Poll every job to completion; generations never go back.
+                for id in &ids {
+                    let mut last = -1i64;
+                    let deadline = Instant::now() + Duration::from_secs(120);
+                    loop {
+                        let (code, v) = http(addr, "GET", &format!("/v1/jobs/{id}"), "");
+                        assert_eq!(code, 200, "{v:?}");
+                        let gens = v.req_i64("generations").unwrap();
+                        assert!(gens >= last, "progress went backwards: {gens} < {last}");
+                        last = gens;
+                        if v.req_str("phase").unwrap() == "done" {
+                            assert_eq!(v.req_str("status").unwrap(), "completed", "{v:?}");
+                            assert_eq!(gens, 100, "{v:?}");
+                            break;
+                        }
+                        assert!(Instant::now() < deadline, "job {id} never finished");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+                ids
+            })
+        })
+        .collect();
+
+    let mut all_ids = Vec::new();
+    for c in clients {
+        all_ids.extend(c.join().expect("client thread panicked"));
+    }
+    assert_eq!(all_ids.len(), THREADS * JOBS_PER_THREAD);
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(
+        all_ids.len(),
+        THREADS * JOBS_PER_THREAD,
+        "duplicate or lost job ids"
+    );
+
+    // No lost jobs: listing and metrics account for every submission.
+    let (code, listing) = http(addr, "GET", "/v1/jobs", "");
+    assert_eq!(code, 200);
+    assert_eq!(
+        listing.req_array("jobs").unwrap().len(),
+        THREADS * JOBS_PER_THREAD
+    );
+    let (code, m) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(code, 200);
+    assert_eq!(
+        m.req_i64("jobs_submitted").unwrap() as usize,
+        THREADS * JOBS_PER_THREAD
+    );
+    assert_eq!(
+        m.req_i64("jobs_completed").unwrap() as usize,
+        THREADS * JOBS_PER_THREAD
+    );
+    assert_eq!(
+        m.req_i64("resident_bytes").unwrap(),
+        0,
+        "terminal jobs must free their slab rows"
+    );
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
 fn gateway_runs_registry_problem_at_v4() {
     // ISSUE 3 satellite: POST {"function": <registry-name>, "vars": V}
     // submits a V-ROM multivar job; the result is bit-identical to a direct

@@ -271,6 +271,55 @@ fn high_priority_overtakes_a_saturated_pool() {
 }
 
 #[test]
+fn preempted_job_reports_running_not_queued() {
+    // ISSUE 4 satellite fix: a preempted (paused-resident) job has executed
+    // chunks and must poll as Running — try_wait() stays None (no terminal
+    // result yet) and the snapshot phase must not regress toward Queued.
+    let serve = ServeParams {
+        workers: 1,
+        max_batch: 8,
+        batch_window_us: 100,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: true,
+        ..ServeParams::default()
+    };
+    let coord = Coordinator::builder(serve).start().unwrap();
+    let mut low = coord.submit(
+        OptimizeRequest::new(params(16, 100_000_000, 40))
+            .with_priority(Priority::Low)
+            .with_progress_every(1),
+    );
+    let ev = low
+        .next_progress(Duration::from_secs(120))
+        .expect("low job started");
+    assert!(ev.generations >= 25);
+    // A long High job: the Low job's next chunk is displaced at the
+    // boundary (1 worker — the pause is deterministic once observed).
+    let high = coord.submit(
+        OptimizeRequest::new(params(16, 50_000_000, 41)).with_priority(Priority::High),
+    );
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while coord.metrics().jobs_preempted == 0 {
+        assert!(Instant::now() < deadline, "low job never preempted");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(
+        low.try_wait().is_none(),
+        "paused job must not report a terminal result"
+    );
+    let snap = coord.job(low.id).expect("snapshot retained");
+    assert_eq!(snap.phase, JobPhase::Running, "paused == still Running");
+    assert!(snap.generations >= 25, "partial progress stays visible");
+    // Clean up without burning 150M generations of CPU.
+    high.cancel();
+    low.cancel();
+    assert_eq!(high.wait().status, JobStatus::Cancelled);
+    assert_eq!(low.wait().status, JobStatus::Cancelled);
+    coord.shutdown();
+}
+
+#[test]
 fn snapshots_track_the_full_lifecycle() {
     let coord = engine(1);
     let h = coord.submit(OptimizeRequest::new(params(16, 100, 13)).with_tag("snap"));

@@ -1,0 +1,300 @@
+//! Lane-kernel microbench (ISSUE 6): per-pass and fused-generation cost in
+//! ns per individual·generation for every kernel implementation (scalar
+//! reference loops, portable blocked loops, AVX2 intrinsics when the CPU
+//! has them), plus the fused speedup of each vector kernel over scalar.
+//!
+//! Writes BENCH_kernels.json and prints the greppable `BENCH_JSON` line.
+//! CI runs `--check`: a quick measurement pass plus the steady-state
+//! allocation audit — after one warm chunk, a fused chunk with
+//! pre-reserved curves must perform ZERO heap allocations (the slab-owned
+//! scratch contract, `SoaSlab::scratch_bytes`).
+
+use fpga_ga::bench_util::{bench, emit_json, fmt_duration, BenchOpts, Table};
+use fpga_ga::config::GaParams;
+use fpga_ga::ga::simd::{resolve, KernelKind};
+use fpga_ga::ga::{avx2_available, AnyGa, BatchedSoaBackend, Dims, SoaSlab, StepBackend};
+use fpga_ga::jsonmini::{obj, to_string, Value};
+use fpga_ga::prng::{initial_population, seed_bank};
+use fpga_ga::rom::build_tables;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting allocator: the steady-state audit asserts the fused passes
+/// allocate nothing once the slab scratch and curves are warm.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The paper's N = 32 default, batched B = 8 (the coordinator's default
+/// max_batch), f3 — the γ-LUT fitness path, the heaviest V = 2 kernel.
+const N: usize = 32;
+const B: usize = 8;
+const CHUNK: u32 = 25;
+
+fn base_params(seed: u64) -> GaParams {
+    GaParams {
+        n: N,
+        m: 20,
+        k: 1000,
+        function: "f3".into(),
+        seed,
+        ..GaParams::default()
+    }
+}
+
+fn fleet() -> Vec<AnyGa> {
+    (0..B)
+        .map(|i| AnyGa::from_params(&base_params(9000 + i as u64)).unwrap())
+        .collect()
+}
+
+fn resident_slab() -> SoaSlab {
+    let insts = fleet();
+    let mut slab = SoaSlab::new(insts[0].variant());
+    for inst in &insts {
+        slab.admit(inst.clone());
+    }
+    slab
+}
+
+fn kernel_kinds() -> Vec<KernelKind> {
+    let mut kinds = vec![KernelKind::Scalar, KernelKind::Portable];
+    if avx2_available() {
+        kinds.push(KernelKind::Avx2);
+    }
+    kinds
+}
+
+/// Steady-state allocation audit: warm one chunk (scratch + curve growth),
+/// pre-reserve the next chunk's curve capacity, then assert a fused chunk
+/// allocates nothing.
+fn assert_zero_steady_state_allocs() {
+    let mut slab = resident_slab();
+    let gens = vec![CHUNK; B];
+    let backend = BatchedSoaBackend::default();
+    backend.step_slab(&mut slab, &gens);
+    assert!(slab.scratch_bytes() > 0, "fused step must build slab scratch");
+    slab.reserve_curves(&gens);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    backend.step_slab(&mut slab, &gens);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "fused chunk allocated in steady state ({} allocations)",
+        after - before
+    );
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let check = argv.iter().any(|a| a == "--check");
+    let out_path = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_kernels.json".to_string());
+    let opts = if check {
+        BenchOpts {
+            warmup: std::time::Duration::from_millis(5),
+            measure: std::time::Duration::from_millis(20),
+            max_iters: 1000,
+            min_iters: 1,
+        }
+    } else {
+        BenchOpts::quick()
+    };
+
+    println!("=== Lane kernels: per-pass + fused ns/individual·gen (N={N}, B={B}, f3) ===");
+    println!("AVX2 available: {}\n", avx2_available());
+    let mut t = Table::new(["case", "mean", "p95", "ns/ind·gen"]);
+    let mut json = Vec::new();
+
+    // Per-pass cost over the whole [B·N] batch (one generation's work).
+    let params = base_params(0);
+    let dims = Dims::from_params(&params);
+    let tables = build_tables(&params.spec().unwrap(), params.m, params.gamma_bits);
+    let l = dims.lfsr_len();
+    let mut pop: Vec<u32> = Vec::with_capacity(B * N);
+    for r in 0..B {
+        pop.extend(initial_population(100 + r as u64, N, dims.m));
+    }
+    let bank = seed_bank(0xBEEF_0000_0000_0001, B * l);
+    let mut y = vec![0i64; B * N];
+    let mut w = vec![0u32; B * N];
+    let mut z = vec![0u32; B * N];
+
+    for &kind in &kernel_kinds() {
+        let kern = resolve(kind);
+        let ind = (B * N) as f64;
+
+        let meas = bench(&format!("fitness/{kind}"), opts, || {
+            kern.fitness_two(&pop, &tables, &mut y);
+        });
+        t.row([
+            format!("fitness {kind}"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("{:.2}", meas.mean_ns() / ind),
+        ]);
+        json.push(meas.to_json(ind));
+
+        let meas = bench(&format!("select/{kind}"), opts, || {
+            for r in 0..B {
+                kern.select(
+                    &pop[r * N..(r + 1) * N],
+                    &y[r * N..(r + 1) * N],
+                    &bank[r * l..r * l + 2 * N],
+                    false,
+                    dims.sel_bits(),
+                    &mut w[r * N..(r + 1) * N],
+                );
+            }
+        });
+        t.row([
+            format!("select {kind}"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("{:.2}", meas.mean_ns() / ind),
+        ]);
+        json.push(meas.to_json(ind));
+
+        let meas = bench(&format!("crossover/{kind}"), opts, || {
+            for r in 0..B {
+                kern.crossover_two(
+                    &w[r * N..(r + 1) * N],
+                    &bank[r * l + 2 * N..r * l + 3 * N],
+                    &dims,
+                    &mut z[r * N..(r + 1) * N],
+                );
+            }
+        });
+        t.row([
+            format!("crossover {kind}"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("{:.2}", meas.mean_ns() / ind),
+        ]);
+        json.push(meas.to_json(ind));
+
+        let meas = bench(&format!("mutate/{kind}"), opts, || {
+            for r in 0..B {
+                kern.mutate(
+                    &mut z[r * N..(r + 1) * N],
+                    &bank[r * l + 3 * N..(r + 1) * l],
+                    dims.m,
+                );
+            }
+        });
+        t.row([
+            format!("mutate {kind}"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("{:.2}", meas.mean_ns() / ind),
+        ]);
+        json.push(meas.to_json(ind));
+
+        let mut states = bank.clone();
+        let lfsr_items = (B * l) as f64;
+        let meas = bench(&format!("lfsr_tick/{kind}"), opts, || {
+            kern.lfsr_tick(&mut states);
+        });
+        t.row([
+            format!("lfsr_tick {kind}"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("{:.2}", meas.mean_ns() / lfsr_items),
+        ]);
+        json.push(meas.to_json(lfsr_items));
+    }
+
+    // Fused generations through the resident-slab seam — the number the
+    // speedup gate reads (whole pipeline, ns per individual·generation).
+    let mut fused_ns: Vec<(KernelKind, f64)> = Vec::new();
+    for &kind in &kernel_kinds() {
+        let mut slab = resident_slab();
+        let backend = BatchedSoaBackend::new(kind);
+        let gens = vec![CHUNK; B];
+        let items = (B * N) as f64 * CHUNK as f64;
+        let meas = bench(&format!("fused/{kind}"), opts, || {
+            backend.step_slab(&mut slab, &gens);
+        });
+        t.row([
+            format!("fused {kind} (chunk={CHUNK})"),
+            fmt_duration(meas.mean),
+            fmt_duration(meas.p95),
+            format!("{:.2}", meas.mean_ns() / items),
+        ]);
+        json.push(meas.to_json(items));
+        fused_ns.push((kind, meas.mean_ns()));
+    }
+    t.print();
+
+    let scalar_ns = fused_ns
+        .iter()
+        .find(|(k, _)| *k == KernelKind::Scalar)
+        .map(|(_, ns)| *ns)
+        .unwrap();
+    let speedup_of = |kind: KernelKind| -> Value {
+        fused_ns
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, ns)| Value::from(scalar_ns / ns))
+            .unwrap_or(Value::Null)
+    };
+    println!();
+    for (kind, ns) in &fused_ns {
+        if *kind != KernelKind::Scalar {
+            println!("fused speedup {kind} vs scalar: {:.2}x", scalar_ns / ns);
+        }
+    }
+
+    let report = obj([
+        ("bench", Value::from("bench_kernels")),
+        (
+            "config",
+            obj([
+                ("n", Value::from(N as i64)),
+                ("b", Value::from(B as i64)),
+                ("v", Value::from(2i64)),
+                ("function", Value::from("f3")),
+                ("chunk", Value::from(i64::from(CHUNK))),
+            ]),
+        ),
+        ("avx2_available", Value::Bool(avx2_available())),
+        ("speedup_fused_portable", speedup_of(KernelKind::Portable)),
+        ("speedup_fused_avx2", speedup_of(KernelKind::Avx2)),
+        ("results", Value::Array(json.clone())),
+    ]);
+    if let Err(e) = std::fs::write(&out_path, to_string(&report)) {
+        eprintln!("warning: could not write {out_path}: {e}");
+    } else {
+        println!("wrote {out_path}");
+    }
+    emit_json("bench_kernels", json);
+
+    if check {
+        assert_zero_steady_state_allocs();
+        println!("bench_kernels check mode: OK (steady-state allocations: 0)");
+    }
+}

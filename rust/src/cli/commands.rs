@@ -24,6 +24,8 @@ COMMANDS:
               --vars V (chromosome fields, 2..8; V != 2 uses the V-ROM machine)
               --n N  --m M  --k K  --seed S
               --maximize  --pjrt  --backend scalar|batched  --config FILE
+              --kernels auto|scalar|portable|avx2 (lane kernels for the
+              batched fused passes; auto = runtime detection)
               --early-stop C (stop after C stale chunks; 0 = never)
               --resident-store (park jobs in SoA slabs between chunks;
               zero-copy chunk dispatch + High-preempts-Low scheduling)
@@ -37,6 +39,7 @@ COMMANDS:
               (with --listen) expose the HTTP/JSON gateway (docs/api.md)
               --jobs J (>= 1)  --workers W  --batch B  --pjrt
               --early-stop C  --backend scalar|batched  --config FILE
+              --kernels auto|scalar|portable|avx2 (also `[serve] kernels`)
               --resident-store (also `[serve] resident_store = true`)
               --listen ADDR (e.g. 127.0.0.1:8080; also `[serve] listen`)
               --serve-for SECS (keep the gateway up after the trace)
@@ -93,6 +96,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     let mut serve = crate::config::ServeParams::default();
     serve.use_pjrt = args.flag("pjrt");
     serve.backend = args.opt_or("backend", serve.backend)?;
+    serve.kernels = args.opt_or("kernels", serve.kernels)?;
     serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
     if args.flag("resident-store") {
         serve.resident_store = true;
@@ -162,6 +166,7 @@ fn serve_params_from(args: &Args) -> crate::Result<crate::config::ServeParams> {
     serve.max_batch = args.opt_or("batch", serve.max_batch)?;
     serve.early_stop_chunks = args.opt_or("early-stop", serve.early_stop_chunks)?;
     serve.backend = args.opt_or("backend", serve.backend)?;
+    serve.kernels = args.opt_or("kernels", serve.kernels)?;
     if args.flag("resident-store") {
         serve.resident_store = true;
     }
@@ -499,6 +504,49 @@ mod tests {
     #[test]
     fn unknown_backend_rejected() {
         assert!(run_cmd("optimize --n 16 --backend warp").is_err());
+    }
+
+    #[test]
+    fn optimize_kernel_kinds_match_scalar_reference() {
+        // Every lane-kernel selection is bit-identical through the full CLI
+        // path (the differential harness pins the engine-level contract).
+        let fitness = |s: &str| {
+            s.lines()
+                .find(|l| l.contains("best fitness"))
+                .map(str::to_string)
+        };
+        let reference = run_cmd(
+            "optimize --function f3 --n 16 --k 50 --seed 1 --backend batched --kernels scalar",
+        )
+        .unwrap();
+        assert!(fitness(&reference).is_some());
+        let mut kinds = vec!["auto", "portable"];
+        if crate::ga::avx2_available() {
+            kinds.push("avx2");
+        }
+        for kind in kinds {
+            let got = run_cmd(&format!(
+                "optimize --function f3 --n 16 --k 50 --seed 1 --backend batched --kernels {kind}",
+            ))
+            .unwrap();
+            assert_eq!(fitness(&reference), fitness(&got), "--kernels {kind}");
+        }
+    }
+
+    #[test]
+    fn unknown_kernels_rejected() {
+        assert!(run_cmd("optimize --n 16 --kernels sse9").is_err());
+    }
+
+    #[test]
+    fn explicit_avx2_rejected_without_cpu_support() {
+        let r = run_cmd("optimize --function f3 --n 16 --k 25 --kernels avx2");
+        if crate::ga::avx2_available() {
+            assert!(r.is_ok(), "{r:?}");
+        } else {
+            let err = r.unwrap_err();
+            assert!(err.to_string().contains("AVX2"), "{err}");
+        }
     }
 
     #[test]

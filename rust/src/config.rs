@@ -4,7 +4,7 @@
 //! coordinator/serving knobs, and experiment sweeps. Defaults follow the
 //! paper's defaults (K = 100, MR = 2%, minimize, m = 20).
 
-use crate::ga::BackendKind;
+use crate::ga::{BackendKind, KernelKind};
 use crate::jsonmini::Value;
 use crate::rom::FnSpec;
 use anyhow::{anyhow, bail, Context, Result};
@@ -126,6 +126,11 @@ pub struct ServeParams {
     /// behavior), `batched` fuses a whole same-variant `BatchPlan` into one
     /// SoA dispatch (`rust/src/ga/backend.rs`).
     pub backend: BackendKind,
+    /// Lane-kernel implementation the batched fused passes dispatch to:
+    /// `auto` (default) picks the fastest the CPU supports, `scalar` /
+    /// `portable` / `avx2` pin one (`rust/src/ga/simd/`). All selections
+    /// are bit-identical; `avx2` errors at startup on CPUs without AVX2.
+    pub kernels: KernelKind,
     /// Keep parked jobs resident in SoA slabs between chunks (zero-copy
     /// chunk dispatch) and let High-priority jobs preempt Low-priority
     /// jobs at chunk boundaries (docs/backends.md §Resident store).
@@ -144,6 +149,7 @@ impl Default for ServeParams {
             use_pjrt: true,
             listen: String::new(),
             backend: BackendKind::Scalar,
+            kernels: KernelKind::Auto,
             resident_store: false,
         }
     }
@@ -254,6 +260,10 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
         let name = x.as_str().ok_or_else(|| anyhow!("`backend` must be a string"))?;
         s.backend = name.parse().map_err(|e: String| anyhow!("{e}"))?;
     }
+    if let Some(x) = v.get("kernels") {
+        let name = x.as_str().ok_or_else(|| anyhow!("`kernels` must be a string"))?;
+        s.kernels = name.parse().map_err(|e: String| anyhow!("{e}"))?;
+    }
     get_bool(v, "resident_store", &mut s.resident_store)?;
     Ok(())
 }
@@ -318,6 +328,20 @@ use_pjrt = false
         assert_eq!(c.serve.backend, BackendKind::Scalar);
         let err = Config::from_toml("[serve]\nbackend = \"gpu\"").unwrap_err();
         assert!(err.to_string().contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn kernels_key_parses_and_validates() {
+        let c = Config::from_toml("[serve]\nkernels = \"portable\"").unwrap();
+        assert_eq!(c.serve.kernels, KernelKind::Portable);
+        let c = Config::from_toml("[serve]\nkernels = \"scalar\"").unwrap();
+        assert_eq!(c.serve.kernels, KernelKind::Scalar);
+        let c = Config::from_toml("[serve]\nkernels = \"avx2\"").unwrap();
+        assert_eq!(c.serve.kernels, KernelKind::Avx2);
+        assert_eq!(Config::default().serve.kernels, KernelKind::Auto);
+        let err = Config::from_toml("[serve]\nkernels = \"sse9\"").unwrap_err();
+        assert!(err.to_string().contains("unknown kernels"), "{err}");
+        assert!(Config::from_toml("[serve]\nkernels = 2").is_err());
     }
 
     #[test]

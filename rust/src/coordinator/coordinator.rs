@@ -79,6 +79,11 @@ impl CoordinatorBuilder {
             "resident_store keeps job state in engine SoA slabs and cannot be \
              combined with use_pjrt; disable one of them"
         );
+        anyhow::ensure!(
+            !(serve.kernels == crate::ga::KernelKind::Avx2 && !crate::ga::avx2_available()),
+            "kernels = avx2 was requested but this CPU does not support AVX2; \
+             use `auto` (runtime detection) or `portable`"
+        );
         let metrics = Arc::new(Metrics::new());
         let registry: Registry = Arc::new(Mutex::new(BTreeMap::new()));
         let (sched_tx, sched_rx) = channel::<SchedMsg>();
@@ -90,6 +95,7 @@ impl CoordinatorBuilder {
         let engine_threads = spawn_engine_pool(
             serve.workers.max(1),
             serve.backend,
+            serve.kernels,
             engine_rx,
             sched_tx.clone(),
             metrics.clone(),
@@ -102,6 +108,7 @@ impl CoordinatorBuilder {
             let th = spawn_pjrt_thread(
                 manifest,
                 serve.backend,
+                serve.kernels,
                 rx,
                 sched_tx.clone(),
                 metrics.clone(),

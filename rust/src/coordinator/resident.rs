@@ -205,7 +205,7 @@ mod tests {
         let per_row = rslab.slab.row_state_bytes() as u64;
         assert_eq!(metrics.resident_bytes.load(Ordering::Relaxed), per_row);
 
-        BatchedSoaBackend.step_slab(&mut rslab.slab, &[25]);
+        BatchedSoaBackend::default().step_slab(&mut rslab.slab, &[25]);
         store.finish_dispatch(rslab);
         assert!(!store.variant_in_flight(&key));
 

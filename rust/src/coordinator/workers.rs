@@ -6,7 +6,7 @@
 use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::resident::ResidentSlab;
-use crate::ga::{AnyGa, BackendKind, GaInstance, MultiVarGa, StepBackend};
+use crate::ga::{AnyGa, BackendKind, GaInstance, KernelKind, MultiVarGa, StepBackend};
 use crate::runtime::{ChunkIo, Manifest, Runtime};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
@@ -134,6 +134,7 @@ pub(crate) fn run_slab_task(backend: &dyn StepBackend, task: &mut SlabTask) -> u
 pub(crate) fn spawn_engine_pool(
     count: usize,
     backend: BackendKind,
+    kernels: KernelKind,
     work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
@@ -146,7 +147,7 @@ pub(crate) fn spawn_engine_pool(
             std::thread::Builder::new()
                 .name(format!("ga-engine-{i}"))
                 .spawn(move || {
-                    let backend = backend.instantiate();
+                    let backend = backend.instantiate_with(kernels);
                     loop {
                         let msg = {
                             let guard = rx.lock().unwrap();
@@ -206,6 +207,7 @@ pub(crate) fn spawn_engine_pool(
 pub(crate) fn spawn_pjrt_thread(
     manifest: Manifest,
     fallback: BackendKind,
+    kernels: KernelKind,
     work_rx: Receiver<WorkMsg>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
@@ -223,7 +225,7 @@ pub(crate) fn spawn_pjrt_thread(
             // Fallback executor honors the configured engine backend, so a
             // batched deployment keeps its fused multi-job dispatches even
             // when PJRT is absent or failing.
-            let fallback = fallback.instantiate();
+            let fallback = fallback.instantiate_with(kernels);
             let run_fallback = |jobs: &mut [RunningJob], chunk: u32| {
                 let advanced = run_engine_batch(fallback.as_ref(), jobs, chunk);
                 metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);

@@ -33,6 +33,7 @@
 //! [`StepBackend::step_slab`] advances a *resident* slab in place with no
 //! per-chunk copies at all (the coordinator's `ResidentStore` path).
 
+use crate::ga::simd::{self, KernelKind};
 use crate::ga::{AnyGa, Dims, GaInstance, MultiDims, MultiVarGa, SoaSlab, VariantKey};
 
 /// Backend selector — config / CLI surface (`--backend {scalar,batched}`).
@@ -53,11 +54,19 @@ impl BackendKind {
         }
     }
 
-    /// Construct the backend this selector names.
+    /// Construct the backend this selector names with the default
+    /// ([`KernelKind::Auto`]) lane-kernel selection.
     pub fn instantiate(self) -> Box<dyn StepBackend> {
+        self.instantiate_with(KernelKind::default())
+    }
+
+    /// Construct the backend this selector names, pinning the lane-kernel
+    /// implementation the batched fused passes dispatch to (`--kernels`).
+    /// The scalar backend ignores the selection: it IS the reference.
+    pub fn instantiate_with(self, kernels: KernelKind) -> Box<dyn StepBackend> {
         match self {
             BackendKind::Scalar => Box::new(ScalarBackend),
-            BackendKind::Batched => Box::new(BatchedSoaBackend),
+            BackendKind::Batched => Box::new(BatchedSoaBackend::new(kernels)),
         }
     }
 }
@@ -152,8 +161,21 @@ impl StepBackend for ScalarBackend {
 }
 
 /// Batched structure-of-arrays backend (module docs above for the layout).
+///
+/// `kernels` selects the lane-kernel implementation the fused passes run on
+/// (scalar reference / portable blocked / AVX2 intrinsics — see
+/// [`crate::ga::simd`]). All choices are bit-identical; the default
+/// [`KernelKind::Auto`] picks the fastest one the CPU supports.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct BatchedSoaBackend;
+pub struct BatchedSoaBackend {
+    pub kernels: KernelKind,
+}
+
+impl BatchedSoaBackend {
+    pub fn new(kernels: KernelKind) -> Self {
+        Self { kernels }
+    }
+}
 
 impl StepBackend for BatchedSoaBackend {
     fn kind(&self) -> BackendKind {
@@ -180,7 +202,7 @@ impl StepBackend for BatchedSoaBackend {
         for inst in insts.iter() {
             slab.gather_row_two(&**inst);
         }
-        slab.fused_step(gens);
+        slab.fused_step_with(simd::resolve(self.kernels), gens);
         for (row, inst) in insts.iter_mut().enumerate() {
             if gens[row] == 0 {
                 continue;
@@ -211,7 +233,7 @@ impl StepBackend for BatchedSoaBackend {
         for inst in insts.iter() {
             slab.gather_row_multi(&**inst);
         }
-        slab.fused_step(gens);
+        slab.fused_step_with(simd::resolve(self.kernels), gens);
         for (row, inst) in insts.iter_mut().enumerate() {
             if gens[row] == 0 {
                 continue;
@@ -224,7 +246,7 @@ impl StepBackend for BatchedSoaBackend {
     /// directly over its `[B·N]` / `[B·L]` arrays, so a chunk costs zero
     /// gather/scatter copies.
     fn step_slab(&self, slab: &mut SoaSlab, gens: &[u32]) {
-        slab.fused_step(gens);
+        slab.fused_step_with(simd::resolve(self.kernels), gens);
     }
 }
 
@@ -270,11 +292,26 @@ mod tests {
     }
 
     #[test]
+    fn instantiate_with_pins_the_lane_kernels() {
+        // Every kernel selection steps bit-identically through the backend
+        // seam (the differential harness covers the full shape matrix).
+        let mut reference = inst(16, 20, 77, "f3", false);
+        reference.run(30);
+        for kernels in [KernelKind::Scalar, KernelKind::Portable, KernelKind::Auto] {
+            let mut b = inst(16, 20, 77, "f3", false);
+            BackendKind::Batched
+                .instantiate_with(kernels)
+                .step_one(&mut b, 30);
+            assert_same(&reference, &b);
+        }
+    }
+
+    #[test]
     fn batched_single_row_equals_scalar() {
         let mut a = inst(16, 20, 7, "f3", false);
         let mut b = a.clone();
         a.run(40);
-        BatchedSoaBackend.step_one(&mut b, 40);
+        BatchedSoaBackend::default().step_one(&mut b, 40);
         assert_same(&a, &b);
     }
 
@@ -287,7 +324,7 @@ mod tests {
             i.run(30);
         }
         let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
-        BatchedSoaBackend.step_batch(&mut refs, &[30; 5]);
+        BatchedSoaBackend::default().step_batch(&mut refs, &[30; 5]);
         for (a, b) in scalar.iter().zip(&batched) {
             assert_same(a, b);
         }
@@ -303,7 +340,7 @@ mod tests {
             i.run(k);
         }
         let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
-        BatchedSoaBackend.step_batch(&mut refs, &gens);
+        BatchedSoaBackend::default().step_batch(&mut refs, &gens);
         for (a, b) in scalar.iter().zip(&batched) {
             assert_same(a, b);
         }
@@ -322,7 +359,7 @@ mod tests {
             i.run(50);
         }
         let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
-        BatchedSoaBackend.step_batch(&mut refs, &[50; 4]);
+        BatchedSoaBackend::default().step_batch(&mut refs, &[50; 4]);
         for (a, b) in scalar.iter().zip(&batched) {
             assert_same(a, b);
         }
@@ -335,7 +372,7 @@ mod tests {
         let mut b = a.clone();
         a.run(100);
         for _ in 0..4 {
-            BatchedSoaBackend.step_one(&mut b, 25);
+            BatchedSoaBackend::default().step_one(&mut b, 25);
         }
         assert_same(&a, &b);
     }
@@ -354,14 +391,14 @@ mod tests {
     fn mixed_dims_rejected() {
         let mut a = inst(8, 20, 1, "f3", false);
         let mut b = inst(16, 20, 2, "f3", false);
-        BatchedSoaBackend.step_batch(&mut [&mut a, &mut b], &[5, 5]);
+        BatchedSoaBackend::default().step_batch(&mut [&mut a, &mut b], &[5, 5]);
     }
 
     #[test]
     fn empty_batch_is_a_no_op() {
-        BatchedSoaBackend.step_batch(&mut [], &[]);
+        BatchedSoaBackend::default().step_batch(&mut [], &[]);
         ScalarBackend.step_batch(&mut [], &[]);
-        BatchedSoaBackend.step_multi_batch(&mut [], &[]);
+        BatchedSoaBackend::default().step_multi_batch(&mut [], &[]);
         ScalarBackend.step_multi_batch(&mut [], &[]);
     }
 
@@ -393,7 +430,7 @@ mod tests {
             i.run(30);
         }
         let mut refs: Vec<&mut MultiVarGa> = batched.iter_mut().collect();
-        BatchedSoaBackend.step_multi_batch(&mut refs, &[30; 5]);
+        BatchedSoaBackend::default().step_multi_batch(&mut refs, &[30; 5]);
         for (a, b) in scalar.iter().zip(&batched) {
             assert_same_multi(a, b);
         }
@@ -408,7 +445,7 @@ mod tests {
             i.run(k);
         }
         let mut refs: Vec<&mut MultiVarGa> = batched.iter_mut().collect();
-        BatchedSoaBackend.step_multi_batch(&mut refs, &gens);
+        BatchedSoaBackend::default().step_multi_batch(&mut refs, &gens);
         for (a, b) in scalar.iter().zip(&batched) {
             assert_same_multi(a, b);
         }
@@ -468,6 +505,6 @@ mod tests {
         let r2 = MultiRom::build(&d2, &[&sq, &sq, &sq, &sq], |g| g, true);
         let mut a = MultiVarGa::new(d1, r1, false, 1);
         let mut b = MultiVarGa::new(d2, r2, false, 2);
-        BatchedSoaBackend.step_multi_batch(&mut [&mut a, &mut b], &[5, 5]);
+        BatchedSoaBackend::default().step_multi_batch(&mut [&mut a, &mut b], &[5, 5]);
     }
 }

@@ -253,7 +253,7 @@ mod tests {
         let mut scalar = ring(4, 16, 10);
         let mut batched = scalar.clone();
         scalar.run(47);
-        batched.run_with(&crate::ga::BatchedSoaBackend, 47);
+        batched.run_with(&crate::ga::BatchedSoaBackend::default(), 47);
         assert_eq!(scalar.best().y, batched.best().y);
         assert_eq!(scalar.best().x, batched.best().x);
         assert_eq!(scalar.curve(), batched.curve());

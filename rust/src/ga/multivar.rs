@@ -26,7 +26,8 @@
 //! backend ([`crate::ga::BatchedSoaBackend`]) drive the SAME code, so the
 //! scalar and batched multivar trajectories cannot drift.
 
-use crate::bits::{mask32, top_bits};
+use crate::bits::mask32;
+use crate::ga::simd::{LaneKernels, ScalarKernels};
 use crate::ga::{BestSoFar, Dims};
 use crate::lfsr::LfsrBank;
 use crate::rom::RomTables;
@@ -222,53 +223,42 @@ pub(crate) fn generation_pass(
     w: &mut [u32],
     z: &mut [u32],
 ) {
+    generation_pass_with(&ScalarKernels, d, rom, maximize, pop, states, y, w, z);
+}
+
+/// [`generation_pass`] with an explicit lane-kernel set: the fused slab
+/// path threads the resolved `--kernels` choice through here, while the
+/// scalar machine above pins the reference kernels. The bank layout is
+/// sliced once per call — `[2N selection | (N/2)·V crossover | P
+/// mutation]` — so every kernel sees its own segment.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn generation_pass_with(
+    kern: &dyn LaneKernels,
+    d: &MultiDims,
+    rom: &MultiRom,
+    maximize: bool,
+    pop: &[u32],
+    states: &[u32],
+    y: &mut [i64],
+    w: &mut [u32],
+    z: &mut [u32],
+) {
     let n = d.n;
     debug_assert_eq!(pop.len(), n);
     debug_assert_eq!(states.len(), d.lfsr_len());
-    let h = d.h();
-    let ones = mask32(h);
 
     // FFM: V-ROM evaluation.
-    for (x, yy) in pop.iter().zip(y.iter_mut()) {
-        *yy = rom.evaluate(d, *x);
-    }
+    kern.fitness_multi(d, rom, pop, y);
 
     // SM (unchanged from the 2-var machine).
-    let sel_bits = d.sel_bits();
-    for (j, wj) in w.iter_mut().enumerate().take(n) {
-        let i1 = top_bits(states[2 * j], sel_bits) as usize;
-        let i2 = top_bits(states[2 * j + 1], sel_bits) as usize;
-        let first = if maximize { y[i1] > y[i2] } else { y[i1] < y[i2] };
-        *wj = if first { pop[i1] } else { pop[i2] };
-    }
+    kern.select(pop, y, &states[..2 * n], maximize, d.sel_bits(), w);
 
     // CM: one cut LFSR + mask network per field per pair.
-    let cut_bits = d.cut_bits();
-    let mbits = mask32(d.m);
-    let cm_base = 2 * n;
-    for i in 0..n / 2 {
-        let (w0, w1) = (w[2 * i], w[2 * i + 1]);
-        let mut c0 = 0u32;
-        let mut c1 = 0u32;
-        for v in 0..d.v {
-            let state = states[cm_base + i * d.v as usize + v as usize];
-            let shift = top_bits(state, cut_bits).min(h);
-            let mask = ones >> shift;
-            let f0 = d.field(w0, v);
-            let f1 = d.field(w1, v);
-            let off = (d.v - 1 - v) * h;
-            c0 |= (((f0 & !mask) | (f1 & mask)) & ones) << off;
-            c1 |= (((f1 & !mask) | (f0 & mask)) & ones) << off;
-        }
-        z[2 * i] = c0 & mbits;
-        z[2 * i + 1] = c1 & mbits;
-    }
+    let cm_end = 2 * n + (n / 2) * d.v as usize;
+    kern.crossover_multi(d, w, &states[2 * n..cm_end], z);
 
     // MM (unchanged).
-    let mm_base = cm_base + (n / 2) * d.v as usize;
-    for p in 0..d.p {
-        z[p] ^= top_bits(states[mm_base + p], d.m);
-    }
+    kern.mutate(z, &states[cm_end..], d.m);
 }
 
 /// The V-variable machine (behavioral; structured like [`crate::ga`]).

@@ -1,0 +1,328 @@
+//! Explicit AVX2 lane kernels (x86_64 only; compiled in everywhere on
+//! x86_64, *executed* only after `is_x86_feature_detected!("avx2")` —
+//! [`super::resolve`] is the sole constructor of `&Avx2Kernels`, and it
+//! gates on [`super::avx2_available`], which is the safety argument for
+//! every `#[target_feature]` call below).
+//!
+//! What earns explicit intrinsics here is exactly what the autovectorizer
+//! cannot lift from the portable loops:
+//!
+//! * `fitness_two` — `vpgatherqq` α/β/γ table gathers (8 individuals per
+//!   iteration, i64 tables gathered in two 4-lane halves);
+//! * `select` — de-interleave the `[s1 s2 s1 s2 …]` selection stream with
+//!   `vpermd`/`vperm2i128`, gather both contestants' fitness, compare in
+//!   i64, narrow the 64-bit masks to 32-bit lanes and `vpblendvb` the
+//!   winners (tie → second contestant, exactly the scalar comparator);
+//! * `crossover_two` — de-interleave parent pairs, run the mask network
+//!   on 8 pairs at once (`vpsrlvd` for the per-pair cut masks), and
+//!   re-interleave the children;
+//! * `lfsr_tick` — the shift/xor update on 8 states per iteration.
+//!
+//! `fitness_multi` / `crossover_multi` / `mutate` delegate to the portable
+//! or scalar forms: their inner loops are V-dependent or P-tiny, and the
+//! measured win there does not justify the intrinsic surface (the bench
+//! harness keeps this tradeoff honest).
+//!
+//! Lane remainders (N or P not a multiple of 8) always fall through to the
+//! scalar reference loops.
+
+use super::{
+    scalar_crossover_two_from, scalar_mutate, scalar_select, LaneKernels, PortableKernels, LANES,
+};
+use crate::bits::mask32;
+use crate::ga::{Dims, MultiDims, MultiRom};
+use crate::rom::RomTables;
+use core::arch::x86_64::*;
+
+/// AVX2 kernel set. Only reachable through [`super::resolve`] after
+/// runtime detection.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Avx2Kernels;
+
+impl LaneKernels for Avx2Kernels {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn fitness_two(&self, pop: &[u32], tables: &RomTables, y: &mut [i64]) {
+        debug_assert!(super::avx2_available());
+        unsafe { fitness_two_avx2(pop, tables, y) }
+    }
+
+    fn fitness_multi(&self, d: &MultiDims, rom: &MultiRom, pop: &[u32], y: &mut [i64]) {
+        PortableKernels.fitness_multi(d, rom, pop, y);
+    }
+
+    fn select(&self, pop: &[u32], y: &[i64], sel: &[u32], maximize: bool, sel_bits: u32, w: &mut [u32]) {
+        debug_assert!(super::avx2_available());
+        // Gather safety: every tournament index is top_bits(_, sel_bits)
+        // < 2^sel_bits, which must stay inside pop/y for the vector loop.
+        assert!(
+            w.len() < LANES || (1usize << sel_bits) <= pop.len(),
+            "sel_bits {sel_bits} wider than the population ({})",
+            pop.len()
+        );
+        unsafe { select_avx2(pop, y, sel, maximize, sel_bits, w) }
+    }
+
+    fn crossover_two(&self, w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
+        debug_assert!(super::avx2_available());
+        unsafe { crossover_two_avx2(w, cm, d, z) }
+    }
+
+    fn crossover_multi(&self, d: &MultiDims, w: &[u32], cm: &[u32], z: &mut [u32]) {
+        PortableKernels.crossover_multi(d, w, cm, z);
+    }
+
+    fn mutate(&self, z: &mut [u32], mm: &[u32], m: u32) {
+        scalar_mutate(z, mm, m);
+    }
+
+    fn lfsr_tick(&self, states: &mut [u32]) {
+        debug_assert!(super::avx2_available());
+        unsafe { lfsr_tick_avx2(states) }
+    }
+}
+
+/// Lane order that pulls the even 32-bit lanes of a register to the low
+/// half and the odd lanes to the high half (`vpermd` control).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn deinterleave_ctrl() -> __m256i {
+    _mm256_setr_epi32(0, 2, 4, 6, 1, 3, 5, 7)
+}
+
+/// Inverse lane order: re-interleave `[e0..e3 o0..o3]` into `[e0 o0 …]`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reinterleave_ctrl() -> __m256i {
+    _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7)
+}
+
+/// Split 16 interleaved u32 values (two loads `a`, `b`) into the 8 even
+/// elements and the 8 odd elements, preserving order within each.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn deinterleave(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    let ctrl = deinterleave_ctrl();
+    let pa = _mm256_permutevar8x32_epi32(a, ctrl);
+    let pb = _mm256_permutevar8x32_epi32(b, ctrl);
+    let evens = _mm256_permute2x128_si256::<0x20>(pa, pb);
+    let odds = _mm256_permute2x128_si256::<0x31>(pa, pb);
+    (evens, odds)
+}
+
+/// Inverse of [`deinterleave`]: two stores' worth of re-interleaved lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn interleave(evens: __m256i, odds: __m256i) -> (__m256i, __m256i) {
+    let ctrl = reinterleave_ctrl();
+    let lo = _mm256_permute2x128_si256::<0x20>(evens, odds);
+    let hi = _mm256_permute2x128_si256::<0x31>(evens, odds);
+    (
+        _mm256_permutevar8x32_epi32(lo, ctrl),
+        _mm256_permutevar8x32_epi32(hi, ctrl),
+    )
+}
+
+/// Gather 8 i64 table entries addressed by the 8 u32 lanes of `idx`.
+/// Safety: every lane of `idx` must be < `table.len()`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_i64x8(table: &[i64], idx: __m256i) -> (__m256i, __m256i) {
+    let lo = _mm256_castsi256_si128(idx);
+    let hi = _mm256_extracti128_si256::<1>(idx);
+    (
+        _mm256_i32gather_epi64::<8>(table.as_ptr(), lo),
+        _mm256_i32gather_epi64::<8>(table.as_ptr(), hi),
+    )
+}
+
+/// γ bucket index for 4 δ lanes: `((δ - gmin) >> gshift).clamp(0, gmax)`.
+/// The scalar form shifts arithmetically then clamps; here the low clamp
+/// runs first (zero the negative lanes), which makes the logical
+/// `vpsrlq` — AVX2 has no 64-bit arithmetic shift — exactly equivalent.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn gamma_bucket(delta: __m256i, gmin: __m256i, gshift: __m128i, gmax: __m256i) -> __m256i {
+    let d = _mm256_sub_epi64(delta, gmin);
+    let neg = _mm256_cmpgt_epi64(_mm256_setzero_si256(), d);
+    let d = _mm256_andnot_si256(neg, d);
+    let d = _mm256_srl_epi64(d, gshift);
+    let over = _mm256_cmpgt_epi64(d, gmax);
+    _mm256_blendv_epi8(d, gmax, over)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn fitness_two_avx2(pop: &[u32], tables: &RomTables, y: &mut [i64]) {
+    debug_assert_eq!(pop.len(), y.len());
+    let h = tables.h();
+    let hmask = _mm256_set1_epi32(mask32(h) as i32);
+    let hcnt = _mm_cvtsi32_si128(h as i32);
+    let n = pop.len();
+    let vec_n = n - n % LANES;
+    // α/β indices are h-bit (< table_size); γ indices are clamped — all
+    // gathers in-bounds by construction.
+    if tables.gamma_bypass {
+        let mut j = 0;
+        while j < vec_n {
+            let x = _mm256_loadu_si256(pop.as_ptr().add(j).cast());
+            let px = _mm256_and_si256(_mm256_srl_epi32(x, hcnt), hmask);
+            let qx = _mm256_and_si256(x, hmask);
+            let (a_lo, a_hi) = gather_i64x8(&tables.alpha, px);
+            let (b_lo, b_hi) = gather_i64x8(&tables.beta, qx);
+            let y_lo = _mm256_add_epi64(a_lo, b_lo);
+            let y_hi = _mm256_add_epi64(a_hi, b_hi);
+            _mm256_storeu_si256(y.as_mut_ptr().add(j).cast(), y_lo);
+            _mm256_storeu_si256(y.as_mut_ptr().add(j + 4).cast(), y_hi);
+            j += LANES;
+        }
+    } else {
+        let gmin = _mm256_set1_epi64x(tables.gmin);
+        let gmax = _mm256_set1_epi64x(tables.gamma.len() as i64 - 1);
+        let gshift = _mm_cvtsi32_si128(tables.gshift as i32);
+        let ctrl = deinterleave_ctrl();
+        let mut j = 0;
+        while j < vec_n {
+            let x = _mm256_loadu_si256(pop.as_ptr().add(j).cast());
+            let px = _mm256_and_si256(_mm256_srl_epi32(x, hcnt), hmask);
+            let qx = _mm256_and_si256(x, hmask);
+            let (a_lo, a_hi) = gather_i64x8(&tables.alpha, px);
+            let (b_lo, b_hi) = gather_i64x8(&tables.beta, qx);
+            let d_lo = _mm256_add_epi64(a_lo, b_lo);
+            let d_hi = _mm256_add_epi64(a_hi, b_hi);
+            let gi_lo = gamma_bucket(d_lo, gmin, gshift, gmax);
+            let gi_hi = gamma_bucket(d_hi, gmin, gshift, gmax);
+            // Bucket indices fit in 32 bits (γ tables are ≤ 2^20 entries):
+            // compact each 64-bit lane to its low u32 for the i32 gather.
+            let gi_lo = _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(gi_lo, ctrl));
+            let gi_hi = _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(gi_hi, ctrl));
+            let y_lo = _mm256_i32gather_epi64::<8>(tables.gamma.as_ptr(), gi_lo);
+            let y_hi = _mm256_i32gather_epi64::<8>(tables.gamma.as_ptr(), gi_hi);
+            _mm256_storeu_si256(y.as_mut_ptr().add(j).cast(), y_lo);
+            _mm256_storeu_si256(y.as_mut_ptr().add(j + 4).cast(), y_hi);
+            j += LANES;
+        }
+    }
+    for (x, yy) in pop[vec_n..].iter().zip(&mut y[vec_n..]) {
+        *yy = tables.evaluate(*x);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn select_avx2(
+    pop: &[u32],
+    y: &[i64],
+    sel: &[u32],
+    maximize: bool,
+    sel_bits: u32,
+    w: &mut [u32],
+) {
+    let n = w.len();
+    debug_assert_eq!(sel.len(), 2 * n);
+    let vec_n = n - n % LANES;
+    // sel_bits ≥ 1, so the truncation shift is ≤ 31.
+    let shift = _mm_cvtsi32_si128((32 - sel_bits) as i32);
+    let ctrl = deinterleave_ctrl();
+    let mut j = 0;
+    while j < vec_n {
+        let a = _mm256_loadu_si256(sel.as_ptr().add(2 * j).cast());
+        let b = _mm256_loadu_si256(sel.as_ptr().add(2 * j + LANES).cast());
+        let (s1, s2) = deinterleave(a, b);
+        let i1 = _mm256_srl_epi32(s1, shift);
+        let i2 = _mm256_srl_epi32(s2, shift);
+        let (y1_lo, y1_hi) = gather_i64x8(y, i1);
+        let (y2_lo, y2_hi) = gather_i64x8(y, i2);
+        // first_wins per 64-bit lane: strict compare, tie → second.
+        let (m_lo, m_hi) = if maximize {
+            (_mm256_cmpgt_epi64(y1_lo, y2_lo), _mm256_cmpgt_epi64(y1_hi, y2_hi))
+        } else {
+            (_mm256_cmpgt_epi64(y2_lo, y1_lo), _mm256_cmpgt_epi64(y2_hi, y1_hi))
+        };
+        // The cmp masks are all-ones/all-zero per i64 lane; compacting the
+        // even u32 lanes of each half yields one 8×u32 blend mask aligned
+        // with the gathered chromosomes.
+        let m_lo = _mm256_permutevar8x32_epi32(m_lo, ctrl);
+        let m_hi = _mm256_permutevar8x32_epi32(m_hi, ctrl);
+        let first_wins = _mm256_permute2x128_si256::<0x20>(m_lo, m_hi);
+        let p1 = _mm256_i32gather_epi32::<4>(pop.as_ptr().cast::<i32>(), i1);
+        let p2 = _mm256_i32gather_epi32::<4>(pop.as_ptr().cast::<i32>(), i2);
+        let win = _mm256_blendv_epi8(p2, p1, first_wins);
+        _mm256_storeu_si256(w.as_mut_ptr().add(j).cast(), win);
+        j += LANES;
+    }
+    scalar_select(pop, y, &sel[2 * vec_n..], maximize, sel_bits, &mut w[vec_n..]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn crossover_two_avx2(w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
+    debug_assert_eq!(w.len(), z.len());
+    debug_assert_eq!(cm.len(), w.len());
+    let h = d.h();
+    let hcnt = _mm_cvtsi32_si128(h as i32);
+    let hv = _mm256_set1_epi32(h as i32);
+    let ones = _mm256_set1_epi32(mask32(h) as i32);
+    let mbits = _mm256_set1_epi32(mask32(d.m) as i32);
+    // cut_bits ≥ 1 (h ≥ 1), so the truncation shift is ≤ 31.
+    let cut_shift = _mm_cvtsi32_si128((32 - d.cut_bits()) as i32);
+    let pairs = w.len() / 2;
+    let vec_pairs = pairs - pairs % LANES;
+    let mut i = 0;
+    while i < vec_pairs {
+        // 8 pairs = 16 interleaved parents/draws per iteration.
+        let wa = _mm256_loadu_si256(w.as_ptr().add(2 * i).cast());
+        let wb = _mm256_loadu_si256(w.as_ptr().add(2 * i + LANES).cast());
+        let (w0, w1) = deinterleave(wa, wb);
+        let ca = _mm256_loadu_si256(cm.as_ptr().add(2 * i).cast());
+        let cb = _mm256_loadu_si256(cm.as_ptr().add(2 * i + LANES).cast());
+        let (sp, sq) = deinterleave(ca, cb);
+
+        // Cut draws → tail masks (clamped to h like the scalar mux).
+        let shift_p = _mm256_min_epu32(_mm256_srl_epi32(sp, cut_shift), hv);
+        let shift_q = _mm256_min_epu32(_mm256_srl_epi32(sq, cut_shift), hv);
+        let mask_p = _mm256_srlv_epi32(ones, shift_p);
+        let mask_q = _mm256_srlv_epi32(ones, shift_q);
+
+        // split(w, h) on all lanes.
+        let pw0 = _mm256_and_si256(_mm256_srl_epi32(w0, hcnt), ones);
+        let qw0 = _mm256_and_si256(w0, ones);
+        let pw1 = _mm256_and_si256(_mm256_srl_epi32(w1, hcnt), ones);
+        let qw1 = _mm256_and_si256(w1, ones);
+
+        // Head/tail swap through the masks (Eq. 15-20); andnot(m, x) is
+        // (!m) & x, the vector twin of `x & !mask`.
+        let pz0 = _mm256_or_si256(_mm256_andnot_si256(mask_p, pw0), _mm256_and_si256(pw1, mask_p));
+        let pz1 = _mm256_or_si256(_mm256_andnot_si256(mask_p, pw1), _mm256_and_si256(pw0, mask_p));
+        let qz0 = _mm256_or_si256(_mm256_andnot_si256(mask_q, qw0), _mm256_and_si256(qw1, mask_q));
+        let qz1 = _mm256_or_si256(_mm256_andnot_si256(mask_q, qw1), _mm256_and_si256(qw0, mask_q));
+
+        // concat + chromosome mask, then back to population order.
+        let z0 = _mm256_and_si256(_mm256_or_si256(_mm256_sll_epi32(pz0, hcnt), qz0), mbits);
+        let z1 = _mm256_and_si256(_mm256_or_si256(_mm256_sll_epi32(pz1, hcnt), qz1), mbits);
+        let (za, zb) = interleave(z0, z1);
+        _mm256_storeu_si256(z.as_mut_ptr().add(2 * i).cast(), za);
+        _mm256_storeu_si256(z.as_mut_ptr().add(2 * i + LANES).cast(), zb);
+        i += LANES;
+    }
+    scalar_crossover_two_from(w, cm, d, z, vec_pairs);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn lfsr_tick_avx2(states: &mut [u32]) {
+    // s' = (s << 1) | ((s>>31 ^ s>>21 ^ s>>1 ^ s) & 1) on 8 states at once.
+    let one = _mm256_set1_epi32(1);
+    let mut it = states.chunks_exact_mut(LANES);
+    for chunk in &mut it {
+        let s = _mm256_loadu_si256(chunk.as_ptr().cast());
+        let taps = _mm256_xor_si256(
+            _mm256_xor_si256(_mm256_srli_epi32::<31>(s), _mm256_srli_epi32::<21>(s)),
+            _mm256_xor_si256(_mm256_srli_epi32::<1>(s), s),
+        );
+        let fb = _mm256_and_si256(taps, one);
+        let next = _mm256_or_si256(_mm256_slli_epi32::<1>(s), fb);
+        _mm256_storeu_si256(chunk.as_mut_ptr().cast(), next);
+    }
+    for s in it.into_remainder() {
+        *s = crate::lfsr::step(*s);
+    }
+}

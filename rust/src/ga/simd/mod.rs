@@ -1,0 +1,502 @@
+//! SIMD lane engine for the fused SoA generation passes.
+//!
+//! The paper's speedup is spatial parallelism — every module (FFM, SM, CM,
+//! MM, RNG) touches all individuals at once in hardware. The software twin
+//! of that datapath is the fused slab step ([`crate::ga::SoaSlab`]), whose
+//! passes run over contiguous SoA slices: exactly the shape SIMD lanes
+//! want. This module factors those passes behind one [`LaneKernels`] trait
+//! with three interchangeable implementations:
+//!
+//! * [`ScalarKernels`] — the golden-verified reference loops, re-exposed
+//!   1:1 (`engine::fitness_all` and exact ports of the `engine` /
+//!   `multivar::generation_pass` bodies re-based onto pre-sliced LFSR
+//!   segments). Never fast, never wrong; the differential anchor.
+//! * [`PortableKernels`] — `chunks_exact`-blocked straight-line loops the
+//!   autovectorizer can lift onto whatever the target offers. Always
+//!   available, any slice length (scalar tails handle lane remainders).
+//! * `avx2::Avx2Kernels` — explicit `std::arch` x86_64 AVX2 for the
+//!   gather-bound passes the autovectorizer cannot lift (fitness table
+//!   gathers, tournament index gathers), selected by one-time runtime
+//!   feature detection ([`avx2_available`]).
+//!
+//! Bit-identity across all three is non-negotiable: it is pinned by the
+//! unit tests here and by the kernels axis of
+//! `rust/tests/differential_backend.rs` (population, LFSR bank, best and
+//! curve bit-equal over hundreds of randomized shapes, including lane
+//! remainders). Dispatch rules and the per-kernel table live in
+//! `docs/backends.md` §SIMD lanes.
+
+use crate::bits::{mask32, split, top_bits};
+use crate::ga::{engine, Dims, MultiDims, MultiRom};
+use crate::rom::RomTables;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+mod portable;
+
+pub use portable::PortableKernels;
+
+/// u32 lanes per SIMD block: AVX2's 256-bit register width. The portable
+/// kernels block by the same count so both vector paths share remainder
+/// handling and bench geometry; a wider ISA (AVX-512, SVE) would add a new
+/// module with its own `LANES` and a `resolve` arm (docs/backends.md).
+pub const LANES: usize = 8;
+
+/// Which lane-kernel implementation to run. Parsed from `--kernels` /
+/// config `kernels`; `Auto` (the default) takes the fastest available.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelKind {
+    /// Runtime detection: AVX2 when the host has it, else portable.
+    #[default]
+    Auto,
+    /// The reference scalar loops (differential anchor / perf baseline).
+    Scalar,
+    /// Autovectorizable blocked loops, any platform.
+    Portable,
+    /// Explicit AVX2; requires x86_64 with AVX2 (the coordinator rejects
+    /// an explicit request on hosts without it, [`resolve`] degrades to
+    /// portable).
+    Avx2,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Portable => "portable",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(KernelKind::Auto),
+            "scalar" => Ok(KernelKind::Scalar),
+            "portable" => Ok(KernelKind::Portable),
+            "avx2" => Ok(KernelKind::Avx2),
+            other => Err(format!(
+                "unknown kernels `{other}` (expected `auto`, `scalar`, `portable` or `avx2`)"
+            )),
+        }
+    }
+}
+
+/// One-time runtime AVX2 detection (cached; `false` off x86_64).
+pub fn avx2_available() -> bool {
+    avx2_available_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available_impl() -> bool {
+    use std::sync::OnceLock;
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available_impl() -> bool {
+    false
+}
+
+/// Map a requested [`KernelKind`] to a kernel set runnable on this host.
+pub fn resolve(kind: KernelKind) -> &'static dyn LaneKernels {
+    match kind {
+        KernelKind::Scalar => &ScalarKernels,
+        KernelKind::Portable => &PortableKernels,
+        KernelKind::Auto | KernelKind::Avx2 => best_available(),
+    }
+}
+
+/// The fastest kernel set this host supports: AVX2 when detected, else
+/// portable. An explicit `avx2` request also lands here so library callers
+/// degrade gracefully; the serving config layer rejects it loudly instead.
+fn best_available() -> &'static dyn LaneKernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return &avx2::Avx2Kernels;
+        }
+    }
+    &PortableKernels
+}
+
+/// The four fused generation passes (plus the bank tick) over contiguous
+/// SoA slices, each taking its own pre-sliced LFSR segment in the
+/// DESIGN.md §5 bank layout. Slice contracts (asserted by the reference
+/// implementations, relied on by the vector paths):
+///
+/// * `fitness_*`: `y.len() == pop.len()`.
+/// * `select`: `pop`, `y`, `w` all length N; `sel` length 2N
+///   (`sel[2j]`/`sel[2j+1]` drive slot j); every index drawn by
+///   `top_bits(_, sel_bits)` must be < N — guaranteed because N is a
+///   power of two and `sel_bits == ceil_log2(N).max(1)`, and required
+///   for the AVX2 gathers to be in-bounds.
+/// * `crossover_two`: `w`/`z` length N, `cm` length N (two cut draws per
+///   pair); `crossover_multi`: `cm` length (N/2)·V.
+/// * `mutate`: XORs the first `mm.len()` offspring (`mm.len() == P ≤ N`).
+/// * `lfsr_tick`: advances every state in the slice one tick.
+pub trait LaneKernels: Send + Sync {
+    /// Implementation name as reported in benches and logs.
+    fn name(&self) -> &'static str;
+
+    /// FFM, two-variable form: α/β table gathers + γ stage (Eq. 8-11).
+    fn fitness_two(&self, pop: &[u32], tables: &RomTables, y: &mut [i64]);
+
+    /// FFM, V-ROM form: γ(Σ_v ρ_v(field_v)).
+    fn fitness_multi(&self, d: &MultiDims, rom: &MultiRom, pop: &[u32], y: &mut [i64]);
+
+    /// SM: per-slot binary tournament; strict comparator, tie → second.
+    fn select(&self, pop: &[u32], y: &[i64], sel: &[u32], maximize: bool, sel_bits: u32, w: &mut [u32]);
+
+    /// CM, two-variable form: head/tail mask-network swap (Eq. 12-20).
+    fn crossover_two(&self, w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]);
+
+    /// CM, multi-field form: one cut draw + mask network per field.
+    fn crossover_multi(&self, d: &MultiDims, w: &[u32], cm: &[u32], z: &mut [u32]);
+
+    /// MM: XOR the first P offspring with the top m bits of their LFSR.
+    fn mutate(&self, z: &mut [u32], mm: &[u32], m: u32);
+
+    /// RNG fabric: advance a state slice one tick.
+    fn lfsr_tick(&self, states: &mut [u32]);
+}
+
+/// The reference scalar loops behind the [`LaneKernels`] surface.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarKernels;
+
+impl LaneKernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn fitness_two(&self, pop: &[u32], tables: &RomTables, y: &mut [i64]) {
+        engine::fitness_all(pop, tables, y);
+    }
+
+    fn fitness_multi(&self, d: &MultiDims, rom: &MultiRom, pop: &[u32], y: &mut [i64]) {
+        scalar_fitness_multi(d, rom, pop, y);
+    }
+
+    fn select(&self, pop: &[u32], y: &[i64], sel: &[u32], maximize: bool, sel_bits: u32, w: &mut [u32]) {
+        scalar_select(pop, y, sel, maximize, sel_bits, w);
+    }
+
+    fn crossover_two(&self, w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
+        scalar_crossover_two_from(w, cm, d, z, 0);
+    }
+
+    fn crossover_multi(&self, d: &MultiDims, w: &[u32], cm: &[u32], z: &mut [u32]) {
+        scalar_crossover_multi(d, w, cm, z);
+    }
+
+    fn mutate(&self, z: &mut [u32], mm: &[u32], m: u32) {
+        scalar_mutate(z, mm, m);
+    }
+
+    fn lfsr_tick(&self, states: &mut [u32]) {
+        for s in states.iter_mut() {
+            *s = crate::lfsr::step(*s);
+        }
+    }
+}
+
+/// [`MultiRom::evaluate`] over a slice — the `generation_pass` FFM loop.
+pub(crate) fn scalar_fitness_multi(d: &MultiDims, rom: &MultiRom, pop: &[u32], y: &mut [i64]) {
+    debug_assert_eq!(pop.len(), y.len());
+    for (x, yy) in pop.iter().zip(y.iter_mut()) {
+        *yy = rom.evaluate(d, *x);
+    }
+}
+
+/// `engine::select_all_states` re-based onto a pre-sliced selection segment
+/// (`sel[2j]` = SMLFSR1 of slot j instead of `states[2j]`).
+pub(crate) fn scalar_select(
+    pop: &[u32],
+    y: &[i64],
+    sel: &[u32],
+    maximize: bool,
+    sel_bits: u32,
+    w: &mut [u32],
+) {
+    debug_assert_eq!(sel.len(), 2 * w.len());
+    for (j, wj) in w.iter_mut().enumerate() {
+        let i1 = top_bits(sel[2 * j], sel_bits) as usize;
+        let i2 = top_bits(sel[2 * j + 1], sel_bits) as usize;
+        let first_wins = if maximize { y[i1] > y[i2] } else { y[i1] < y[i2] };
+        *wj = if first_wins { pop[i1] } else { pop[i2] };
+    }
+}
+
+/// `engine::crossover_all_states` re-based onto a pre-sliced cut segment
+/// (`cm[2i]` instead of `states[2N + 2i]`), starting at pair `start_pair`
+/// so the vector paths reuse it as their remainder tail.
+pub(crate) fn scalar_crossover_two_from(
+    w: &[u32],
+    cm: &[u32],
+    d: &Dims,
+    z: &mut [u32],
+    start_pair: usize,
+) {
+    let h = d.h();
+    let ones = mask32(h);
+    let cut_bits = d.cut_bits();
+    let mbits = mask32(d.m);
+    debug_assert_eq!(w.len(), z.len());
+    for i in start_pair..w.len() / 2 {
+        let (pw0, qw0) = split(w[2 * i], h);
+        let (pw1, qw1) = split(w[2 * i + 1], h);
+
+        let shift_p = top_bits(cm[2 * i], cut_bits).min(h);
+        let shift_q = top_bits(cm[2 * i + 1], cut_bits).min(h);
+        let mask_p = ones >> shift_p;
+        let mask_q = ones >> shift_q;
+
+        let pz0 = (pw0 & !mask_p) | (pw1 & mask_p);
+        let pz1 = (pw1 & !mask_p) | (pw0 & mask_p);
+        let qz0 = (qw0 & !mask_q) | (qw1 & mask_q);
+        let qz1 = (qw1 & !mask_q) | (qw0 & mask_q);
+
+        z[2 * i] = crate::bits::concat(pz0, qz0, h) & mbits;
+        z[2 * i + 1] = crate::bits::concat(pz1, qz1, h) & mbits;
+    }
+}
+
+/// The `generation_pass` CM loop re-based onto a pre-sliced cut segment
+/// (`cm[i·V + v]` instead of `states[2N + i·V + v]`).
+pub(crate) fn scalar_crossover_multi(d: &MultiDims, w: &[u32], cm: &[u32], z: &mut [u32]) {
+    let h = d.h();
+    let ones = mask32(h);
+    let cut_bits = d.cut_bits();
+    let mbits = mask32(d.m);
+    let vc = d.v as usize;
+    debug_assert_eq!(cm.len(), (w.len() / 2) * vc);
+    for i in 0..w.len() / 2 {
+        let (w0, w1) = (w[2 * i], w[2 * i + 1]);
+        let mut c0 = 0u32;
+        let mut c1 = 0u32;
+        for v in 0..d.v {
+            let state = cm[i * vc + v as usize];
+            let shift = top_bits(state, cut_bits).min(h);
+            let mask = ones >> shift;
+            let f0 = d.field(w0, v);
+            let f1 = d.field(w1, v);
+            let off = (d.v - 1 - v) * h;
+            c0 |= (((f0 & !mask) | (f1 & mask)) & ones) << off;
+            c1 |= (((f1 & !mask) | (f0 & mask)) & ones) << off;
+        }
+        z[2 * i] = c0 & mbits;
+        z[2 * i + 1] = c1 & mbits;
+    }
+}
+
+/// `engine::mutate_all_states` re-based onto a pre-sliced mutation segment
+/// (`mm[v]` instead of `states[3N + v]`; `mm.len() == P`).
+pub(crate) fn scalar_mutate(z: &mut [u32], mm: &[u32], m: u32) {
+    for (zz, st) in z.iter_mut().zip(mm.iter()) {
+        *zz ^= top_bits(*st, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfsr::LfsrBank;
+    use crate::rom::{build_tables, F2, F3, GAMMA_BITS_DEFAULT};
+    use crate::testing::for_all;
+
+    fn kinds_under_test() -> Vec<&'static dyn LaneKernels> {
+        let mut kinds: Vec<&'static dyn LaneKernels> = vec![&PortableKernels];
+        if avx2_available() {
+            kinds.push(resolve(KernelKind::Avx2));
+        }
+        kinds
+    }
+
+    #[test]
+    fn kind_parse_display_roundtrip() {
+        for kind in [
+            KernelKind::Auto,
+            KernelKind::Scalar,
+            KernelKind::Portable,
+            KernelKind::Avx2,
+        ] {
+            assert_eq!(kind.name().parse::<KernelKind>().unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.name());
+        }
+        assert!("neon".parse::<KernelKind>().is_err());
+        assert_eq!(KernelKind::default(), KernelKind::Auto);
+    }
+
+    #[test]
+    fn resolve_honors_explicit_kinds() {
+        assert_eq!(resolve(KernelKind::Scalar).name(), "scalar");
+        assert_eq!(resolve(KernelKind::Portable).name(), "portable");
+        let auto = resolve(KernelKind::Auto).name();
+        if avx2_available() {
+            assert_eq!(auto, "avx2");
+            assert_eq!(resolve(KernelKind::Avx2).name(), "avx2");
+        } else {
+            assert_eq!(auto, "portable");
+            assert_eq!(resolve(KernelKind::Avx2).name(), "portable");
+        }
+    }
+
+    #[test]
+    fn scalar_kernels_replay_the_engine() {
+        // The scalar kernel set must be the engine loops verbatim: same
+        // outputs from the same bank layout, across γ-LUT and bypass ROMs.
+        for_all(40, |g| {
+            for spec in [&F3, &F2] {
+                let d = Dims::new(16, 20, 2);
+                let tables = build_tables(spec, d.m, GAMMA_BITS_DEFAULT);
+                let pop = g.masked_vec(d.n, d.m);
+                let states = g.lfsr_states(d.lfsr_len());
+                let bank = LfsrBank::from_states(states.clone(), d.n, d.p);
+                let maximize = g.range(0, 2) == 1;
+
+                let mut y_ref = vec![0i64; d.n];
+                let mut w_ref = vec![0u32; d.n];
+                let mut z_ref = vec![0u32; d.n];
+                engine::fitness_all(&pop, &tables, &mut y_ref);
+                engine::select_all(&pop, &y_ref, &bank, maximize, &d, &mut w_ref);
+                engine::crossover_all(&w_ref, &bank, &d, &mut z_ref);
+                engine::mutate_all(&mut z_ref, &bank, &d);
+
+                let k = ScalarKernels;
+                let mut y = vec![0i64; d.n];
+                let mut w = vec![0u32; d.n];
+                let mut z = vec![0u32; d.n];
+                k.fitness_two(&pop, &tables, &mut y);
+                k.select(&pop, &y, &states[..2 * d.n], maximize, d.sel_bits(), &mut w);
+                k.crossover_two(&w, &states[2 * d.n..3 * d.n], &d, &mut z);
+                k.mutate(&mut z, &states[3 * d.n..], d.m);
+                assert_eq!(y, y_ref);
+                assert_eq!(w, w_ref);
+                assert_eq!(z, z_ref);
+
+                let mut ticked = states.clone();
+                k.lfsr_tick(&mut ticked);
+                let expect: Vec<u32> = states.iter().map(|&s| crate::lfsr::step(s)).collect();
+                assert_eq!(ticked, expect);
+            }
+        });
+    }
+
+    #[test]
+    fn vector_kernels_match_scalar_two_var() {
+        // Every vector implementation ≡ scalar on all four passes, across
+        // lane-remainder population sizes (N = 4 and 8 exercise the tails).
+        for kern in kinds_under_test() {
+            for_all(30, |g| {
+                for n in [4usize, 8, 16, 32] {
+                    for spec in [&F3, &F2] {
+                        let p = (n / 8).max(1);
+                        let d = Dims::new(n, 20, p);
+                        let tables = build_tables(spec, d.m, GAMMA_BITS_DEFAULT);
+                        let pop = g.masked_vec(d.n, d.m);
+                        let states = g.lfsr_states(d.lfsr_len());
+                        let maximize = g.range(0, 2) == 1;
+                        let s = ScalarKernels;
+
+                        let mut y_ref = vec![0i64; n];
+                        let mut y = vec![0i64; n];
+                        s.fitness_two(&pop, &tables, &mut y_ref);
+                        kern.fitness_two(&pop, &tables, &mut y);
+                        assert_eq!(y, y_ref, "{} fitness n={n}", kern.name());
+
+                        let mut w_ref = vec![0u32; n];
+                        let mut w = vec![0u32; n];
+                        s.select(&pop, &y_ref, &states[..2 * n], maximize, d.sel_bits(), &mut w_ref);
+                        kern.select(&pop, &y_ref, &states[..2 * n], maximize, d.sel_bits(), &mut w);
+                        assert_eq!(w, w_ref, "{} select n={n}", kern.name());
+
+                        let mut z_ref = vec![0u32; n];
+                        let mut z = vec![0u32; n];
+                        s.crossover_two(&w_ref, &states[2 * n..3 * n], &d, &mut z_ref);
+                        kern.crossover_two(&w_ref, &states[2 * n..3 * n], &d, &mut z);
+                        assert_eq!(z, z_ref, "{} crossover n={n}", kern.name());
+
+                        s.mutate(&mut z_ref, &states[3 * n..], d.m);
+                        kern.mutate(&mut z, &states[3 * n..], d.m);
+                        assert_eq!(z, z_ref, "{} mutate n={n}", kern.name());
+
+                        // Odd tick length exercises the lane remainder.
+                        let mut bank_ref = states.clone();
+                        let mut bank = states.clone();
+                        s.lfsr_tick(&mut bank_ref);
+                        kern.lfsr_tick(&mut bank);
+                        assert_eq!(bank, bank_ref, "{} lfsr n={n}", kern.name());
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn vector_kernels_match_scalar_multivar() {
+        for kern in kinds_under_test() {
+            for_all(20, |g| {
+                for (n, m, v) in [(8usize, 24u32, 4u32), (16, 24, 8), (32, 20, 4)] {
+                    let d = MultiDims::new(n, m, v, (n / 8).max(1));
+                    let sq = |x: f64| x * x;
+                    let comps: Vec<&dyn Fn(f64) -> f64> =
+                        (0..v).map(|_| &sq as &dyn Fn(f64) -> f64).collect();
+                    for bypass in [true, false] {
+                        let rom = MultiRom::build(&d, &comps, |g: f64| g.max(0.0).sqrt(), bypass);
+                        let pop = g.masked_vec(d.n, d.m);
+                        let states = g.lfsr_states(d.lfsr_len());
+                        let s = ScalarKernels;
+
+                        let mut y_ref = vec![0i64; n];
+                        let mut y = vec![0i64; n];
+                        s.fitness_multi(&d, &rom, &pop, &mut y_ref);
+                        kern.fitness_multi(&d, &rom, &pop, &mut y);
+                        assert_eq!(y, y_ref, "{} fitness_multi n={n} v={v}", kern.name());
+
+                        let cm_len = (n / 2) * v as usize;
+                        let mut z_ref = vec![0u32; n];
+                        let mut z = vec![0u32; n];
+                        s.crossover_multi(&d, &pop, &states[2 * n..2 * n + cm_len], &mut z_ref);
+                        kern.crossover_multi(&d, &pop, &states[2 * n..2 * n + cm_len], &mut z);
+                        assert_eq!(z, z_ref, "{} crossover_multi n={n} v={v}", kern.name());
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn select_tie_goes_to_second_in_every_kernel() {
+        // Pinned semantics: equal fitness → second contestant wins.
+        let n = 16usize;
+        let d = Dims::new(n, 20, 1);
+        let pop: Vec<u32> = (0..n as u32).collect();
+        let y = vec![7i64; n];
+        let mut sel = vec![0u32; 2 * n];
+        for (j, s) in sel.chunks_exact_mut(2).enumerate() {
+            s[0] = (j as u32) << (32 - d.sel_bits());
+            s[1] = ((n - 1 - j) as u32) << (32 - d.sel_bits());
+        }
+        let mut kinds: Vec<&'static dyn LaneKernels> = vec![&ScalarKernels];
+        kinds.extend(kinds_under_test());
+        for kern in kinds {
+            let mut w = vec![u32::MAX; n];
+            kern.select(&pop, &y, &sel, false, d.sel_bits(), &mut w);
+            for (j, &wj) in w.iter().enumerate() {
+                assert_eq!(wj, (n - 1 - j) as u32, "{} slot {j}", kern.name());
+            }
+        }
+    }
+}

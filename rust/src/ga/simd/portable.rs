@@ -1,0 +1,216 @@
+//! Portable lane kernels: `chunks_exact`-blocked straight-line loops.
+//!
+//! Every loop here is written so the inner block over [`LANES`]
+//! (super-module docs) elements is branch-free and side-effect-ordered the
+//! same as the scalar reference — the autovectorizer can lift the
+//! arithmetic onto whatever vector unit the target has (SSE/AVX on x86,
+//! NEON on aarch64) without this file naming any ISA. Table and index
+//! gathers (`fitness_*`, `select`) stay scalar loads per lane — only
+//! explicit gather instructions beat that, which is what the AVX2 module
+//! is for. Remainder elements always run the scalar reference loops, so
+//! any slice length is handled.
+
+use super::{
+    scalar_crossover_multi, scalar_crossover_two_from, scalar_fitness_multi, scalar_mutate,
+    scalar_select, LaneKernels, LANES,
+};
+use crate::bits::mask32;
+use crate::ga::{Dims, MultiDims, MultiRom};
+use crate::rom::RomTables;
+
+/// Autovectorizable kernel set (always available, any platform).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PortableKernels;
+
+impl LaneKernels for PortableKernels {
+    fn name(&self) -> &'static str {
+        "portable"
+    }
+
+    fn fitness_two(&self, pop: &[u32], tables: &RomTables, y: &mut [i64]) {
+        fitness_two_blocked(pop, tables, y);
+    }
+
+    fn fitness_multi(&self, d: &MultiDims, rom: &MultiRom, pop: &[u32], y: &mut [i64]) {
+        fitness_multi_blocked(d, rom, pop, y);
+    }
+
+    fn select(&self, pop: &[u32], y: &[i64], sel: &[u32], maximize: bool, sel_bits: u32, w: &mut [u32]) {
+        select_blocked(pop, y, sel, maximize, sel_bits, w);
+    }
+
+    fn crossover_two(&self, w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
+        crossover_two_blocked(w, cm, d, z);
+    }
+
+    fn crossover_multi(&self, d: &MultiDims, w: &[u32], cm: &[u32], z: &mut [u32]) {
+        // The per-field inner loop has a data-dependent trip count (V), so
+        // blocking buys nothing the scalar loop doesn't already have.
+        scalar_crossover_multi(d, w, cm, z);
+    }
+
+    fn mutate(&self, z: &mut [u32], mm: &[u32], m: u32) {
+        // P ≤ N is tiny (⌈N·MR⌉); a blocked form would be all remainder.
+        scalar_mutate(z, mm, m);
+    }
+
+    fn lfsr_tick(&self, states: &mut [u32]) {
+        let mut it = states.chunks_exact_mut(LANES);
+        for chunk in &mut it {
+            // `lfsr::step` is branch-free shift/xor — inlined across the
+            // block it maps 1:1 onto vector lanes.
+            for s in chunk.iter_mut() {
+                *s = crate::lfsr::step(*s);
+            }
+        }
+        for s in it.into_remainder() {
+            *s = crate::lfsr::step(*s);
+        }
+    }
+}
+
+fn fitness_two_blocked(pop: &[u32], tables: &RomTables, y: &mut [i64]) {
+    debug_assert_eq!(pop.len(), y.len());
+    let h = tables.h();
+    let hmask = mask32(h);
+    let alpha = &tables.alpha[..];
+    let beta = &tables.beta[..];
+    let mut xs = pop.chunks_exact(LANES);
+    let mut ys = y.chunks_exact_mut(LANES);
+    if tables.gamma_bypass {
+        for (xc, yc) in (&mut xs).zip(&mut ys) {
+            // Stage the index math (vectorizable), then gather + add.
+            let mut px = [0usize; LANES];
+            let mut qx = [0usize; LANES];
+            for ((x, p), q) in xc.iter().zip(px.iter_mut()).zip(qx.iter_mut()) {
+                *p = ((x >> h) & hmask) as usize;
+                *q = (x & hmask) as usize;
+            }
+            for ((yy, p), q) in yc.iter_mut().zip(px).zip(qx) {
+                *yy = alpha[p] + beta[q];
+            }
+        }
+    } else {
+        let gamma = &tables.gamma[..];
+        let gmax = gamma.len() as i64 - 1;
+        let (gmin, gshift) = (tables.gmin, tables.gshift);
+        for (xc, yc) in (&mut xs).zip(&mut ys) {
+            let mut delta = [0i64; LANES];
+            for (x, dd) in xc.iter().zip(delta.iter_mut()) {
+                *dd = alpha[((x >> h) & hmask) as usize] + beta[(x & hmask) as usize];
+            }
+            // Branch-free γ bucket: shift + clamp stage, then gather.
+            let mut gi = [0usize; LANES];
+            for (dd, g) in delta.into_iter().zip(gi.iter_mut()) {
+                *g = ((dd - gmin) >> gshift).clamp(0, gmax) as usize;
+            }
+            for (yy, g) in yc.iter_mut().zip(gi) {
+                *yy = gamma[g];
+            }
+        }
+    }
+    for (x, yy) in xs.remainder().iter().zip(ys.into_remainder()) {
+        *yy = tables.evaluate(*x);
+    }
+}
+
+fn fitness_multi_blocked(d: &MultiDims, rom: &MultiRom, pop: &[u32], y: &mut [i64]) {
+    debug_assert_eq!(pop.len(), y.len());
+    let h = d.h();
+    let hmask = mask32(h);
+    let mut xs = pop.chunks_exact(LANES);
+    let mut ys = y.chunks_exact_mut(LANES);
+    for (xc, yc) in (&mut xs).zip(&mut ys) {
+        // Adder tree: accumulate per-field ROM terms field-major so the
+        // lane loop over individuals stays straight-line.
+        let mut delta = [0i64; LANES];
+        for (v, rom_v) in rom.roms.iter().enumerate() {
+            let off = (d.v - 1 - v as u32) * h;
+            for (x, dd) in xc.iter().zip(delta.iter_mut()) {
+                *dd += rom_v[((x >> off) & hmask) as usize];
+            }
+        }
+        if rom.gamma_bypass {
+            for (yy, dd) in yc.iter_mut().zip(delta) {
+                *yy = dd;
+            }
+        } else {
+            let gmax = rom.gamma.len() as i64 - 1;
+            for (yy, dd) in yc.iter_mut().zip(delta) {
+                let gidx = ((dd - rom.gmin) >> rom.gshift).clamp(0, gmax);
+                *yy = rom.gamma[gidx as usize];
+            }
+        }
+    }
+    for (x, yy) in xs.remainder().iter().zip(ys.into_remainder()) {
+        *yy = rom.evaluate(d, *x);
+    }
+}
+
+fn select_blocked(
+    pop: &[u32],
+    y: &[i64],
+    sel: &[u32],
+    maximize: bool,
+    sel_bits: u32,
+    w: &mut [u32],
+) {
+    debug_assert_eq!(sel.len(), 2 * w.len());
+    // sel_bits ≥ 1 (Dims::sel_bits), so the shift stays in range.
+    let shift = 32 - sel_bits;
+    let mut wc = w.chunks_exact_mut(LANES);
+    let mut sc = sel.chunks_exact(2 * LANES);
+    for (wl, sl) in (&mut wc).zip(&mut sc) {
+        // Stage both tournament indices (vectorizable), then gather+pick.
+        let mut i1 = [0usize; LANES];
+        let mut i2 = [0usize; LANES];
+        for ((s, a), b) in sl.chunks_exact(2).zip(i1.iter_mut()).zip(i2.iter_mut()) {
+            *a = (s[0] >> shift) as usize;
+            *b = (s[1] >> shift) as usize;
+        }
+        for ((wj, a), b) in wl.iter_mut().zip(i1).zip(i2) {
+            let first_wins = if maximize { y[a] > y[b] } else { y[a] < y[b] };
+            *wj = if first_wins { pop[a] } else { pop[b] };
+        }
+    }
+    scalar_select(pop, y, sc.remainder(), maximize, sel_bits, wc.into_remainder());
+}
+
+fn crossover_two_blocked(w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
+    let h = d.h();
+    let ones = mask32(h);
+    // cut_bits ≥ 1 (h ≥ 1), so the shift stays in range.
+    let cut_shift = 32 - d.cut_bits();
+    let mbits = mask32(d.m);
+    let pairs = w.len() / 2;
+    debug_assert_eq!(cm.len(), w.len());
+    let mut wi = w.chunks_exact(2 * LANES);
+    let mut ci = cm.chunks_exact(2 * LANES);
+    let mut zi = z.chunks_exact_mut(2 * LANES);
+    for ((wl, cl), zl) in (&mut wi).zip(&mut ci).zip(&mut zi) {
+        for ((wp, cp), zp) in wl
+            .chunks_exact(2)
+            .zip(cl.chunks_exact(2))
+            .zip(zl.chunks_exact_mut(2))
+        {
+            // Branch-free head/tail mask network (Eq. 12-20), one pair per
+            // lane: split, clamp the cut draw, swap through the masks.
+            let pw0 = (wp[0] >> h) & ones;
+            let qw0 = wp[0] & ones;
+            let pw1 = (wp[1] >> h) & ones;
+            let qw1 = wp[1] & ones;
+            let shift_p = (cp[0] >> cut_shift).min(h);
+            let shift_q = (cp[1] >> cut_shift).min(h);
+            let mask_p = ones >> shift_p;
+            let mask_q = ones >> shift_q;
+            let pz0 = (pw0 & !mask_p) | (pw1 & mask_p);
+            let pz1 = (pw1 & !mask_p) | (pw0 & mask_p);
+            let qz0 = (qw0 & !mask_q) | (qw1 & mask_q);
+            let qz1 = (qw1 & !mask_q) | (qw0 & mask_q);
+            zp[0] = ((pz0 << h) | qz0) & mbits;
+            zp[1] = ((pz1 << h) | qz1) & mbits;
+        }
+    }
+    let start_pair = pairs - wi.remainder().len() / 2;
+    scalar_crossover_two_from(w, cm, d, z, start_pair);
+}

@@ -19,11 +19,11 @@
 //! the two trajectories cannot drift. Bit-identity with isolated scalar
 //! stepping is pinned by `rust/tests/differential_backend.rs`.
 
-use crate::ga::multivar::generation_pass;
+use crate::ga::multivar::generation_pass_with;
+use crate::ga::simd::{self, LaneKernels};
 use crate::ga::{
-    engine, AnyGa, BestSoFar, Dims, GaInstance, MultiDims, MultiRom, MultiVarGa, VariantKey,
+    AnyGa, BestSoFar, Dims, GaInstance, MultiDims, MultiRom, MultiVarGa, VariantKey,
 };
-use crate::lfsr::step as lfsr_step;
 use crate::rom::RomTables;
 use std::sync::Arc;
 
@@ -66,6 +66,29 @@ pub struct SoaSlab {
     pop: Vec<u32>,
     lfsr: Vec<u32>,
     rows: Vec<SlabRow>,
+    /// Reusable `[B·N]` step buffers: steady-state chunks allocate nothing
+    /// (pinned by `benches/bench_kernels.rs --check`).
+    scratch: StepScratch,
+}
+
+/// The fused step's working set (`y`/`w`/offspring), owned by the slab so
+/// repeated chunks reuse one allocation instead of three fresh `B·N`
+/// vectors per call.
+#[derive(Debug, Clone, Default)]
+struct StepScratch {
+    y: Vec<i64>,
+    w: Vec<u32>,
+    next: Vec<u32>,
+}
+
+impl StepScratch {
+    /// Size every buffer to exactly `len` — `next` is published by
+    /// swapping with the population array, so lengths must match it.
+    fn ensure(&mut self, len: usize) {
+        self.y.resize(len, 0);
+        self.w.resize(len, 0);
+        self.next.resize(len, 0);
+    }
 }
 
 impl SoaSlab {
@@ -81,6 +104,7 @@ impl SoaSlab {
             pop: Vec::new(),
             lfsr: Vec::new(),
             rows: Vec::new(),
+            scratch: StepScratch::default(),
         }
     }
 
@@ -335,6 +359,14 @@ impl SoaSlab {
     /// each row's machine alone: same kernels, same per-generation order as
     /// `GaInstance::step` / `MultiVarGa::step`.
     pub(crate) fn fused_step(&mut self, gens: &[u32]) {
+        self.fused_step_with(simd::resolve(simd::KernelKind::Auto), gens);
+    }
+
+    /// [`SoaSlab::fused_step`] with an explicit lane-kernel set — the
+    /// backend layer resolves `--kernels` once per dispatch and threads
+    /// the result here, so batched, resident and multivar paths all hit
+    /// the same kernels.
+    pub(crate) fn fused_step_with(&mut self, kern: &dyn LaneKernels, gens: &[u32]) {
         assert_eq!(self.rows.len(), gens.len(), "one generation count per row");
         let max_gens = gens.iter().copied().max().unwrap_or(0);
         if max_gens == 0 {
@@ -344,12 +376,15 @@ impl SoaSlab {
         let n = self.n;
         let l = self.l;
         let b = self.rows.len();
-        let mut y = vec![0i64; b * n];
-        let mut w = vec![0u32; b * n];
-        let mut next = vec![0u32; b * n];
+        self.scratch.ensure(b * n);
         let SoaSlab {
-            pop, lfsr, rows, ..
+            pop,
+            lfsr,
+            rows,
+            scratch,
+            ..
         } = self;
+        let StepScratch { y, w, next } = scratch;
 
         if key.v == 2 {
             let dims = Dims::new(key.n, key.m, key.p).with_gamma_bits(key.gamma_bits);
@@ -365,7 +400,7 @@ impl SoaSlab {
                     let RowRom::Two(tables) = &meta.rom else {
                         panic!("two-variable slab row carries multivar tables");
                     };
-                    engine::fitness_all(&pop[s..s + n], tables, &mut y[s..s + n]);
+                    kern.fitness_two(&pop[s..s + n], tables, &mut y[s..s + n]);
                     let mut gen_best = BestSoFar::new(meta.maximize);
                     for (x, yy) in pop[s..s + n].iter().zip(&y[s..s + n]) {
                         gen_best.offer(*yy, *x);
@@ -381,19 +416,19 @@ impl SoaSlab {
                     }
                     let s = row * n;
                     let states = &lfsr[row * l..(row + 1) * l];
-                    engine::select_all_states(
+                    kern.select(
                         &pop[s..s + n],
                         &y[s..s + n],
-                        states,
+                        &states[..2 * n],
                         meta.maximize,
-                        &dims,
+                        dims.sel_bits(),
                         &mut w[s..s + n],
                     );
-                    engine::crossover_all_states(&w[s..s + n], states, &dims, &mut next[s..s + n]);
-                    engine::mutate_all_states(&mut next[s..s + n], states, &dims);
+                    kern.crossover_two(&w[s..s + n], &states[2 * n..3 * n], &dims, &mut next[s..s + n]);
+                    kern.mutate(&mut next[s..s + n], &states[3 * n..], dims.m);
                 }
 
-                commit_generation(gens, g, n, l, pop, lfsr, &mut next);
+                commit_generation(kern, gens, g, n, l, pop, lfsr, next);
             }
         } else {
             let mdims = MultiDims::new(key.n, key.m, key.v, key.p).with_gamma_bits(key.gamma_bits);
@@ -406,7 +441,8 @@ impl SoaSlab {
                     let RowRom::Multi(rom) = &meta.rom else {
                         panic!("multivar slab row carries two-variable tables");
                     };
-                    generation_pass(
+                    generation_pass_with(
+                        kern,
                         &mdims,
                         rom,
                         meta.maximize,
@@ -424,7 +460,7 @@ impl SoaSlab {
                     meta.curve.push(gen_best.y);
                 }
 
-                commit_generation(gens, g, n, l, pop, lfsr, &mut next);
+                commit_generation(kern, gens, g, n, l, pop, lfsr, next);
             }
         }
 
@@ -432,12 +468,33 @@ impl SoaSlab {
             meta.generation += gens[row];
         }
     }
+
+    /// Pre-size every row's convergence-curve storage for an upcoming
+    /// chunk, so the fused step's per-generation `curve.push` never
+    /// reallocates mid-chunk. Callers on the steady-state path (resident
+    /// store, bench harness) pair this with the slab-owned step scratch to
+    /// make whole chunks allocation-free.
+    pub fn reserve_curves(&mut self, gens: &[u32]) {
+        assert_eq!(self.rows.len(), gens.len(), "one generation count per row");
+        for (meta, &k) in self.rows.iter_mut().zip(gens) {
+            meta.curve.reserve(k as usize);
+        }
+    }
+
+    /// Bytes held by the reusable step scratch (observability / tests).
+    pub fn scratch_bytes(&self) -> usize {
+        self.scratch.y.capacity() * std::mem::size_of::<i64>()
+            + (self.scratch.w.capacity() + self.scratch.next.capacity())
+                * std::mem::size_of::<u32>()
+    }
 }
 
 /// Commit one generation: publish offspring and advance every active row's
 /// generators one tick — fused across the whole `[B·L]` bank while no row
-/// has retired (the vectorizable fast path).
+/// has retired (the lane-kernel fast path).
+#[allow(clippy::too_many_arguments)]
 fn commit_generation(
+    kern: &dyn LaneKernels,
     gens: &[u32],
     g: u32,
     n: usize,
@@ -449,9 +506,7 @@ fn commit_generation(
     let all_active = gens.iter().all(|&k| k > g);
     if all_active {
         std::mem::swap(pop, next);
-        for s in lfsr.iter_mut() {
-            *s = lfsr_step(*s);
-        }
+        kern.lfsr_tick(lfsr);
     } else {
         for (row, &k) in gens.iter().enumerate() {
             if k <= g {
@@ -459,9 +514,7 @@ fn commit_generation(
             }
             let s = row * n;
             pop[s..s + n].copy_from_slice(&next[s..s + n]);
-            for st in lfsr[row * l..(row + 1) * l].iter_mut() {
-                *st = lfsr_step(*st);
-            }
+            kern.lfsr_tick(&mut lfsr[row * l..(row + 1) * l]);
         }
     }
 }
@@ -530,6 +583,64 @@ mod tests {
                 assert_same(&reference, &got);
             }
         }
+    }
+
+    #[test]
+    fn fused_step_reuses_slab_scratch() {
+        let insts: Vec<AnyGa> = (0..4)
+            .map(|s| AnyGa::from_params(&params(300 + s, 2)).unwrap())
+            .collect();
+        let mut slab = SoaSlab::new(insts[0].variant());
+        for inst in &insts {
+            slab.admit(inst.clone());
+        }
+        assert_eq!(slab.scratch_bytes(), 0);
+        slab.fused_step(&[10; 4]);
+        let bytes = slab.scratch_bytes();
+        // y: B·N i64 + w/next: 2 · B·N u32.
+        assert_eq!(bytes, 4 * 16 * 8 + 2 * 4 * 16 * 4);
+        slab.fused_step(&[10; 4]);
+        assert_eq!(slab.scratch_bytes(), bytes, "steady state must not grow");
+    }
+
+    #[test]
+    fn fused_step_kernel_kinds_agree() {
+        use crate::ga::simd::{resolve, KernelKind};
+        // scalar / portable / auto(avx2 when present) produce bit-equal
+        // slabs — the in-tree twin of the differential harness's kernels
+        // axis.
+        for vars in [2u32, 4] {
+            let insts: Vec<AnyGa> = (0..3)
+                .map(|s| AnyGa::from_params(&params(400 + s, vars)).unwrap())
+                .collect();
+            let mut reference = SoaSlab::new(insts[0].variant());
+            for inst in &insts {
+                reference.admit(inst.clone());
+            }
+            reference.fused_step_with(resolve(KernelKind::Scalar), &[30, 7, 0]);
+            for kind in [KernelKind::Portable, KernelKind::Auto] {
+                let mut slab = SoaSlab::new(insts[0].variant());
+                for inst in &insts {
+                    slab.admit(inst.clone());
+                }
+                slab.fused_step_with(resolve(kind), &[30, 7, 0]);
+                assert_eq!(slab.pop, reference.pop, "{kind} population");
+                assert_eq!(slab.lfsr, reference.lfsr, "{kind} lfsr bank");
+                for row in 0..insts.len() {
+                    assert_eq!(slab.row_best(row), reference.row_best(row), "{kind} best");
+                    assert_eq!(slab.row_curve(row), reference.row_curve(row), "{kind} curve");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reserve_curves_presizes_rows() {
+        let a = AnyGa::from_params(&params(1, 2)).unwrap();
+        let mut slab = SoaSlab::new(a.variant());
+        slab.admit(a);
+        slab.reserve_curves(&[64]);
+        assert!(slab.rows[0].curve.capacity() >= 64);
     }
 
     #[test]

@@ -68,7 +68,7 @@ fn batched_bit_identical_to_scalar_over_golden_matrix() {
                 }
                 for _ in 0..4 {
                     let mut refs: Vec<&mut GaInstance> = batched.iter_mut().collect();
-                    BatchedSoaBackend.step_batch(&mut refs, &vec![25; b]);
+                    BatchedSoaBackend::default().step_batch(&mut refs, &vec![25; b]);
                 }
 
                 for (i, (a, c)) in scalar.iter().zip(&batched).enumerate() {
@@ -89,7 +89,7 @@ fn batched_bit_identical_to_scalar_over_golden_matrix() {
 fn batched_matches_multivar_v2_anchor() {
     let p = params(16, 20, 120, "f3", false, 77);
     let mut batched = GaInstance::from_params(&p).unwrap();
-    batched.run_with(&BatchedSoaBackend, 120);
+    batched.run_with(&BatchedSoaBackend::default(), 120);
 
     let tables = cached_tables(&F3, 20, 12);
     let d = MultiDims::new(16, 20, 2, 1);

@@ -5,6 +5,11 @@
 //! (the cancel / result-extraction seam) and coordinator-level runs with
 //! cancellation and deadlines.
 //!
+//! The lane-kernel axis (ISSUE 6) rides the same harness: `kernels_case`
+//! asserts scalar ≡ portable ≡ AVX2-when-available across both batched
+//! entry points, covering lane-remainder shapes (N = 4, ragged B) and
+//! V ∈ {2, 4, 8}.
+//!
 //! The generator is a seeded SplitMix64 stream (the rust twin of
 //! `python/tests/minihyp.py`): every case is reproducible from the printed
 //! case seed. ≥ 200 cases run in CI (`cargo test --test
@@ -13,7 +18,8 @@
 use fpga_ga::config::{GaParams, ServeParams};
 use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest, Priority};
 use fpga_ga::ga::{
-    AnyGa, BackendKind, BatchedSoaBackend, GaInstance, MultiVarGa, SoaSlab, StepBackend,
+    avx2_available, AnyGa, BackendKind, BatchedSoaBackend, GaInstance, KernelKind, MultiVarGa,
+    SoaSlab, StepBackend,
 };
 use std::time::Duration;
 
@@ -127,7 +133,7 @@ fn single_case(rng: &mut Rng) {
 
     let mut batched = base.clone();
     for c in chunks(k) {
-        step_any(&BatchedSoaBackend, &mut batched, c);
+        step_any(&BatchedSoaBackend::default(), &mut batched, c);
     }
     assert_state_eq(&scalar, &batched, &format!("batched, {ctx}"));
 
@@ -200,13 +206,13 @@ fn batch_case(rng: &mut Rng) {
             .iter_mut()
             .map(|a| a.as_two_mut().unwrap())
             .collect();
-        BatchedSoaBackend.step_batch(&mut refs, &gens);
+        BatchedSoaBackend::default().step_batch(&mut refs, &gens);
     } else {
         let mut refs: Vec<&mut MultiVarGa> = batched
             .iter_mut()
             .map(|a| a.as_multi_mut().unwrap())
             .collect();
-        BatchedSoaBackend.step_multi_batch(&mut refs, &gens);
+        BatchedSoaBackend::default().step_multi_batch(&mut refs, &gens);
     }
     for (row, (a, b)) in scalar.iter().zip(&batched).enumerate() {
         assert_state_eq(a, b, &format!("batched row {row}, {ctx}"));
@@ -228,7 +234,7 @@ fn batch_case(rng: &mut Rng) {
         if step.iter().all(|&c| c == 0) {
             break;
         }
-        BatchedSoaBackend.step_slab(&mut slab, &step);
+        BatchedSoaBackend::default().step_slab(&mut slab, &step);
         for (d, c) in done.iter_mut().zip(&step) {
             *d += c;
         }
@@ -236,6 +242,93 @@ fn batch_case(rng: &mut Rng) {
     for row in (0..b).rev() {
         let got = slab.evict(row);
         assert_state_eq(&scalar[row], &got, &format!("resident row {row}, {ctx}"));
+    }
+}
+
+/// One random lane-kernel case: the same fleet stepped through every kernel
+/// implementation (`--kernels`: scalar reference loops, portable blocked
+/// loops, AVX2 intrinsics when the CPU has them) must stay bit-identical on
+/// both the batch and resident-slab paths — including lane-remainder shapes
+/// (N = 4 < lane width, B not a multiple of 8) and every ROM arity
+/// V ∈ {2, 4, 8}.
+fn kernels_case(rng: &mut Rng) {
+    let vars = *rng.pick(&[2u32, 2, 4, 8]);
+    let m = if vars == 8 { 24 } else { *rng.pick(&[20u32, 24]) };
+    let n = *rng.pick(&[4usize, 8, 16, 32]);
+    let shared = GaParams {
+        n,
+        m,
+        mutation_rate: *rng.pick(&[0.02, 0.05, 0.1]),
+        vars,
+        k: 1000,
+        ..GaParams::default()
+    };
+    // B drawn from 1..=11: most draws are off the 8-lane width.
+    let b = 1 + rng.below(11) as usize;
+    let mut insts: Vec<AnyGa> = Vec::with_capacity(b);
+    let mut gens: Vec<u32> = Vec::with_capacity(b);
+    for _ in 0..b {
+        let p = GaParams {
+            function: rng.pick(FUNCTIONS).to_string(),
+            maximize: rng.flag(),
+            seed: rng.next_u64(),
+            ..shared.clone()
+        };
+        insts.push(AnyGa::from_params(&p).unwrap());
+        gens.push(rng.below(41) as u32);
+    }
+    let ctx = format!("kernels b={b} V={vars} n={n} m={m} gens={gens:?}");
+
+    let run_batch = |kind: KernelKind| {
+        let backend = BatchedSoaBackend::new(kind);
+        let mut fleet = insts.clone();
+        if vars == 2 {
+            let mut refs: Vec<&mut GaInstance> =
+                fleet.iter_mut().map(|a| a.as_two_mut().unwrap()).collect();
+            backend.step_batch(&mut refs, &gens);
+        } else {
+            let mut refs: Vec<&mut MultiVarGa> =
+                fleet.iter_mut().map(|a| a.as_multi_mut().unwrap()).collect();
+            backend.step_multi_batch(&mut refs, &gens);
+        }
+        fleet
+    };
+    let run_slab = |kind: KernelKind| {
+        let backend = BatchedSoaBackend::new(kind);
+        let mut slab = SoaSlab::new(insts[0].variant());
+        for inst in &insts {
+            slab.admit(inst.clone());
+        }
+        backend.step_slab(&mut slab, &gens);
+        let mut out: Vec<AnyGa> = (0..b).rev().map(|row| slab.evict(row)).collect();
+        out.reverse();
+        out
+    };
+
+    // The scalar-kernel batched run is the reference — itself pinned to the
+    // isolated per-machine trajectories first.
+    let reference = run_batch(KernelKind::Scalar);
+    let mut isolated = insts.clone();
+    for (i, &g) in isolated.iter_mut().zip(&gens) {
+        i.run(g);
+    }
+    for (row, (a, b)) in isolated.iter().zip(&reference).enumerate() {
+        assert_state_eq(a, b, &format!("scalar kernels vs isolated row {row}, {ctx}"));
+    }
+
+    let mut kinds = vec![KernelKind::Scalar, KernelKind::Portable, KernelKind::Auto];
+    if avx2_available() {
+        kinds.push(KernelKind::Avx2);
+    }
+    for kind in kinds {
+        let batched = run_batch(kind);
+        for (row, (a, b)) in reference.iter().zip(&batched).enumerate() {
+            assert_state_eq(a, b, &format!("{kind} kernels batch row {row}, {ctx}"));
+        }
+        let resident = run_slab(kind);
+        for (row, (a, b)) in reference.iter().zip(&resident).enumerate() {
+            assert_state_eq(a, b, &format!("{kind} kernels slab row {row}, {ctx}"));
+        }
     }
 }
 
@@ -361,6 +454,10 @@ fn differential_scalar_batched_resident() {
     }
     for _ in 0..40 {
         batch_case(&mut rng);
+        cases += 1;
+    }
+    for _ in 0..60 {
+        kernels_case(&mut rng);
         cases += 1;
     }
     for _ in 0..4 {

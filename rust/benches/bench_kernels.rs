@@ -25,16 +25,21 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to the System allocator plus a relaxed
+// counter bump; every GlobalAlloc contract obligation is delegated.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same layout handed straight to System.alloc.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: ptr/layout come from a matching System.alloc call.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: ptr/layout/new_size forwarded unchanged to System.realloc.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)

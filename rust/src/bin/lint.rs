@@ -1,0 +1,35 @@
+//! `cargo run --bin lint` — the project's determinism & safety lint.
+//!
+//! Scans `src/`, `benches/` and `tests/` with [`fpga_ga::lint`] and exits
+//! 0 when clean, 1 with one `file:line: rule (name): message` report per
+//! violation, 2 on I/O errors. Budgeted to run well under 5 s so CI can
+//! fail fast before the build.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let rust_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let start = std::time::Instant::now();
+    match fpga_ga::lint::lint_tree(rust_dir) {
+        Ok(violations) if violations.is_empty() => {
+            println!(
+                "lint: OK — {} rules clean in {:.0?}",
+                fpga_ga::lint::RULES.len(),
+                start.elapsed()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("lint: io error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -337,6 +337,8 @@ struct JobEntry {
 }
 
 /// Count the terminal status, deliver the result, finalize the snapshot.
+// allow(too_many_arguments): one-shot terminal accounting takes the full
+// job context by design; bundling into a struct would be used exactly once.
 #[allow(clippy::too_many_arguments)]
 fn finalize_job(
     id: JobId,
@@ -394,6 +396,8 @@ fn finalize_job(
 /// long-running jobs don't re-copy their whole history every chunk). Takes
 /// raw progress values so both the AoS and resident completion paths feed
 /// it without materializing a machine.
+// allow(too_many_arguments): deliberately flat — the two callers pass raw
+// progress scalars precisely to avoid materializing a progress struct.
 #[allow(clippy::too_many_arguments)]
 fn update_snapshot(
     registry: &Registry,
@@ -639,6 +643,8 @@ fn scheduler_loop(
                 });
                 match parked_now {
                     Some(true) => {
+                        // unwrap: parked_now == Some(_) proves the id is in
+                        // the table; nothing removed it since.
                         let mut entry = table.remove(&id).unwrap();
                         let inst = entry
                             .inst
@@ -671,6 +677,7 @@ fn scheduler_loop(
                             now,
                         );
                     }
+                    // unwrap: parked_now == Some(_) proves the id is present.
                     Some(false) => table.get_mut(&id).unwrap().cancelled = true,
                     None => {}
                 }
@@ -721,6 +728,8 @@ fn scheduler_loop(
 
                             match post_chunk_status(entry, inst.best().y, now) {
                                 Some(status) => {
+                                    // unwrap: get_mut(&id) succeeded above in
+                                    // this same single-threaded pass.
                                     let entry = table.remove(&id).unwrap();
                                     let priority = entry.priority;
                                     finalize_job(
@@ -746,6 +755,7 @@ fn scheduler_loop(
                                         // AoS one more round if the slab is
                                         // mid-flight).
                                         if let Err(inst) = store.admit_parked(id, inst) {
+                                            // unwrap: same live entry as above.
                                             table.get_mut(&id).unwrap().inst = Some(inst);
                                         }
                                     } else {
@@ -770,6 +780,7 @@ fn scheduler_loop(
                         let SlabTask { rslab, gens } = task;
                         let ids = rslab.ids.clone();
                         store.finish_dispatch(rslab);
+                        store.debug_check("slab returned");
                         for (row, id) in ids.into_iter().enumerate() {
                             let executed = gens[row];
                             let Some(entry) = table.get_mut(&id) else { continue };
@@ -788,6 +799,8 @@ fn scheduler_loop(
                                     None
                                 };
                                 if let Some(status) = status {
+                                    // unwrap: get_mut(&id) succeeded above in
+                                    // this same single-threaded pass.
                                     let entry = table.remove(&id).unwrap();
                                     let priority = entry.priority;
                                     batcher.remove(&entry.variant, id);
@@ -847,6 +860,8 @@ fn scheduler_loop(
 
                             match post_chunk_status(entry, best_y, now) {
                                 Some(status) => {
+                                    // unwrap: get_mut(&id) succeeded above in
+                                    // this same single-threaded pass.
                                     let entry = table.remove(&id).unwrap();
                                     let priority = entry.priority;
                                     let inst =
@@ -876,6 +891,7 @@ fn scheduler_loop(
                                 }
                             }
                         }
+                        store.debug_check("chunk boundary");
                     }
                 }
             }
@@ -901,6 +917,7 @@ fn scheduler_loop(
                 .collect();
             for id in expired {
                 paused.retain(|&p| p != id);
+                // unwrap: `expired` was filtered on table.get(&id) just above.
                 let mut entry = table.remove(&id).unwrap();
                 let inst = entry
                     .inst
@@ -939,7 +956,9 @@ fn scheduler_loop(
                         _ => continue,
                     };
                     if expired {
+                        // unwrap: the match above proved the entry exists.
                         let mut entry = table.remove(&id).unwrap();
+                        // unwrap: ...and that it holds a parked AoS instance.
                         let inst = entry.inst.take().unwrap();
                         let priority = entry.priority;
                         let backend = snapshot_backend(&registry, id);
@@ -963,7 +982,9 @@ fn scheduler_loop(
                         );
                         continue;
                     }
+                    // unwrap: the match above proved the entry exists.
                     let entry = table.get_mut(&id).unwrap();
+                    // unwrap: ...and that it holds a parked AoS instance.
                     let inst = entry.inst.take().unwrap();
                     entry.in_flight = true;
                     running.push(RunningJob {
@@ -1005,10 +1026,12 @@ fn scheduler_loop(
                         if store.is_resident(id) && store.variant_in_flight(&variant) {
                             // State is mid-flight: re-queue; the deadline
                             // finalizes next round once the slab returns.
+                            // unwrap: the match above proved the entry exists.
                             let e = table.get_mut(&id).unwrap();
                             batcher.push_job(variant, id, now, e.priority, e.deadline);
                             continue;
                         }
+                        // unwrap: the match above proved the entry exists.
                         let mut entry = table.remove(&id).unwrap();
                         let priority = entry.priority;
                         let inst = entry
@@ -1049,10 +1072,12 @@ fn scheduler_loop(
                     let multi = variant.is_multi();
                     let mut running = Vec::new();
                     for id in ready {
+                        // unwrap: `ready` holds only ids verified live above.
                         let entry = table.get_mut(&id).unwrap();
                         if store.is_resident(id) {
                             batcher.push_job(variant, id, now, entry.priority, entry.deadline);
                         } else {
+                            // unwrap: non-resident ready jobs park AoS state.
                             let inst = entry.inst.take().unwrap();
                             entry.in_flight = true;
                             running.push(RunningJob {
@@ -1076,6 +1101,7 @@ fn scheduler_loop(
                 let mut rslab = store.begin_dispatch(variant);
                 for &id in &ready {
                     if !store.is_resident(id) {
+                        // unwrap: `ready` holds only ids verified live above.
                         let entry = table.get_mut(&id).unwrap();
                         let inst = entry.inst.take().expect("fresh ready job parked AoS");
                         store.admit_into(&mut rslab, id, inst);
@@ -1088,6 +1114,7 @@ fn scheduler_loop(
                 let mut gens = vec![0u32; rslab.ids.len()];
                 for (row, rid) in rslab.ids.iter().enumerate() {
                     if ready_set.contains(rid) {
+                        // unwrap: ready ids were verified live above.
                         let entry = table.get_mut(rid).unwrap();
                         entry.in_flight = true;
                         gens[row] = entry.remaining.min(K_CHUNK);

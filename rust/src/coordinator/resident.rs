@@ -169,6 +169,88 @@ impl ResidentStore {
             rslab.slab.row_curve(row),
         ))
     }
+
+    /// Audit the store's cross-structure invariants, returning the first
+    /// violation found: every parked slab is non-empty and internally
+    /// consistent (ids ↔ rows, delegating to [`SoaSlab::check_invariants`]),
+    /// every home points at a live variant with a real row (so no job can
+    /// be parked in two slabs), and the `resident_bytes` gauge matches the
+    /// live footprint exactly while nothing is in flight. The failure-
+    /// injection and differential harnesses exercise this at chunk
+    /// boundaries; [`ResidentStore::debug_check`] wires it into the
+    /// scheduler under `debug_assertions` or `--features paranoid`.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut parked_bytes = 0u64;
+        // lint: allow(R2) audit-only traversal — no dispatch decision
+        // depends on visit order, only whether an invariant is violated.
+        for (key, rslab) in &self.parked {
+            parked_bytes += rslab.slab.state_bytes() as u64;
+            if self.in_flight.contains(key) {
+                return Err(format!("variant {key:?} both parked and in flight"));
+            }
+            if rslab.key != *key || rslab.slab.key() != *key {
+                return Err(format!("slab parked under {key:?} carries {:?}", rslab.key));
+            }
+            if rslab.ids.is_empty() {
+                return Err(format!("empty slab parked for variant {key:?}"));
+            }
+            if rslab.ids.len() != rslab.slab.len() {
+                return Err(format!(
+                    "variant {key:?}: {} job ids for {} slab rows",
+                    rslab.ids.len(),
+                    rslab.slab.len()
+                ));
+            }
+            rslab
+                .slab
+                .check_invariants()
+                .map_err(|e| format!("variant {key:?}: {e}"))?;
+            for id in &rslab.ids {
+                if self.homes.get(id) != Some(key) {
+                    return Err(format!(
+                        "job {id:?} sits in slab {key:?} but is homed elsewhere"
+                    ));
+                }
+            }
+        }
+        // lint: allow(R2) audit-only traversal (order-independent, as above).
+        for (id, key) in &self.homes {
+            if !self.parked.contains_key(key) && !self.in_flight.contains(key) {
+                return Err(format!("job {id:?} homed to absent variant {key:?}"));
+            }
+            if let Some(rslab) = self.parked.get(key) {
+                if rslab.row_of(*id).is_none() {
+                    return Err(format!("job {id:?} homed to {key:?} without a row"));
+                }
+            }
+        }
+        let gauge = self.metrics.resident_bytes.load(Ordering::Relaxed);
+        if self.in_flight.is_empty() {
+            if gauge != parked_bytes {
+                return Err(format!(
+                    "resident_bytes gauge {gauge} != parked footprint {parked_bytes}"
+                ));
+            }
+        } else if gauge < parked_bytes {
+            // In-flight rows are counted by the gauge but their slab has
+            // moved out of `parked`, so the gauge can only exceed it.
+            return Err(format!(
+                "resident_bytes gauge {gauge} below parked footprint {parked_bytes}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Panic on any violated invariant when auditing is compiled in
+    /// (debug builds or `--features paranoid`); free in plain release.
+    #[inline]
+    pub fn debug_check(&self, context: &str) {
+        if cfg!(any(debug_assertions, feature = "paranoid")) {
+            if let Err(e) = self.check_invariants() {
+                panic!("ResidentStore invariant violated ({context}): {e}");
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +301,37 @@ mod tests {
         assert_eq!(metrics.resident_bytes.load(Ordering::Relaxed), 0);
         assert!(!store.is_resident(JobId(1)));
         assert!(store.evict(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn check_invariants_catches_seeded_store_corruption() {
+        let metrics = Arc::new(Metrics::new());
+        let mut store = ResidentStore::new(metrics.clone());
+        let a = job(1);
+        let key = a.variant();
+        let mut rslab = store.begin_dispatch(key);
+        store.admit_into(&mut rslab, JobId(1), a);
+        store.finish_dispatch(rslab);
+        store.check_invariants().expect("healthy store");
+
+        // Gauge tamper: accounting must match the live footprint exactly.
+        metrics.resident_bytes.fetch_add(1, Ordering::Relaxed);
+        let err = store.check_invariants().unwrap_err();
+        assert!(err.contains("resident_bytes"), "{err}");
+        metrics.resident_bytes.fetch_sub(1, Ordering::Relaxed);
+        store.check_invariants().expect("gauge restored");
+
+        // Orphan home: a job claiming residence without a slab row.
+        store.homes.insert(JobId(99), key);
+        let err = store.check_invariants().unwrap_err();
+        assert!(err.contains("without a row"), "{err}");
+        store.homes.remove(&JobId(99));
+        store.check_invariants().expect("orphan removed");
+
+        // id/row skew inside a parked slab.
+        store.parked.get_mut(&key).unwrap().ids.push(JobId(7));
+        let err = store.check_invariants().unwrap_err();
+        assert!(err.contains("slab rows"), "{err}");
     }
 
     #[test]

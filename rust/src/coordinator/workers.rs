@@ -124,6 +124,7 @@ pub(crate) fn run_engine_batch(
 /// slab entry point. Returns how many rows advanced (`gens[row] > 0`).
 pub(crate) fn run_slab_task(backend: &dyn StepBackend, task: &mut SlabTask) -> usize {
     backend.step_slab(&mut task.rslab.slab, &task.gens);
+    task.rslab.slab.debug_check("worker chunk boundary");
     task.gens.iter().filter(|&&g| g > 0).count()
 }
 

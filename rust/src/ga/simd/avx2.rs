@@ -46,6 +46,9 @@ impl LaneKernels for Avx2Kernels {
 
     fn fitness_two(&self, pop: &[u32], tables: &RomTables, y: &mut [i64]) {
         debug_assert!(super::avx2_available());
+        // SAFETY: resolve() constructs Avx2Kernels only after runtime AVX2
+        // detection; α/β indices are h-bit and γ buckets are clamped, so
+        // every gather stays inside its table.
         unsafe { fitness_two_avx2(pop, tables, y) }
     }
 
@@ -62,11 +65,15 @@ impl LaneKernels for Avx2Kernels {
             "sel_bits {sel_bits} wider than the population ({})",
             pop.len()
         );
+        // SAFETY: AVX2 presence is resolve()-gated; the assert above keeps
+        // every sel_bits-truncated tournament index inside pop/y.
         unsafe { select_avx2(pop, y, sel, maximize, sel_bits, w) }
     }
 
     fn crossover_two(&self, w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
         debug_assert!(super::avx2_available());
+        // SAFETY: AVX2 presence is resolve()-gated; every load/store is an
+        // unaligned intrinsic over in-bounds slice ranges (vec_pairs ≤ len/2).
         unsafe { crossover_two_avx2(w, cm, d, z) }
     }
 
@@ -80,12 +87,16 @@ impl LaneKernels for Avx2Kernels {
 
     fn lfsr_tick(&self, states: &mut [u32]) {
         debug_assert!(super::avx2_available());
+        // SAFETY: AVX2 presence is resolve()-gated; chunks_exact_mut keeps
+        // every 8-lane load/store inside `states`.
         unsafe { lfsr_tick_avx2(states) }
     }
 }
 
 /// Lane order that pulls the even 32-bit lanes of a register to the low
 /// half and the odd lanes to the high half (`vpermd` control).
+// SAFETY: register-only permute constant; callers inherit the
+// resolve()-checked AVX2 guarantee required by #[target_feature].
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn deinterleave_ctrl() -> __m256i {
@@ -93,6 +104,8 @@ unsafe fn deinterleave_ctrl() -> __m256i {
 }
 
 /// Inverse lane order: re-interleave `[e0..e3 o0..o3]` into `[e0 o0 …]`.
+// SAFETY: register-only permute constant; callers inherit the
+// resolve()-checked AVX2 guarantee required by #[target_feature].
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn reinterleave_ctrl() -> __m256i {
@@ -101,6 +114,8 @@ unsafe fn reinterleave_ctrl() -> __m256i {
 
 /// Split 16 interleaved u32 values (two loads `a`, `b`) into the 8 even
 /// elements and the 8 odd elements, preserving order within each.
+// SAFETY: register-only lane shuffles, no memory access; callers inherit
+// the resolve()-checked AVX2 guarantee required by #[target_feature].
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn deinterleave(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
@@ -113,6 +128,8 @@ unsafe fn deinterleave(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
 }
 
 /// Inverse of [`deinterleave`]: two stores' worth of re-interleaved lanes.
+// SAFETY: register-only lane shuffles, no memory access; callers inherit
+// the resolve()-checked AVX2 guarantee required by #[target_feature].
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn interleave(evens: __m256i, odds: __m256i) -> (__m256i, __m256i) {
@@ -127,6 +144,9 @@ unsafe fn interleave(evens: __m256i, odds: __m256i) -> (__m256i, __m256i) {
 
 /// Gather 8 i64 table entries addressed by the 8 u32 lanes of `idx`.
 /// Safety: every lane of `idx` must be < `table.len()`.
+// SAFETY: caller guarantees every idx lane < table.len(); the scale-8
+// gather then reads whole i64 entries inside the slice. AVX2 presence
+// comes from the resolve() gate shared by all callers.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn gather_i64x8(table: &[i64], idx: __m256i) -> (__m256i, __m256i) {
@@ -142,6 +162,8 @@ unsafe fn gather_i64x8(table: &[i64], idx: __m256i) -> (__m256i, __m256i) {
 /// The scalar form shifts arithmetically then clamps; here the low clamp
 /// runs first (zero the negative lanes), which makes the logical
 /// `vpsrlq` — AVX2 has no 64-bit arithmetic shift — exactly equivalent.
+// SAFETY: register-only arithmetic, no memory access; callers inherit the
+// resolve()-checked AVX2 guarantee required by #[target_feature].
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn gamma_bucket(delta: __m256i, gmin: __m256i, gshift: __m128i, gmax: __m256i) -> __m256i {
@@ -153,6 +175,10 @@ unsafe fn gamma_bucket(delta: __m256i, gmin: __m256i, gshift: __m128i, gmax: __m
     _mm256_blendv_epi8(d, gmax, over)
 }
 
+// SAFETY: caller holds the resolve()-checked AVX2 guarantee. Unaligned
+// loads/stores cover pop[..vec_n]/y[..vec_n] only; α/β gather indices are
+// masked to h bits (tables are 2^h entries) and γ indices are clamped to
+// the table bound by gamma_bucket.
 #[target_feature(enable = "avx2")]
 unsafe fn fitness_two_avx2(pop: &[u32], tables: &RomTables, y: &mut [i64]) {
     debug_assert_eq!(pop.len(), y.len());
@@ -209,6 +235,9 @@ unsafe fn fitness_two_avx2(pop: &[u32], tables: &RomTables, y: &mut [i64]) {
     }
 }
 
+// SAFETY: caller holds the resolve()-checked AVX2 guarantee and asserts
+// 2^sel_bits ≤ pop.len() (= y.len()), bounding both tournament gathers;
+// unaligned loads/stores cover sel[..2*vec_n] and w[..vec_n] only.
 #[target_feature(enable = "avx2")]
 unsafe fn select_avx2(
     pop: &[u32],
@@ -254,6 +283,9 @@ unsafe fn select_avx2(
     scalar_select(pop, y, &sel[2 * vec_n..], maximize, sel_bits, &mut w[vec_n..]);
 }
 
+// SAFETY: caller holds the resolve()-checked AVX2 guarantee; purely
+// unaligned loads/stores over w/cm/z ranges bounded by vec_pairs ≤ len/2,
+// all arithmetic is register-only.
 #[target_feature(enable = "avx2")]
 unsafe fn crossover_two_avx2(w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
     debug_assert_eq!(w.len(), z.len());
@@ -307,6 +339,8 @@ unsafe fn crossover_two_avx2(w: &[u32], cm: &[u32], d: &Dims, z: &mut [u32]) {
     scalar_crossover_two_from(w, cm, d, z, vec_pairs);
 }
 
+// SAFETY: caller holds the resolve()-checked AVX2 guarantee; the iterator
+// yields exact 8-lane chunks, so every unaligned load/store is in-bounds.
 #[target_feature(enable = "avx2")]
 unsafe fn lfsr_tick_avx2(states: &mut [u32]) {
     // s' = (s << 1) | ((s>>31 ^ s>>21 ^ s>>1 ^ s) & 1) on 8 states at once.

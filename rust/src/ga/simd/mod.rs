@@ -30,7 +30,9 @@ use crate::bits::{mask32, split, top_bits};
 use crate::ga::{engine, Dims, MultiDims, MultiRom};
 use crate::rom::RomTables;
 
-#[cfg(target_arch = "x86_64")]
+// Miri has no AVX2 intrinsic support; the CI Miri leg runs the scalar and
+// portable kernels with the explicit-SIMD module compiled out entirely.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 pub(crate) mod avx2;
 mod portable;
 
@@ -97,14 +99,14 @@ pub fn avx2_available() -> bool {
     avx2_available_impl()
 }
 
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 fn avx2_available_impl() -> bool {
     use std::sync::OnceLock;
     static DETECTED: OnceLock<bool> = OnceLock::new();
     *DETECTED.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
 }
 
-#[cfg(not(target_arch = "x86_64"))]
+#[cfg(any(not(target_arch = "x86_64"), miri))]
 fn avx2_available_impl() -> bool {
     false
 }
@@ -122,7 +124,7 @@ pub fn resolve(kind: KernelKind) -> &'static dyn LaneKernels {
 /// portable. An explicit `avx2` request also lands here so library callers
 /// degrade gracefully; the serving config layer rejects it loudly instead.
 fn best_available() -> &'static dyn LaneKernels {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         if avx2_available() {
             return &avx2::Avx2Kernels;

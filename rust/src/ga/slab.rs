@@ -406,6 +406,8 @@ impl SoaSlab {
                         gen_best.offer(*yy, *x);
                     }
                     meta.best.offer(gen_best.y, gen_best.x);
+                    // lint: allow(R4) capacity is pre-reserved by reserve_curves
+                    // on the steady-state path; the audit pins zero reallocs.
                     meta.curve.push(gen_best.y);
                 }
 
@@ -457,6 +459,8 @@ impl SoaSlab {
                         gen_best.offer(*yy, *x);
                     }
                     meta.best.offer(gen_best.y, gen_best.x);
+                    // lint: allow(R4) capacity is pre-reserved by reserve_curves
+                    // on the steady-state path; the audit pins zero reallocs.
                     meta.curve.push(gen_best.y);
                 }
 
@@ -466,6 +470,77 @@ impl SoaSlab {
 
         for (row, meta) in rows.iter_mut().enumerate() {
             meta.generation += gens[row];
+        }
+
+        self.debug_check("fused step");
+    }
+
+    /// Audit the slab's structural invariants, returning the first
+    /// violation found: array lengths must agree with the row count and
+    /// variant strides, the step scratch must stay internally consistent,
+    /// and every row's ROM arity / curve accounting must match. The
+    /// differential and failure-injection harnesses call this at chunk
+    /// boundaries; [`SoaSlab::debug_check`] wires it into the fused step
+    /// itself under `debug_assertions` or `--features paranoid`.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let b = self.rows.len();
+        if self.n != self.key.n {
+            return Err(format!("slab n {} != variant n {}", self.n, self.key.n));
+        }
+        let l = 2 * self.key.n + (self.key.n / 2) * self.key.v as usize + self.key.p;
+        if self.l != l {
+            return Err(format!("slab stride {} != variant stride {l}", self.l));
+        }
+        if self.pop.len() != b * self.n {
+            return Err(format!(
+                "population len {} != rows {b} × n {}",
+                self.pop.len(),
+                self.n
+            ));
+        }
+        if self.lfsr.len() != b * self.l {
+            return Err(format!(
+                "lfsr bank len {} != rows {b} × l {}",
+                self.lfsr.len(),
+                self.l
+            ));
+        }
+        let s = &self.scratch;
+        if s.y.len() != s.w.len() || s.w.len() != s.next.len() {
+            return Err(format!(
+                "step scratch diverged: y {} w {} next {}",
+                s.y.len(),
+                s.w.len(),
+                s.next.len()
+            ));
+        }
+        for (i, row) in self.rows.iter().enumerate() {
+            let row_is_two = matches!(row.rom, RowRom::Two(_));
+            if row_is_two != (self.key.v == 2) {
+                return Err(format!(
+                    "row {i} ROM arity disagrees with variant V = {}",
+                    self.key.v
+                ));
+            }
+            if row.curve.len() != row.generation as usize {
+                return Err(format!(
+                    "row {i} curve len {} != generation {}",
+                    row.curve.len(),
+                    row.generation
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Panic on any violated invariant when auditing is compiled in
+    /// (debug builds or `--features paranoid`); free in plain release.
+    #[inline]
+    pub fn debug_check(&self, context: &str) {
+        if cfg!(any(debug_assertions, feature = "paranoid")) {
+            if let Err(e) = self.check_invariants() {
+                panic!("SoaSlab invariant violated ({context}): {e}");
+            }
         }
     }
 
@@ -701,6 +776,54 @@ mod tests {
         let b = AnyGa::from_params(&p).unwrap();
         let mut slab = SoaSlab::new(a.variant());
         slab.admit(b);
+    }
+
+    #[test]
+    fn check_invariants_passes_on_healthy_slabs_and_catches_corruption() {
+        let a = AnyGa::from_params(&params(1, 2)).unwrap();
+        let mut slab = SoaSlab::new(a.variant());
+        slab.check_invariants().expect("empty slab is consistent");
+        slab.admit(a);
+        slab.fused_step(&[5]);
+        slab.check_invariants().expect("stepped slab is consistent");
+
+        // Seed distinct corruptions through the private fields; the
+        // auditor must catch each one (the negative regression pinning
+        // that chunk-boundary checks are not vacuous).
+        let mut torn = slab.clone();
+        torn.pop.truncate(3);
+        let err = torn.check_invariants().unwrap_err();
+        assert!(err.contains("population"), "{err}");
+
+        let mut bank = slab.clone();
+        bank.lfsr.push(0);
+        let err = bank.check_invariants().unwrap_err();
+        assert!(err.contains("lfsr bank"), "{err}");
+
+        let mut skewed = slab.clone();
+        skewed.scratch.y.push(0);
+        let err = skewed.check_invariants().unwrap_err();
+        assert!(err.contains("scratch"), "{err}");
+
+        let mut drifted = slab.clone();
+        drifted.rows[0].curve.pop();
+        let err = drifted.check_invariants().unwrap_err();
+        assert!(err.contains("curve"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "SoaSlab invariant violated")]
+    fn debug_check_panics_on_corruption_in_debug_builds() {
+        if !cfg!(any(debug_assertions, feature = "paranoid")) {
+            // Release without `paranoid`: the auditor is compiled out;
+            // satisfy the expected panic so the test passes everywhere.
+            panic!("SoaSlab invariant violated (auditor compiled out)");
+        }
+        let a = AnyGa::from_params(&params(1, 2)).unwrap();
+        let mut slab = SoaSlab::new(a.variant());
+        slab.admit(a);
+        slab.pop.truncate(3);
+        slab.debug_check("test");
     }
 
     #[test]

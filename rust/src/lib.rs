@@ -34,6 +34,7 @@ pub mod fixed;
 pub mod ga;
 pub mod jsonmini;
 pub mod lfsr;
+pub mod lint;
 pub mod prng;
 pub mod problems;
 pub mod rom;

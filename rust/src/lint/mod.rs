@@ -1,0 +1,1116 @@
+//! Project-native static analysis: the determinism & safety contract as
+//! named, suppressible rules (docs/static-analysis.md).
+//!
+//! The whole verification story — the ≥200-case differential harness, the
+//! suite floors, the bit-identical scalar ≡ batched ≡ resident ≡ SIMD
+//! guarantee — rests on properties that are easy to break silently: an
+//! `unsafe` gather without a bounds argument, a `HashMap` iteration that
+//! reorders dispatch, a stray clock or allocation in a fused kernel. This
+//! module enforces those properties at the source level with a lightweight
+//! line/token scanner (no external parser — same self-contained spirit as
+//! [`crate::jsonmini`]), so the contract is machine-checked before the
+//! surface doubles with new lane ISAs.
+//!
+//! Rules (see [`RULES`] for the one-line summaries):
+//!
+//! * **R1 `safety-comment`** — every `unsafe` block/fn/impl is preceded by
+//!   a `// SAFETY:` comment (same line, or directly above through
+//!   attributes and other comments).
+//! * **R2 `hash-iteration`** — no `HashMap`/`HashSet` *iteration* in
+//!   dispatch-order-sensitive paths (`src/coordinator/`, `src/ga/`):
+//!   membership and point lookups are fine, ordered traversal must use
+//!   `BTreeMap` or explicit sorting.
+//! * **R3 `kernel-determinism`** — no `std::time`, `thread::sleep` or
+//!   ambient randomness inside the bit-exact engine kernel paths
+//!   (`src/ga/engine.rs`, `src/ga/simd/`, `src/ga/slab.rs`).
+//! * **R4 `hot-loop-alloc`** — no heap-allocation calls inside the fused
+//!   hot functions audited allocation-free by `bench_kernels --check`
+//!   (the [`R4_HOT`] table names them per file; a renamed function must
+//!   update the table or the rule fails loudly).
+//! * **R5 `justified-escape`** — `#[allow(...)]`, bare `.unwrap()` and
+//!   `.expect("")` in non-test coordinator code need a plain `//`
+//!   justification comment. The `.lock().unwrap()` poisoning-propagation
+//!   idiom and `.expect("non-empty message")` are self-justifying.
+//!
+//! Suppression syntax, checked by the scanner itself:
+//!
+//! ```text
+//! // lint: allow(R4) curve capacity is pre-reserved by reserve_curves
+//! ```
+//!
+//! on the offending line or alone on the line above. The reason text is
+//! mandatory — an empty reason leaves the violation in force.
+//!
+//! Entry points: [`lint_source`] (one file, fixture-testable) and
+//! [`lint_tree`] (walk `src`/`benches`/`tests` deterministically). The
+//! `lint` binary (`cargo run --bin lint`) wraps [`lint_tree`] and exits
+//! non-zero on any violation.
+
+use std::path::{Path, PathBuf};
+
+/// One rule's identity for reports and docs.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule table (the source of truth mirrored by docs/static-analysis.md).
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "R1",
+        name: "safety-comment",
+        summary: "every `unsafe` site carries a `// SAFETY:` comment",
+    },
+    Rule {
+        id: "R2",
+        name: "hash-iteration",
+        summary: "no HashMap/HashSet iteration in dispatch-order-sensitive paths",
+    },
+    Rule {
+        id: "R3",
+        name: "kernel-determinism",
+        summary: "no clocks, sleeps or ambient randomness in bit-exact kernel paths",
+    },
+    Rule {
+        id: "R4",
+        name: "hot-loop-alloc",
+        summary: "no heap allocation inside the audited fused-step hot functions",
+    },
+    Rule {
+        id: "R5",
+        name: "justified-escape",
+        summary: "allow/unwrap/expect escapes in coordinator code need a justification",
+    },
+];
+
+/// One finding: rule id + name, file-relative location, message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub name: &'static str,
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} ({}): {}",
+            self.file, self.line, self.rule, self.name, self.message
+        )
+    }
+}
+
+/// Hot functions audited allocation-free (R4), per file. The dynamic twin
+/// is the counting-allocator audit in `benches/bench_kernels.rs --check`;
+/// this table keeps the property enforced at the source level. A listed
+/// function that disappears is itself a violation, so refactors must keep
+/// the table honest.
+pub const R4_HOT: &[(&str, &[&str])] = &[
+    ("src/ga/slab.rs", &["fused_step_with", "commit_generation"]),
+    ("src/ga/multivar.rs", &["generation_pass_with"]),
+    (
+        "src/ga/engine.rs",
+        &[
+            "fitness_all",
+            "select_all_states",
+            "crossover_all_states",
+            "mutate_all_states",
+            "generation_step",
+        ],
+    ),
+    (
+        "src/ga/simd/mod.rs",
+        &[
+            "scalar_fitness_multi",
+            "scalar_select",
+            "scalar_crossover_two_from",
+            "scalar_crossover_multi",
+            "scalar_mutate",
+        ],
+    ),
+    (
+        "src/ga/simd/portable.rs",
+        &[
+            "fitness_two_blocked",
+            "fitness_multi_blocked",
+            "select_blocked",
+            "crossover_two_blocked",
+        ],
+    ),
+    (
+        "src/ga/simd/avx2.rs",
+        &[
+            "fitness_two_avx2",
+            "select_avx2",
+            "crossover_two_avx2",
+            "lfsr_tick_avx2",
+        ],
+    ),
+];
+
+/// Allocation calls flagged by R4 inside hot functions.
+const R4_ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    ".to_vec()",
+    ".push(",
+    ".clone()",
+    "Box::new",
+    "format!",
+    "String::new",
+    ".to_string()",
+    ".to_owned()",
+    ".collect()",
+    ".extend(",
+    ".extend_from_slice(",
+    ".reserve(",
+    ".resize(",
+    ".insert(",
+];
+
+/// Nondeterminism sources flagged by R3 inside kernel paths.
+const R3_TOKENS: &[&str] = &[
+    "std::time",
+    "Instant::now",
+    "SystemTime",
+    "thread::sleep",
+    "thread_rng",
+    "rand::",
+    "RandomState",
+];
+
+/// Unordered-iteration methods flagged by R2 on hash-container bindings.
+const R2_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+fn scope_r2(rel: &str) -> bool {
+    rel.starts_with("src/coordinator/") || rel.starts_with("src/ga/")
+}
+
+fn scope_r3(rel: &str) -> bool {
+    rel == "src/ga/engine.rs" || rel == "src/ga/slab.rs" || rel.starts_with("src/ga/simd/")
+}
+
+fn scope_r5(rel: &str) -> bool {
+    rel.starts_with("src/coordinator/")
+}
+
+/// One source line after preprocessing: `code` with string/char literals
+/// blanked and comments removed; comment text split into plain (`//`,
+/// `/* */`) and doc (`///`, `//!`, `/** */`) channels.
+#[derive(Debug, Default, Clone)]
+struct LineInfo {
+    code: String,
+    plain: String,
+    doc: String,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Mode {
+    Code,
+    LineComment { doc: bool },
+    Block { depth: u32, doc: bool },
+    Str,
+    RawStr { hashes: usize },
+    Chr,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Split a source file into per-line code/comment views. The scanner
+/// understands line and (nested) block comments, string, raw-string, byte
+/// and char literals, and the char-vs-lifetime ambiguity, so rule matching
+/// never fires on literal or comment text.
+fn preprocess(src: &str) -> Vec<LineInfo> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<LineInfo> = Vec::new();
+    let mut cur = LineInfo::default();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment { .. }) {
+                mode = Mode::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    let doc = matches!(chars.get(i + 2), Some('/') | Some('!'));
+                    mode = Mode::LineComment { doc };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    let doc = matches!(chars.get(i + 2), Some('*') | Some('!'));
+                    mode = Mode::Block { depth: 1, doc };
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push(' ');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&chars, i) {
+                    // r"..." / r#"..."# raw strings; r#ident stays code.
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        cur.code.push(' ');
+                        mode = Mode::RawStr { hashes };
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: escaped or single-char
+                    // quoted forms are literals, everything else is a
+                    // lifetime tick left in the code view.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        cur.code.push(' ');
+                        mode = Mode::Chr;
+                        i += 2;
+                    } else if chars.get(i + 1).is_some() && chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment { doc } => {
+                if doc {
+                    cur.doc.push(c);
+                } else {
+                    cur.plain.push(c);
+                }
+                i += 1;
+            }
+            Mode::Block { depth, doc } => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    i += 2;
+                    if depth == 1 {
+                        mode = Mode::Code;
+                    } else {
+                        mode = Mode::Block {
+                            depth: depth - 1,
+                            doc,
+                        };
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    i += 2;
+                    mode = Mode::Block {
+                        depth: depth + 1,
+                        doc,
+                    };
+                } else {
+                    if doc {
+                        cur.doc.push(c);
+                    } else {
+                        cur.plain.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Keep newline handling in the main loop so line
+                    // numbers stay exact across escaped line breaks.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr { hashes } => {
+                if c == '"' {
+                    let closed = (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Chr => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '\'' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Does `code` contain `tok` as a standalone identifier/keyword?
+fn has_token(code: &str, tok: &str) -> bool {
+    !token_positions(code, tok).is_empty()
+}
+
+/// Byte positions of `tok` in `code` with identifier boundaries on both
+/// sides (patterns are ASCII, so byte checks are exact).
+fn token_positions(code: &str, tok: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(tok) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let after = p + tok.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        start = p + tok.len();
+    }
+    out
+}
+
+/// Find the line where the item starting at `start` (attribute, signature
+/// or brace) closes: brace-matched over code views, or the first `;` for
+/// brace-less items.
+fn item_end(lines: &[LineInfo], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut seen = false;
+    for (i, l) in lines.iter().enumerate().skip(start) {
+        for c in l.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    seen = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if seen && depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !seen && l.code.contains(';') {
+            return i;
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Per-line "test code" mask: whole files under `tests/`, plus every
+/// `#[cfg(test)]` / `#[test]` item span.
+fn test_mask(rel: &str, lines: &[LineInfo]) -> Vec<bool> {
+    let mut mask = vec![rel.starts_with("tests/"); lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") || lines[i].code.contains("#[test]") {
+            let end = item_end(lines, i);
+            for m in mask.iter_mut().take(end + 1).skip(i) {
+                *m = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Per-line suppressed rule ids from `// lint: allow(R1, R4) reason`.
+/// A suppression with an empty reason is inert by design.
+fn suppressions(lines: &[LineInfo]) -> Vec<Vec<String>> {
+    let mut out: Vec<Vec<String>> = vec![Vec::new(); lines.len()];
+    for (i, l) in lines.iter().enumerate() {
+        let Some(pos) = l.plain.find("lint: allow(") else {
+            continue;
+        };
+        let rest = &l.plain[pos + "lint: allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        if rest[close + 1..].trim().is_empty() {
+            continue;
+        }
+        let rules: Vec<String> = rest[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if l.code.trim().is_empty() {
+            // Comment-only line: the suppression targets the next code line.
+            let mut j = i + 1;
+            while j < lines.len() && lines[j].code.trim().is_empty() {
+                j += 1;
+            }
+            if j < lines.len() {
+                out[j].extend(rules.iter().cloned());
+            }
+        }
+        out[i].extend(rules);
+    }
+    out
+}
+
+fn allowed(allow: &[Vec<String>], line: usize, rule: &str) -> bool {
+    allow.get(line).is_some_and(|v| v.iter().any(|r| r == rule))
+}
+
+/// Is there a plain `//` comment attached to line `i` (trailing, or on the
+/// contiguous run of comment/attribute lines directly above) whose text
+/// satisfies `pred`? Doc comments don't count: they describe the item, not
+/// the escape hatch.
+fn attached_plain_comment(lines: &[LineInfo], i: usize, pred: impl Fn(&str) -> bool) -> bool {
+    if pred(&lines[i].plain) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        let comment_only =
+            code.is_empty() && (!l.plain.trim().is_empty() || !l.doc.trim().is_empty());
+        if comment_only || code.starts_with("#[") || code.starts_with("#!") {
+            if pred(&l.plain) {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+fn push(
+    out: &mut Vec<Violation>,
+    rule: &'static str,
+    name: &'static str,
+    file: &str,
+    line: usize,
+    message: String,
+) {
+    out.push(Violation {
+        rule,
+        name,
+        file: file.to_string(),
+        line,
+        message,
+    });
+}
+
+/// R1: every `unsafe` site carries a `// SAFETY:` comment.
+fn rule_r1(rel: &str, lines: &[LineInfo], allow: &[Vec<String>], out: &mut Vec<Violation>) {
+    for i in 0..lines.len() {
+        if !has_token(&lines[i].code, "unsafe") || allowed(allow, i, "R1") {
+            continue;
+        }
+        if !attached_plain_comment(lines, i, |c| c.contains("SAFETY:")) {
+            push(
+                out,
+                "R1",
+                "safety-comment",
+                rel,
+                i + 1,
+                "`unsafe` without a `// SAFETY:` comment documenting why the \
+                 contract holds (alignment/length/feature-detection argument)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Identifiers bound to `HashMap`/`HashSet` in this file (declarations,
+/// struct fields and struct-literal initializers).
+fn hash_idents(lines: &[LineInfo], mask: &[bool]) -> Vec<String> {
+    const PATTERNS: &[&str] = &[
+        ": HashMap<",
+        ": HashSet<",
+        ": HashMap::",
+        ": HashSet::",
+        "= HashMap::",
+        "= HashSet::",
+    ];
+    let mut ids: Vec<String> = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        for pat in PATTERNS {
+            let mut start = 0usize;
+            while let Some(pos) = l.code[start..].find(pat) {
+                let p = start + pos;
+                if let Some(name) = word_before(&l.code, p) {
+                    ids.push(name);
+                }
+                start = p + pat.len();
+            }
+        }
+    }
+    ids.sort();
+    ids.dedup();
+    ids
+}
+
+/// The identifier ending just before byte `p` (spaces skipped).
+fn word_before(code: &str, mut p: usize) -> Option<String> {
+    let b = code.as_bytes();
+    while p > 0 && b[p - 1] == b' ' {
+        p -= 1;
+    }
+    let end = p;
+    while p > 0 && is_ident_byte(b[p - 1]) {
+        p -= 1;
+    }
+    if p == end {
+        None
+    } else {
+        Some(code[p..end].to_string())
+    }
+}
+
+/// Is the identifier at byte `p` the subject of a `for _ in` loop
+/// (allowing `&`, `&mut` and a `self.` prefix in between)?
+fn preceded_by_in(code: &str, mut p: usize) -> bool {
+    let b = code.as_bytes();
+    loop {
+        while p > 0 && b[p - 1] == b' ' {
+            p -= 1;
+        }
+        if p >= 5 && &b[p - 5..p] == b"self." {
+            p -= 5;
+            continue;
+        }
+        if p > 0 && b[p - 1] == b'&' {
+            p -= 1;
+            continue;
+        }
+        if p >= 4 && &b[p - 4..p] == b"mut " {
+            p -= 4;
+            continue;
+        }
+        break;
+    }
+    p >= 3 && &b[p - 3..p] == b"in " && (p == 3 || !is_ident_byte(b[p - 4]))
+}
+
+/// R2: no hash-container iteration in dispatch-order-sensitive paths.
+fn rule_r2(
+    rel: &str,
+    lines: &[LineInfo],
+    mask: &[bool],
+    allow: &[Vec<String>],
+    out: &mut Vec<Violation>,
+) {
+    let idents = hash_idents(lines, mask);
+    if idents.is_empty() {
+        return;
+    }
+    for (i, l) in lines.iter().enumerate() {
+        if mask[i] || allowed(allow, i, "R2") {
+            continue;
+        }
+        'line: for ident in &idents {
+            for p in token_positions(&l.code, ident) {
+                let after = &l.code[p + ident.len()..];
+                let iterated = R2_METHODS.iter().any(|m| after.starts_with(m))
+                    || preceded_by_in(&l.code, p);
+                if iterated {
+                    push(
+                        out,
+                        "R2",
+                        "hash-iteration",
+                        rel,
+                        i + 1,
+                        format!(
+                            "iteration over hash container `{ident}` has nondeterministic \
+                             order in a dispatch-order-sensitive path; use BTreeMap/BTreeSet \
+                             or sort explicitly"
+                        ),
+                    );
+                    break 'line;
+                }
+            }
+        }
+    }
+}
+
+/// R3: no clocks/sleeps/randomness in bit-exact kernel paths.
+fn rule_r3(
+    rel: &str,
+    lines: &[LineInfo],
+    mask: &[bool],
+    allow: &[Vec<String>],
+    out: &mut Vec<Violation>,
+) {
+    for (i, l) in lines.iter().enumerate() {
+        if mask[i] || allowed(allow, i, "R3") {
+            continue;
+        }
+        if let Some(tok) = R3_TOKENS.iter().find(|t| l.code.contains(*t)) {
+            push(
+                out,
+                "R3",
+                "kernel-determinism",
+                rel,
+                i + 1,
+                format!(
+                    "`{tok}` in a bit-exact kernel path; trajectories are pinned by the \
+                     differential harness and must not depend on clocks or ambient state"
+                ),
+            );
+        }
+    }
+}
+
+/// R4: no heap allocation inside the audited hot functions.
+fn rule_r4(rel: &str, lines: &[LineInfo], allow: &[Vec<String>], out: &mut Vec<Violation>) {
+    let Some((_, fns)) = R4_HOT.iter().find(|(f, _)| *f == rel) else {
+        return;
+    };
+    for fn_name in *fns {
+        let sig = format!("fn {fn_name}(");
+        let Some(start) = lines.iter().position(|l| l.code.contains(&sig)) else {
+            push(
+                out,
+                "R4",
+                "hot-loop-alloc",
+                rel,
+                1,
+                format!(
+                    "audited hot fn `{fn_name}` not found; update lint::R4_HOT \
+                     alongside the refactor so the allocation audit stays honest"
+                ),
+            );
+            continue;
+        };
+        let end = item_end(lines, start);
+        for i in start..=end {
+            if allowed(allow, i, "R4") {
+                continue;
+            }
+            if let Some(tok) = R4_ALLOC_TOKENS.iter().find(|t| lines[i].code.contains(*t)) {
+                push(
+                    out,
+                    "R4",
+                    "hot-loop-alloc",
+                    rel,
+                    i + 1,
+                    format!(
+                        "heap allocation `{tok}` inside hot fn `{fn_name}`, which \
+                         `bench_kernels --check` audits as allocation-free"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Is this `.unwrap()` the mutex poisoning-propagation idiom?
+fn unwrap_is_lock_idiom(lines: &[LineInfo], i: usize) -> bool {
+    if lines[i].code.contains("lock().unwrap()") {
+        return true;
+    }
+    if !lines[i].code.trim_start().starts_with(".unwrap()") {
+        return false;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        return code.ends_with(".lock()");
+    }
+    false
+}
+
+/// R5: escape hatches in non-test coordinator code need justification.
+fn rule_r5(
+    rel: &str,
+    raw: &[&str],
+    lines: &[LineInfo],
+    mask: &[bool],
+    allow: &[Vec<String>],
+    out: &mut Vec<Violation>,
+) {
+    for (i, l) in lines.iter().enumerate() {
+        if mask[i] || allowed(allow, i, "R5") {
+            continue;
+        }
+        let mut escapes: Vec<&str> = Vec::new();
+        if l.code.contains("#[allow(") {
+            escapes.push("#[allow(...)]");
+        }
+        if l.code.contains(".unwrap()") && !unwrap_is_lock_idiom(lines, i) {
+            escapes.push(".unwrap()");
+        }
+        // String literals are blanked in the code view, so the
+        // empty-message check reads the raw line.
+        if raw.get(i).is_some_and(|r| r.contains(".expect(\"\")")) {
+            escapes.push(".expect(\"\")");
+        }
+        if escapes.is_empty() {
+            continue;
+        }
+        if attached_plain_comment(lines, i, |c| !c.trim().is_empty()) {
+            continue;
+        }
+        for esc in escapes {
+            push(
+                out,
+                "R5",
+                "justified-escape",
+                rel,
+                i + 1,
+                format!(
+                    "`{esc}` in non-test coordinator code needs a `//` justification \
+                     comment on the same line or directly above"
+                ),
+            );
+        }
+    }
+}
+
+/// Lint one file. `rel` is the path relative to the `rust/` crate root
+/// with forward slashes (e.g. `src/ga/slab.rs`) — rule scoping keys on it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let raw: Vec<&str> = src.lines().collect();
+    let lines = preprocess(src);
+    let mask = test_mask(rel, &lines);
+    let allow = suppressions(&lines);
+    let mut out = Vec::new();
+    rule_r1(rel, &lines, &allow, &mut out);
+    if scope_r2(rel) {
+        rule_r2(rel, &lines, &mask, &allow, &mut out);
+    }
+    if scope_r3(rel) {
+        rule_r3(rel, &lines, &mask, &allow, &mut out);
+    }
+    rule_r4(rel, &lines, &allow, &mut out);
+    if scope_r5(rel) {
+        rule_r5(rel, &raw, &lines, &mask, &allow, &mut out);
+    }
+    out.sort_by_key(|v| (v.line, v.rule));
+    out
+}
+
+/// Lint the whole crate: every `.rs` file under `src/`, `benches/` and
+/// `tests/` of `rust_dir`, walked in sorted order so reports are
+/// deterministic. Reported paths are prefixed `rust/` (repo-relative).
+pub fn lint_tree(rust_dir: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in ["src", "benches", "tests"] {
+        collect_rs(&rust_dir.join(root), &mut files)?;
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(rust_dir)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(f)?;
+        for mut v in lint_source(&rel, &src) {
+            v.file = format!("rust/{rel}");
+            out.push(v);
+        }
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn rule_table_is_complete() {
+        assert_eq!(RULES.len(), 5);
+        for (i, r) in RULES.iter().enumerate() {
+            assert_eq!(r.id, format!("R{}", i + 1));
+            assert!(!r.summary.is_empty());
+        }
+    }
+
+    #[test]
+    fn preprocess_strips_strings_comments_and_chars() {
+        let src = concat!(
+            "let a = \"unsafe in a string\"; // unsafe in a comment\n",
+            "let b = 'x'; let lt: &'static str = r#\"unsafe raw\"#;\n",
+            "/* block unsafe */ let c = 1; /// doc unsafe\n",
+        );
+        let lines = preprocess(src);
+        assert_eq!(lines.len(), 4); // trailing newline yields an empty line
+        for l in &lines {
+            assert!(!l.code.contains("unsafe"), "code view: {:?}", l.code);
+        }
+        assert!(lines[0].plain.contains("unsafe in a comment"));
+        assert!(lines[2].plain.contains("block unsafe"));
+        assert!(lines[2].doc.contains("doc unsafe"));
+        // The lifetime tick survives; the char literal is blanked.
+        assert!(lines[1].code.contains("&'static"));
+        assert!(!lines[1].code.contains('x'));
+    }
+
+    #[test]
+    fn preprocess_keeps_line_numbers_across_multiline_strings() {
+        let src = "let s = \"line one\nline two\";\nfn after() {}\n";
+        let lines = preprocess(src);
+        assert!(lines[2].code.contains("fn after"));
+    }
+
+    #[test]
+    fn r1_flags_unjustified_unsafe() {
+        let v = lint_source("src/foo.rs", "unsafe fn g() {}\n");
+        assert_eq!(rules_of(&v), ["R1"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn r1_accepts_safety_comment_above_through_attributes() {
+        let src = "// SAFETY: fixture argument\n#[inline]\nunsafe fn g() {}\n";
+        assert!(lint_source("src/foo.rs", src).is_empty());
+        let trailing = "unsafe fn g() {} // SAFETY: fixture argument\n";
+        assert!(lint_source("src/foo.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn r1_doc_safety_does_not_count() {
+        let src = "/// SAFETY: doc comments describe the item, not the site\nunsafe fn g() {}\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", src)), ["R1"]);
+    }
+
+    #[test]
+    fn suppression_needs_a_reason() {
+        let with = "// lint: allow(R1) fixture site\nunsafe fn g() {}\n";
+        assert!(lint_source("src/foo.rs", with).is_empty());
+        let without = "// lint: allow(R1)\nunsafe fn g() {}\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", without)), ["R1"]);
+    }
+
+    #[test]
+    fn r2_flags_hash_iteration_in_scope() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "struct S { parked: HashMap<u32, u32> }\n",
+            "impl S {\n",
+            "    fn order(&self) {\n",
+            "        for k in self.parked.keys() {\n",
+            "            let _ = k;\n",
+            "        }\n",
+            "    }\n",
+            "}\n",
+        );
+        let v = lint_source("src/coordinator/resident.rs", src);
+        assert_eq!(rules_of(&v), ["R2"]);
+        assert_eq!(v[0].line, 5);
+        // Same source out of scope: clean.
+        assert!(lint_source("src/rom/cache.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r2_membership_lookups_are_fine() {
+        let src = concat!(
+            "use std::collections::HashSet;\n",
+            "fn f(in_flight: &HashSet<u32>) -> bool {\n",
+            "    in_flight.contains(&1)\n",
+            "}\n",
+        );
+        assert!(lint_source("src/ga/slab.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r2_for_loop_over_container() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "fn f(homes: HashMap<u32, u32>) {\n",
+            "    for (k, v) in &homes {\n",
+            "        let _ = (k, v);\n",
+            "    }\n",
+            "}\n",
+        );
+        let v = lint_source("src/coordinator/resident.rs", src);
+        assert_eq!(rules_of(&v), ["R2"]);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn r3_flags_clocks_in_kernel_paths() {
+        let src = "fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        let v = lint_source("src/ga/engine.rs", src);
+        assert!(rules_of(&v).contains(&"R3"), "{v:?}");
+        // Out of kernel scope: clean.
+        assert!(lint_source("src/coordinator/coordinator.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_skips_test_modules() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { let _ = std::time::Instant::now(); }\n",
+            "}\n",
+        );
+        assert!(lint_source("src/ga/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_flags_alloc_in_hot_fn_and_missing_fn() {
+        let src = concat!(
+            "pub(crate) fn generation_pass_with(v: &mut Vec<u32>) {\n",
+            "    v.push(1);\n",
+            "}\n",
+        );
+        let v = lint_source("src/ga/multivar.rs", src);
+        assert_eq!(rules_of(&v), ["R4"]);
+        assert_eq!(v[0].line, 2);
+        // A hot fn the file no longer defines is itself a violation.
+        let gone = lint_source("src/ga/multivar.rs", "fn other() {}\n");
+        assert_eq!(rules_of(&gone), ["R4"]);
+        assert!(gone[0].message.contains("not found"));
+    }
+
+    #[test]
+    fn r4_suppression_with_reason_clears_the_site() {
+        let src = concat!(
+            "pub(crate) fn generation_pass_with(v: &mut Vec<u32>) {\n",
+            "    // lint: allow(R4) capacity pre-reserved by the caller\n",
+            "    v.push(1);\n",
+            "}\n",
+        );
+        assert!(lint_source("src/ga/multivar.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r5_flags_bare_unwrap_and_accepts_justification() {
+        let bare = "fn f(o: Option<u32>) -> u32 {\n    o.unwrap()\n}\n";
+        let v = lint_source("src/coordinator/coordinator.rs", bare);
+        assert_eq!(rules_of(&v), ["R5"]);
+        let justified = concat!(
+            "fn f(o: Option<u32>) -> u32 {\n",
+            "    // unwrap: caller guarantees Some (fixture)\n",
+            "    o.unwrap()\n",
+            "}\n",
+        );
+        assert!(lint_source("src/coordinator/coordinator.rs", justified).is_empty());
+        // Out of coordinator scope: clean.
+        assert!(lint_source("src/cli/commands.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn r5_lock_unwrap_idiom_is_exempt() {
+        let src = concat!(
+            "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n",
+            "    *m.lock().unwrap()\n",
+            "}\n",
+            "fn g(m: &std::sync::Mutex<u32>) -> u32 {\n",
+            "    *m\n",
+            "        .lock()\n",
+            "        .unwrap()\n",
+            "}\n",
+        );
+        assert!(lint_source("src/coordinator/metrics.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r5_allow_attr_and_empty_expect() {
+        let allow_attr = "#[allow(dead_code)]\nfn g() {}\n";
+        let v = lint_source("src/coordinator/workers.rs", allow_attr);
+        assert_eq!(rules_of(&v), ["R5"]);
+        let empty_expect = "fn f(o: Option<u32>) {\n    o.expect(\"\");\n}\n";
+        let v = lint_source("src/coordinator/workers.rs", empty_expect);
+        assert_eq!(rules_of(&v), ["R5"]);
+        // A message IS the justification.
+        let msg = "fn f(o: Option<u32>) {\n    o.expect(\"invariant: parked\");\n}\n";
+        assert!(lint_source("src/coordinator/workers.rs", msg).is_empty());
+    }
+
+    #[test]
+    fn r5_skips_test_modules() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { Some(1).unwrap(); }\n",
+            "}\n",
+        );
+        assert!(lint_source("src/coordinator/job.rs", src).is_empty());
+    }
+
+    #[test]
+    fn violations_render_rule_name_and_location() {
+        let v = lint_source("src/foo.rs", "unsafe fn g() {}\n");
+        let s = v[0].to_string();
+        assert!(s.contains("src/foo.rs:1"), "{s}");
+        assert!(s.contains("R1 (safety-comment)"), "{s}");
+    }
+}

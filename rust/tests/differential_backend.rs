@@ -150,6 +150,8 @@ fn single_case(rng: &mut Rng) {
     let mut done = 0u64;
     for c in chunks(k) {
         backend.step_slab(&mut slab, &[c]);
+        slab.check_invariants()
+            .unwrap_or_else(|e| panic!("slab audit after chunk ({ctx}): {e}"));
         done += u64::from(c);
         if interrupt == Some(done) {
             // Mid-run extraction must be a bit-exact scalar prefix, and
@@ -235,6 +237,8 @@ fn batch_case(rng: &mut Rng) {
             break;
         }
         BatchedSoaBackend::default().step_slab(&mut slab, &step);
+        slab.check_invariants()
+            .unwrap_or_else(|e| panic!("slab audit after ragged chunk ({ctx}): {e}"));
         for (d, c) in done.iter_mut().zip(&step) {
             *d += c;
         }
@@ -300,6 +304,8 @@ fn kernels_case(rng: &mut Rng) {
             slab.admit(inst.clone());
         }
         backend.step_slab(&mut slab, &gens);
+        slab.check_invariants()
+            .unwrap_or_else(|e| panic!("slab audit ({kind:?} kernels, {ctx}): {e}"));
         let mut out: Vec<AnyGa> = (0..b).rev().map(|row| slab.evict(row)).collect();
         out.reverse();
         out

@@ -5,7 +5,7 @@
 
 use fpga_ga::config::{GaParams, ServeParams};
 use fpga_ga::coordinator::{Coordinator, JobStatus, OptimizeRequest, Priority};
-use fpga_ga::ga::{AnyGa, BackendKind, Dims};
+use fpga_ga::ga::{AnyGa, BackendKind, BatchedSoaBackend, Dims, SoaSlab, StepBackend};
 use fpga_ga::runtime::{ChunkIo, Manifest, Runtime};
 use std::time::Duration;
 
@@ -254,6 +254,43 @@ fn cancel_while_parked_resident_frees_the_slab() {
     assert_eq!(m.resident_bytes, 0, "cancellation must free the slab row");
     assert_eq!(m.jobs_cancelled, 1);
     coord.shutdown();
+}
+
+#[test]
+fn slab_invariant_audit_is_clean_across_evict_readmit_cycles() {
+    // The preemption seam in slab form: step, audit, evict a row, audit,
+    // re-admit, audit — the invariant checker must stay silent through the
+    // whole cycle (seeded-corruption detection is pinned by the unit tests
+    // next to `SoaSlab::check_invariants`).
+    let insts: Vec<AnyGa> = (0..4)
+        .map(|i| {
+            AnyGa::from_params(&GaParams {
+                n: 16,
+                m: 20,
+                k: 1000,
+                function: "f3".into(),
+                seed: 40 + i,
+                ..GaParams::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let mut slab = SoaSlab::new(insts[0].variant());
+    for inst in &insts {
+        slab.admit(inst.clone());
+    }
+    let backend = BatchedSoaBackend::default();
+    for round in 0..3 {
+        backend.step_slab(&mut slab, &[25, 25, 0, 25]);
+        slab.check_invariants()
+            .unwrap_or_else(|e| panic!("round {round} post-chunk: {e}"));
+        let snapshot = slab.evict(0);
+        slab.check_invariants()
+            .unwrap_or_else(|e| panic!("round {round} post-evict: {e}"));
+        slab.admit(snapshot);
+        slab.check_invariants()
+            .unwrap_or_else(|e| panic!("round {round} post-admit: {e}"));
+    }
 }
 
 #[test]

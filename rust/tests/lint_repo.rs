@@ -1,0 +1,23 @@
+//! Repo self-scan: the in-house determinism & safety lint
+//! (`cargo run --bin lint`, docs/static-analysis.md) must be clean on the
+//! tree as committed. Any violation fails here with the same
+//! `file:line: rule (name): message` report the binary prints, so the gate
+//! runs under plain `cargo test` as well as in the dedicated CI job.
+
+use std::path::Path;
+
+#[test]
+fn repo_is_lint_clean() {
+    let rust_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = fpga_ga::lint::lint_tree(rust_dir).expect("lint walk over the crate tree");
+    assert!(
+        violations.is_empty(),
+        "{} static-analysis violation(s):\n{}",
+        violations.len(),
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

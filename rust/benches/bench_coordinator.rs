@@ -7,14 +7,54 @@
 //! The steady-state section compares the per-chunk gather/scatter batched
 //! path against the resident-SoA store (`--resident-store`) on a 64-job
 //! same-variant workload — the copy the ResidentStore eliminates — and
-//! emits both readings on one `BENCH_JSON` line (ISSUE 4 acceptance).
+//! emits both readings on one `BENCH_JSON` line (ISSUE 4 acceptance). A
+//! third, traced run breaks the wall time down per pipeline stage from the
+//! tracer's chunk-boundary spans (docs/observability.md).
+//!
+//! CI runs `--check`: the steady-state section plus two observability
+//! gates — the tracing-disabled fast path must allocate nothing in steady
+//! state (counting-allocator audit, same technique as `bench_kernels
+//! --check`), and enabling spans must cost <= 3% steady-state throughput.
 
 use fpga_ga::bench_util::{emit_json, Table};
 use fpga_ga::config::{GaParams, ServeParams};
 use fpga_ga::coordinator::{Coordinator, OptimizeRequest};
 use fpga_ga::ga::BackendKind;
 use fpga_ga::jsonmini::{obj, Value};
+use fpga_ga::obs::{EventKind, Histogram, Stage, Tracer};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Counting allocator: the `--check` audit asserts the tracing-disabled
+/// observability path allocates nothing once warm.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: pure pass-through to the System allocator plus a relaxed
+// counter bump; every GlobalAlloc contract obligation is delegated.
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same layout handed straight to System.alloc.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    // SAFETY: ptr/layout come from a matching System.alloc call.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    // SAFETY: ptr/layout/new_size forwarded unchanged to System.realloc.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 const JOBS: usize = 48;
 const K: u32 = 100;
@@ -23,6 +63,11 @@ const K: u32 = 100;
 /// time dominates admission/eviction.
 const STEADY_JOBS: usize = 64;
 const STEADY_K: u32 = 2000;
+
+/// `--check` overhead gate: smaller than the steady section (it runs
+/// 2 x (1 warmup + 3 measured) times) but chunk-dominated all the same.
+const CHECK_JOBS: usize = 32;
+const CHECK_K: u32 = 1500;
 
 fn run_config(name: &str, serve: ServeParams, t: &mut Table) {
     let coord = match Coordinator::builder(serve.clone()).start() {
@@ -68,19 +113,29 @@ fn params(seed: u64) -> GaParams {
     }
 }
 
-/// One steady-state run: wall time, per-chunk time, throughput. Returns the
-/// machine-readable reading for the BENCH_JSON line.
-fn run_steady(name: &str, resident: bool, t: &mut Table) -> Value {
-    let serve = ServeParams {
+fn steady_serve(resident: bool, trace: bool) -> ServeParams {
+    ServeParams {
         workers: 1,
         max_batch: STEADY_JOBS,
         batch_window_us: 200,
         use_pjrt: false,
         backend: BackendKind::Batched,
         resident_store: resident,
+        trace,
         ..ServeParams::default()
-    };
-    let coord = Coordinator::builder(serve).start().unwrap();
+    }
+}
+
+/// One steady-state run: wall time, per-chunk time, throughput. Returns the
+/// machine-readable reading for the BENCH_JSON line plus (when `trace`) the
+/// per-stage span totals.
+fn run_steady(
+    name: &str,
+    resident: bool,
+    trace: bool,
+    t: &mut Table,
+) -> (Value, Vec<(&'static str, u64, u64)>) {
+    let coord = Coordinator::builder(steady_serve(resident, trace)).start().unwrap();
     let t0 = Instant::now();
     let handles: Vec<_> = (0..STEADY_JOBS)
         .map(|i| {
@@ -96,6 +151,11 @@ fn run_steady(name: &str, resident: bool, t: &mut Table) -> Value {
     }
     let wall = t0.elapsed();
     let m = coord.metrics();
+    let stages = if trace {
+        coord.tracer().stage_totals()
+    } else {
+        Vec::new()
+    };
     coord.shutdown();
     let chunks = m.chunks_dispatched.max(1);
     let chunk_us = wall.as_secs_f64() * 1e6 / chunks as f64;
@@ -112,9 +172,10 @@ fn run_steady(name: &str, resident: bool, t: &mut Table) -> Value {
             chunks, chunk_us, m.mean_batch
         ),
     ]);
-    obj([
+    let mut reading = obj([
         ("name", Value::from(name)),
         ("resident", Value::Bool(resident)),
+        ("traced", Value::Bool(trace)),
         ("jobs", Value::Int(STEADY_JOBS as i64)),
         ("k", Value::Int(i64::from(STEADY_K))),
         ("wall_s", Value::from(wall.as_secs_f64())),
@@ -122,70 +183,176 @@ fn run_steady(name: &str, resident: bool, t: &mut Table) -> Value {
         ("chunk_us", Value::from(chunk_us)),
         ("generations_per_s", Value::from(gens_per_s)),
         ("mean_batch", Value::from(m.mean_batch)),
-    ])
+    ]);
+    if let Value::Object(map) = &mut reading {
+        for (stage, count, total_us) in &stages {
+            let key = stage.replace('-', "_");
+            map.insert(format!("stage_{key}_us"), Value::Int(*total_us as i64));
+            map.insert(format!("stage_{key}_spans"), Value::Int(*count as i64));
+        }
+    }
+    (reading, stages)
+}
+
+/// Print the per-stage wall-time breakdown from the traced steady run.
+/// Lane-parallel stages can sum past 100% of wall; the point is which
+/// stage dominates, and that the execution stages account for the bulk of
+/// end-to-end time.
+fn print_stage_breakdown(stages: &[(&'static str, u64, u64)], wall_s: f64) {
+    println!("\nper-stage span totals (traced resident run):\n");
+    let mut t = Table::new(["stage", "spans", "total ms", "% of wall"]);
+    for (stage, count, total_us) in stages {
+        let ms = *total_us as f64 / 1e3;
+        t.row([
+            (*stage).to_string(),
+            count.to_string(),
+            format!("{ms:.1}"),
+            format!("{:.1}", ms / (wall_s * 1e3).max(1e-9) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+/// `--check` gate 1: with tracing disabled, the observability seams on the
+/// hot path — histogram recording, journal events, span guards — must not
+/// allocate once warm. This is what makes `Tracer::disabled()` safe to
+/// leave compiled into every chunk boundary.
+fn assert_zero_disabled_path_allocs() {
+    let tracer = Tracer::disabled();
+    let hist = Histogram::new();
+    // Warm-up: anything lazily allocated happens here, outside the window.
+    hist.record(4242);
+    tracer.event(1, EventKind::Chunk);
+    drop(tracer.span(Stage::FusedStep, 1, 0));
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for i in 0..10_000u64 {
+        hist.record(i * 37 + 1);
+        tracer.event(i, EventKind::Chunk);
+        let _span = tracer.span(Stage::FusedStep, i, 0);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "tracing-disabled path allocated in steady state ({} allocations)",
+        after - before
+    );
+    println!("zero-alloc audit: 10000 disabled record/span/event calls, 0 allocations");
+}
+
+/// One timed steady run for the overhead gate (resident store, spans on or
+/// off). The journal is always on — the gate measures exactly what
+/// `[serve] trace = true` adds.
+fn check_wall(trace: bool) -> f64 {
+    let mut serve = steady_serve(true, trace);
+    serve.max_batch = CHECK_JOBS;
+    let coord = Coordinator::builder(serve).start().unwrap();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CHECK_JOBS)
+        .map(|i| {
+            let mut p = params(5000 + i as u64);
+            p.k = CHECK_K;
+            coord.submit(OptimizeRequest::new(p))
+        })
+        .collect();
+    for h in handles {
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    wall
+}
+
+/// `--check` gate 2: enabling span tracing may cost at most 3% of
+/// steady-state throughput. Min-of-3, interleaved, after a warmup pair —
+/// the min is robust to scheduler noise, interleaving to drift.
+fn assert_trace_overhead_within_3pct() {
+    let _ = check_wall(false);
+    let _ = check_wall(true);
+    let (mut off, mut on) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..3 {
+        off = off.min(check_wall(false));
+        on = on.min(check_wall(true));
+    }
+    let overhead = on / off - 1.0;
+    println!(
+        "trace overhead: {:+.2}% (untraced {off:.3}s, traced {on:.3}s, min of 3)",
+        overhead * 100.0
+    );
+    assert!(
+        overhead <= 0.03,
+        "span tracing costs {:.2}% steady-state throughput (> 3% budget)",
+        overhead * 100.0
+    );
 }
 
 fn main() {
-    println!(
-        "=== Coordinator serving bench: {JOBS} jobs x K={K} (N=32, m=20, F3), closed loop ===\n"
-    );
-    let mut t = Table::new([
-        "config", "wall s", "jobs/s", "p50 ms", "p95 ms", "details",
-    ]);
+    let argv: Vec<String> = std::env::args().collect();
+    let check = argv.iter().any(|a| a == "--check");
 
-    run_config(
-        "engine, 1 worker",
-        ServeParams {
-            workers: 1,
-            use_pjrt: false,
-            ..ServeParams::default()
-        },
-        &mut t,
-    );
-    run_config(
-        "engine, 4 workers",
-        ServeParams {
-            workers: 4,
-            use_pjrt: false,
-            ..ServeParams::default()
-        },
-        &mut t,
-    );
-    run_config(
-        "pjrt, no batching (B=1)",
-        ServeParams {
-            workers: 1,
-            max_batch: 1,
-            batch_window_us: 0,
-            use_pjrt: true,
-            ..ServeParams::default()
-        },
-        &mut t,
-    );
-    run_config(
-        "pjrt, batch<=8, 200µs window",
-        ServeParams {
-            workers: 1,
-            max_batch: 8,
-            batch_window_us: 200,
-            use_pjrt: true,
-            ..ServeParams::default()
-        },
-        &mut t,
-    );
-    run_config(
-        "pjrt, batch<=8 + early-stop 2",
-        ServeParams {
-            workers: 1,
-            max_batch: 8,
-            batch_window_us: 200,
-            early_stop_chunks: 2,
-            use_pjrt: true,
-            ..ServeParams::default()
-        },
-        &mut t,
-    );
-    t.print();
+    if !check {
+        println!(
+            "=== Coordinator serving bench: {JOBS} jobs x K={K} (N=32, m=20, F3), closed loop ===\n"
+        );
+        let mut t = Table::new([
+            "config", "wall s", "jobs/s", "p50 ms", "p95 ms", "details",
+        ]);
+
+        run_config(
+            "engine, 1 worker",
+            ServeParams {
+                workers: 1,
+                use_pjrt: false,
+                ..ServeParams::default()
+            },
+            &mut t,
+        );
+        run_config(
+            "engine, 4 workers",
+            ServeParams {
+                workers: 4,
+                use_pjrt: false,
+                ..ServeParams::default()
+            },
+            &mut t,
+        );
+        run_config(
+            "pjrt, no batching (B=1)",
+            ServeParams {
+                workers: 1,
+                max_batch: 1,
+                batch_window_us: 0,
+                use_pjrt: true,
+                ..ServeParams::default()
+            },
+            &mut t,
+        );
+        run_config(
+            "pjrt, batch<=8, 200µs window",
+            ServeParams {
+                workers: 1,
+                max_batch: 8,
+                batch_window_us: 200,
+                use_pjrt: true,
+                ..ServeParams::default()
+            },
+            &mut t,
+        );
+        run_config(
+            "pjrt, batch<=8 + early-stop 2",
+            ServeParams {
+                workers: 1,
+                max_batch: 8,
+                batch_window_us: 200,
+                early_stop_chunks: 2,
+                use_pjrt: true,
+                ..ServeParams::default()
+            },
+            &mut t,
+        );
+        t.print();
+    }
 
     println!(
         "\n=== Steady-state chunk time: {STEADY_JOBS} same-variant jobs x K={STEADY_K}, \
@@ -194,8 +361,10 @@ fn main() {
     let mut st = Table::new([
         "config", "wall s", "jobs/s", "p50 ms", "p95 ms", "details",
     ]);
-    let gather = run_steady("batched, gather/scatter per chunk", false, &mut st);
-    let resident = run_steady("batched, resident SoA store", true, &mut st);
+    let (gather, _) = run_steady("batched, gather/scatter per chunk", false, false, &mut st);
+    let (resident, _) = run_steady("batched, resident SoA store", true, false, &mut st);
+    let (traced, stages) =
+        run_steady("batched, resident SoA store (traced)", true, true, &mut st);
     st.print();
     let speedup = gather
         .get("chunk_us")
@@ -207,11 +376,22 @@ fn main() {
             .unwrap_or(1.0)
             .max(1e-9);
     println!("\nresident vs gather/scatter chunk-time speedup: {speedup:.2}x");
-    emit_json("coordinator_steady", vec![gather, resident]);
+    let traced_wall = traced.get("wall_s").and_then(Value::as_f64).unwrap_or(0.0);
+    print_stage_breakdown(&stages, traced_wall);
+    emit_json("coordinator_steady", vec![gather, resident, traced]);
+
+    if check {
+        println!("\n=== check mode: observability gates ===\n");
+        assert_zero_disabled_path_allocs();
+        assert_trace_overhead_within_3pct();
+        println!("check mode: OK");
+        return;
+    }
 
     println!("\nablation readings:");
     println!("* engine 4 vs 1 workers → job-level parallelism of the behavioral path.");
     println!("* pjrt B=8 vs B=1 → dynamic batching amortizes XLA dispatch overhead.");
     println!("* early-stop → generations saved when jobs converge before K.");
     println!("* resident vs gather/scatter → per-chunk SoA copies eliminated for parked jobs.");
+    println!("* traced run → per-stage wall-time breakdown from chunk-boundary spans.");
 }

@@ -4,7 +4,7 @@ use crate::baseline::SoftwareGa;
 use crate::bench_util::Table;
 use crate::cli::Args;
 use crate::config::{Config, GaParams};
-use crate::coordinator::{Coordinator, Gateway, OptimizeRequest};
+use crate::coordinator::{Coordinator, Gateway, OptimizeRequest, Priority};
 use crate::ga::{Dims, GaInstance};
 use crate::lfsr::LfsrBank;
 use crate::prng::{initial_population, seed_bank};
@@ -29,6 +29,8 @@ COMMANDS:
               --early-stop C (stop after C stale chunks; 0 = never)
               --resident-store (park jobs in SoA slabs between chunks;
               zero-copy chunk dispatch + High-preempts-Low scheduling)
+              --trace-out FILE (enable chunk-boundary span tracing and
+              write a Chrome trace-event JSON; docs/observability.md)
   suite       accuracy-evaluation suite: (problem x V x N) grid through the
               coordinator; reports success rate / |error| / gens-to-threshold
               --problems a,b,...|all  --vars 2,4  --pops 32,64  --k K
@@ -43,6 +45,10 @@ COMMANDS:
               --resident-store (also `[serve] resident_store = true`)
               --listen ADDR (e.g. 127.0.0.1:8080; also `[serve] listen`)
               --serve-for SECS (keep the gateway up after the trace)
+              --mixed-priority (cycle job priorities low/normal/high to
+              exercise preemption in the synthetic trace)
+              --trace-out FILE (Chrome trace-event JSON; also enabled by
+              `[serve] trace = true`)
   rtl         run the cycle-accurate machine and report cycles
               --function F --n N --m M --k K --seed S
   table1      print Table 1 (synthesis model vs paper)
@@ -101,9 +107,17 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
     if args.flag("resident-store") {
         serve.resident_store = true;
     }
+    let trace_out = args.opt("trace-out");
+    if trace_out.is_some() {
+        serve.trace = true;
+    }
     let coord = Coordinator::builder(serve).start()?;
     let result = coord.optimize(OptimizeRequest::new(params.clone()).with_tag("cli"));
     coord.shutdown();
+    let trace_line = match trace_out {
+        Some(path) => write_trace(path, &coord)?,
+        None => String::new(),
+    };
     anyhow::ensure!(result.error.is_none(), "job failed: {:?}", result.error);
     let decoded = if params.vars == 2 {
         let (px, qx) = result.decoded_vars(params.m);
@@ -119,7 +133,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
          best fitness (fixed-point): {}\n\
          best chromosome: {:#x}  {}\n\
          generations executed: {}  latency: {:?}\n\
-         convergence (every 10th gen): {:?}",
+         convergence (every 10th gen): {:?}\n{}",
         params.function,
         params.n,
         params.m,
@@ -134,6 +148,22 @@ fn cmd_optimize(args: &Args) -> crate::Result<String> {
         result.generations,
         result.latency,
         result.curve.iter().step_by(10).collect::<Vec<_>>(),
+        trace_line,
+    ))
+}
+
+/// Export the coordinator's tracer as Chrome trace-event JSON
+/// (chrome://tracing, Perfetto). Called after shutdown so every worker has
+/// drained and all spans are in the ring.
+fn write_trace(path: &str, coord: &Coordinator) -> crate::Result<String> {
+    let trace = crate::obs::chrome_trace(coord.tracer());
+    let json = crate::jsonmini::to_string(&trace);
+    std::fs::write(path, &json)
+        .map_err(|e| anyhow::anyhow!("writing trace `{path}`: {e}"))?;
+    Ok(format!(
+        "trace: {path} ({} spans, {} events)\n",
+        coord.tracer().spans_recorded(),
+        coord.tracer().events_recorded()
     ))
 }
 
@@ -173,6 +203,10 @@ fn serve_params_from(args: &Args) -> crate::Result<crate::config::ServeParams> {
     if let Some(listen) = args.opt("listen") {
         serve.listen = listen.to_string();
     }
+    // --trace-out implies span recording (`[serve] trace = true` also works).
+    if args.opt("trace-out").is_some() {
+        serve.trace = true;
+    }
     Ok(serve)
 }
 
@@ -195,12 +229,23 @@ fn cmd_serve(args: &Args) -> crate::Result<String> {
         Some(gw)
     };
 
+    // --mixed-priority cycles low/normal/high so the synthetic trace
+    // exercises High-preempts-Low scheduling (and the preemption spans).
+    let mixed = args.flag("mixed-priority");
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..jobs)
         .map(|i| {
             let mut p = params.clone();
             p.seed = params.seed + i as u64;
-            coord.submit(OptimizeRequest::new(p).with_tag(format!("trace-{i}")))
+            let mut req = OptimizeRequest::new(p).with_tag(format!("trace-{i}"));
+            if mixed {
+                req = req.with_priority(match i % 3 {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => Priority::High,
+                });
+            }
+            coord.submit(req)
         })
         .collect();
     let mut best = i64::MAX;
@@ -225,8 +270,12 @@ fn cmd_serve(args: &Args) -> crate::Result<String> {
     };
     let m = coord.metrics();
     coord.shutdown();
+    let trace_line = match args.opt("trace-out") {
+        Some(path) => write_trace(path, &coord)?,
+        None => String::new(),
+    };
     Ok(format!(
-        "served {jobs} jobs in {wall:?} ({:.1} jobs/s)\nbest across trace: {best}\n{gateway_line}{}",
+        "served {jobs} jobs in {wall:?} ({:.1} jobs/s)\nbest across trace: {best}\n{gateway_line}{trace_line}{}",
         jobs as f64 / wall.as_secs_f64(),
         m.render()
     ))
@@ -673,5 +722,43 @@ mod tests {
     #[test]
     fn suite_rejects_unknown_problem() {
         assert!(run_cmd("suite --problems warp --k 5 --seeds 1").is_err());
+    }
+
+    #[test]
+    fn optimize_trace_out_writes_chrome_trace() {
+        let path = std::env::temp_dir().join("fpga_ga_opt_trace.json");
+        let out = run_cmd(&format!(
+            "optimize --function f3 --n 16 --k 50 --seed 1 --backend batched --trace-out {}",
+            path.display()
+        ))
+        .unwrap();
+        assert!(out.contains("trace:"), "{out}");
+        let json = std::fs::read_to_string(&path).unwrap();
+        let v = crate::jsonmini::parse(&json).unwrap();
+        let events = v.req_array("traceEvents").unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        // Execution spans and lifecycle instants both land in the export.
+        assert!(names.contains(&"fused-step"), "{names:?}");
+        assert!(names.contains(&"queue-wait"), "{names:?}");
+        assert!(names.contains(&"submit"), "{names:?}");
+        assert!(names.contains(&"complete") || names.contains(&"early_stop"), "{names:?}");
+    }
+
+    #[test]
+    fn serve_mixed_priority_writes_trace() {
+        let path = std::env::temp_dir().join("fpga_ga_serve_trace.json");
+        let out = run_cmd(&format!(
+            "serve --jobs 6 --workers 2 --backend batched --resident-store --mixed-priority \
+             --function f3 --n 16 --k 25 --trace-out {}",
+            path.display()
+        ))
+        .unwrap();
+        assert!(out.contains("served 6 jobs"), "{out}");
+        assert!(out.contains("trace:"), "{out}");
+        let v = crate::jsonmini::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(!v.req_array("traceEvents").unwrap().is_empty());
     }
 }

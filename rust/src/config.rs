@@ -136,6 +136,12 @@ pub struct ServeParams {
     /// jobs at chunk boundaries (docs/backends.md §Resident store).
     /// Engine-path only — incompatible with `use_pjrt`.
     pub resident_store: bool,
+    /// Record per-stage tracing spans (obs subsystem). The lifecycle
+    /// journal behind `/v1/trace` is always on; this additionally records
+    /// queue-wait / batch-formation / dispatch / fused-step /
+    /// scatter-extract / preemption spans for Chrome-trace export
+    /// (`--trace-out`, docs/observability.md).
+    pub trace: bool,
 }
 
 impl Default for ServeParams {
@@ -151,6 +157,7 @@ impl Default for ServeParams {
             backend: BackendKind::Scalar,
             kernels: KernelKind::Auto,
             resident_store: false,
+            trace: false,
         }
     }
 }
@@ -265,6 +272,7 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
         s.kernels = name.parse().map_err(|e: String| anyhow!("{e}"))?;
     }
     get_bool(v, "resident_store", &mut s.resident_store)?;
+    get_bool(v, "trace", &mut s.trace)?;
     Ok(())
 }
 
@@ -350,6 +358,14 @@ use_pjrt = false
         assert!(c.serve.resident_store);
         assert!(!Config::default().serve.resident_store);
         assert!(Config::from_toml("[serve]\nresident_store = 3").is_err());
+    }
+
+    #[test]
+    fn trace_key_parses() {
+        let c = Config::from_toml("[serve]\ntrace = true").unwrap();
+        assert!(c.serve.trace);
+        assert!(!Config::default().serve.trace);
+        assert!(Config::from_toml("[serve]\ntrace = \"yes\"").is_err());
     }
 
     #[test]

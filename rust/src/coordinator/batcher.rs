@@ -25,6 +25,10 @@ use std::time::{Duration, Instant};
 pub struct BatchPlan {
     pub variant: VariantKey,
     pub jobs: Vec<JobId>,
+    /// Ready-time of the plan's oldest member when it was drained: the
+    /// batch-formation span (obs) runs `oldest_since → drain`. `None` only
+    /// for hand-built plans in tests.
+    pub oldest_since: Option<Instant>,
 }
 
 /// One waiting job: identity + ready-time + optional absolute deadline.
@@ -154,7 +158,11 @@ impl Batcher {
                         }
                     }
                 }
-                plans.push(BatchPlan { variant, jobs });
+                plans.push(BatchPlan {
+                    variant,
+                    jobs,
+                    oldest_since: oldest,
+                });
             }
         }
         plans

@@ -27,6 +27,7 @@ use crate::coordinator::workers::{
     spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, SlabTask, WorkMsg,
 };
 use crate::ga::{AnyGa, BackendKind, VariantKey};
+use crate::obs::{EventKind, Stage, Tracer};
 use crate::runtime::Manifest;
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::Path;
@@ -85,6 +86,10 @@ impl CoordinatorBuilder {
              use `auto` (runtime detection) or `portable`"
         );
         let metrics = Arc::new(Metrics::new());
+        // The journal (job timelines, `/v1/trace`) is always on; per-stage
+        // spans are opt-in via `--trace-out` / `[serve] trace` so the
+        // steady-state hot path takes no extra clock reads by default.
+        let tracer = Arc::new(Tracer::new(serve.trace));
         let registry: Registry = Arc::new(Mutex::new(BTreeMap::new()));
         let (sched_tx, sched_rx) = channel::<SchedMsg>();
 
@@ -99,6 +104,7 @@ impl CoordinatorBuilder {
             engine_rx,
             sched_tx.clone(),
             metrics.clone(),
+            tracer.clone(),
         );
 
         // PJRT dispatcher (only when enabled; requires artifacts on disk).
@@ -112,6 +118,7 @@ impl CoordinatorBuilder {
                 rx,
                 sched_tx.clone(),
                 metrics.clone(),
+                tracer.clone(),
             );
             (Some(tx), Some(th))
         } else {
@@ -121,6 +128,7 @@ impl CoordinatorBuilder {
         let sched_metrics = metrics.clone();
         let sched_registry = registry.clone();
         let sched_serve = serve.clone();
+        let sched_tracer = tracer.clone();
         let engine_tx_sched = engine_tx.clone();
         let pjrt_tx_sched = pjrt_tx.clone();
         let scheduler = std::thread::Builder::new()
@@ -133,6 +141,7 @@ impl CoordinatorBuilder {
                     sched_serve,
                     sched_metrics,
                     sched_registry,
+                    sched_tracer,
                 )
             })
             .expect("spawn scheduler");
@@ -142,6 +151,7 @@ impl CoordinatorBuilder {
             engine_tx,
             pjrt_tx,
             metrics,
+            tracer,
             registry,
             next_id: AtomicU64::new(1),
             threads: Mutex::new(Some(JoinSet {
@@ -165,6 +175,7 @@ pub struct Coordinator {
     engine_tx: Sender<WorkMsg>,
     pjrt_tx: Option<Sender<WorkMsg>>,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
     registry: Registry,
     next_id: AtomicU64,
     threads: Mutex<Option<JoinSet>>,
@@ -277,6 +288,18 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// The raw metrics sink (Prometheus exposition needs live histogram
+    /// buckets, not the percentile snapshot).
+    pub(crate) fn metrics_sink(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The observability tracer: lifecycle journal (always on) + per-stage
+    /// spans (when the coordinator was started with `serve.trace`).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
     /// Graceful shutdown (also runs on Drop).
     pub fn shutdown(&self) {
         if let Some(set) = self.threads.lock().unwrap().take() {
@@ -334,6 +357,12 @@ struct JobEntry {
     /// Displaced by active High-priority work (preemption); state stays
     /// resident, the job is outside the ready queue until resumed.
     paused: bool,
+    /// When the job (re)entered the ready queue; consumed at dispatch for
+    /// the queue-wait span. `None` while in flight or paused.
+    queued_at: Option<Instant>,
+    /// When the job was preempted; consumed at resume for the preempted
+    /// span. Only stamped while spans are enabled.
+    paused_at: Option<Instant>,
 }
 
 /// Count the terminal status, deliver the result, finalize the snapshot.
@@ -349,6 +378,7 @@ fn finalize_job(
     now: Instant,
     metrics: &Metrics,
     registry: &Registry,
+    tracer: &Tracer,
 ) {
     let counter = match status {
         JobStatus::Completed => &metrics.jobs_completed,
@@ -358,6 +388,16 @@ fn finalize_job(
         JobStatus::Failed => &metrics.jobs_failed,
     };
     counter.fetch_add(1, Ordering::Relaxed);
+    tracer.event(
+        id.0,
+        match status {
+            JobStatus::Completed => EventKind::Complete,
+            JobStatus::EarlyStopped => EventKind::EarlyStop,
+            JobStatus::Cancelled => EventKind::Cancel,
+            JobStatus::DeadlineMiss => EventKind::DeadlineMiss,
+            JobStatus::Failed => EventKind::Fail,
+        },
+    );
     let latency = now.duration_since(entry.submitted);
     // Latency percentiles describe served work; cancelled / deadline-missed
     // jobs would skew them with client behavior rather than system behavior.
@@ -464,11 +504,19 @@ fn resume_paused(
     table: &mut HashMap<JobId, JobEntry>,
     batcher: &mut Batcher,
     now: Instant,
+    tracer: &Tracer,
 ) {
     for id in paused.drain(..) {
         if let Some(entry) = table.get_mut(&id) {
             if entry.paused {
                 entry.paused = false;
+                entry.queued_at = Some(now);
+                tracer.event(id.0, EventKind::Resume);
+                // The preempted span covers pause → resume on the
+                // scheduler lane; record_span no-ops when spans are off.
+                if let Some(since) = entry.paused_at.take() {
+                    tracer.record_span(Stage::Preempted, id.0, 0, since, now);
+                }
                 batcher.push_job(entry.variant, id, now, entry.priority, entry.deadline);
             }
         }
@@ -482,11 +530,15 @@ fn pause_job(
     table: &mut HashMap<JobId, JobEntry>,
     paused: &mut Vec<JobId>,
     metrics: &Metrics,
+    tracer: &Tracer,
 ) {
     if let Some(e) = table.get_mut(&id) {
         e.paused = true;
+        e.queued_at = None;
+        e.paused_at = tracer.spans_enabled().then(Instant::now);
         paused.push(id);
         metrics.jobs_preempted.fetch_add(1, Ordering::Relaxed);
+        tracer.event(id.0, EventKind::Preempt);
     }
 }
 
@@ -500,11 +552,12 @@ fn on_job_terminal(
     table: &mut HashMap<JobId, JobEntry>,
     batcher: &mut Batcher,
     now: Instant,
+    tracer: &Tracer,
 ) {
     if priority == Priority::High {
         *high_active = high_active.saturating_sub(1);
         if *high_active == 0 {
-            resume_paused(paused, table, batcher, now);
+            resume_paused(paused, table, batcher, now, tracer);
         }
     }
 }
@@ -516,6 +569,7 @@ fn scheduler_loop(
     serve: ServeParams,
     metrics: Arc<Metrics>,
     registry: Registry,
+    tracer: Arc<Tracer>,
 ) {
     let mut table: HashMap<JobId, JobEntry> = HashMap::new();
     let window = Duration::from_micros(serve.batch_window_us);
@@ -532,14 +586,16 @@ fn scheduler_loop(
     // parked jobs live in per-variant SoA slabs, and High-priority work
     // preempts Low-priority jobs at chunk boundaries.
     let resident = serve.resident_store && pjrt_tx.is_none();
-    let mut store = ResidentStore::new(metrics.clone());
+    let mut store = ResidentStore::new(metrics.clone(), tracer.clone());
     // Low jobs displaced by active High work (FIFO); resumed when the last
     // High job leaves the table.
     let mut paused: Vec<JobId> = Vec::new();
     let mut high_active: usize = 0;
 
     let dispatch = |plan_jobs: Vec<RunningJob>, multi: bool| {
-        let msg = WorkMsg::Batch(plan_jobs, K_CHUNK);
+        // The send stamp feeds the worker-side dispatch span (channel
+        // wait); one clock read per chunk dispatch, spans on or off.
+        let msg = WorkMsg::Batch(plan_jobs, K_CHUNK, Instant::now());
         match &pjrt_tx {
             // The AOT artifacts are V = 2 lowerings: multivar plans always
             // execute on the engine pool, PJRT or not.
@@ -569,6 +625,7 @@ fn scheduler_loop(
                         let variant = inst.variant();
                         let deadline = req.deadline.map(|d| now + d);
                         let priority = req.priority;
+                        tracer.event(id.0, EventKind::Submit);
                         table.insert(
                             id,
                             JobEntry {
@@ -590,6 +647,8 @@ fn scheduler_loop(
                                 cancelled: false,
                                 in_flight: false,
                                 paused: false,
+                                queued_at: Some(now),
+                                paused_at: None,
                             },
                         );
                         if priority == Priority::High {
@@ -600,7 +659,7 @@ fn scheduler_loop(
                                 // Low chunks finish and pause at their
                                 // boundary (Done handling).
                                 for (_, low_id) in batcher.pause_class(Priority::Low) {
-                                    pause_job(low_id, &mut table, &mut paused, &metrics);
+                                    pause_job(low_id, &mut table, &mut paused, &metrics, &tracer);
                                 }
                             }
                         }
@@ -608,6 +667,7 @@ fn scheduler_loop(
                     }
                     Err(e) => {
                         metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        tracer.event(id.0, EventKind::Fail);
                         {
                             let mut reg = registry.lock().unwrap();
                             if let Some(s) = reg.get_mut(&id) {
@@ -667,6 +727,7 @@ fn scheduler_loop(
                             now,
                             &metrics,
                             &registry,
+                            &tracer,
                         );
                         on_job_terminal(
                             priority,
@@ -675,6 +736,7 @@ fn scheduler_loop(
                             &mut table,
                             &mut batcher,
                             now,
+                            &tracer,
                         );
                     }
                     // unwrap: parked_now == Some(_) proves the id is present.
@@ -684,6 +746,10 @@ fn scheduler_loop(
             }
             Ok(SchedMsg::Done(done)) => {
                 let now = Instant::now();
+                // Scheduler-side result extraction (snapshot refresh, slab
+                // re-park, terminal accounting) is scatter/extract time on
+                // the scheduler lane.
+                let _extract = tracer.span(Stage::ScatterExtract, 0, 0);
                 match done {
                     DoneMsg::Batch { jobs, backend } => {
                         for job in jobs {
@@ -700,6 +766,7 @@ fn scheduler_loop(
                             metrics
                                 .generations
                                 .fetch_add(u64::from(executed), Ordering::Relaxed);
+                            tracer.event(id.0, EventKind::Chunk);
 
                             // Between-chunks observability: shared snapshot
                             // + the handle's progress stream.
@@ -734,7 +801,7 @@ fn scheduler_loop(
                                     let priority = entry.priority;
                                     finalize_job(
                                         id, entry, &inst, status, backend, now, &metrics,
-                                        &registry,
+                                        &registry, &tracer,
                                     );
                                     on_job_terminal(
                                         priority,
@@ -743,6 +810,7 @@ fn scheduler_loop(
                                         &mut table,
                                         &mut batcher,
                                         now,
+                                        &tracer,
                                     );
                                 }
                                 None => {
@@ -768,8 +836,16 @@ fn scheduler_loop(
                                         // Chunk-boundary preemption: the
                                         // next chunk is displaced by active
                                         // High work.
-                                        pause_job(id, &mut table, &mut paused, &metrics);
+                                        pause_job(
+                                            id,
+                                            &mut table,
+                                            &mut paused,
+                                            &metrics,
+                                            &tracer,
+                                        );
                                     } else {
+                                        // unwrap: same live entry as above.
+                                        table.get_mut(&id).unwrap().queued_at = Some(now);
                                         batcher.push_job(variant, id, now, priority, deadline);
                                     }
                                 }
@@ -777,7 +853,7 @@ fn scheduler_loop(
                         }
                     }
                     DoneMsg::Slab { task, backend } => {
-                        let SlabTask { rslab, gens } = task;
+                        let SlabTask { rslab, gens, .. } = task;
                         let ids = rslab.ids.clone();
                         store.finish_dispatch(rslab);
                         store.debug_check("slab returned");
@@ -810,7 +886,7 @@ fn scheduler_loop(
                                     let prev = snapshot_backend(&registry, id);
                                     finalize_job(
                                         id, entry, &inst, status, prev, now, &metrics,
-                                        &registry,
+                                        &registry, &tracer,
                                     );
                                     on_job_terminal(
                                         priority,
@@ -819,6 +895,7 @@ fn scheduler_loop(
                                         &mut table,
                                         &mut batcher,
                                         now,
+                                        &tracer,
                                     );
                                 }
                                 continue;
@@ -829,6 +906,7 @@ fn scheduler_loop(
                             metrics
                                 .generations
                                 .fetch_add(u64::from(executed), Ordering::Relaxed);
+                            tracer.event(id.0, EventKind::Chunk);
 
                             let Some((generations, best_y, best_x, curve)) =
                                 store.row_progress(id)
@@ -868,7 +946,7 @@ fn scheduler_loop(
                                         store.evict(id).expect("advanced row is resident");
                                     finalize_job(
                                         id, entry, &inst, status, backend, now, &metrics,
-                                        &registry,
+                                        &registry, &tracer,
                                     );
                                     on_job_terminal(
                                         priority,
@@ -877,6 +955,7 @@ fn scheduler_loop(
                                         &mut table,
                                         &mut batcher,
                                         now,
+                                        &tracer,
                                     );
                                 }
                                 None => {
@@ -884,8 +963,15 @@ fn scheduler_loop(
                                     let priority = entry.priority;
                                     let deadline = entry.deadline;
                                     if priority == Priority::Low && high_active > 0 {
-                                        pause_job(id, &mut table, &mut paused, &metrics);
+                                        pause_job(
+                                            id,
+                                            &mut table,
+                                            &mut paused,
+                                            &metrics,
+                                            &tracer,
+                                        );
                                     } else {
+                                        entry.queued_at = Some(now);
                                         batcher.push_job(variant, id, now, priority, deadline);
                                     }
                                 }
@@ -934,6 +1020,7 @@ fn scheduler_loop(
                     now,
                     &metrics,
                     &registry,
+                    &tracer,
                 );
             }
         }
@@ -945,6 +1032,7 @@ fn scheduler_loop(
             for plan in plans {
                 let now = Instant::now();
                 let multi = plan.variant.is_multi();
+                let formed_since = plan.oldest_since;
                 let mut running = Vec::with_capacity(plan.jobs.len());
                 for id in plan.jobs {
                     // Stale batcher entries (cancelled / finalized jobs)
@@ -971,6 +1059,7 @@ fn scheduler_loop(
                             now,
                             &metrics,
                             &registry,
+                            &tracer,
                         );
                         on_job_terminal(
                             priority,
@@ -979,6 +1068,7 @@ fn scheduler_loop(
                             &mut table,
                             &mut batcher,
                             now,
+                            &tracer,
                         );
                         continue;
                     }
@@ -987,6 +1077,10 @@ fn scheduler_loop(
                     // unwrap: ...and that it holds a parked AoS instance.
                     let inst = entry.inst.take().unwrap();
                     entry.in_flight = true;
+                    // Queue-wait span: ready → dispatched (scheduler lane).
+                    if let Some(since) = entry.queued_at.take() {
+                        tracer.record_span(Stage::QueueWait, id.0, 0, since, now);
+                    }
                     running.push(RunningJob {
                         id,
                         inst,
@@ -997,6 +1091,12 @@ fn scheduler_loop(
                 if running.is_empty() {
                     continue;
                 }
+                // Batch-formation span: first member ready → plan drained.
+                if tracer.spans_enabled() {
+                    if let Some(since) = formed_since {
+                        tracer.record_span(Stage::BatchFormation, running[0].id.0, 0, since, now);
+                    }
+                }
                 metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
                 if !dispatch(running, multi) {
                     return; // backend gone
@@ -1006,11 +1106,18 @@ fn scheduler_loop(
             // Resident mode: same-variant plans merge into ONE slab dispatch
             // — the variant's cohort steps as a unit, zero-copy. max_batch
             // still bounds the AoS fallback batches below.
-            let mut merged: BTreeMap<VariantKey, Vec<JobId>> = BTreeMap::new();
+            let mut merged: BTreeMap<VariantKey, (Vec<JobId>, Option<Instant>)> = BTreeMap::new();
             for plan in plans {
-                merged.entry(plan.variant).or_default().extend(plan.jobs);
+                let slot = merged.entry(plan.variant).or_default();
+                slot.0.extend(plan.jobs);
+                // Formation is measured from the merged cohort's oldest
+                // ready member.
+                slot.1 = match (slot.1, plan.oldest_since) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
             }
-            for (variant, plan_ids) in merged {
+            for (variant, (plan_ids, formed_since)) in merged {
                 let now = Instant::now();
                 let mut ready: Vec<JobId> = Vec::new();
                 for id in plan_ids {
@@ -1049,6 +1156,7 @@ fn scheduler_loop(
                             now,
                             &metrics,
                             &registry,
+                            &tracer,
                         );
                         on_job_terminal(
                             priority,
@@ -1057,6 +1165,7 @@ fn scheduler_loop(
                             &mut table,
                             &mut batcher,
                             now,
+                            &tracer,
                         );
                         continue;
                     }
@@ -1080,6 +1189,9 @@ fn scheduler_loop(
                             // unwrap: non-resident ready jobs park AoS state.
                             let inst = entry.inst.take().unwrap();
                             entry.in_flight = true;
+                            if let Some(since) = entry.queued_at.take() {
+                                tracer.record_span(Stage::QueueWait, id.0, 0, since, now);
+                            }
                             running.push(RunningJob {
                                 id,
                                 inst,
@@ -1117,11 +1229,25 @@ fn scheduler_loop(
                         // unwrap: ready ids were verified live above.
                         let entry = table.get_mut(rid).unwrap();
                         entry.in_flight = true;
+                        if let Some(since) = entry.queued_at.take() {
+                            tracer.record_span(Stage::QueueWait, rid.0, 0, since, now);
+                        }
                         gens[row] = entry.remaining.min(K_CHUNK);
                     }
                 }
+                if tracer.spans_enabled() {
+                    if let Some(since) = formed_since {
+                        let rep = ready.first().map_or(0, |j| j.0);
+                        tracer.record_span(Stage::BatchFormation, rep, 0, since, now);
+                    }
+                }
                 metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
-                if engine_tx.send(WorkMsg::Slab(SlabTask { rslab, gens })).is_err() {
+                let task = SlabTask {
+                    rslab,
+                    gens,
+                    sent: Instant::now(),
+                };
+                if engine_tx.send(WorkMsg::Slab(task)).is_err() {
                     return; // backend gone
                 }
             }

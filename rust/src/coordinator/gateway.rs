@@ -11,6 +11,9 @@
 //! * `GET    /v1/jobs/:id` — status + curve-so-far (`:id` is `7` or `job-7`)
 //! * `DELETE /v1/jobs/:id` — cooperative cancellation
 //! * `GET    /v1/metrics`  — serving counters + latency percentiles
+//!   (`?format=prometheus` switches to text exposition format)
+//! * `GET    /v1/trace`    — bounded journal of job-lifecycle events;
+//!   each job's slice also rides along as `timeline` in `GET /v1/jobs/:id`
 //!
 //! The gateway is a thin marshalling shim: every request lands on the SAME
 //! [`Coordinator::submit`] / [`Coordinator::job`] / [`Coordinator::cancel`]
@@ -23,6 +26,7 @@ use crate::coordinator::job::{JobId, JobSnapshot, OptimizeRequest, Priority};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::Coordinator;
 use crate::jsonmini::{self, obj, Value};
+use crate::obs::{EventRecord, Tracer};
 use anyhow::Context as _;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -104,6 +108,7 @@ struct Request {
 
 struct Response {
     status: u16,
+    content_type: &'static str,
     body: String,
 }
 
@@ -111,7 +116,18 @@ impl Response {
     fn json(status: u16, v: Value) -> Self {
         Self {
             status,
+            content_type: "application/json",
             body: jsonmini::to_string(&v),
+        }
+    }
+
+    /// Plain-text body (Prometheus exposition format uses the versioned
+    /// text/plain content type its scrapers expect).
+    fn text(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body,
         }
     }
 
@@ -131,9 +147,10 @@ impl Response {
         };
         write!(
             stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
             self.status,
             reason,
+            self.content_type,
             self.body.len(),
             self.body
         )?;
@@ -190,19 +207,39 @@ fn read_request(stream: &mut TcpStream) -> crate::Result<Request> {
 }
 
 fn route(req: &Request, coord: &Coordinator) -> Response {
-    let path = req.path.split('?').next().unwrap_or("");
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
     match (req.method.as_str(), path) {
         ("POST", "/v1/jobs") => post_job(&req.body, coord),
         ("GET", "/v1/jobs") => {
             let jobs: Vec<Value> = coord.job_summaries().iter().map(snapshot_summary).collect();
             Response::json(200, obj([("jobs", Value::Array(jobs))]))
         }
-        ("GET", "/v1/metrics") => Response::json(200, metrics_json(&coord.metrics())),
+        ("GET", "/v1/metrics") => match query_param(query, "format") {
+            None | Some("json") => Response::json(200, metrics_json(&coord.metrics())),
+            Some("prometheus") => Response::text(200, coord.metrics_sink().render_prometheus()),
+            Some(other) => Response::error(
+                400,
+                format!("unknown metrics format `{other}` (expected `json` or `prometheus`)"),
+            ),
+        },
+        ("GET", "/v1/trace") => Response::json(200, trace_json(coord.tracer())),
         (method, p) => match p.strip_prefix("/v1/jobs/") {
             Some(id_part) => match parse_job_id(id_part) {
                 Some(id) => match method {
                     "GET" => match coord.job(id) {
-                        Some(s) => Response::json(200, snapshot_json(&s)),
+                        Some(s) => {
+                            let mut v = snapshot_json(&s);
+                            if let Value::Object(fields) = &mut v {
+                                fields.insert(
+                                    "timeline".to_string(),
+                                    timeline_json(&coord.tracer().events_for(id.0)),
+                                );
+                            }
+                            Response::json(200, v)
+                        }
                         None => Response::error(404, format!("unknown job `{id}`")),
                     },
                     "DELETE" => delete_job(id, coord),
@@ -222,6 +259,45 @@ fn route(req: &Request, coord: &Coordinator) -> Response {
 fn parse_job_id(s: &str) -> Option<JobId> {
     let digits = s.strip_prefix("job-").unwrap_or(s);
     digits.parse::<u64>().ok().map(JobId)
+}
+
+/// First value for `key` in a raw query string (`a=1&b=2`). No
+/// percent-decoding — the only recognised values are plain identifiers.
+fn query_param<'q>(query: &'q str, key: &str) -> Option<&'q str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then_some(v)
+    })
+}
+
+/// One journal event as JSON (shared by `/v1/trace` and job timelines).
+fn event_json(e: &EventRecord) -> Value {
+    obj([
+        ("seq", Value::Int(e.seq as i64)),
+        ("at_us", Value::Int(e.at_us as i64)),
+        ("job", Value::Int(e.job as i64)),
+        ("kind", Value::from(e.kind.as_str())),
+    ])
+}
+
+/// A job's lifecycle slice of the journal, oldest first.
+fn timeline_json(events: &[EventRecord]) -> Value {
+    Value::Array(events.iter().map(event_json).collect())
+}
+
+/// `GET /v1/trace`: the global journal plus loss accounting, so a client
+/// can tell "no events" from "events aged out of the ring".
+fn trace_json(tracer: &Tracer) -> Value {
+    let events = tracer.events();
+    obj([
+        ("events", timeline_json(&events)),
+        ("recorded", Value::Int(tracer.events_recorded() as i64)),
+        ("dropped", Value::Int(tracer.events_dropped() as i64)),
+        (
+            "spans_recorded",
+            Value::Int(tracer.spans_recorded() as i64),
+        ),
+    ])
 }
 
 fn post_job(body: &[u8], coord: &Coordinator) -> Response {
@@ -415,5 +491,47 @@ mod tests {
         assert!(out.contains("\"deadline_misses\":0"), "{out}");
         assert!(out.contains("\"jobs_preempted\":0"), "{out}");
         assert!(out.contains("\"resident_bytes\":0"), "{out}");
+    }
+
+    #[test]
+    fn query_params_parse_first_match() {
+        assert_eq!(query_param("format=prometheus", "format"), Some("prometheus"));
+        assert_eq!(query_param("a=1&format=json&b=2", "format"), Some("json"));
+        assert_eq!(query_param("a=1&b=2", "format"), None);
+        assert_eq!(query_param("", "format"), None);
+        // Bare key with no `=` reads as the empty value, not a miss.
+        assert_eq!(query_param("format", "format"), Some(""));
+    }
+
+    #[test]
+    fn trace_json_carries_events_and_loss_accounting() {
+        use crate::obs::EventKind;
+        let t = Tracer::new(false);
+        t.event(7, EventKind::Submit);
+        t.event(7, EventKind::Chunk);
+        t.event(7, EventKind::Complete);
+        let v = trace_json(&t);
+        let events = v.req_array("events").unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].req_str("kind").unwrap(), "submit");
+        assert_eq!(events[2].req_str("kind").unwrap(), "complete");
+        assert_eq!(v.req_i64("recorded").unwrap(), 3);
+        assert_eq!(v.req_i64("dropped").unwrap(), 0);
+        // Sequence numbers are monotone within the dump.
+        let seqs: Vec<i64> = events.iter().map(|e| e.req_i64("seq").unwrap()).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+    }
+
+    #[test]
+    fn timeline_json_filters_to_one_job() {
+        use crate::obs::EventKind;
+        let t = Tracer::new(false);
+        t.event(1, EventKind::Submit);
+        t.event(2, EventKind::Submit);
+        t.event(1, EventKind::Complete);
+        let tl = timeline_json(&t.events_for(1));
+        let arr = tl.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr.iter().all(|e| e.req_i64("job").unwrap() == 1));
     }
 }

@@ -1,7 +1,14 @@
-//! Serving metrics: counters (atomics) + latency reservoir.
+//! Serving metrics: counters (atomics) + bounded latency/batch histograms.
+//!
+//! Earlier revisions kept every latency and batch-size sample in a
+//! `Mutex<Vec<_>>`, which grows without bound under the sustained traffic
+//! the ROADMAP targets. Both reservoirs are now [`obs::Histogram`]s: fixed
+//! footprint no matter how many samples arrive, lock-free recording, and
+//! percentile math that reproduces the old exact-sort reference on the
+//! pinned test inputs (see `obs/histogram.rs` for the rank argument).
 
+use crate::obs::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
 /// Shared metrics sink.
@@ -35,8 +42,8 @@ pub struct Metrics {
     pub generations: AtomicU64,
     /// Batch-slot padding waste (padded rows dispatched).
     pub padded_rows: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
-    batch_sizes: Mutex<Vec<usize>>,
+    latency: Histogram,
+    batch: Histogram,
 }
 
 impl Metrics {
@@ -45,35 +52,24 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        self.latencies_us
-            .lock()
-            .unwrap()
-            .push(d.as_micros() as u64);
+        self.latency.record(d.as_micros() as u64);
     }
 
     pub fn record_batch(&self, effective: usize, padded: usize) {
-        self.batch_sizes.lock().unwrap().push(effective);
+        self.batch.record(effective as u64);
         self.padded_rows.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    /// Upper bound on the bytes this sink can ever hold, independent of
+    /// how many samples have been recorded. The regression test below pins
+    /// it against a fixed ceiling after a million recordings.
+    pub const fn telemetry_bytes() -> usize {
+        2 * Histogram::FOOTPRINT_BYTES + std::mem::size_of::<Metrics>()
     }
 
     /// Point-in-time snapshot with percentile math done.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies_us.lock().unwrap().clone();
-        lat.sort_unstable();
-        let pct = |q: f64| -> Duration {
-            if lat.is_empty() {
-                Duration::ZERO
-            } else {
-                let idx = ((lat.len() - 1) as f64 * q) as usize;
-                Duration::from_micros(lat[idx])
-            }
-        };
-        let sizes = self.batch_sizes.lock().unwrap();
-        let mean_batch = if sizes.is_empty() {
-            0.0
-        } else {
-            sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
-        };
+        let pct = |q: f64| Duration::from_micros(self.latency.percentile(q));
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
@@ -92,10 +88,101 @@ impl Metrics {
             latency_p50: pct(0.50),
             latency_p95: pct(0.95),
             latency_p99: pct(0.99),
-            latency_max: pct(1.0),
-            mean_batch,
-            samples: lat.len(),
+            latency_max: Duration::from_micros(self.latency.max()),
+            mean_batch: self.batch.mean(),
+            samples: self.latency.count() as usize,
         }
+    }
+
+    /// Prometheus text exposition (version 0.0.4). Counters end in
+    /// `_total`, the resident-bytes gauge keeps its name, and the two
+    /// histograms expose cumulative `_bucket{le=...}` series plus `_sum`/
+    /// `_count`. Latency is exported in seconds; its `le` edges sit on
+    /// power-of-two microsecond boundaries, where the underlying log-scale
+    /// buckets are exact (`Histogram::count_below`).
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(2048);
+        let counters: [(&str, &AtomicU64); 13] = [
+            ("jobs_submitted", &self.jobs_submitted),
+            ("jobs_completed", &self.jobs_completed),
+            ("jobs_early_stopped", &self.jobs_early_stopped),
+            ("jobs_cancelled", &self.jobs_cancelled),
+            ("deadline_misses", &self.deadline_misses),
+            ("jobs_preempted", &self.jobs_preempted),
+            ("jobs_failed", &self.jobs_failed),
+            ("chunks_dispatched", &self.chunks_dispatched),
+            ("pjrt_dispatches", &self.pjrt_dispatches),
+            ("engine_dispatches", &self.engine_dispatches),
+            ("engine_batch_jobs", &self.engine_batch_jobs),
+            ("generations", &self.generations),
+            ("padded_rows", &self.padded_rows),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE fpga_ga_{name}_total counter");
+            let _ = writeln!(
+                out,
+                "fpga_ga_{name}_total {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(out, "# TYPE fpga_ga_resident_bytes gauge");
+        let _ = writeln!(
+            out,
+            "fpga_ga_resident_bytes {}",
+            self.resident_bytes.load(Ordering::Relaxed)
+        );
+
+        // Job latency: power-of-two µs edges, reported in seconds.
+        const LAT_EDGES_US: [u64; 10] = [
+            64, 256, 1024, 4096, 16_384, 65_536, 262_144, 1_048_576, 4_194_304, 16_777_216,
+        ];
+        let _ = writeln!(out, "# TYPE fpga_ga_job_latency_seconds histogram");
+        for us in LAT_EDGES_US {
+            let _ = writeln!(
+                out,
+                "fpga_ga_job_latency_seconds_bucket{{le=\"{}\"}} {}",
+                us as f64 / 1e6,
+                self.latency.count_below(us)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "fpga_ga_job_latency_seconds_bucket{{le=\"+Inf\"}} {}",
+            self.latency.count()
+        );
+        let _ = writeln!(
+            out,
+            "fpga_ga_job_latency_seconds_sum {}",
+            self.latency.sum() as f64 / 1e6
+        );
+        let _ = writeln!(
+            out,
+            "fpga_ga_job_latency_seconds_count {}",
+            self.latency.count()
+        );
+
+        // Effective batch sizes: small-integer edges, all exact (< SUB).
+        const BATCH_EDGES: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+        let _ = writeln!(out, "# TYPE fpga_ga_batch_size histogram");
+        for b in BATCH_EDGES {
+            // Prometheus `le` is inclusive; samples are integers, so
+            // `v <= b` is `v < b + 1` and b + 1 stays within the exact
+            // unit-width bucket range of the histogram.
+            let _ = writeln!(
+                out,
+                "fpga_ga_batch_size_bucket{{le=\"{b}\"}} {}",
+                self.batch.count_below(b + 1)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "fpga_ga_batch_size_bucket{{le=\"+Inf\"}} {}",
+            self.batch.count()
+        );
+        let _ = writeln!(out, "fpga_ga_batch_size_sum {}", self.batch.sum());
+        let _ = writeln!(out, "fpga_ga_batch_size_count {}", self.batch.count());
+        out
     }
 }
 
@@ -197,5 +284,51 @@ mod tests {
         let m = Metrics::new();
         m.jobs_submitted.store(3, Ordering::Relaxed);
         assert!(m.snapshot().render().contains("3 submitted"));
+    }
+
+    #[test]
+    fn a_million_recordings_stay_under_a_fixed_byte_ceiling() {
+        // Regression for the unbounded `Vec` reservoirs: the sink's memory
+        // is a compile-time constant, so a million samples change nothing.
+        let m = Metrics::new();
+        for i in 0..1_000_000u64 {
+            m.record_latency(Duration::from_micros(i % 250_000));
+            m.record_batch((i % 64) as usize, 0);
+        }
+        assert_eq!(m.snapshot().samples, 1_000_000);
+        // Two histograms (~60 KiB each) + the counter block.
+        assert!(
+            Metrics::telemetry_bytes() < 256 * 1024,
+            "telemetry footprint {} exceeds ceiling",
+            Metrics::telemetry_bytes()
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_has_counters_and_histograms() {
+        let m = Metrics::new();
+        m.jobs_submitted.store(3, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(500));
+        m.record_latency(Duration::from_micros(2000));
+        m.record_batch(4, 0);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE fpga_ga_jobs_submitted_total counter"));
+        assert!(text.contains("fpga_ga_jobs_submitted_total 3"));
+        assert!(text.contains("# TYPE fpga_ga_resident_bytes gauge"));
+        // 500µs <= 1024µs edge; 2000µs lands in the next one.
+        assert!(text.contains("fpga_ga_job_latency_seconds_bucket{le=\"0.001024\"} 1"));
+        assert!(text.contains("fpga_ga_job_latency_seconds_bucket{le=\"0.004096\"} 2"));
+        assert!(text.contains("fpga_ga_job_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("fpga_ga_job_latency_seconds_count 2"));
+        assert!(text.contains("fpga_ga_job_latency_seconds_sum 0.0025"));
+        assert!(text.contains("fpga_ga_batch_size_bucket{le=\"4\"} 1"));
+        assert!(text.contains("fpga_ga_batch_size_sum 4"));
+        // Bucket series are cumulative and monotone.
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("fpga_ga_job_latency_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]));
     }
 }

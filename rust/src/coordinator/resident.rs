@@ -19,6 +19,7 @@
 use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
 use crate::ga::{AnyGa, SoaSlab, VariantKey};
+use crate::obs::{EventKind, Tracer};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -57,15 +58,18 @@ pub(crate) struct ResidentStore {
     /// Which variant each resident job lives in (parked or in flight).
     homes: HashMap<JobId, VariantKey>,
     metrics: Arc<Metrics>,
+    /// Journals admit/evict lifecycle events (job timelines, `/v1/trace`).
+    tracer: Arc<Tracer>,
 }
 
 impl ResidentStore {
-    pub fn new(metrics: Arc<Metrics>) -> Self {
+    pub fn new(metrics: Arc<Metrics>, tracer: Arc<Tracer>) -> Self {
         Self {
             parked: HashMap::new(),
             in_flight: HashSet::new(),
             homes: HashMap::new(),
             metrics,
+            tracer,
         }
     }
 
@@ -98,6 +102,7 @@ impl ResidentStore {
         self.metrics
             .resident_bytes
             .fetch_add(rslab.slab.row_state_bytes() as u64, Ordering::Relaxed);
+        self.tracer.event(id.0, EventKind::Admit);
     }
 
     /// Admit a machine into the variant's PARKED slab (creating it if
@@ -119,6 +124,7 @@ impl ResidentStore {
         self.metrics
             .resident_bytes
             .fetch_add(rslab.slab.row_state_bytes() as u64, Ordering::Relaxed);
+        self.tracer.event(id.0, EventKind::Admit);
         Ok(())
     }
 
@@ -152,6 +158,7 @@ impl ResidentStore {
         if rslab.ids.is_empty() {
             self.parked.remove(&key);
         }
+        self.tracer.event(id.0, EventKind::Evict);
         Some(inst)
     }
 
@@ -274,7 +281,7 @@ mod tests {
     #[test]
     fn admit_step_evict_lifecycle_and_gauge() {
         let metrics = Arc::new(Metrics::new());
-        let mut store = ResidentStore::new(metrics.clone());
+        let mut store = ResidentStore::new(metrics.clone(), Arc::new(Tracer::disabled()));
         let a = job(1);
         let key = a.variant();
         let mut reference = a.clone();
@@ -306,7 +313,7 @@ mod tests {
     #[test]
     fn check_invariants_catches_seeded_store_corruption() {
         let metrics = Arc::new(Metrics::new());
-        let mut store = ResidentStore::new(metrics.clone());
+        let mut store = ResidentStore::new(metrics.clone(), Arc::new(Tracer::disabled()));
         let a = job(1);
         let key = a.variant();
         let mut rslab = store.begin_dispatch(key);
@@ -337,7 +344,7 @@ mod tests {
     #[test]
     fn eviction_remaps_swapped_row_ids() {
         let metrics = Arc::new(Metrics::new());
-        let mut store = ResidentStore::new(metrics);
+        let mut store = ResidentStore::new(metrics, Arc::new(Tracer::disabled()));
         let jobs: Vec<AnyGa> = (0..3).map(|s| job(10 + s)).collect();
         let key = jobs[0].variant();
         let mut rslab = store.begin_dispatch(key);

@@ -7,11 +7,13 @@ use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::resident::ResidentSlab;
 use crate::ga::{AnyGa, BackendKind, GaInstance, KernelKind, MultiVarGa, StepBackend};
+use crate::obs::{Stage, Tracer};
 use crate::runtime::{ChunkIo, Manifest, Runtime};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A job in flight: canonical behavioral state + chunk accounting. The
 /// machine is an [`AnyGa`]: the batcher's [`crate::ga::VariantKey`] keying
@@ -32,12 +34,16 @@ pub(crate) struct RunningJob {
 pub(crate) struct SlabTask {
     pub rslab: ResidentSlab,
     pub gens: Vec<u32>,
+    /// Scheduler-side send timestamp: the worker's dispatch span measures
+    /// channel wait as `sent → pickup` (obs `dispatch` stage).
+    pub sent: Instant,
 }
 
 /// Work sent to a backend: same-variant jobs to advance one chunk — either
 /// materialized AoS machines (`Batch`) or a resident SoA slab (`Slab`).
+/// The `Instant` is the scheduler-side send timestamp (dispatch span).
 pub(crate) enum WorkMsg {
-    Batch(Vec<RunningJob>, u32),
+    Batch(Vec<RunningJob>, u32, Instant),
     Slab(SlabTask),
     Shutdown,
 }
@@ -139,12 +145,17 @@ pub(crate) fn spawn_engine_pool(
     work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
 ) -> Vec<JoinHandle<()>> {
     (0..count)
         .map(|i| {
             let rx = work_rx.clone();
             let tx = done_tx.clone();
             let metrics = metrics.clone();
+            let tracer = tracer.clone();
+            // Span lane for this worker: 0 is the scheduler, workers are
+            // 1-based, PJRT is `Tracer::PJRT_LANE`.
+            let lane = 1 + i as u32;
             std::thread::Builder::new()
                 .name(format!("ga-engine-{i}"))
                 .spawn(move || {
@@ -155,9 +166,23 @@ pub(crate) fn spawn_engine_pool(
                             guard.recv()
                         };
                         match msg {
-                            Ok(WorkMsg::Batch(mut jobs, chunk)) => {
-                                let advanced =
-                                    run_engine_batch(backend.as_ref(), &mut jobs, chunk);
+                            Ok(WorkMsg::Batch(mut jobs, chunk, sent)) => {
+                                let rep = jobs.first().map_or(0, |j| j.id.0);
+                                if tracer.spans_enabled() {
+                                    tracer.record_span(
+                                        Stage::Dispatch,
+                                        rep,
+                                        lane,
+                                        sent,
+                                        Instant::now(),
+                                    );
+                                }
+                                // Timed AROUND the backend call (lint R3:
+                                // no clocks inside kernels).
+                                let advanced = {
+                                    let _step = tracer.span(Stage::FusedStep, rep, lane);
+                                    run_engine_batch(backend.as_ref(), &mut jobs, chunk)
+                                };
                                 metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
                                 metrics
                                     .engine_batch_jobs
@@ -174,7 +199,21 @@ pub(crate) fn spawn_engine_pool(
                                 }
                             }
                             Ok(WorkMsg::Slab(mut task)) => {
-                                let advanced = run_slab_task(backend.as_ref(), &mut task);
+                                // Slab spans are cohort-scoped (job 0): one
+                                // dispatch advances the variant's cohort.
+                                if tracer.spans_enabled() {
+                                    tracer.record_span(
+                                        Stage::Dispatch,
+                                        0,
+                                        lane,
+                                        task.sent,
+                                        Instant::now(),
+                                    );
+                                }
+                                let advanced = {
+                                    let _step = tracer.span(Stage::FusedStep, 0, lane);
+                                    run_slab_task(backend.as_ref(), &mut task)
+                                };
                                 metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
                                 metrics
                                     .engine_batch_jobs
@@ -212,10 +251,12 @@ pub(crate) fn spawn_pjrt_thread(
     work_rx: Receiver<WorkMsg>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ga-pjrt".into())
         .spawn(move || {
+            let lane = Tracer::PJRT_LANE;
             let mut rt = match Runtime::new(manifest) {
                 Ok(rt) => Some(rt),
                 Err(e) => {
@@ -228,7 +269,11 @@ pub(crate) fn spawn_pjrt_thread(
             // when PJRT is absent or failing.
             let fallback = fallback.instantiate_with(kernels);
             let run_fallback = |jobs: &mut [RunningJob], chunk: u32| {
-                let advanced = run_engine_batch(fallback.as_ref(), jobs, chunk);
+                let rep = jobs.first().map_or(0, |j| j.id.0);
+                let advanced = {
+                    let _step = tracer.span(Stage::FusedStep, rep, lane);
+                    run_engine_batch(fallback.as_ref(), jobs, chunk)
+                };
                 metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
                 metrics
                     .engine_batch_jobs
@@ -237,9 +282,13 @@ pub(crate) fn spawn_pjrt_thread(
             };
             loop {
                 match work_rx.recv() {
-                    Ok(WorkMsg::Batch(mut jobs, chunk)) => {
+                    Ok(WorkMsg::Batch(mut jobs, chunk, sent)) => {
+                        if tracer.spans_enabled() {
+                            let rep = jobs.first().map_or(0, |j| j.id.0);
+                            tracer.record_span(Stage::Dispatch, rep, lane, sent, Instant::now());
+                        }
                         let executed_by = match rt.as_mut() {
-                            Some(rt) => match run_pjrt_batch(rt, &mut jobs, &metrics) {
+                            Some(rt) => match run_pjrt_batch(rt, &mut jobs, &metrics, &tracer) {
                                 Ok(()) => {
                                     metrics.pjrt_dispatches.fetch_add(1, Ordering::Relaxed);
                                     "pjrt"
@@ -272,7 +321,10 @@ pub(crate) fn spawn_pjrt_thread(
                     // engine pool (resident mode excludes PJRT), but a slab
                     // that lands here still executes correctly.
                     Ok(WorkMsg::Slab(mut task)) => {
-                        let advanced = run_slab_task(fallback.as_ref(), &mut task);
+                        let advanced = {
+                            let _step = tracer.span(Stage::FusedStep, 0, lane);
+                            run_slab_task(fallback.as_ref(), &mut task)
+                        };
                         metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
                         metrics
                             .engine_batch_jobs
@@ -304,6 +356,7 @@ fn run_pjrt_batch(
     rt: &mut Runtime,
     jobs: &mut [RunningJob],
     metrics: &Metrics,
+    tracer: &Tracer,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!jobs.is_empty(), "empty batch");
     // The AOT artifacts are V = 2 lowerings; the scheduler routes multivar
@@ -321,7 +374,7 @@ fn run_pjrt_batch(
             let exe_batch = rt.executable(&dims, remaining)?.meta.batch;
             start + remaining.min(exe_batch)
         };
-        run_pjrt_subbatch(rt, &mut jobs[start..end], metrics)?;
+        run_pjrt_subbatch(rt, &mut jobs[start..end], metrics, tracer)?;
         start = end;
     }
     Ok(())
@@ -333,6 +386,7 @@ fn run_pjrt_subbatch(
     rt: &mut Runtime,
     jobs: &mut [RunningJob],
     metrics: &Metrics,
+    tracer: &Tracer,
 ) -> anyhow::Result<()> {
     let dims = *jobs[0]
         .inst
@@ -343,7 +397,11 @@ fn run_pjrt_subbatch(
     let b = exe.meta.batch;
     let k = exe.meta.k_chunk;
     let rows = jobs.len().min(b);
+    let rep = jobs[0].id.0;
 
+    // Gather marshalling is scatter/extract work — timed around, never
+    // inside, the compiled executable (lint R3).
+    let gather = tracer.span(Stage::ScatterExtract, rep, Tracer::PJRT_LANE);
     let mut io = ChunkIo {
         batch: b,
         pop: Vec::with_capacity(b * dims.n),
@@ -373,12 +431,17 @@ fn run_pjrt_subbatch(
         io.best_y.push(inst.best().y);
         io.best_x.push(inst.best().x);
     }
+    drop(gather);
 
-    let out = exe.run(io)?;
+    let out = {
+        let _step = tracer.span(Stage::FusedStep, rep, Tracer::PJRT_LANE);
+        exe.run(io)?
+    };
     // Recorded only after a successful dispatch: a failed sub-batch falls
     // back to the engine, which records its own batch — counting both
     // would double-book the same jobs.
     metrics.record_batch(rows, b - rows);
+    let _absorb = tracer.span(Stage::ScatterExtract, rep, Tracer::PJRT_LANE);
     for (row, job) in jobs.iter_mut().enumerate().take(rows) {
         let d = &dims;
         let inst = job

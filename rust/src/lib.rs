@@ -35,6 +35,7 @@ pub mod ga;
 pub mod jsonmini;
 pub mod lfsr;
 pub mod lint;
+pub mod obs;
 pub mod prng;
 pub mod problems;
 pub mod rom;

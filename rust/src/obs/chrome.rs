@@ -1,0 +1,94 @@
+//! Chrome trace-event JSON export (`chrome://tracing` / Perfetto).
+//!
+//! Serializes a [`Tracer`]'s retained spans as `ph: "X"` (complete
+//! duration) events and its journal as `ph: "i"` (instant) events, in the
+//! trace-event JSON object format (`{"traceEvents": [...]}`). Timestamps
+//! are microseconds since the tracer's epoch — exactly what the format's
+//! `ts`/`dur` fields expect. Lanes map to `tid` (0 = scheduler, `1 + i` =
+//! engine worker `i`, 100 = PJRT dispatcher) under a single `pid`.
+//!
+//! Written by `optimize --trace-out` / `serve --trace-out`; validated by
+//! the CI trace-smoke step (parse + span-category coverage).
+
+use crate::jsonmini::{obj, Value};
+use crate::obs::tracer::Tracer;
+
+/// Build the full trace-event JSON document for a tracer.
+pub fn chrome_trace(tracer: &Tracer) -> Value {
+    let spans = tracer.spans();
+    let events = tracer.events();
+    let mut out: Vec<Value> = Vec::with_capacity(spans.len() + events.len());
+    for s in &spans {
+        out.push(obj([
+            ("name", Value::from(s.stage.name())),
+            ("cat", Value::from(s.stage.cat())),
+            ("ph", Value::from("X")),
+            ("ts", Value::Int(s.start_us as i64)),
+            ("dur", Value::Int(s.dur_us as i64)),
+            ("pid", Value::Int(1)),
+            ("tid", Value::Int(i64::from(s.lane))),
+            ("args", obj([("job", Value::Int(s.job as i64))])),
+        ]));
+    }
+    for e in &events {
+        out.push(obj([
+            ("name", Value::from(e.kind.as_str())),
+            ("cat", Value::from("lifecycle")),
+            ("ph", Value::from("i")),
+            ("s", Value::from("g")),
+            ("ts", Value::Int(e.at_us as i64)),
+            ("pid", Value::Int(1)),
+            ("tid", Value::Int(0)),
+            (
+                "args",
+                obj([
+                    ("job", Value::Int(e.job as i64)),
+                    ("seq", Value::Int(e.seq as i64)),
+                ]),
+            ),
+        ]));
+    }
+    obj([
+        ("traceEvents", Value::Array(out)),
+        ("displayTimeUnit", Value::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::EventKind;
+    use crate::obs::tracer::Stage;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn export_round_trips_through_jsonmini() {
+        let t = Tracer::new(true);
+        let t0 = Instant::now();
+        t.record_span(Stage::FusedStep, 3, 1, t0, t0 + Duration::from_micros(40));
+        t.event(3, EventKind::Submit);
+        t.event(3, EventKind::Complete);
+        let doc = chrome_trace(&t);
+        let text = crate::jsonmini::to_string(&doc);
+        let back = crate::jsonmini::parse(&text).unwrap();
+        let events = back.req_array("traceEvents").unwrap();
+        assert_eq!(events.len(), 3);
+        // The span event carries the X phase + duration.
+        let span = &events[0];
+        assert_eq!(span.req_str("ph").unwrap(), "X");
+        assert_eq!(span.req_str("name").unwrap(), "fused-step");
+        assert_eq!(span.req_i64("dur").unwrap(), 40);
+        assert_eq!(span.get("args").unwrap().req_i64("job").unwrap(), 3);
+        // Journal events become instants with their sequence number.
+        let inst = &events[1];
+        assert_eq!(inst.req_str("ph").unwrap(), "i");
+        assert_eq!(inst.req_str("name").unwrap(), "submit");
+        assert_eq!(inst.get("args").unwrap().req_i64("seq").unwrap(), 0);
+    }
+
+    #[test]
+    fn disabled_tracer_exports_an_empty_trace() {
+        let doc = chrome_trace(&Tracer::disabled());
+        assert_eq!(doc.req_array("traceEvents").unwrap().len(), 0);
+    }
+}

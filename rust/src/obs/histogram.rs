@@ -1,0 +1,292 @@
+//! Fixed-footprint log-scale histogram with lock-free recording.
+//!
+//! Replaces the unbounded `Vec` reservoirs that `coordinator/metrics.rs`
+//! used for latency and batch-size samples: memory is a compile-time
+//! constant (two `u64` arrays of [`BUCKETS`] slots, ~60 KiB) regardless of
+//! how many values are recorded, and `record` is three relaxed atomic RMWs
+//! — no lock, no allocation.
+//!
+//! Bucket scheme (HdrHistogram-style log2/linear, documented in
+//! docs/observability.md): values below [`SUB`] get one bucket each
+//! (exact); every power-of-two block `[2^k, 2^(k+1))` above that is split
+//! into [`SUB`] linear sub-buckets, so relative resolution is bounded by
+//! `1/SUB` (< 1.6%) across the whole `u64` range. Buckets never straddle a
+//! power of two.
+//!
+//! Percentile math: the reporting percentile `q` resolves to the same rank
+//! the old exact-sort reference used — `floor((count - 1) · q)` — and
+//! returns the *mean of the bucket holding that rank* (per-bucket sums are
+//! tracked alongside counts). When a bucket holds a single distinct value
+//! the answer is exact, which keeps `MetricsSnapshot`'s pinned percentile
+//! tests bit-compatible; mixed buckets answer within one bucket width.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the linear sub-bucket count per power-of-two block.
+const SUB_BITS: u32 = 6;
+/// Linear sub-buckets per block (and the exact-bucket range `[0, SUB)`).
+pub const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: one block of exact buckets below `SUB`, then one
+/// `SUB`-wide block per power of two `2^k` for `k` in `SUB_BITS..=63`.
+pub const BUCKETS: usize = SUB * (64 - SUB_BITS as usize + 1);
+
+/// Bucket index for a value (monotone non-decreasing in `v`).
+fn index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let block = (msb - SUB_BITS + 1) as usize;
+        let sub = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        block * SUB + sub
+    }
+}
+
+/// Smallest value mapping to bucket `i` (inverse of [`index`]).
+fn lower_bound(i: usize) -> u64 {
+    let block = i / SUB;
+    let sub = (i % SUB) as u64;
+    if block == 0 {
+        sub
+    } else {
+        (SUB as u64 + sub) << (block - 1)
+    }
+}
+
+/// Bounded-memory, lock-free histogram of `u64` samples.
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+    /// Per-bucket value sums: lets percentiles answer with the bucket mean
+    /// (exact when a bucket holds one distinct value).
+    sums: Box<[AtomicU64]>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    /// Fixed heap + inline footprint of one histogram, in bytes. This is
+    /// the whole memory story: recording never grows it.
+    pub const FOOTPRINT_BYTES: usize =
+        2 * BUCKETS * std::mem::size_of::<AtomicU64>() + std::mem::size_of::<Histogram>();
+
+    pub fn new() -> Self {
+        Self {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sums: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free, allocation-free.
+    pub fn record(&self, v: u64) {
+        let i = index(v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.sums[i].fetch_add(v, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Largest recorded sample (exact; 0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Mean of all samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Percentile at `q` in `[0, 1]`: the mean of the bucket holding rank
+    /// `floor((count - 1) · q)` — the same rank the exact-sort reference
+    /// (`sorted[((len - 1) as f64 * q) as usize]`) selects. 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n - 1) as f64 * q.clamp(0.0, 1.0)) as u64;
+        let mut cum = 0u64;
+        for (count, sum) in self.counts.iter().zip(self.sums.iter()) {
+            let c = count.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum > target {
+                return sum.load(Ordering::Relaxed) / c;
+            }
+        }
+        self.max()
+    }
+
+    /// Number of samples strictly below `bound`. Exact whenever `bound` is
+    /// a power of two or `<= SUB` (buckets never straddle those edges);
+    /// otherwise resolves to the containing bucket's lower edge.
+    pub fn count_below(&self, bound: u64) -> u64 {
+        self.counts
+            .iter()
+            .enumerate()
+            .take_while(|(i, _)| lower_bound(*i) < bound)
+            .map(|(_, c)| c.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// SplitMix64 (same deterministic generator the differential harness
+    /// uses) so the reference comparison never depends on ambient entropy.
+    fn splitmix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[test]
+    fn index_is_monotone_and_inverts_through_lower_bound() {
+        let mut prev = 0usize;
+        for v in 0..4096u64 {
+            let i = index(v);
+            assert!(i >= prev, "index must be monotone at v={v}");
+            prev = i;
+        }
+        for v in (0..4096u64).chain([u64::MAX / 2, u64::MAX - 1, u64::MAX]) {
+            let i = index(v);
+            assert!(i < BUCKETS);
+            assert!(lower_bound(i) <= v, "lower_bound({i}) > {v}");
+            if i + 1 < BUCKETS {
+                assert!(lower_bound(i + 1) > v, "v={v} belongs to bucket {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_are_exact_at_powers_of_two() {
+        // A power of two starts a fresh bucket: x-1 and x never share one.
+        for k in 1..63u32 {
+            let x = 1u64 << k;
+            assert_ne!(index(x - 1), index(x), "2^{k} must open a new bucket");
+            assert_eq!(lower_bound(index(x)), x);
+        }
+        // Values below SUB are their own bucket (exact small-value counts).
+        for v in 0..SUB as u64 {
+            assert_eq!(index(v), v as usize);
+            assert_eq!(lower_bound(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn percentiles_match_exact_sort_reference_on_fixed_inputs() {
+        // The old Metrics reservoir computed sorted[((len-1) as f64 * q) as
+        // usize]. The histogram must agree within one bucket's relative
+        // width (1/SUB) on arbitrary data, and exactly when buckets hold a
+        // single distinct value.
+        let mut state = 0xDEADBEEFu64;
+        let mut values: Vec<u64> = (0..5000).map(|_| splitmix(&mut state) % 2_000_000).collect();
+        let h = Histogram::new();
+        for &v in &values {
+            h.record(v);
+        }
+        values.sort_unstable();
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = values[((values.len() - 1) as f64 * q) as usize];
+            let est = h.percentile(q);
+            let tol = exact / SUB as u64 + 1;
+            assert!(
+                est.abs_diff(exact) <= tol,
+                "q={q}: est {est} vs exact {exact} (tol {tol})"
+            );
+        }
+        assert_eq!(h.max(), *values.last().unwrap(), "max is tracked exactly");
+    }
+
+    #[test]
+    fn percentiles_are_exact_on_the_metrics_pinned_inputs() {
+        // The inputs coordinator/metrics.rs pins: one distinct value per
+        // bucket, so the bucket-mean answer IS the exact-sort answer.
+        let h = Histogram::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.percentile(0.50), 500);
+        assert_eq!(h.percentile(1.0), 1000);
+        assert_eq!(h.max(), 1000);
+        assert!(h.percentile(0.95) >= h.percentile(0.50));
+        assert_eq!(h.count(), 10);
+    }
+
+    #[test]
+    fn count_below_is_exact_at_power_of_two_edges() {
+        let h = Histogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count_below(1), 1);
+        assert_eq!(h.count_below(64), 64);
+        assert_eq!(h.count_below(256), 256);
+        assert_eq!(h.count_below(512), 512);
+        assert_eq!(h.count_below(1024), 1000);
+        assert_eq!(h.count_below(u64::MAX), 1000);
+    }
+
+    #[test]
+    fn footprint_is_a_constant_independent_of_recordings() {
+        // The whole point: a million samples, same fixed footprint.
+        let h = Histogram::new();
+        for i in 0..1_000_000u64 {
+            h.record(i % 100_000);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        assert!(Histogram::FOOTPRINT_BYTES < 128 * 1024);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+}

@@ -1,0 +1,220 @@
+//! Bounded ring-buffer journal of job-lifecycle events.
+//!
+//! The scheduler (the single writer for lifecycle transitions) records one
+//! fixed-size [`EventRecord`] per transition: submit, admit, chunk,
+//! preempt, resume, evict, and the terminal statuses. The ring is
+//! preallocated at construction and overwrites the oldest record once
+//! full, so steady-state recording allocates nothing and memory is
+//! bounded. Sequence numbers are global and strictly monotonic — a reader
+//! can detect wrap-around drops by gaps between `seq` and the ring length.
+//!
+//! Surfaced over HTTP as `GET /v1/trace` (global) and as the `timeline`
+//! field of `GET /v1/jobs/:id` (per-job) — see docs/observability.md.
+
+use std::sync::Mutex;
+
+/// Job-lifecycle event kinds, in the order a well-behaved job emits them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request accepted by the scheduler (machine instantiated).
+    Submit,
+    /// State admitted into a resident SoA slab (resident mode only).
+    Admit,
+    /// One chunk of generations completed for this job.
+    Chunk,
+    /// Displaced by active High-priority work; state stays resident.
+    Preempt,
+    /// Re-enqueued after the High backlog drained.
+    Resume,
+    /// State evicted from its resident slab (terminal extraction).
+    Evict,
+    /// Terminal: all requested generations ran.
+    Complete,
+    /// Terminal: converged early (`early_stop_chunks`).
+    EarlyStop,
+    /// Terminal: client cancellation honored at a chunk boundary.
+    Cancel,
+    /// Terminal: deadline expired before completion.
+    DeadlineMiss,
+    /// Terminal: the job could not run (bad params, backend error).
+    Fail,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Admit => "admit",
+            EventKind::Chunk => "chunk",
+            EventKind::Preempt => "preempt",
+            EventKind::Resume => "resume",
+            EventKind::Evict => "evict",
+            EventKind::Complete => "complete",
+            EventKind::EarlyStop => "early_stop",
+            EventKind::Cancel => "cancel",
+            EventKind::DeadlineMiss => "deadline_miss",
+            EventKind::Fail => "fail",
+        }
+    }
+}
+
+/// One journal entry. Fixed size — the ring never allocates per event.
+#[derive(Debug, Clone, Copy)]
+pub struct EventRecord {
+    /// Global, strictly monotonic sequence number (starts at 0).
+    pub seq: u64,
+    /// Microseconds since the owning tracer's epoch.
+    pub at_us: u64,
+    /// Raw job id (`JobId.0`); 0 when the event is not job-scoped.
+    pub job: u64,
+    pub kind: EventKind,
+}
+
+struct Inner {
+    ring: Vec<EventRecord>,
+    /// Oldest slot once the ring is full (next overwrite target).
+    head: usize,
+    next_seq: u64,
+}
+
+/// Bounded event journal. Capacity 0 disables recording entirely (the
+/// `Tracer::disabled()` no-op path).
+pub struct Journal {
+    inner: Mutex<Inner>,
+    cap: usize,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                ring: Vec::with_capacity(cap),
+                head: 0,
+                next_seq: 0,
+            }),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Append one event (oldest record is overwritten when full). No-op at
+    /// capacity 0.
+    pub fn record(&self, job: u64, kind: EventKind, at_us: u64) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let rec = EventRecord {
+            seq,
+            at_us,
+            job,
+            kind,
+        };
+        if inner.ring.len() < self.cap {
+            inner.ring.push(rec);
+        } else {
+            let head = inner.head;
+            inner.ring[head] = rec;
+            inner.head = (head + 1) % self.cap;
+        }
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Events overwritten by wrap-around (lost to readers).
+    pub fn dropped(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.next_seq - inner.ring.len() as u64
+    }
+
+    /// Snapshot of the retained window, oldest first (seq-ascending).
+    pub fn events(&self) -> Vec<EventRecord> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(inner.ring.len());
+        out.extend_from_slice(&inner.ring[inner.head..]);
+        out.extend_from_slice(&inner.ring[..inner.head]);
+        out
+    }
+
+    /// The retained events for one job, oldest first.
+    pub fn events_for(&self, job: u64) -> Vec<EventRecord> {
+        self.events().into_iter().filter(|e| e.job == job).collect()
+    }
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("cap", &self.cap)
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_is_strictly_monotonic() {
+        let j = Journal::new(16);
+        for i in 0..10 {
+            j.record(i % 3, EventKind::Chunk, i * 10);
+        }
+        let events = j.events();
+        assert_eq!(events.len(), 10);
+        for w in events.windows(2) {
+            assert!(w[1].seq > w[0].seq);
+        }
+        assert_eq!(events[0].seq, 0);
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn wrap_around_keeps_the_newest_window() {
+        let j = Journal::new(8);
+        for i in 0..20u64 {
+            j.record(1, EventKind::Chunk, i);
+        }
+        let events = j.events();
+        assert_eq!(events.len(), 8, "ring is bounded");
+        // The retained window is the NEWEST 8 events, still seq-ascending.
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<u64>>());
+        assert_eq!(j.recorded(), 20);
+        assert_eq!(j.dropped(), 12);
+    }
+
+    #[test]
+    fn events_for_filters_by_job() {
+        let j = Journal::new(16);
+        j.record(1, EventKind::Submit, 0);
+        j.record(2, EventKind::Submit, 1);
+        j.record(1, EventKind::Chunk, 2);
+        j.record(1, EventKind::Complete, 3);
+        let mine = j.events_for(1);
+        let kinds: Vec<EventKind> = mine.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::Submit, EventKind::Chunk, EventKind::Complete]
+        );
+        assert_eq!(j.events_for(2).len(), 1);
+        assert!(j.events_for(99).is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_is_a_no_op() {
+        let j = Journal::new(0);
+        j.record(1, EventKind::Submit, 0);
+        assert!(j.events().is_empty());
+        assert_eq!(j.recorded(), 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! In-house observability: spans, bounded histograms, event journal,
+//! Chrome trace export.
+//!
+//! Same dependency philosophy as `jsonmini`/`tomlmini`/`lint`: std-only,
+//! no external crates. The subsystem answers the per-stage timing question
+//! the paper answers with per-module FPGA timers — where does a job's
+//! wall-clock go between submit and completion? — without ever putting a
+//! clock inside a kernel (lint R3): workers time *around* `fused_step` and
+//! backend calls, the scheduler times queue wait, batch formation, and
+//! Done-processing at chunk boundaries.
+//!
+//! Pieces:
+//! - [`Tracer`] / [`Span`] — per-stage wall-time at coordinator/chunk
+//!   boundaries, bounded span ring, RAII or explicit recording.
+//! - [`Histogram`] — fixed-footprint log-scale histogram (lock-free
+//!   increments) backing `coordinator/metrics.rs`.
+//! - [`Journal`] — bounded ring of job-lifecycle events with global
+//!   sequence numbers; surfaced via `GET /v1/trace` and per-job
+//!   `timeline`s.
+//! - [`chrome::chrome_trace`] — trace-event JSON for
+//!   `chrome://tracing`/Perfetto (`--trace-out`).
+//!
+//! See docs/observability.md for the span taxonomy and bucket scheme.
+
+pub mod chrome;
+pub mod histogram;
+pub mod journal;
+pub mod tracer;
+
+pub use chrome::chrome_trace;
+pub use histogram::Histogram;
+pub use journal::{EventKind, EventRecord, Journal};
+pub use tracer::{Span, SpanRecord, Stage, Tracer};

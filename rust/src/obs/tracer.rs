@@ -1,0 +1,363 @@
+//! Chunk-boundary span recording.
+//!
+//! A [`Tracer`] is the process-wide observability handle the coordinator
+//! stack shares (`Arc<Tracer>`): the scheduler, engine workers and PJRT
+//! dispatcher record [`SpanRecord`]s *around* backend calls — never inside
+//! kernels, which lint rule R3 keeps clock-free (`src/obs/` is outside
+//! R3's scope by design; see docs/observability.md).
+//!
+//! Two independent switches:
+//!
+//! * **Spans** (`spans_on`, the `--trace-out` / `[serve] trace` knob):
+//!   per-stage wall-time records in a bounded preallocated ring. Off by
+//!   default; when off, [`Tracer::span`] does not even read the clock.
+//! * **Journal** (always on unless [`Tracer::disabled`]): the bounded
+//!   job-lifecycle event ring ([`Journal`]), cheap enough to keep on —
+//!   one mutex-guarded fixed-size write per lifecycle transition.
+//!
+//! [`Tracer::disabled`] turns both off: every record call is a branch on a
+//! plain bool and nothing else — no clock read, no lock, no allocation
+//! (audited by `bench_coordinator --check`).
+
+use crate::obs::journal::{EventKind, EventRecord, Journal};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default span-ring capacity (fixed-size records; ~1.3 MiB).
+const SPAN_CAP: usize = 32 * 1024;
+/// Default journal capacity (fixed-size records; ~256 KiB).
+const JOURNAL_CAP: usize = 8 * 1024;
+
+/// Per-stage span taxonomy — every stage is a chunk-boundary measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Job ready → its chunk dispatched (time spent queued in the batcher).
+    QueueWait,
+    /// First plan member ready → plan drained (batching-window cost).
+    BatchFormation,
+    /// Plan handed to a backend channel → worker picked it up.
+    Dispatch,
+    /// The backend call advancing generations (timed AROUND the call).
+    FusedStep,
+    /// Marshalling: PJRT gather/absorb, scheduler-side result extraction.
+    ScatterExtract,
+    /// Preemption pause → resume (time a displaced Low job sat paused).
+    Preempted,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::QueueWait,
+        Stage::BatchFormation,
+        Stage::Dispatch,
+        Stage::FusedStep,
+        Stage::ScatterExtract,
+        Stage::Preempted,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue-wait",
+            Stage::BatchFormation => "batch-formation",
+            Stage::Dispatch => "dispatch",
+            Stage::FusedStep => "fused-step",
+            Stage::ScatterExtract => "scatter-extract",
+            Stage::Preempted => "preempted",
+        }
+    }
+
+    /// Chrome-trace category (coarse grouping in the trace viewer).
+    pub fn cat(self) -> &'static str {
+        match self {
+            Stage::QueueWait | Stage::BatchFormation => "sched",
+            Stage::Dispatch | Stage::FusedStep | Stage::ScatterExtract => "exec",
+            Stage::Preempted => "preempt",
+        }
+    }
+}
+
+/// One recorded span. Fixed size — the ring never allocates per span.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    pub stage: Stage,
+    /// Raw job id (`JobId.0`); 0 for batch-scoped spans.
+    pub job: u64,
+    /// Execution lane (Chrome-trace `tid`): 0 = scheduler, `1 + i` =
+    /// engine worker `i`, [`Tracer::PJRT_LANE`] = PJRT dispatcher.
+    pub lane: u32,
+    /// Microseconds since the tracer's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+struct SpanRing {
+    ring: Vec<SpanRecord>,
+    /// Ring bound (explicit: `Vec::with_capacity` may over-allocate).
+    cap: usize,
+    head: usize,
+    recorded: u64,
+}
+
+/// Shared observability handle (see module docs).
+pub struct Tracer {
+    spans_on: bool,
+    epoch: Instant,
+    spans: Mutex<SpanRing>,
+    journal: Journal,
+}
+
+impl Tracer {
+    /// Chrome-trace lane for the PJRT dispatcher thread.
+    pub const PJRT_LANE: u32 = 100;
+
+    /// Journal on; spans on iff `spans_on` (the serving default is
+    /// `Tracer::new(false)`: lifecycle journal without span overhead).
+    pub fn new(spans_on: bool) -> Self {
+        Self::with_capacity(spans_on, SPAN_CAP, JOURNAL_CAP)
+    }
+
+    pub fn with_capacity(spans_on: bool, span_cap: usize, journal_cap: usize) -> Self {
+        let cap = if spans_on { span_cap } else { 0 };
+        Self {
+            spans_on,
+            epoch: Instant::now(),
+            spans: Mutex::new(SpanRing {
+                ring: Vec::with_capacity(cap),
+                cap,
+                head: 0,
+                recorded: 0,
+            }),
+            journal: Journal::new(journal_cap),
+        }
+    }
+
+    /// Fully inert tracer: no spans, no journal, no clock reads. The
+    /// zero-overhead baseline `bench_coordinator --check` audits.
+    pub fn disabled() -> Self {
+        Self::with_capacity(false, 0, 0)
+    }
+
+    pub fn spans_enabled(&self) -> bool {
+        self.spans_on
+    }
+
+    /// Microseconds since this tracer's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record a span from explicit boundary instants (for stages whose
+    /// start was captured earlier: queue-wait, dispatch, preemption).
+    pub fn record_span(&self, stage: Stage, job: u64, lane: u32, start: Instant, end: Instant) {
+        if !self.spans_on {
+            return;
+        }
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        let mut spans = self.spans.lock().unwrap();
+        spans.recorded += 1;
+        let rec = SpanRecord {
+            stage,
+            job,
+            lane,
+            start_us,
+            dur_us,
+        };
+        let cap = spans.cap;
+        if spans.ring.len() < cap {
+            spans.ring.push(rec);
+        } else if cap > 0 {
+            let head = spans.head;
+            spans.ring[head] = rec;
+            spans.head = (head + 1) % cap;
+        }
+    }
+
+    /// RAII span: starts timing now, records on drop. When spans are off
+    /// this is free — no clock read, nothing recorded.
+    #[must_use = "a span records on drop; binding to _ drops it immediately"]
+    pub fn span(&self, stage: Stage, job: u64, lane: u32) -> Span<'_> {
+        Span {
+            tracer: self,
+            stage,
+            job,
+            lane,
+            start: self.spans_on.then(Instant::now),
+        }
+    }
+
+    /// Record a job-lifecycle event in the journal (no-op when disabled).
+    pub fn event(&self, job: u64, kind: EventKind) {
+        if self.journal.capacity() == 0 {
+            return;
+        }
+        self.journal.record(job, kind, self.now_us());
+    }
+
+    /// Snapshot of retained spans, oldest first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let spans = self.spans.lock().unwrap();
+        let mut out = Vec::with_capacity(spans.ring.len());
+        out.extend_from_slice(&spans.ring[spans.head..]);
+        out.extend_from_slice(&spans.ring[..spans.head]);
+        out
+    }
+
+    /// Total spans ever recorded (including ones the ring overwrote).
+    pub fn spans_recorded(&self) -> u64 {
+        self.spans.lock().unwrap().recorded
+    }
+
+    pub fn events(&self) -> Vec<EventRecord> {
+        self.journal.events()
+    }
+
+    pub fn events_for(&self, job: u64) -> Vec<EventRecord> {
+        self.journal.events_for(job)
+    }
+
+    pub fn events_recorded(&self) -> u64 {
+        self.journal.recorded()
+    }
+
+    pub fn events_dropped(&self) -> u64 {
+        self.journal.dropped()
+    }
+
+    /// Aggregate retained spans per stage: `(name, count, total_us)` in
+    /// [`Stage::ALL`] order (the bench breakdown table / BENCH_JSON rows).
+    pub fn stage_totals(&self) -> Vec<(&'static str, u64, u64)> {
+        let spans = self.spans();
+        Stage::ALL
+            .iter()
+            .map(|&stage| {
+                let (mut count, mut total) = (0u64, 0u64);
+                for s in spans.iter().filter(|s| s.stage == stage) {
+                    count += 1;
+                    total += s.dur_us;
+                }
+                (stage.name(), count, total)
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("spans_on", &self.spans_on)
+            .field("spans_recorded", &self.spans_recorded())
+            .field("events_recorded", &self.events_recorded())
+            .finish()
+    }
+}
+
+/// RAII guard from [`Tracer::span`].
+pub struct Span<'a> {
+    tracer: &'a Tracer,
+    stage: Stage,
+    job: u64,
+    lane: u32,
+    start: Option<Instant>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            self.tracer
+                .record_span(self.stage, self.job, self.lane, start, Instant::now());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn explicit_spans_nest() {
+        let t = Tracer::new(true);
+        let t0 = Instant::now();
+        let outer = (t0, t0 + Duration::from_millis(100));
+        let inner = (
+            t0 + Duration::from_millis(10),
+            t0 + Duration::from_millis(30),
+        );
+        t.record_span(Stage::BatchFormation, 0, 0, outer.0, outer.1);
+        t.record_span(Stage::FusedStep, 7, 1, inner.0, inner.1);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        let (o, i) = (&spans[0], &spans[1]);
+        assert!(i.start_us >= o.start_us, "inner starts inside outer");
+        assert!(
+            i.start_us + i.dur_us <= o.start_us + o.dur_us,
+            "inner ends inside outer"
+        );
+        assert_eq!(i.dur_us, 20_000);
+        assert_eq!(i.job, 7);
+    }
+
+    #[test]
+    fn raii_spans_nest_and_record_inner_first() {
+        let t = Tracer::new(true);
+        {
+            let _outer = t.span(Stage::ScatterExtract, 1, 0);
+            let _inner = t.span(Stage::FusedStep, 1, 0);
+            // Guards drop in reverse declaration order: inner records first.
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].stage, Stage::FusedStep);
+        assert_eq!(spans[1].stage, Stage::ScatterExtract);
+        // The outer guard started first and ended last: it contains inner.
+        assert!(spans[1].start_us <= spans[0].start_us);
+        assert!(
+            spans[1].start_us + spans[1].dur_us >= spans[0].start_us + spans[0].dur_us,
+            "outer must contain inner"
+        );
+    }
+
+    #[test]
+    fn span_ring_is_bounded() {
+        let t = Tracer::with_capacity(true, 8, 8);
+        let t0 = Instant::now();
+        for i in 0..20u64 {
+            t.record_span(Stage::FusedStep, i, 0, t0, t0 + Duration::from_micros(i));
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 8, "ring is bounded");
+        assert_eq!(t.spans_recorded(), 20);
+        // The retained window is the newest 8 records, oldest first.
+        let jobs: Vec<u64> = spans.iter().map(|s| s.job).collect();
+        assert_eq!(jobs, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        {
+            let _s = t.span(Stage::FusedStep, 1, 0);
+        }
+        t.event(1, EventKind::Submit);
+        let t0 = Instant::now();
+        t.record_span(Stage::QueueWait, 1, 0, t0, t0);
+        assert!(t.spans().is_empty());
+        assert!(t.events().is_empty());
+        assert_eq!(t.spans_recorded(), 0);
+    }
+
+    #[test]
+    fn stage_totals_aggregate() {
+        let t = Tracer::new(true);
+        let t0 = Instant::now();
+        t.record_span(Stage::FusedStep, 1, 1, t0, t0 + Duration::from_micros(100));
+        t.record_span(Stage::FusedStep, 2, 1, t0, t0 + Duration::from_micros(50));
+        t.record_span(Stage::QueueWait, 1, 0, t0, t0 + Duration::from_micros(10));
+        let totals = t.stage_totals();
+        let fused = totals.iter().find(|(n, _, _)| *n == "fused-step").unwrap();
+        assert_eq!((fused.1, fused.2), (2, 150));
+        let qw = totals.iter().find(|(n, _, _)| *n == "queue-wait").unwrap();
+        assert_eq!((qw.1, qw.2), (1, 10));
+    }
+}

@@ -52,6 +52,31 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) 
     (status, v)
 }
 
+/// Like [`http`] but returns the raw body (for non-JSON responses) plus
+/// the Content-Type header.
+fn http_raw(addr: SocketAddr, method: &str, path: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    let content_type = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Type: "))
+        .unwrap_or("")
+        .to_string();
+    (status, content_type, body.to_string())
+}
+
 /// Poll `GET /v1/jobs/:id` until the job reports `phase == done`.
 fn poll_done(addr: SocketAddr, id: i64) -> Value {
     let deadline = Instant::now() + Duration::from_secs(120);
@@ -329,6 +354,160 @@ fn gateway_stress_concurrent_mixed_priority_no_lost_jobs() {
         0,
         "terminal jobs must free their slab rows"
     );
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn gateway_prometheus_exposition_and_format_negotiation() {
+    // ISSUE 8 satellite: `?format=prometheus` switches /v1/metrics to text
+    // exposition; JSON stays the default; unknown formats are a 400.
+    let coord = coordinator(BackendKind::Scalar);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    // One completed job so the counters and latency histogram are non-zero.
+    let (code, v) = http(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"function":"f3","n":16,"k":50,"seed":7}"#,
+    );
+    assert_eq!(code, 202, "{v:?}");
+    poll_done(addr, v.req_i64("id").unwrap());
+
+    let (code, ctype, body) = http_raw(addr, "GET", "/v1/metrics?format=prometheus");
+    assert_eq!(code, 200, "{body}");
+    assert!(ctype.starts_with("text/plain"), "{ctype}");
+    assert!(
+        body.contains("# TYPE fpga_ga_jobs_submitted_total counter"),
+        "{body}"
+    );
+    assert!(body.contains("fpga_ga_jobs_submitted_total 1"), "{body}");
+    assert!(body.contains("fpga_ga_jobs_completed_total 1"), "{body}");
+    assert!(
+        body.contains("fpga_ga_job_latency_seconds_bucket{le=\"+Inf\"} 1"),
+        "{body}"
+    );
+    assert!(body.contains("fpga_ga_job_latency_seconds_count 1"), "{body}");
+    assert!(body.contains("fpga_ga_batch_size_sum"), "{body}");
+
+    // JSON remains the default and the explicit `format=json`.
+    let (code, v) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(code, 200);
+    assert_eq!(v.req_i64("jobs_completed").unwrap(), 1);
+    let (code, v) = http(addr, "GET", "/v1/metrics?format=json", "");
+    assert_eq!(code, 200);
+    assert_eq!(v.req_i64("jobs_completed").unwrap(), 1);
+
+    // Unknown format: a malformed request, not a silent fallback.
+    let (code, v) = http(addr, "GET", "/v1/metrics?format=bogus", "");
+    assert_eq!(code, 400, "{v:?}");
+    assert!(v.req_str("error").unwrap().contains("bogus"), "{v:?}");
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+/// `kinds` must contain `expected` as an ordered (not necessarily
+/// contiguous) subsequence.
+fn assert_subsequence(kinds: &[String], expected: &[&str]) {
+    let mut it = kinds.iter();
+    for want in expected {
+        assert!(
+            it.any(|k| k == want),
+            "timeline missing `{want}` (in order) — got {kinds:?}"
+        );
+    }
+}
+
+#[test]
+fn trace_timeline_replays_a_preempted_job_in_order() {
+    // ISSUE 8 acceptance: a completed job that was preempted shows
+    // submit → chunk → preempt → resume → complete, in that order, both in
+    // its per-job `timeline` and in the global `/v1/trace` journal.
+    let serve = ServeParams {
+        workers: 1,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: true,
+        ..ServeParams::default()
+    };
+    let coord = Arc::new(Coordinator::builder(serve).start().unwrap());
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    // A long Low job reporting every chunk: once the first chunk lands we
+    // know it is resident and mid-run.
+    let low_params = GaParams {
+        n: 16,
+        k: 5000,
+        seed: 9,
+        function: "f3".into(),
+        ..GaParams::default()
+    };
+    let low = coord.submit(
+        OptimizeRequest::new(low_params)
+            .with_priority(fpga_ga::coordinator::Priority::Low)
+            .with_progress_every(1),
+    );
+    assert!(
+        low.next_progress(Duration::from_secs(60)).is_some(),
+        "low job never made progress"
+    );
+
+    // A High submission now forces the scheduler to pause the Low job at
+    // its next chunk boundary (Submit and Done share one ordered channel).
+    let high_params = GaParams {
+        n: 16,
+        k: 25,
+        seed: 10,
+        function: "f3".into(),
+        ..GaParams::default()
+    };
+    let high = coord.submit(
+        OptimizeRequest::new(high_params).with_priority(fpga_ga::coordinator::Priority::High),
+    );
+    let high_id = high.id;
+    assert!(high.wait().error.is_none());
+    let low_id = low.id;
+    assert!(low.wait().error.is_none());
+
+    // Per-job timeline over HTTP.
+    let (code, v) = http(addr, "GET", &format!("/v1/jobs/{}", low_id.0), "");
+    assert_eq!(code, 200, "{v:?}");
+    let timeline = v.req_array("timeline").unwrap();
+    let kinds: Vec<String> = timeline
+        .iter()
+        .map(|e| e.req_str("kind").unwrap().to_string())
+        .collect();
+    assert_subsequence(&kinds, &["submit", "chunk", "preempt", "resume", "complete"]);
+    // Every timeline entry belongs to the job it was fetched for.
+    assert!(timeline
+        .iter()
+        .all(|e| e.req_i64("job").unwrap() as u64 == low_id.0));
+
+    // The global journal replays the same story, with monotone sequence
+    // numbers interleaving both jobs.
+    let (code, t) = http(addr, "GET", "/v1/trace", "");
+    assert_eq!(code, 200, "{t:?}");
+    assert_eq!(t.req_i64("dropped").unwrap(), 0);
+    let events = t.req_array("events").unwrap();
+    let seqs: Vec<i64> = events.iter().map(|e| e.req_i64("seq").unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+    let low_kinds: Vec<String> = events
+        .iter()
+        .filter(|e| e.req_i64("job").unwrap() as u64 == low_id.0)
+        .map(|e| e.req_str("kind").unwrap().to_string())
+        .collect();
+    assert_subsequence(&low_kinds, &["submit", "chunk", "preempt", "resume", "complete"]);
+    let high_kinds: Vec<String> = events
+        .iter()
+        .filter(|e| e.req_i64("job").unwrap() as u64 == high_id.0)
+        .map(|e| e.req_str("kind").unwrap().to_string())
+        .collect();
+    assert_subsequence(&high_kinds, &["submit", "complete"]);
 
     gw.shutdown();
     coord.shutdown();

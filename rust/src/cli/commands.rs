@@ -45,6 +45,14 @@ COMMANDS:
               --resident-store (also `[serve] resident_store = true`)
               --listen ADDR (e.g. 127.0.0.1:8080; also `[serve] listen`)
               --serve-for SECS (keep the gateway up after the trace)
+              --gateway-threads T (HTTP worker pool size; also
+              `[serve] gateway_threads`)
+              --max-connections C (bound on queued + in-service gateway
+              connections, overflow answered 503; also
+              `[serve] max_connections`)
+              --shed-queue-wait-ms MS (shed Low-priority POST /v1/jobs
+              with 429 once queue-wait pressure crosses MS; 0 = off;
+              also `[serve] shed_queue_wait_ms`)
               --mixed-priority (cycle job priorities low/normal/high to
               exercise preemption in the synthetic trace)
               --trace-out FILE (Chrome trace-event JSON; also enabled by
@@ -207,6 +215,19 @@ fn serve_params_from(args: &Args) -> crate::Result<crate::config::ServeParams> {
     if args.opt("trace-out").is_some() {
         serve.trace = true;
     }
+    serve.gateway_threads = args.opt_or("gateway-threads", serve.gateway_threads)?;
+    serve.max_connections = args.opt_or("max-connections", serve.max_connections)?;
+    serve.shed_queue_wait_ms = args.opt_or("shed-queue-wait-ms", serve.shed_queue_wait_ms)?;
+    anyhow::ensure!(
+        serve.gateway_threads >= 1,
+        "--gateway-threads must be >= 1"
+    );
+    anyhow::ensure!(
+        serve.max_connections >= serve.gateway_threads,
+        "--max-connections ({}) must be >= --gateway-threads ({})",
+        serve.max_connections,
+        serve.gateway_threads
+    );
     Ok(serve)
 }
 
@@ -224,7 +245,8 @@ fn cmd_serve(args: &Args) -> crate::Result<String> {
     let gateway = if serve.listen.is_empty() {
         None
     } else {
-        let gw = Gateway::bind(&serve.listen, coord.clone())?;
+        let cfg = crate::coordinator::GatewayConfig::from_serve(&serve);
+        let gw = Gateway::bind_with(&serve.listen, coord.clone(), cfg)?;
         eprintln!("gateway listening on http://{}", gw.local_addr());
         Some(gw)
     };
@@ -657,6 +679,27 @@ mod tests {
     fn serve_rejects_zero_jobs() {
         let err = run_cmd("serve --jobs 0 --function f3 --n 16 --k 25").unwrap_err();
         assert!(err.to_string().contains("--jobs"), "{err}");
+    }
+
+    #[test]
+    fn serve_gateway_flags_parse_and_validate() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from)).unwrap();
+        let s = serve_params_from(&parse(
+            "serve --gateway-threads 2 --max-connections 16 --shed-queue-wait-ms 250",
+        ))
+        .unwrap();
+        assert_eq!(s.gateway_threads, 2);
+        assert_eq!(s.max_connections, 16);
+        assert_eq!(s.shed_queue_wait_ms, 250);
+        // Defaults flow through from ServeParams.
+        let d = serve_params_from(&parse("serve")).unwrap();
+        assert_eq!(d.gateway_threads, 4);
+        assert_eq!(d.max_connections, 64);
+        assert_eq!(d.shed_queue_wait_ms, 0);
+        assert!(serve_params_from(&parse("serve --gateway-threads 0")).is_err());
+        let err = serve_params_from(&parse("serve --gateway-threads 8 --max-connections 2"))
+            .unwrap_err();
+        assert!(err.to_string().contains("--max-connections"), "{err}");
     }
 
     #[test]

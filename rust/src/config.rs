@@ -142,6 +142,16 @@ pub struct ServeParams {
     /// scatter-extract / preemption spans for Chrome-trace export
     /// (`--trace-out`, docs/observability.md).
     pub trace: bool,
+    /// Gateway worker threads serving HTTP connections (the fixed pool;
+    /// connections beyond it queue, docs/api.md §Connection management).
+    pub gateway_threads: usize,
+    /// Bound on gateway connections queued + in service. Connections
+    /// beyond it are answered `503 Service Unavailable` at accept.
+    pub max_connections: usize,
+    /// Load-shedding threshold in milliseconds of queue-wait pressure
+    /// (decayed EWMA of scheduler queue waits). When crossed, Low-priority
+    /// `POST /v1/jobs` gets `429` + `Retry-After`; 0 disables shedding.
+    pub shed_queue_wait_ms: u64,
 }
 
 impl Default for ServeParams {
@@ -158,6 +168,9 @@ impl Default for ServeParams {
             kernels: KernelKind::Auto,
             resident_store: false,
             trace: false,
+            gateway_threads: 4,
+            max_connections: 64,
+            shed_queue_wait_ms: 0,
         }
     }
 }
@@ -273,6 +286,19 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
     }
     get_bool(v, "resident_store", &mut s.resident_store)?;
     get_bool(v, "trace", &mut s.trace)?;
+    get_usize(v, "gateway_threads", &mut s.gateway_threads)?;
+    get_usize(v, "max_connections", &mut s.max_connections)?;
+    get_u64(v, "shed_queue_wait_ms", &mut s.shed_queue_wait_ms)?;
+    if s.gateway_threads == 0 {
+        bail!("`gateway_threads` must be at least 1");
+    }
+    if s.max_connections < s.gateway_threads {
+        bail!(
+            "`max_connections` ({}) must be >= `gateway_threads` ({})",
+            s.max_connections,
+            s.gateway_threads
+        );
+    }
     Ok(())
 }
 
@@ -366,6 +392,25 @@ use_pjrt = false
         assert!(c.serve.trace);
         assert!(!Config::default().serve.trace);
         assert!(Config::from_toml("[serve]\ntrace = \"yes\"").is_err());
+    }
+
+    #[test]
+    fn gateway_keys_parse_and_validate() {
+        let c = Config::from_toml(
+            "[serve]\ngateway_threads = 2\nmax_connections = 16\nshed_queue_wait_ms = 250",
+        )
+        .unwrap();
+        assert_eq!(c.serve.gateway_threads, 2);
+        assert_eq!(c.serve.max_connections, 16);
+        assert_eq!(c.serve.shed_queue_wait_ms, 250);
+        let d = Config::default().serve;
+        assert_eq!(d.gateway_threads, 4);
+        assert_eq!(d.max_connections, 64);
+        assert_eq!(d.shed_queue_wait_ms, 0, "shedding is opt-in");
+        assert!(Config::from_toml("[serve]\ngateway_threads = 0").is_err());
+        let err =
+            Config::from_toml("[serve]\ngateway_threads = 8\nmax_connections = 4").unwrap_err();
+        assert!(err.to_string().contains("max_connections"), "{err}");
     }
 
     #[test]

@@ -19,62 +19,197 @@
 //! [`Coordinator::submit`] / [`Coordinator::job`] / [`Coordinator::cancel`]
 //! calls the in-process API uses, so a gateway-submitted job is bit-identical
 //! to an in-process one (rust/tests/gateway_roundtrip.rs). JSON goes through
-//! [`crate::jsonmini`]; one thread per connection, `Connection: close`.
+//! [`crate::jsonmini`].
+//!
+//! # Connection management (the hardened edge)
+//!
+//! Earlier revisions spawned one thread per connection and spoke
+//! `Connection: close` only — a stalled client leaked a thread and there
+//! was no backpressure. The server is now pool-shaped:
+//!
+//! * **Bounded accept/worker pool.** A nonblocking accept loop pushes
+//!   connections onto a bounded queue drained by [`GatewayConfig::threads`]
+//!   fixed workers. When queued + in-service connections reach
+//!   [`GatewayConfig::max_connections`], new arrivals are answered `503`
+//!   and closed — the thread count never grows with load
+//!   (`connections_rejected` counts the overflow).
+//! * **HTTP/1.1 keep-alive.** Each worker runs a pipelined request loop
+//!   per connection: keep-alive by default on HTTP/1.1, `Connection`
+//!   headers honored both ways, idle connections evicted after
+//!   [`GatewayConfig::idle_timeout`], and at most
+//!   [`GatewayConfig::max_requests_per_conn`] requests per connection.
+//! * **Whole-request deadline.** One wall-clock budget
+//!   ([`GatewayConfig::request_deadline`]) spans head + body reads *and*
+//!   the response write — a slowloris sender or a reader that stops
+//!   draining is cut off at the deadline, not held per-byte.
+//! * **Load shedding.** When the scheduler's queue-wait pressure (the
+//!   decayed EWMA [`Tracer::queue_wait_pressure_us`] harvests from the
+//!   obs queue-wait stage) exceeds
+//!   [`GatewayConfig::shed_queue_wait_ms`], Low-priority `POST /v1/jobs`
+//!   is shed with `429` + `Retry-After` while Normal/High pass.
+//! * **Graceful drain.** [`Gateway::shutdown`] stops the accept loop,
+//!   lets workers finish in-flight requests (keep-alive loops close after
+//!   the current response), and joins every thread with a bounded wait.
 
-use crate::config::GaParams;
+use crate::config::{GaParams, ServeParams};
 use crate::coordinator::job::{JobId, JobSnapshot, OptimizeRequest, Priority};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::Coordinator;
 use crate::jsonmini::{self, obj, Value};
-use crate::obs::{EventRecord, Tracer};
+use crate::obs::{EventRecord, Stage, Tracer};
 use anyhow::Context as _;
-use std::io::{Read, Write};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Cap on header section / body size (requests here are tiny).
 const MAX_HEAD_BYTES: usize = 64 * 1024;
 const MAX_BODY_BYTES: usize = 1024 * 1024;
+/// Socket read granularity for the buffered request reader.
+const READ_CHUNK: usize = 4096;
+/// How long an idle accept loop / parked worker sleeps between stop checks.
+const POLL_TICK: Duration = Duration::from_millis(1);
+
+/// Gateway tuning knobs (docs/api.md §Connection management). The pool
+/// shape comes from `[serve]` / CLI flags via [`GatewayConfig::from_serve`];
+/// the protocol timeouts have fixed serving defaults that tests override
+/// through [`Gateway::bind_with`].
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Fixed worker threads serving connections (`--gateway-threads`).
+    pub threads: usize,
+    /// Bound on connections queued + in service (`--max-connections`);
+    /// arrivals beyond it are answered `503` at accept.
+    pub max_connections: usize,
+    /// Shed Low-priority submits with `429` once queue-wait pressure
+    /// crosses this many milliseconds (`--shed-queue-wait-ms`; 0 = off).
+    pub shed_queue_wait_ms: u64,
+    /// Whole-request wall-clock budget: first head byte → response fully
+    /// written. Slowloris senders and stalled readers both hit it.
+    pub request_deadline: Duration,
+    /// Keep-alive connections idle longer than this are evicted.
+    pub idle_timeout: Duration,
+    /// Requests served per connection before the server closes it
+    /// (bounds how long one client can pin a worker slot).
+    pub max_requests_per_conn: u32,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        let serve = ServeParams::default();
+        Self {
+            threads: serve.gateway_threads,
+            max_connections: serve.max_connections,
+            shed_queue_wait_ms: serve.shed_queue_wait_ms,
+            request_deadline: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(5),
+            max_requests_per_conn: 256,
+        }
+    }
+}
+
+impl GatewayConfig {
+    /// Pool shape from the `[serve]` section / CLI flags; protocol
+    /// timeouts stay at their serving defaults.
+    pub fn from_serve(s: &ServeParams) -> Self {
+        Self {
+            threads: s.gateway_threads,
+            max_connections: s.max_connections,
+            shed_queue_wait_ms: s.shed_queue_wait_ms,
+            ..Self::default()
+        }
+    }
+}
+
+/// State shared by the accept loop and the worker pool.
+struct Shared {
+    coord: Arc<Coordinator>,
+    cfg: GatewayConfig,
+    stop: AtomicBool,
+    /// Accepted connections awaiting a worker. Bounded by the capacity
+    /// check in the accept loop (never grows past `max_connections`).
+    queue: Mutex<VecDeque<TcpStream>>,
+    ready: Condvar,
+    /// Connections currently being served. Claimed under the queue lock
+    /// (see `next_conn`), so `queue.len() + active` is an exact census.
+    active: AtomicUsize,
+}
 
 /// A running HTTP gateway; dropping (or [`Gateway::shutdown`]) stops the
-/// accept loop. The coordinator it fronts is shared and outlives it.
+/// accept loop, drains in-flight work and joins the pool. The coordinator
+/// it fronts is shared and outlives it.
 pub struct Gateway {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Gateway {
     /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port) and
-    /// start serving the coordinator's v2 API.
+    /// start serving the coordinator's v2 API with default tuning.
     pub fn bind(addr: &str, coord: Arc<Coordinator>) -> crate::Result<Gateway> {
+        Self::bind_with(addr, coord, GatewayConfig::default())
+    }
+
+    /// [`Gateway::bind`] with explicit tuning (pool size, connection
+    /// bound, deadlines, shed threshold).
+    pub fn bind_with(
+        addr: &str,
+        coord: Arc<Coordinator>,
+        cfg: GatewayConfig,
+    ) -> crate::Result<Gateway> {
+        anyhow::ensure!(cfg.threads >= 1, "gateway: `threads` must be >= 1");
+        anyhow::ensure!(
+            cfg.max_connections >= cfg.threads,
+            "gateway: `max_connections` ({}) must be >= `threads` ({})",
+            cfg.max_connections,
+            cfg.threads
+        );
+        anyhow::ensure!(
+            cfg.max_requests_per_conn >= 1,
+            "gateway: `max_requests_per_conn` must be >= 1"
+        );
         let listener =
             TcpListener::bind(addr).with_context(|| format!("gateway: binding `{addr}`"))?;
         let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let accept_stop = stop.clone();
+        // Nonblocking accept + stop-flag polling: shutdown never depends on
+        // a wakeup connection reaching the listener (the old self-connect
+        // poke hung forever on wildcard binds like `0.0.0.0:*`).
+        listener
+            .set_nonblocking(true)
+            .context("gateway: nonblocking accept")?;
+        let shared = Arc::new(Shared {
+            coord,
+            cfg,
+            stop: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            active: AtomicUsize::new(0),
+        });
+        let mut workers = Vec::with_capacity(shared.cfg.threads);
+        for i in 0..shared.cfg.threads {
+            let sh = shared.clone();
+            let th = std::thread::Builder::new()
+                .name(format!("ga-gateway-{i}"))
+                .spawn(move || worker_loop(&sh, i))
+                .context("gateway: spawning worker thread")?;
+            workers.push(th);
+        }
+        let sh = shared.clone();
         let accept_thread = std::thread::Builder::new()
             .name("ga-gateway".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if accept_stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    let coord = coord.clone();
-                    let _ = std::thread::Builder::new()
-                        .name("ga-gateway-conn".into())
-                        .spawn(move || handle_connection(stream, &coord));
-                }
-            })
+            .spawn(move || accept_loop(&listener, &sh))
             .context("gateway: spawning accept thread")?;
         Ok(Gateway {
             addr: local,
-            stop,
+            shared,
             accept_thread: Some(accept_thread),
+            workers,
         })
     }
 
@@ -83,13 +218,26 @@ impl Gateway {
         self.addr
     }
 
-    /// Stop accepting connections (in-flight requests finish on their own).
+    /// Graceful drain: stop accepting, finish in-flight requests (each
+    /// keep-alive loop closes after its current response), join the pool.
+    /// The join is bounded — a worker stuck past every protocol timeout
+    /// (which the per-request deadline should make impossible) is detached
+    /// rather than hanging the caller forever.
     pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.ready.notify_all();
+        let grace = self
+            .shared
+            .cfg
+            .request_deadline
+            .max(self.shared.cfg.idle_timeout)
+            + Duration::from_secs(5);
+        let deadline = Instant::now() + grace;
         if let Some(th) = self.accept_thread.take() {
-            self.stop.store(true, Ordering::Relaxed);
-            // Poke the blocking accept so the loop observes the stop flag.
-            let _ = TcpStream::connect(self.addr);
-            let _ = th.join();
+            join_until(th, deadline);
+        }
+        for th in self.workers.drain(..) {
+            join_until(th, deadline);
         }
     }
 }
@@ -100,16 +248,378 @@ impl Drop for Gateway {
     }
 }
 
+/// Join `th`, giving up (detaching the thread) at `deadline`.
+fn join_until(th: JoinHandle<()>, deadline: Instant) {
+    while !th.is_finished() {
+        if Instant::now() >= deadline {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let _ = th.join();
+}
+
+/// Nonblocking accept loop: admit into the bounded queue or answer `503`.
+fn accept_loop(listener: &TcpListener, sh: &Shared) {
+    let metrics = sh.coord.metrics_sink();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Accepted sockets must block (inheritance of the
+                // listener's nonblocking mode is platform-dependent).
+                let _ = stream.set_nonblocking(false);
+                let overflow = {
+                    let mut q = sh.queue.lock().unwrap();
+                    if q.len() + sh.active.load(Ordering::Relaxed) >= sh.cfg.max_connections {
+                        Some(stream)
+                    } else {
+                        q.push_back(stream);
+                        None
+                    }
+                };
+                match overflow {
+                    None => {
+                        metrics.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                        sh.ready.notify_one();
+                    }
+                    Some(stream) => {
+                        metrics.connections_rejected.fetch_add(1, Ordering::Relaxed);
+                        reject_over_capacity(stream);
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if sh.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(POLL_TICK);
+            }
+            Err(_) => {
+                // Transient accept error (e.g. EMFILE): back off briefly.
+                if sh.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    // Wake parked workers so they observe the stop flag.
+    sh.ready.notify_all();
+}
+
+/// Best-effort `503` for a connection the bounded pool cannot admit. Runs
+/// on the accept thread, so the write budget is short.
+fn reject_over_capacity(mut stream: TcpStream) {
+    let mut resp = Response::error(503, "server at connection capacity; retry later");
+    resp.retry_after = Some(1);
+    let _ = resp.write_to(&mut stream, Instant::now() + Duration::from_secs(1));
+}
+
+/// Pop the next connection, claiming the `active` slot while still holding
+/// the queue lock so the accept loop's capacity census stays exact.
+/// Returns `None` when stopped AND the queue has drained — queued
+/// connections accepted before shutdown still get served.
+fn next_conn(sh: &Shared) -> Option<TcpStream> {
+    let mut q = sh.queue.lock().unwrap();
+    loop {
+        if let Some(stream) = q.pop_front() {
+            sh.active.fetch_add(1, Ordering::Relaxed);
+            return Some(stream);
+        }
+        if sh.stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        // A poisoned queue mutex means a worker panicked mid-serve; there
+        // is no sane recovery for the pool, so propagate the panic.
+        let (guard, _timed_out) = sh.ready.wait_timeout(q, Duration::from_millis(50)).unwrap();
+        q = guard;
+    }
+}
+
+fn worker_loop(sh: &Shared, worker_idx: usize) {
+    while let Some(stream) = next_conn(sh) {
+        serve_connection(stream, sh, worker_idx);
+        sh.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The per-connection keep-alive loop: read request → route → write
+/// response, repeating until the peer closes, a limit trips, or shutdown.
+fn serve_connection(mut stream: TcpStream, sh: &Shared, worker_idx: usize) {
+    let metrics = sh.coord.metrics_sink();
+    let tracer = sh.coord.tracer();
+    let lane = Tracer::GATEWAY_LANE0 + worker_idx as u32;
+    let mut carry: Vec<u8> = Vec::new();
+    for served in 0..sh.cfg.max_requests_per_conn {
+        match read_request(&mut stream, &mut carry, &sh.cfg) {
+            ReadOutcome::Request { req, deadline } => {
+                // Keep-alive only while every limit still has headroom and
+                // the server is not draining.
+                let keep = req.keep_alive
+                    && served + 1 < sh.cfg.max_requests_per_conn
+                    && !sh.stop.load(Ordering::Relaxed);
+                let _span = tracer.span(Stage::Gateway, 0, lane);
+                let mut resp = route(&req, &sh.coord, sh.cfg.shed_queue_wait_ms);
+                resp.keep_alive = keep;
+                metrics.requests_served.fetch_add(1, Ordering::Relaxed);
+                if resp.write_to(&mut stream, deadline).is_err() {
+                    // Stalled reader (write deadline) or vanished peer.
+                    metrics.connections_evicted.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+            ReadOutcome::Hangup { evicted } => {
+                if evicted {
+                    metrics.connections_evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+            ReadOutcome::Fail { response, evicted } => {
+                metrics.requests_served.fetch_add(1, Ordering::Relaxed);
+                if evicted {
+                    metrics.connections_evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                // Error responses always close: the connection's framing
+                // state is unknown after a malformed or timed-out request.
+                let _ = response.write_to(&mut stream, Instant::now() + Duration::from_secs(1));
+                return;
+            }
+        }
+    }
+}
+
 struct Request {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// Negotiated keep-alive: HTTP/1.1 default unless `Connection: close`;
+    /// HTTP/1.0 only with an explicit `Connection: keep-alive`.
+    keep_alive: bool,
+}
+
+/// What one attempt to read a request produced.
+enum ReadOutcome {
+    /// A complete request plus the whole-request deadline the response
+    /// write shares.
+    Request { req: Request, deadline: Instant },
+    /// Connection is done without a response: clean close between
+    /// requests, peer vanished mid-request, or idle-timeout eviction.
+    Hangup { evicted: bool },
+    /// Protocol failure: send `response`, then close.
+    Fail { response: Response, evicted: bool },
+}
+
+/// One socket read appended to `buf`, bounded by `timeout`.
+enum Chunk {
+    Data,
+    Eof,
+    TimedOut,
+    Err,
+}
+
+fn read_chunk(stream: &mut TcpStream, buf: &mut Vec<u8>, timeout: Duration) -> Chunk {
+    if stream
+        .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+        .is_err()
+    {
+        return Chunk::Err;
+    }
+    let mut tmp = [0u8; READ_CHUNK];
+    loop {
+        match stream.read(&mut tmp) {
+            Ok(0) => return Chunk::Eof,
+            Ok(n) => {
+                buf.extend_from_slice(&tmp[..n]);
+                return Chunk::Data;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Chunk::TimedOut
+            }
+            Err(_) => return Chunk::Err,
+        }
+    }
+}
+
+/// [`read_chunk`] against an absolute deadline (the remaining budget).
+fn read_chunk_by(stream: &mut TcpStream, buf: &mut Vec<u8>, deadline: Instant) -> Chunk {
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Chunk::TimedOut;
+    }
+    read_chunk(stream, buf, remaining)
+}
+
+/// Index just past the `\r\n\r\n` head terminator, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Parsed request-head metadata (pure, unit-tested).
+struct HeadMeta {
+    method: String,
+    path: String,
+    content_length: usize,
+    keep_alive: bool,
+}
+
+fn parse_head(head: &str) -> crate::Result<HeadMeta> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    anyhow::ensure!(
+        !method.is_empty() && path.starts_with('/'),
+        "malformed request line `{request_line}`"
+    );
+    // HTTP/1.1 defaults to keep-alive; HTTP/1.0 (and anything older or
+    // unknown) must opt in explicitly.
+    let mut keep_alive = version.eq_ignore_ascii_case("HTTP/1.1");
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("invalid Content-Length"))?;
+            } else if k.eq_ignore_ascii_case("connection") {
+                if v.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+        }
+    }
+    Ok(HeadMeta {
+        method,
+        path,
+        content_length,
+        keep_alive,
+    })
+}
+
+/// Read one pipelined HTTP request. `carry` holds bytes read past the
+/// previous request's body; leftover bytes after this request's body go
+/// back into it. The whole-request deadline starts at the first byte —
+/// waiting for a next request on an idle keep-alive connection is governed
+/// by `idle_timeout` instead, so a quiet-but-healthy client is evicted
+/// rather than billed a slow request.
+fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>, cfg: &GatewayConfig) -> ReadOutcome {
+    let mut buf = std::mem::take(carry);
+    if buf.is_empty() {
+        match read_chunk(stream, &mut buf, cfg.idle_timeout) {
+            Chunk::Data => {}
+            Chunk::Eof | Chunk::Err => return ReadOutcome::Hangup { evicted: false },
+            Chunk::TimedOut => return ReadOutcome::Hangup { evicted: true },
+        }
+    }
+    // First bytes are in: the whole-request clock starts.
+    let deadline = Instant::now() + cfg.request_deadline;
+    let head_len = loop {
+        if let Some(end) = head_end(&buf) {
+            break end;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return ReadOutcome::Fail {
+                response: Response::error(400, "header section too large"),
+                evicted: false,
+            };
+        }
+        match read_chunk_by(stream, &mut buf, deadline) {
+            Chunk::Data => {}
+            Chunk::Eof | Chunk::Err => return ReadOutcome::Hangup { evicted: false },
+            Chunk::TimedOut => {
+                return ReadOutcome::Fail {
+                    response: Response::error(408, "request deadline exceeded reading head"),
+                    evicted: true,
+                }
+            }
+        }
+    };
+    let meta = match std::str::from_utf8(&buf[..head_len]) {
+        Ok(head) => match parse_head(head) {
+            Ok(meta) => meta,
+            Err(e) => {
+                return ReadOutcome::Fail {
+                    response: Response::error(400, e),
+                    evicted: false,
+                }
+            }
+        },
+        Err(_) => {
+            return ReadOutcome::Fail {
+                response: Response::error(400, "non-UTF8 request head"),
+                evicted: false,
+            }
+        }
+    };
+    if meta.content_length > MAX_BODY_BYTES {
+        return ReadOutcome::Fail {
+            response: Response::error(413, "body too large"),
+            evicted: false,
+        };
+    }
+    let total = head_len + meta.content_length;
+    while buf.len() < total {
+        match read_chunk_by(stream, &mut buf, deadline) {
+            Chunk::Data => {}
+            Chunk::Eof | Chunk::Err => return ReadOutcome::Hangup { evicted: false },
+            Chunk::TimedOut => {
+                return ReadOutcome::Fail {
+                    response: Response::error(408, "request deadline exceeded reading body"),
+                    evicted: true,
+                }
+            }
+        }
+    }
+    // Bytes past this request's body belong to the next pipelined request.
+    *carry = buf.split_off(total);
+    let body = buf.split_off(head_len);
+    ReadOutcome::Request {
+        req: Request {
+            method: meta.method,
+            path: meta.path,
+            body,
+            keep_alive: meta.keep_alive,
+        },
+        deadline,
+    }
 }
 
 struct Response {
     status: u16,
     content_type: &'static str,
     body: String,
+    /// Answer `Connection: keep-alive` and leave the socket open.
+    keep_alive: bool,
+    /// `Retry-After` header in seconds (shed `429`s, overflow `503`s).
+    retry_after: Option<u64>,
+}
+
+/// Reason phrases for every status the gateway produces; unknown codes get
+/// a neutral phrase instead of masquerading as server errors.
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
 }
 
 impl Response {
@@ -118,6 +628,8 @@ impl Response {
             status,
             content_type: "application/json",
             body: jsonmini::to_string(&v),
+            keep_alive: false,
+            retry_after: None,
         }
     }
 
@@ -128,6 +640,8 @@ impl Response {
             status,
             content_type: "text/plain; version=0.0.4; charset=utf-8",
             body,
+            keep_alive: false,
+            retry_after: None,
         }
     }
 
@@ -135,84 +649,72 @@ impl Response {
         Self::json(status, obj([("error", Value::from(msg.to_string()))]))
     }
 
-    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
-        let reason = match self.status {
-            200 => "OK",
-            202 => "Accepted",
-            400 => "Bad Request",
-            404 => "Not Found",
-            405 => "Method Not Allowed",
-            409 => "Conflict",
-            _ => "Internal Server Error",
-        };
-        write!(
-            stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+    /// Serialize and send, bounded by the request deadline — a peer that
+    /// stops draining its socket gets cut off instead of pinning a worker.
+    fn write_to(&self, stream: &mut TcpStream, deadline: Instant) -> std::io::Result<()> {
+        use std::fmt::Write as _;
+        let mut msg = String::with_capacity(self.body.len() + 160);
+        let _ = write!(
+            msg,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
             self.status,
-            reason,
+            reason_phrase(self.status),
             self.content_type,
             self.body.len(),
+        );
+        if let Some(secs) = self.retry_after {
+            let _ = write!(msg, "Retry-After: {secs}\r\n");
+        }
+        let _ = write!(
+            msg,
+            "Connection: {}\r\n\r\n{}",
+            if self.keep_alive { "keep-alive" } else { "close" },
             self.body
-        )?;
+        );
+        write_all_by(stream, msg.as_bytes(), deadline)?;
         stream.flush()
     }
 }
 
-fn handle_connection(mut stream: TcpStream, coord: &Coordinator) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-    let response = match read_request(&mut stream) {
-        Ok(req) => route(&req, coord),
-        Err(e) => Response::error(400, e),
-    };
-    let _ = response.write_to(&mut stream);
-}
-
-/// Parse one HTTP/1.1 request: request line + headers (only Content-Length
-/// matters) + body. Byte-wise head read — requests here are a few hundred
-/// bytes, correctness beats throughput.
-fn read_request(stream: &mut TcpStream) -> crate::Result<Request> {
-    let mut head = Vec::new();
-    let mut byte = [0u8; 1];
-    while !head.ends_with(b"\r\n\r\n") {
-        anyhow::ensure!(head.len() < MAX_HEAD_BYTES, "header section too large");
-        let n = stream.read(&mut byte)?;
-        anyhow::ensure!(n == 1, "connection closed mid-request");
-        head.push(byte[0]);
-    }
-    let head = String::from_utf8(head).map_err(|_| anyhow::anyhow!("non-UTF8 request head"))?;
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_ascii_uppercase();
-    let path = parts.next().unwrap_or("").to_string();
-    anyhow::ensure!(
-        !method.is_empty() && path.starts_with('/'),
-        "malformed request line `{request_line}`"
-    );
-    let mut content_length = 0usize;
-    for line in lines {
-        if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("invalid Content-Length"))?;
+/// `write_all` against an absolute deadline: every partial write gets only
+/// the remaining budget as its socket write timeout, so the total stall a
+/// non-draining reader can cause is bounded by the request deadline.
+fn write_all_by(
+    stream: &mut TcpStream,
+    mut bytes: &[u8],
+    deadline: Instant,
+) -> std::io::Result<()> {
+    while !bytes.is_empty() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                ErrorKind::TimedOut,
+                "response write deadline exceeded",
+            ));
+        }
+        stream.set_write_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+        match stream.write(bytes) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "connection closed mid-response",
+                ))
             }
+            Ok(n) => bytes = &bytes[n..],
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
         }
     }
-    anyhow::ensure!(content_length <= MAX_BODY_BYTES, "body too large");
-    let mut body = vec![0u8; content_length];
-    stream.read_exact(&mut body)?;
-    Ok(Request { method, path, body })
+    Ok(())
 }
 
-fn route(req: &Request, coord: &Coordinator) -> Response {
+fn route(req: &Request, coord: &Coordinator, shed_queue_wait_ms: u64) -> Response {
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, q),
         None => (req.path.as_str(), ""),
     };
     match (req.method.as_str(), path) {
-        ("POST", "/v1/jobs") => post_job(&req.body, coord),
+        ("POST", "/v1/jobs") => post_job(&req.body, coord, shed_queue_wait_ms),
         ("GET", "/v1/jobs") => {
             let jobs: Vec<Value> = coord.job_summaries().iter().map(snapshot_summary).collect();
             Response::json(200, obj([("jobs", Value::Array(jobs))]))
@@ -300,7 +802,35 @@ fn trace_json(tracer: &Tracer) -> Value {
     ])
 }
 
-fn post_job(body: &[u8], coord: &Coordinator) -> Response {
+/// Admission control on the submit path: when queue-wait pressure exceeds
+/// the shed threshold, Low-priority work is turned away with `429` +
+/// `Retry-After` (sized to the pressure) while Normal/High pass — the
+/// journal-driven backpressure loop (docs/api.md §Load shedding).
+fn shed_check(priority: Priority, coord: &Coordinator, shed_queue_wait_ms: u64) -> Option<Response> {
+    if shed_queue_wait_ms == 0 || priority != Priority::Low {
+        return None;
+    }
+    let pressure_us = coord.tracer().queue_wait_pressure_us();
+    if pressure_us <= shed_queue_wait_ms.saturating_mul(1000) {
+        return None;
+    }
+    coord
+        .metrics_sink()
+        .requests_shed
+        .fetch_add(1, Ordering::Relaxed);
+    let mut resp = Response::error(
+        429,
+        format!(
+            "low-priority load shed: queue-wait pressure {}ms over threshold {}ms",
+            pressure_us / 1000,
+            shed_queue_wait_ms
+        ),
+    );
+    resp.retry_after = Some((pressure_us / 1_000_000).clamp(1, 30));
+    Some(resp)
+}
+
+fn post_job(body: &[u8], coord: &Coordinator, shed_queue_wait_ms: u64) -> Response {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
         Err(_) => return Response::error(400, "body must be UTF-8 JSON"),
@@ -354,6 +884,11 @@ fn post_job(body: &[u8], coord: &Coordinator) -> Response {
             Some(n) => req = req.with_progress_every(n),
             None => return Response::error(400, "`progress_every` must be a non-negative integer"),
         }
+    }
+    // Validated and fully parsed: the last gate before the scheduler is
+    // admission control.
+    if let Some(shed) = shed_check(req.priority, coord, shed_queue_wait_ms) {
+        return shed;
     }
     // Network clients observe through the registry (GET /v1/jobs/:id); the
     // in-process handle is dropped, which is safe by design.
@@ -452,6 +987,20 @@ fn metrics_json(m: &MetricsSnapshot) -> Value {
         ("engine_batch_jobs", Value::Int(m.engine_batch_jobs as i64)),
         ("generations", Value::Int(m.generations as i64)),
         ("padded_rows", Value::Int(m.padded_rows as i64)),
+        (
+            "connections_accepted",
+            Value::Int(m.connections_accepted as i64),
+        ),
+        (
+            "connections_rejected",
+            Value::Int(m.connections_rejected as i64),
+        ),
+        (
+            "connections_evicted",
+            Value::Int(m.connections_evicted as i64),
+        ),
+        ("requests_served", Value::Int(m.requests_served as i64)),
+        ("requests_shed", Value::Int(m.requests_shed as i64)),
         ("latency_p50_us", Value::Int(m.latency_p50.as_micros() as i64)),
         ("latency_p95_us", Value::Int(m.latency_p95.as_micros() as i64)),
         ("latency_p99_us", Value::Int(m.latency_p99.as_micros() as i64)),
@@ -494,6 +1043,18 @@ mod tests {
     }
 
     #[test]
+    fn metrics_json_has_gateway_counters() {
+        let m = crate::coordinator::Metrics::new();
+        m.requests_shed.store(2, Ordering::Relaxed);
+        let out = jsonmini::to_string(&metrics_json(&m.snapshot()));
+        assert!(out.contains("\"connections_accepted\":0"), "{out}");
+        assert!(out.contains("\"connections_rejected\":0"), "{out}");
+        assert!(out.contains("\"connections_evicted\":0"), "{out}");
+        assert!(out.contains("\"requests_served\":0"), "{out}");
+        assert!(out.contains("\"requests_shed\":2"), "{out}");
+    }
+
+    #[test]
     fn query_params_parse_first_match() {
         assert_eq!(query_param("format=prometheus", "format"), Some("prometheus"));
         assert_eq!(query_param("a=1&format=json&b=2", "format"), Some("json"));
@@ -501,6 +1062,95 @@ mod tests {
         assert_eq!(query_param("", "format"), None);
         // Bare key with no `=` reads as the empty value, not a miss.
         assert_eq!(query_param("format", "format"), Some(""));
+    }
+
+    #[test]
+    fn reason_phrases_cover_every_gateway_status() {
+        // The statuses the gateway actually produces all carry their real
+        // phrase; unlisted codes get a neutral one — the old table mapped
+        // everything unknown (including 429/503) to "Internal Server
+        // Error", mislabeling backpressure as a crash.
+        for (status, phrase) in [
+            (200, "OK"),
+            (202, "Accepted"),
+            (400, "Bad Request"),
+            (404, "Not Found"),
+            (405, "Method Not Allowed"),
+            (408, "Request Timeout"),
+            (409, "Conflict"),
+            (413, "Payload Too Large"),
+            (429, "Too Many Requests"),
+            (500, "Internal Server Error"),
+            (503, "Service Unavailable"),
+        ] {
+            assert_eq!(reason_phrase(status), phrase);
+        }
+        assert_eq!(reason_phrase(418), "Status");
+        assert_eq!(reason_phrase(999), "Status");
+    }
+
+    #[test]
+    fn head_parsing_negotiates_keep_alive() {
+        let meta = parse_head("GET /v1/jobs HTTP/1.1\r\n\r\n").unwrap();
+        assert!(meta.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(meta.method, "GET");
+        assert_eq!(meta.path, "/v1/jobs");
+        assert_eq!(meta.content_length, 0);
+
+        let meta = parse_head("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!meta.keep_alive, "explicit close honored");
+
+        let meta = parse_head("GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!meta.keep_alive, "HTTP/1.0 defaults to close");
+
+        let meta = parse_head("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(meta.keep_alive, "HTTP/1.0 opt-in honored");
+
+        let meta = parse_head("POST /v1/jobs HTTP/1.1\r\nContent-Length: 42\r\n\r\n").unwrap();
+        assert_eq!(meta.content_length, 42);
+
+        assert!(parse_head("garbage\r\n\r\n").is_err());
+        assert!(parse_head("GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn head_end_finds_the_terminator() {
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\n"), Some(18));
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\nBODY"), Some(18));
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n"), None);
+        assert_eq!(head_end(b""), None);
+    }
+
+    #[test]
+    fn responses_carry_connection_and_retry_after_headers() {
+        // Serialize through write_to against a real loopback socket pair.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let render = |resp: &Response| {
+            let client = TcpStream::connect(addr).unwrap();
+            let (mut server, _) = listener.accept().unwrap();
+            resp.write_to(&mut server, Instant::now() + Duration::from_secs(1))
+                .unwrap();
+            drop(server);
+            let mut out = String::new();
+            let mut client = client;
+            client.read_to_string(&mut out).unwrap();
+            out
+        };
+
+        let mut ok = Response::json(200, obj([]));
+        ok.keep_alive = true;
+        let text = render(&ok);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(!text.contains("Retry-After"), "{text}");
+
+        let mut shed = Response::error(429, "shed");
+        shed.retry_after = Some(7);
+        let text = render(&shed);
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 7\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
     }
 
     #[test]

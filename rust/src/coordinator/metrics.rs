@@ -42,6 +42,21 @@ pub struct Metrics {
     pub generations: AtomicU64,
     /// Batch-slot padding waste (padded rows dispatched).
     pub padded_rows: AtomicU64,
+    /// Gateway connections accepted into the worker pool (queued or served).
+    pub connections_accepted: AtomicU64,
+    /// Gateway connections answered `503` at accept because the bounded
+    /// pool (`--max-connections`) was full. The backpressure counter: this
+    /// moving instead of thread counts growing is the whole point.
+    pub connections_rejected: AtomicU64,
+    /// Gateway connections closed by the server side: keep-alive idle
+    /// timeout, request-deadline expiry, or a write that timed out against
+    /// a stalled reader.
+    pub connections_evicted: AtomicU64,
+    /// HTTP requests the gateway answered (all methods, all statuses).
+    pub requests_served: AtomicU64,
+    /// Low-priority `POST /v1/jobs` answered `429` by admission control
+    /// because queue-wait pressure crossed `--shed-queue-wait-ms`.
+    pub requests_shed: AtomicU64,
     latency: Histogram,
     batch: Histogram,
 }
@@ -85,6 +100,11 @@ impl Metrics {
             engine_batch_jobs: self.engine_batch_jobs.load(Ordering::Relaxed),
             generations: self.generations.load(Ordering::Relaxed),
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
+            connections_rejected: self.connections_rejected.load(Ordering::Relaxed),
+            connections_evicted: self.connections_evicted.load(Ordering::Relaxed),
+            requests_served: self.requests_served.load(Ordering::Relaxed),
+            requests_shed: self.requests_shed.load(Ordering::Relaxed),
             latency_p50: pct(0.50),
             latency_p95: pct(0.95),
             latency_p99: pct(0.99),
@@ -103,7 +123,7 @@ impl Metrics {
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(2048);
-        let counters: [(&str, &AtomicU64); 13] = [
+        let counters: [(&str, &AtomicU64); 18] = [
             ("jobs_submitted", &self.jobs_submitted),
             ("jobs_completed", &self.jobs_completed),
             ("jobs_early_stopped", &self.jobs_early_stopped),
@@ -117,6 +137,11 @@ impl Metrics {
             ("engine_batch_jobs", &self.engine_batch_jobs),
             ("generations", &self.generations),
             ("padded_rows", &self.padded_rows),
+            ("connections_accepted", &self.connections_accepted),
+            ("connections_rejected", &self.connections_rejected),
+            ("connections_evicted", &self.connections_evicted),
+            ("requests_served", &self.requests_served),
+            ("requests_shed", &self.requests_shed),
         ];
         for (name, v) in counters {
             let _ = writeln!(out, "# TYPE fpga_ga_{name}_total counter");
@@ -203,6 +228,11 @@ pub struct MetricsSnapshot {
     pub engine_batch_jobs: u64,
     pub generations: u64,
     pub padded_rows: u64,
+    pub connections_accepted: u64,
+    pub connections_rejected: u64,
+    pub connections_evicted: u64,
+    pub requests_served: u64,
+    pub requests_shed: u64,
     pub latency_p50: Duration,
     pub latency_p95: Duration,
     pub latency_p99: Duration,
@@ -220,6 +250,8 @@ impl MetricsSnapshot {
              chunks: {} dispatched ({} pjrt, {} engine / {} batched jobs), \
              mean batch {:.2}, {} padded rows, {} resident bytes\n\
              generations: {}\n\
+             gateway: {} conns accepted, {} rejected, {} evicted; \
+             {} requests served, {} shed\n\
              latency: p50 {:?}, p95 {:?}, p99 {:?}, max {:?} ({} samples)",
             self.jobs_submitted,
             self.jobs_completed,
@@ -236,6 +268,11 @@ impl MetricsSnapshot {
             self.padded_rows,
             self.resident_bytes,
             self.generations,
+            self.connections_accepted,
+            self.connections_rejected,
+            self.connections_evicted,
+            self.requests_served,
+            self.requests_shed,
             self.latency_p50,
             self.latency_p95,
             self.latency_p99,
@@ -314,6 +351,8 @@ mod tests {
         let text = m.render_prometheus();
         assert!(text.contains("# TYPE fpga_ga_jobs_submitted_total counter"));
         assert!(text.contains("fpga_ga_jobs_submitted_total 3"));
+        assert!(text.contains("# TYPE fpga_ga_requests_shed_total counter"));
+        assert!(text.contains("# TYPE fpga_ga_connections_rejected_total counter"));
         assert!(text.contains("# TYPE fpga_ga_resident_bytes gauge"));
         // 500µs <= 1024µs edge; 2000µs lands in the next one.
         assert!(text.contains("fpga_ga_job_latency_seconds_bucket{le=\"0.001024\"} 1"));

@@ -51,7 +51,7 @@ mod workers;
 
 pub use batcher::{BatchPlan, Batcher};
 pub use coordinator::{Coordinator, CoordinatorBuilder};
-pub use gateway::Gateway;
+pub use gateway::{Gateway, GatewayConfig};
 pub use job::{
     JobEvent, JobHandle, JobId, JobPhase, JobResult, JobSnapshot, JobStatus, OptimizeRequest,
     Priority,

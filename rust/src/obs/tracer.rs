@@ -20,6 +20,7 @@
 //! (audited by `bench_coordinator --check`).
 
 use crate::obs::journal::{EventKind, EventRecord, Journal};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -43,16 +44,19 @@ pub enum Stage {
     ScatterExtract,
     /// Preemption pause → resume (time a displaced Low job sat paused).
     Preempted,
+    /// One HTTP request on a gateway worker: head parsed → response written.
+    Gateway,
 }
 
 impl Stage {
-    pub const ALL: [Stage; 6] = [
+    pub const ALL: [Stage; 7] = [
         Stage::QueueWait,
         Stage::BatchFormation,
         Stage::Dispatch,
         Stage::FusedStep,
         Stage::ScatterExtract,
         Stage::Preempted,
+        Stage::Gateway,
     ];
 
     pub fn name(self) -> &'static str {
@@ -63,6 +67,7 @@ impl Stage {
             Stage::FusedStep => "fused-step",
             Stage::ScatterExtract => "scatter-extract",
             Stage::Preempted => "preempted",
+            Stage::Gateway => "gateway",
         }
     }
 
@@ -72,6 +77,7 @@ impl Stage {
             Stage::QueueWait | Stage::BatchFormation => "sched",
             Stage::Dispatch | Stage::FusedStep | Stage::ScatterExtract => "exec",
             Stage::Preempted => "preempt",
+            Stage::Gateway => "gateway",
         }
     }
 }
@@ -104,11 +110,21 @@ pub struct Tracer {
     epoch: Instant,
     spans: Mutex<SpanRing>,
     journal: Journal,
+    /// EWMA of queue-wait durations (µs), harvested from every
+    /// [`Stage::QueueWait`] `record_span` call even when spans are off —
+    /// the scheduler reports queue waits unconditionally at dispatch, so
+    /// this gauge is live on every journal-enabled deployment. It is the
+    /// admission-control signal the gateway sheds Low-priority load on.
+    qw_ewma_us: AtomicU64,
+    /// Epoch-relative µs of the newest queue-wait sample (for idle decay).
+    qw_last_us: AtomicU64,
 }
 
 impl Tracer {
     /// Chrome-trace lane for the PJRT dispatcher thread.
     pub const PJRT_LANE: u32 = 100;
+    /// First Chrome-trace lane for gateway workers (`200 + i` = worker `i`).
+    pub const GATEWAY_LANE0: u32 = 200;
 
     /// Journal on; spans on iff `spans_on` (the serving default is
     /// `Tracer::new(false)`: lifecycle journal without span overhead).
@@ -128,6 +144,8 @@ impl Tracer {
                 recorded: 0,
             }),
             journal: Journal::new(journal_cap),
+            qw_ewma_us: AtomicU64::new(0),
+            qw_last_us: AtomicU64::new(0),
         }
     }
 
@@ -149,6 +167,23 @@ impl Tracer {
     /// Record a span from explicit boundary instants (for stages whose
     /// start was captured earlier: queue-wait, dispatch, preemption).
     pub fn record_span(&self, stage: Stage, job: u64, lane: u32, start: Instant, end: Instant) {
+        if stage == Stage::QueueWait && self.journal.capacity() > 0 {
+            // Pressure harvest stays on even with spans off: pure Instant
+            // arithmetic on the caller's boundary instants plus two relaxed
+            // stores — no clock read, no lock, no allocation, so the
+            // disabled-path gates in `bench_coordinator --check` hold
+            // (Tracer::disabled() skips this branch via journal capacity 0).
+            let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+            let at_us = end.saturating_duration_since(self.epoch).as_micros() as u64;
+            let old = self.qw_ewma_us.load(Ordering::Relaxed);
+            let new = if old == 0 {
+                dur_us
+            } else {
+                old - old / 8 + dur_us / 8
+            };
+            self.qw_ewma_us.store(new.max(1), Ordering::Relaxed);
+            self.qw_last_us.store(at_us, Ordering::Relaxed);
+        }
         if !self.spans_on {
             return;
         }
@@ -183,6 +218,31 @@ impl Tracer {
             job,
             lane,
             start: self.spans_on.then(Instant::now),
+        }
+    }
+
+    /// Decayed EWMA of recent queue-wait durations in microseconds — the
+    /// gateway's load-shedding signal. Halves for every second with no new
+    /// queue-wait sample, so a burst that drained minutes ago reads ~0 and
+    /// an idle server never sheds on stale pressure. Always 0 on a
+    /// [`Tracer::disabled`] tracer.
+    pub fn queue_wait_pressure_us(&self) -> u64 {
+        let ewma = self.qw_ewma_us.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return 0;
+        }
+        let last = self.qw_last_us.load(Ordering::Relaxed);
+        Self::decay_pressure(ewma, self.now_us().saturating_sub(last))
+    }
+
+    /// Halve `ewma_us` once per full second of `idle_us` since the last
+    /// queue-wait sample (pure so the decay curve is unit-testable).
+    fn decay_pressure(ewma_us: u64, idle_us: u64) -> u64 {
+        let idle_s = idle_us / 1_000_000;
+        if idle_s >= 64 {
+            0
+        } else {
+            ewma_us >> idle_s
         }
     }
 
@@ -345,6 +405,55 @@ mod tests {
         assert!(t.spans().is_empty());
         assert!(t.events().is_empty());
         assert_eq!(t.spans_recorded(), 0);
+    }
+
+    #[test]
+    fn queue_wait_pressure_builds_even_with_spans_off() {
+        // Serving default: journal on, spans off. The EWMA must still see
+        // every queue-wait sample the scheduler reports.
+        let t = Tracer::new(false);
+        assert_eq!(t.queue_wait_pressure_us(), 0);
+        let t0 = Instant::now();
+        t.record_span(Stage::QueueWait, 1, 0, t0, t0 + Duration::from_millis(40));
+        let first = t.queue_wait_pressure_us();
+        assert!(first >= 39_000, "first sample seeds the EWMA: {first}");
+        for _ in 0..32 {
+            t.record_span(Stage::QueueWait, 2, 0, t0, t0 + Duration::from_micros(80));
+        }
+        let settled = t.queue_wait_pressure_us();
+        assert!(settled < first, "EWMA tracks the newer, smaller waits");
+        assert!(t.spans().is_empty(), "spans stay off");
+    }
+
+    #[test]
+    fn queue_wait_pressure_ignores_other_stages_and_disabled_tracer() {
+        let t = Tracer::new(false);
+        let t0 = Instant::now();
+        t.record_span(Stage::FusedStep, 1, 1, t0, t0 + Duration::from_millis(50));
+        assert_eq!(t.queue_wait_pressure_us(), 0);
+
+        let off = Tracer::disabled();
+        off.record_span(Stage::QueueWait, 1, 0, t0, t0 + Duration::from_millis(50));
+        assert_eq!(off.queue_wait_pressure_us(), 0);
+    }
+
+    #[test]
+    fn queue_wait_pressure_decays_when_idle() {
+        // Fresh sample reads at full strength, then halves per idle second
+        // and bottoms out at zero — stale bursts can never trigger sheds.
+        assert_eq!(Tracer::decay_pressure(8_000, 0), 8_000);
+        assert_eq!(Tracer::decay_pressure(8_000, 999_999), 8_000);
+        assert_eq!(Tracer::decay_pressure(8_000, 1_000_000), 4_000);
+        assert_eq!(Tracer::decay_pressure(8_000, 3_500_000), 1_000);
+        assert_eq!(Tracer::decay_pressure(u64::MAX, 64_000_000), 0);
+    }
+
+    #[test]
+    fn gateway_stage_is_in_the_taxonomy() {
+        assert!(Stage::ALL.contains(&Stage::Gateway));
+        assert_eq!(Stage::Gateway.name(), "gateway");
+        assert_eq!(Stage::Gateway.cat(), "gateway");
+        assert!(Tracer::GATEWAY_LANE0 > Tracer::PJRT_LANE);
     }
 
     #[test]

@@ -4,12 +4,14 @@
 //! on both engine backends (ISSUE 2 acceptance).
 
 use fpga_ga::config::{GaParams, ServeParams};
-use fpga_ga::coordinator::{Coordinator, Gateway, JobStatus, OptimizeRequest};
+use fpga_ga::coordinator::{Coordinator, Gateway, GatewayConfig, JobStatus, OptimizeRequest};
 use fpga_ga::ga::BackendKind;
 use fpga_ga::jsonmini::{self, Value};
+use fpga_ga::obs::Stage;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 fn coordinator(backend: BackendKind) -> Arc<Coordinator> {
@@ -75,6 +77,128 @@ fn http_raw(addr: SocketAddr, method: &str, path: &str) -> (u16, String, String)
         .unwrap_or("")
         .to_string();
     (status, content_type, body.to_string())
+}
+
+/// Like [`http`] but every io failure is a `None` instead of a panic —
+/// for clients that race gateway shutdown.
+fn try_http(addr: SocketAddr, method: &str, path: &str, body: &str) -> Option<(u16, Value)> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok()?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .ok()?;
+    stream.flush().ok()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).ok()?;
+    let status: u16 = raw.split_whitespace().nth(1)?.parse().ok()?;
+    let payload = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    let v = if payload.is_empty() {
+        Value::Null
+    } else {
+        jsonmini::parse(payload).ok()?
+    };
+    Some((status, v))
+}
+
+/// One response off a persistent connection: status line + raw head (for
+/// `Connection` / `Retry-After` assertions) + parsed JSON body.
+struct KaResponse {
+    status: u16,
+    head: String,
+    value: Value,
+}
+
+/// HTTP/1.1 keep-alive client: one `TcpStream` reused across requests,
+/// responses framed by `Content-Length` (mirrors the gateway's own
+/// pipelined reader, from the other end of the wire).
+struct KaClient {
+    stream: TcpStream,
+    carry: Vec<u8>,
+}
+
+impl KaClient {
+    fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        KaClient {
+            stream,
+            carry: Vec::new(),
+        }
+    }
+
+    /// Send one request and read one framed response; `None` when the
+    /// server closed the connection instead (eviction, request cap).
+    fn try_request(&mut self, method: &str, path: &str, body: &str) -> Option<KaResponse> {
+        write!(
+            self.stream,
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .ok()?;
+        self.stream.flush().ok()?;
+        let head_len = loop {
+            if let Some(p) = self.carry.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p + 4;
+            }
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp) {
+                Ok(0) | Err(_) => return None,
+                Ok(n) => self.carry.extend_from_slice(&tmp[..n]),
+            }
+        };
+        let head = String::from_utf8(self.carry[..head_len].to_vec()).unwrap();
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    Some(v.trim().parse().unwrap())
+                } else {
+                    None
+                }
+            })
+            .unwrap_or(0);
+        let total = head_len + content_length;
+        while self.carry.len() < total {
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp) {
+                Ok(0) | Err(_) => return None,
+                Ok(n) => self.carry.extend_from_slice(&tmp[..n]),
+            }
+        }
+        let mut resp_bytes: Vec<u8> = self.carry.drain(..total).collect();
+        let payload = resp_bytes.split_off(head_len);
+        let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let value = if payload.is_empty() {
+            Value::Null
+        } else {
+            jsonmini::parse(std::str::from_utf8(&payload).unwrap()).unwrap()
+        };
+        Some(KaResponse {
+            status,
+            head,
+            value,
+        })
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: &str) -> KaResponse {
+        self.try_request(method, path, body)
+            .expect("server closed the keep-alive connection mid-exchange")
+    }
+}
+
+/// Threads in this process (`/proc/self/task`); 0 where unsupported.
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .map(|d| d.count())
+        .unwrap_or(0)
 }
 
 /// Poll `GET /v1/jobs/:id` until the job reports `phase == done`.
@@ -544,5 +668,454 @@ fn gateway_runs_registry_problem_at_v4() {
     assert_eq!(done.req_i64_vec("curve").unwrap(), direct.curve());
 
     gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn keep_alive_reuse_is_bit_identical_to_fresh_connections() {
+    // ISSUE 9 acceptance: submitting over a reused keep-alive connection
+    // changes nothing about the job — results match a `Connection: close`
+    // submission bit for bit, and the whole lifecycle (submit + every
+    // poll) rides ONE accepted connection.
+    let coord = coordinator(BackendKind::Batched);
+    let cfg = GatewayConfig {
+        // The poll loop below may take more requests than the serving
+        // default allows per connection; the cap is not what's under test.
+        max_requests_per_conn: 1 << 20,
+        ..GatewayConfig::default()
+    };
+    let mut gw = Gateway::bind_with("127.0.0.1:0", coord.clone(), cfg).unwrap();
+    let addr = gw.local_addr();
+
+    let body = r#"{"function":"f3","n":16,"m":20,"k":50,"seed":21,"tag":"ka"}"#;
+    let mut ka = KaClient::connect(addr);
+    let r = ka.request("POST", "/v1/jobs", body);
+    assert_eq!(r.status, 202, "{:?}", r.value);
+    assert!(r.head.contains("Connection: keep-alive"), "{}", r.head);
+    let ka_id = r.value.req_i64("id").unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let done_ka = loop {
+        let r = ka.request("GET", &format!("/v1/jobs/{ka_id}"), "");
+        assert_eq!(r.status, 200, "{:?}", r.value);
+        assert!(r.head.contains("Connection: keep-alive"), "{}", r.head);
+        if r.value.req_str("phase").unwrap() == "done" {
+            break r.value;
+        }
+        assert!(Instant::now() < deadline, "job {ka_id} never finished");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(done_ka.req_str("status").unwrap(), "completed");
+
+    // The whole exchange used exactly one connection.
+    let m = coord.metrics();
+    assert_eq!(m.connections_accepted, 1, "keep-alive was not reused");
+    assert!(m.requests_served >= 2, "{}", m.requests_served);
+
+    // The same submission over one-shot `Connection: close` clients.
+    let (code, v) = http(addr, "POST", "/v1/jobs", body);
+    assert_eq!(code, 202, "{v:?}");
+    let done_cl = poll_done(addr, v.req_i64("id").unwrap());
+    assert_eq!(
+        done_ka.req_i64("best_y").unwrap(),
+        done_cl.req_i64("best_y").unwrap()
+    );
+    assert_eq!(
+        done_ka.req_i64("best_x").unwrap(),
+        done_cl.req_i64("best_x").unwrap()
+    );
+    assert_eq!(
+        done_ka.req_i64_vec("curve").unwrap(),
+        done_cl.req_i64_vec("curve").unwrap()
+    );
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn keep_alive_request_cap_and_idle_eviction() {
+    let coord = coordinator(BackendKind::Scalar);
+    let cfg = GatewayConfig {
+        idle_timeout: Duration::from_millis(200),
+        max_requests_per_conn: 2,
+        ..GatewayConfig::default()
+    };
+    let mut gw = Gateway::bind_with("127.0.0.1:0", coord.clone(), cfg).unwrap();
+    let addr = gw.local_addr();
+
+    // Request cap: the final allowed request answers `Connection: close`
+    // and the server hangs up.
+    let mut ka = KaClient::connect(addr);
+    let r = ka.request("GET", "/v1/jobs", "");
+    assert_eq!(r.status, 200);
+    assert!(r.head.contains("Connection: keep-alive"), "{}", r.head);
+    let r = ka.request("GET", "/v1/jobs", "");
+    assert_eq!(r.status, 200);
+    assert!(r.head.contains("Connection: close"), "{}", r.head);
+    assert!(
+        ka.try_request("GET", "/v1/jobs", "").is_none(),
+        "server must close at max_requests_per_conn"
+    );
+
+    // Idle eviction: a keep-alive connection quiet past idle_timeout is
+    // dropped (and counted) rather than pinning a worker forever.
+    let mut idle = KaClient::connect(addr);
+    let r = idle.request("GET", "/v1/jobs", "");
+    assert_eq!(r.status, 200);
+    std::thread::sleep(Duration::from_millis(700));
+    assert!(
+        idle.try_request("GET", "/v1/jobs", "").is_none(),
+        "idle connection was not evicted"
+    );
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while coord.metrics().connections_evicted == 0 {
+        assert!(Instant::now() < deadline, "eviction never counted");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn flood_beyond_max_connections_gets_clean_503s_without_job_loss() {
+    // ISSUE 9 acceptance: a 64-connection mixed-priority flood against a
+    // 4-thread pool — arrivals over the census get a clean `503` +
+    // `Retry-After`, every accepted submission completes, and the thread
+    // count never grows with connections.
+    const CLIENTS: usize = 64;
+    const POOL: usize = 4;
+    const MAX_CONNS: usize = 8;
+    let coord = coordinator(BackendKind::Batched);
+    let cfg = GatewayConfig {
+        threads: POOL,
+        max_connections: MAX_CONNS,
+        ..GatewayConfig::default()
+    };
+    let mut gw = Gateway::bind_with("127.0.0.1:0", coord.clone(), cfg).unwrap();
+    let addr = gw.local_addr();
+
+    // Every client connects before any sends, so admission is decided
+    // purely by the connection census: exactly MAX_CONNS admitted (the
+    // accepted sockets sit idle, so no capacity frees up mid-flood).
+    let baseline_threads = thread_count();
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                barrier.wait();
+                // Probe first: a rejected connection already has its 503 in
+                // flight; reading before writing avoids an RST discarding
+                // it. An admitted connection stays silent until we send.
+                stream
+                    .set_read_timeout(Some(Duration::from_millis(1000)))
+                    .unwrap();
+                let mut tmp = [0u8; 2048];
+                let first = match stream.read(&mut tmp) {
+                    Ok(0) => panic!("connection closed without a response"),
+                    Ok(n) => Some(n),
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        None
+                    }
+                    Err(e) => panic!("probe read failed: {e}"),
+                };
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .unwrap();
+                match first {
+                    Some(n) => {
+                        // Rejected at accept. Drain the rest (server has
+                        // already closed) and verify the 503 shape.
+                        let mut raw = String::from_utf8_lossy(&tmp[..n]).to_string();
+                        let mut rest = String::new();
+                        let _ = stream.read_to_string(&mut rest);
+                        raw.push_str(&rest);
+                        assert!(
+                            raw.starts_with("HTTP/1.1 503 Service Unavailable\r\n"),
+                            "{raw}"
+                        );
+                        assert!(raw.contains("Retry-After: 1\r\n"), "{raw}");
+                        None
+                    }
+                    None => {
+                        // Admitted: submit a mixed-priority job.
+                        let body = format!(
+                            r#"{{"function":"f3","n":16,"k":25,"seed":{c},"priority":"{}","tag":"flood-{c}"}}"#,
+                            ["high", "normal", "low"][c % 3]
+                        );
+                        write!(
+                            stream,
+                            "POST /v1/jobs HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                            body.len()
+                        )
+                        .unwrap();
+                        stream.flush().unwrap();
+                        let mut raw = String::new();
+                        stream.read_to_string(&mut raw).unwrap();
+                        assert!(raw.starts_with("HTTP/1.1 202 Accepted\r\n"), "{raw}");
+                        let payload = raw.split("\r\n\r\n").nth(1).unwrap();
+                        Some(jsonmini::parse(payload).unwrap().req_i64("id").unwrap())
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Mid-flood (all 64 connections open, none served yet): the server
+    // side added ZERO threads. The margin is the discriminator — the old
+    // thread-per-connection gateway would sit ~CLIENTS over baseline here,
+    // while concurrent tests in this process only drift it by a few.
+    if baseline_threads > 0 {
+        std::thread::sleep(Duration::from_millis(500));
+        let mid = thread_count();
+        assert!(
+            mid <= baseline_threads + CLIENTS + CLIENTS / 2,
+            "thread count grew with connections: {baseline_threads} -> {mid}"
+        );
+    }
+
+    let mut accepted_ids = Vec::new();
+    let mut rejected = 0usize;
+    for c in clients {
+        match c.join().expect("flood client panicked") {
+            Some(id) => accepted_ids.push(id),
+            None => rejected += 1,
+        }
+    }
+    assert_eq!(accepted_ids.len(), MAX_CONNS, "census admitted a different count");
+    assert_eq!(rejected, CLIENTS - MAX_CONNS);
+
+    let m = coord.metrics();
+    assert_eq!(m.connections_accepted as usize, MAX_CONNS);
+    assert_eq!(m.connections_rejected as usize, CLIENTS - MAX_CONNS);
+    assert_eq!(m.jobs_submitted as usize, MAX_CONNS, "rejections must not submit");
+
+    // Zero lost jobs: every accepted submission completes.
+    for id in &accepted_ids {
+        let done = poll_done(addr, *id);
+        assert_eq!(done.req_str("status").unwrap(), "completed", "{done:?}");
+    }
+    assert_eq!(coord.metrics().jobs_completed as usize, MAX_CONNS);
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn shed_429_hits_only_low_priority_and_carries_retry_after() {
+    // ISSUE 9 acceptance: with --shed-queue-wait-ms set and queue-wait
+    // pressure over the line, Low-priority submits shed as 429 +
+    // Retry-After while Normal/High pass.
+    let coord = coordinator(BackendKind::Scalar);
+    let cfg = GatewayConfig {
+        shed_queue_wait_ms: 50,
+        ..GatewayConfig::default()
+    };
+    let mut gw = Gateway::bind_with("127.0.0.1:0", coord.clone(), cfg).unwrap();
+    let addr = gw.local_addr();
+
+    // Inject pressure through the same channel the scheduler feeds: one
+    // 500ms QueueWait span seeds the EWMA an order of magnitude over the
+    // 50ms threshold (read-side decay halves per idle second — margin to
+    // spare for the handful of requests below).
+    let end = Instant::now();
+    let start = end - Duration::from_millis(500);
+    coord.tracer().record_span(Stage::QueueWait, 0, 0, start, end);
+    assert!(coord.tracer().queue_wait_pressure_us() > 50_000);
+
+    let mut ka = KaClient::connect(addr);
+    let low = r#"{"function":"f3","n":16,"k":25,"seed":1,"priority":"low"}"#;
+    let r = ka.request("POST", "/v1/jobs", low);
+    assert_eq!(r.status, 429, "{:?}", r.value);
+    assert!(r.head.contains("Retry-After: "), "{}", r.head);
+    assert!(
+        r.value.req_str("error").unwrap().contains("load shed"),
+        "{:?}",
+        r.value
+    );
+
+    // Normal and High sail through the same pressure.
+    let normal = r#"{"function":"f3","n":16,"k":25,"seed":2,"priority":"normal"}"#;
+    let r = ka.request("POST", "/v1/jobs", normal);
+    assert_eq!(r.status, 202, "{:?}", r.value);
+    let high = r#"{"function":"f3","n":16,"k":25,"seed":3,"priority":"high"}"#;
+    let r = ka.request("POST", "/v1/jobs", high);
+    assert_eq!(r.status, 202, "{:?}", r.value);
+
+    let m = coord.metrics();
+    assert_eq!(m.requests_shed, 1);
+    assert_eq!(m.jobs_submitted, 2, "shed request must not submit");
+
+    // Shed responses keep the connection: the client can retry on it.
+    let r = ka.request("GET", "/v1/metrics", "");
+    assert_eq!(r.status, 200);
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn slowloris_is_cut_off_at_the_request_deadline() {
+    let coord = coordinator(BackendKind::Scalar);
+    let cfg = GatewayConfig {
+        threads: 1,
+        max_connections: 2,
+        request_deadline: Duration::from_millis(300),
+        idle_timeout: Duration::from_secs(2),
+        ..GatewayConfig::default()
+    };
+    let mut gw = Gateway::bind_with("127.0.0.1:0", coord.clone(), cfg).unwrap();
+    let addr = gw.local_addr();
+
+    // A head that starts and then stalls: the whole-request clock (not a
+    // per-byte timer) fires, and the connection is evicted with a 408.
+    let t0 = Instant::now();
+    let mut stall = TcpStream::connect(addr).unwrap();
+    stall
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stall.write_all(b"POST /v1/jobs HTTP/1.1\r\nContent-Le").unwrap();
+    stall.flush().unwrap();
+    let mut raw = String::new();
+    stall.read_to_string(&mut raw).unwrap();
+    let took = t0.elapsed();
+    assert!(raw.starts_with("HTTP/1.1 408 Request Timeout\r\n"), "{raw}");
+    assert!(raw.contains("Connection: close"), "{raw}");
+    assert!(
+        took < Duration::from_secs(5),
+        "slowloris pinned the worker for {took:?}"
+    );
+
+    // Trickling a byte inside every read window must NOT reset the clock —
+    // the regression the old per-byte 5s timeout allowed.
+    let t0 = Instant::now();
+    let drip = TcpStream::connect(addr).unwrap();
+    drip.set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut tx = drip.try_clone().unwrap();
+    let writer = std::thread::spawn(move || {
+        for b in b"GET /v1/jobs HTTP/1.1\r\nHost: drip\r\nAccept: every-byte-very-slowly\r\n" {
+            if tx.write_all(&[*b]).is_err() || tx.flush().is_err() {
+                return; // server gave up on us — exactly the point
+            }
+            std::thread::sleep(Duration::from_millis(40));
+        }
+    });
+    // One read (not read-to-EOF): the writer half may draw an RST after
+    // the server closes, which would discard a buffered response.
+    let mut drip = drip;
+    let mut tmp = [0u8; 2048];
+    let n = drip.read(&mut tmp).unwrap();
+    let raw = String::from_utf8_lossy(&tmp[..n]).to_string();
+    let took = t0.elapsed();
+    writer.join().unwrap();
+    assert!(raw.starts_with("HTTP/1.1 408 "), "{raw}");
+    assert!(
+        took < Duration::from_secs(5),
+        "trickled bytes reset the deadline: {took:?}"
+    );
+
+    let m = coord.metrics();
+    assert!(m.connections_evicted >= 2, "{}", m.connections_evicted);
+
+    // The worker slot is free again: a healthy request succeeds at once.
+    let (code, _) = http(addr, "GET", "/v1/jobs", "");
+    assert_eq!(code, 200);
+
+    gw.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_drains_in_flight_and_joins_quickly() {
+    let coord = coordinator(BackendKind::Scalar);
+    let mut gw = Gateway::bind("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = gw.local_addr();
+
+    // Clients hammer submits while the gateway shuts down under them. The
+    // invariant: every 202 a client actually received names a job the
+    // coordinator tracks to completion — an acknowledged submit is never
+    // lost, no matter where shutdown cut the connection.
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..4)
+        .map(|c: i64| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut acked = Vec::new();
+                let mut i = 0i64;
+                while !stop.load(Ordering::Relaxed) {
+                    i += 1;
+                    let body = format!(
+                        r#"{{"function":"f3","n":16,"k":25,"seed":{}}}"#,
+                        c * 1000 + i
+                    );
+                    match try_http(addr, "POST", "/v1/jobs", &body) {
+                        Some((202, v)) => acked.push(v.req_i64("id").unwrap()),
+                        Some((code, v)) => panic!("unexpected {code}: {v:?}"),
+                        // Connection refused or cut: the drain reached us.
+                        None => break,
+                    }
+                }
+                acked
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(150));
+    let t0 = Instant::now();
+    gw.shutdown();
+    let shutdown_took = t0.elapsed();
+    stop.store(true, Ordering::Relaxed);
+    assert!(
+        shutdown_took < Duration::from_secs(5),
+        "drain should be prompt with healthy clients: {shutdown_took:?}"
+    );
+
+    let mut acked = Vec::new();
+    for c in clients {
+        acked.extend(c.join().expect("client thread panicked"));
+    }
+    assert!(!acked.is_empty(), "no submissions landed before shutdown");
+
+    // Gateway is gone; observe through the in-process registry.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    for id in &acked {
+        let id = fpga_ga::coordinator::JobId(*id as u64);
+        loop {
+            let s = coord.job(id).expect("acknowledged job vanished");
+            if s.phase.as_str() == "done" {
+                assert_eq!(s.status, Some(JobStatus::Completed), "{:?}", s.status);
+                break;
+            }
+            assert!(Instant::now() < deadline, "job {id:?} never finished");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    assert!(coord.metrics().jobs_submitted as usize >= acked.len());
+
+    coord.shutdown();
+}
+
+#[test]
+fn wildcard_bind_shutdown_does_not_hang() {
+    // Regression: the old shutdown poked the listener awake by connecting
+    // to its own address, which never terminates on a wildcard bind
+    // (`0.0.0.0`) — the accept loop now polls a stop flag instead.
+    let coord = coordinator(BackendKind::Scalar);
+    let mut gw = Gateway::bind("0.0.0.0:0", coord.clone()).unwrap();
+    let t0 = Instant::now();
+    gw.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "wildcard-bind shutdown hung for {:?}",
+        t0.elapsed()
+    );
     coord.shutdown();
 }

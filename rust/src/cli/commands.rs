@@ -53,6 +53,12 @@ COMMANDS:
               --shed-queue-wait-ms MS (shed Low-priority POST /v1/jobs
               with 429 once queue-wait pressure crosses MS; 0 = off;
               also `[serve] shed_queue_wait_ms`)
+              --max-chunk-retries R (checkpoint retries per chunk before a
+              crashing job is quarantined as failed; also
+              `[serve] max_chunk_retries`; docs/api.md §Failure semantics)
+              --inject-faults SPEC (TEST ONLY: deterministic worker-fault
+              plan, e.g. 'kind=panic,job=3,chunk=1'; also
+              `[serve] inject_faults`)
               --mixed-priority (cycle job priorities low/normal/high to
               exercise preemption in the synthetic trace)
               --trace-out FILE (Chrome trace-event JSON; also enabled by
@@ -218,6 +224,14 @@ fn serve_params_from(args: &Args) -> crate::Result<crate::config::ServeParams> {
     serve.gateway_threads = args.opt_or("gateway-threads", serve.gateway_threads)?;
     serve.max_connections = args.opt_or("max-connections", serve.max_connections)?;
     serve.shed_queue_wait_ms = args.opt_or("shed-queue-wait-ms", serve.shed_queue_wait_ms)?;
+    serve.max_chunk_retries = args.opt_or("max-chunk-retries", serve.max_chunk_retries)?;
+    if let Some(spec) = args.opt("inject-faults") {
+        // Validated here so a typo fails at the CLI with the parse error
+        // instead of surfacing later from CoordinatorBuilder::start.
+        crate::coordinator::FaultPlan::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--inject-faults: {e}"))?;
+        serve.inject_faults = spec.to_string();
+    }
     anyhow::ensure!(
         serve.gateway_threads >= 1,
         "--gateway-threads must be >= 1"
@@ -700,6 +714,24 @@ mod tests {
         let err = serve_params_from(&parse("serve --gateway-threads 8 --max-connections 2"))
             .unwrap_err();
         assert!(err.to_string().contains("--max-connections"), "{err}");
+    }
+
+    #[test]
+    fn serve_recovery_flags_parse_and_validate() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from)).unwrap();
+        let s = serve_params_from(&parse(
+            "serve --max-chunk-retries 5 --inject-faults kind=panic,job=3,chunk=1",
+        ))
+        .unwrap();
+        assert_eq!(s.max_chunk_retries, 5);
+        assert_eq!(s.inject_faults, "kind=panic,job=3,chunk=1");
+        let d = serve_params_from(&parse("serve")).unwrap();
+        assert_eq!(d.max_chunk_retries, 2, "default retry budget");
+        assert_eq!(d.inject_faults, "", "injection off by default");
+        // Malformed fault specs fail at the CLI, not at coordinator start.
+        let err =
+            serve_params_from(&parse("serve --inject-faults kind=meteor")).unwrap_err();
+        assert!(err.to_string().contains("--inject-faults"), "{err}");
     }
 
     #[test]

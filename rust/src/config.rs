@@ -152,6 +152,16 @@ pub struct ServeParams {
     /// (decayed EWMA of scheduler queue waits). When crossed, Low-priority
     /// `POST /v1/jobs` gets `429` + `Retry-After`; 0 disables shedding.
     pub shed_queue_wait_ms: u64,
+    /// How many times a chunk lost to a worker crash is re-executed from
+    /// its dispatch checkpoint before the job is quarantined into terminal
+    /// `Failed` (docs/api.md §Failure semantics). 0 = quarantine on the
+    /// first crash.
+    pub max_chunk_retries: u32,
+    /// Test-only deterministic fault injection: a
+    /// [`crate::coordinator::FaultPlan`] spec (`--inject-faults`; see
+    /// `rust/src/coordinator/faults.rs` for the grammar). Empty = no
+    /// faults, the production default.
+    pub inject_faults: String,
 }
 
 impl Default for ServeParams {
@@ -171,6 +181,8 @@ impl Default for ServeParams {
             gateway_threads: 4,
             max_connections: 64,
             shed_queue_wait_ms: 0,
+            max_chunk_retries: 2,
+            inject_faults: String::new(),
         }
     }
 }
@@ -289,6 +301,8 @@ fn apply_serve(s: &mut ServeParams, v: &Value) -> Result<()> {
     get_usize(v, "gateway_threads", &mut s.gateway_threads)?;
     get_usize(v, "max_connections", &mut s.max_connections)?;
     get_u64(v, "shed_queue_wait_ms", &mut s.shed_queue_wait_ms)?;
+    get_u32(v, "max_chunk_retries", &mut s.max_chunk_retries)?;
+    get_string(v, "inject_faults", &mut s.inject_faults)?;
     if s.gateway_threads == 0 {
         bail!("`gateway_threads` must be at least 1");
     }
@@ -411,6 +425,20 @@ use_pjrt = false
         let err =
             Config::from_toml("[serve]\ngateway_threads = 8\nmax_connections = 4").unwrap_err();
         assert!(err.to_string().contains("max_connections"), "{err}");
+    }
+
+    #[test]
+    fn recovery_keys_parse() {
+        let c = Config::from_toml(
+            "[serve]\nmax_chunk_retries = 5\ninject_faults = \"kind=panic,job=1\"",
+        )
+        .unwrap();
+        assert_eq!(c.serve.max_chunk_retries, 5);
+        assert_eq!(c.serve.inject_faults, "kind=panic,job=1");
+        let d = Config::default().serve;
+        assert_eq!(d.max_chunk_retries, 2);
+        assert_eq!(d.inject_faults, "", "injection is strictly opt-in");
+        assert!(Config::from_toml("[serve]\nmax_chunk_retries = -1").is_err());
     }
 
     #[test]

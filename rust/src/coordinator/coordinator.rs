@@ -17,6 +17,7 @@
 
 use crate::config::ServeParams;
 use crate::coordinator::batcher::Batcher;
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::job::{
     JobEvent, JobHandle, JobId, JobPhase, JobResult, JobSnapshot, JobStatus, OptimizeRequest,
     Priority,
@@ -24,7 +25,8 @@ use crate::coordinator::job::{
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::resident::ResidentStore;
 use crate::coordinator::workers::{
-    spawn_engine_pool, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg, SlabTask, WorkMsg,
+    spawn_engine_pool, spawn_engine_worker, spawn_pjrt_thread, DoneMsg, RunningJob, SchedMsg,
+    SlabTask, WorkMsg, WorkerId,
 };
 use crate::ga::{AnyGa, BackendKind, VariantKey};
 use crate::obs::{EventKind, Stage, Tracer};
@@ -92,6 +94,12 @@ impl CoordinatorBuilder {
         let tracer = Arc::new(Tracer::new(serve.trace));
         let registry: Registry = Arc::new(Mutex::new(BTreeMap::new()));
         let (sched_tx, sched_rx) = channel::<SchedMsg>();
+        // Deterministic fault injection (tests only; empty spec in
+        // production — `FaultPlan::none()` short-circuits in the workers).
+        let faults = Arc::new(
+            FaultPlan::parse(&serve.inject_faults)
+                .map_err(|e| anyhow::anyhow!("invalid inject_faults spec: {e}"))?,
+        );
 
         // Behavioral pool (always available: it is also the pjrt fallback),
         // stepping through the configured execution backend.
@@ -101,28 +109,76 @@ impl CoordinatorBuilder {
             serve.workers.max(1),
             serve.backend,
             serve.kernels,
-            engine_rx,
+            engine_rx.clone(),
             sched_tx.clone(),
             metrics.clone(),
             tracer.clone(),
+            faults.clone(),
         );
+        // Engine respawner: rebuilds a crashed pool lane with identical
+        // configuration. The replacement thread shares the original work
+        // queue (`engine_rx`) and is detached — shutdown still sends one
+        // `WorkMsg::Shutdown` per pool slot, which the replacement consumes.
+        let engine_respawn: Box<dyn Fn(usize) + Send> = {
+            let (backend, kernels) = (serve.backend, serve.kernels);
+            let (engine_rx, sched_tx) = (engine_rx, sched_tx.clone());
+            let (metrics, tracer, faults) = (metrics.clone(), tracer.clone(), faults.clone());
+            Box::new(move |i| {
+                // Detached on purpose: replacement lanes are reaped by the
+                // process, not the JoinSet (which holds the original slots).
+                let _ = spawn_engine_worker(
+                    i,
+                    backend,
+                    kernels,
+                    engine_rx.clone(),
+                    sched_tx.clone(),
+                    metrics.clone(),
+                    tracer.clone(),
+                    faults.clone(),
+                );
+            })
+        };
 
         // PJRT dispatcher (only when enabled; requires artifacts on disk).
-        let (pjrt_tx, pjrt_thread) = if serve.use_pjrt {
+        let (pjrt_tx, pjrt_thread, pjrt_respawn) = if serve.use_pjrt {
             let manifest = Manifest::load(Path::new(&serve.artifacts_dir))?;
             let (tx, rx) = channel::<WorkMsg>();
+            let rx = Arc::new(Mutex::new(rx));
             let th = spawn_pjrt_thread(
-                manifest,
+                manifest.clone(),
                 serve.backend,
                 serve.kernels,
-                rx,
+                rx.clone(),
                 sched_tx.clone(),
                 metrics.clone(),
                 tracer.clone(),
+                faults.clone(),
             );
-            (Some(tx), Some(th))
+            let respawn: Box<dyn Fn() + Send> = {
+                let (backend, kernels) = (serve.backend, serve.kernels);
+                let sched_tx = sched_tx.clone();
+                let (metrics, tracer, faults) = (metrics.clone(), tracer.clone(), faults.clone());
+                Box::new(move || {
+                    // Detached on purpose (see the engine respawner above).
+                    let _ = spawn_pjrt_thread(
+                        manifest.clone(),
+                        backend,
+                        kernels,
+                        rx.clone(),
+                        sched_tx.clone(),
+                        metrics.clone(),
+                        tracer.clone(),
+                        faults.clone(),
+                    );
+                })
+            };
+            (Some(tx), Some(th), Some(respawn))
         } else {
-            (None, None)
+            (None, None, None)
+        };
+        let respawner = Respawner {
+            engine: engine_respawn,
+            pjrt: pjrt_respawn,
         };
 
         let sched_metrics = metrics.clone();
@@ -142,6 +198,7 @@ impl CoordinatorBuilder {
                     sched_metrics,
                     sched_registry,
                     sched_tracer,
+                    respawner,
                 )
             })
             .expect("spawn scheduler");
@@ -167,6 +224,30 @@ struct JoinSet {
     scheduler: std::thread::JoinHandle<()>,
     engine_threads: Vec<std::thread::JoinHandle<()>>,
     pjrt_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Rebuilds a dead worker lane with its original configuration (closures
+/// capture the spawn context from [`CoordinatorBuilder::start`]). Pool size
+/// is invariant under crashes: every [`DoneMsg::Crashed`] report respawns
+/// exactly the lane it names, so shutdown's one-`Shutdown`-per-slot message
+/// discipline keeps holding. Replacement threads are detached — they own no
+/// state beyond a fresh backend instance.
+pub(crate) struct Respawner {
+    engine: Box<dyn Fn(usize) + Send>,
+    pjrt: Option<Box<dyn Fn() + Send>>,
+}
+
+impl Respawner {
+    fn respawn(&self, worker: WorkerId) {
+        match worker {
+            WorkerId::Engine(i) => (self.engine)(i),
+            WorkerId::Pjrt => {
+                if let Some(f) = &self.pjrt {
+                    f()
+                }
+            }
+        }
+    }
 }
 
 /// Handle to a running coordinator.
@@ -339,6 +420,17 @@ struct JobEntry {
     /// job is in flight — or while its state lives in the [`ResidentStore`]
     /// instead (resident mode).
     inst: Option<AnyGa>,
+    /// Recovery checkpoint: the job's full state as of its latest dispatch
+    /// (docs/backends.md §Recovery lifecycle). `Some` whenever the state is
+    /// aboard a worker (in flight, or resident in an in-flight slab), so a
+    /// worker crash can restore and deterministically re-execute the lost
+    /// chunk. Cleared when a chunk lands (stale) — except for slab riders,
+    /// whose state did not change and whose checkpoint stays reusable.
+    checkpoint: Option<AnyGa>,
+    /// Consecutive failed executions of the CURRENT chunk; reset to 0 when
+    /// a chunk lands. `retries > serve.max_chunk_retries` quarantines the
+    /// job (terminal [`JobStatus::Failed`]).
+    retries: u32,
     remaining: u32,
     priority: Priority,
     /// Execution-variant key (fixed for the job's life; the batcher's
@@ -379,6 +471,7 @@ fn finalize_job(
     metrics: &Metrics,
     registry: &Registry,
     tracer: &Tracer,
+    error: Option<String>,
 ) {
     let counter = match status {
         JobStatus::Completed => &metrics.jobs_completed,
@@ -416,8 +509,12 @@ fn finalize_job(
             s.best_x = inst.best().x;
             s.curve = curve.clone();
             s.backend = backend;
+            s.error = error.clone();
         }
     }
+    // Delivering the result is what wakes `JobHandle::wait()` — EVERY
+    // terminal path must reach this send, including quarantine, or a
+    // client blocked on a crashed job's handle would hang forever.
     let _ = entry.result_tx.send(JobResult {
         id,
         tag: entry.tag,
@@ -428,7 +525,7 @@ fn finalize_job(
         curve,
         latency,
         backend,
-        error: None,
+        error,
     });
 }
 
@@ -562,6 +659,9 @@ fn on_job_terminal(
     }
 }
 
+// allow(too_many_arguments): the scheduler's full context, taken flat at
+// thread start; it lives for the coordinator's whole life.
+#[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
     rx: std::sync::mpsc::Receiver<SchedMsg>,
     engine_tx: Sender<WorkMsg>,
@@ -570,6 +670,7 @@ fn scheduler_loop(
     metrics: Arc<Metrics>,
     registry: Registry,
     tracer: Arc<Tracer>,
+    respawner: Respawner,
 ) {
     let mut table: HashMap<JobId, JobEntry> = HashMap::new();
     let window = Duration::from_micros(serve.batch_window_us);
@@ -638,6 +739,8 @@ fn scheduler_loop(
                                 stale_chunks: 0,
                                 last_best: None,
                                 inst: Some(inst),
+                                checkpoint: None,
+                                retries: 0,
                                 remaining: req.params.k,
                                 priority,
                                 variant,
@@ -728,6 +831,7 @@ fn scheduler_loop(
                             &metrics,
                             &registry,
                             &tracer,
+                            None,
                         );
                         on_job_terminal(
                             priority,
@@ -761,6 +865,12 @@ fn scheduler_loop(
                             } = job;
                             let Some(entry) = table.get_mut(&id) else { continue };
                             entry.in_flight = false;
+                            // The chunk landed: its checkpoint is stale and
+                            // the retry budget refills (budgets are per
+                            // chunk, not per job — see docs/api.md
+                            // §Failure semantics).
+                            entry.checkpoint = None;
+                            entry.retries = 0;
                             entry.remaining = entry.remaining.saturating_sub(executed);
                             entry.chunks_done += 1;
                             metrics
@@ -802,6 +912,7 @@ fn scheduler_loop(
                                     finalize_job(
                                         id, entry, &inst, status, backend, now, &metrics,
                                         &registry, &tracer,
+                                        None,
                                     );
                                     on_job_terminal(
                                         priority,
@@ -887,6 +998,7 @@ fn scheduler_loop(
                                     finalize_job(
                                         id, entry, &inst, status, prev, now, &metrics,
                                         &registry, &tracer,
+                                        None,
                                     );
                                     on_job_terminal(
                                         priority,
@@ -901,6 +1013,11 @@ fn scheduler_loop(
                                 continue;
                             }
                             entry.in_flight = false;
+                            // Advanced row: checkpoint stale, budget
+                            // refills. (Rider rows above keep theirs — the
+                            // state they checkpointed did not change.)
+                            entry.checkpoint = None;
+                            entry.retries = 0;
                             entry.remaining = entry.remaining.saturating_sub(executed);
                             entry.chunks_done += 1;
                             metrics
@@ -947,6 +1064,7 @@ fn scheduler_loop(
                                     finalize_job(
                                         id, entry, &inst, status, backend, now, &metrics,
                                         &registry, &tracer,
+                                        None,
                                     );
                                     on_job_terminal(
                                         priority,
@@ -978,6 +1096,136 @@ fn scheduler_loop(
                             }
                         }
                         store.debug_check("chunk boundary");
+                    }
+                    DoneMsg::Crashed {
+                        retryable,
+                        riders,
+                        slab,
+                        error,
+                        worker,
+                    } => {
+                        // Supervision (docs/backends.md §Recovery
+                        // lifecycle): restore capacity first (respawn the
+                        // lane), then repair state, then decide retry vs
+                        // quarantine per affected job.
+                        metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                        tracer.event(0, EventKind::WorkerCrash);
+                        log::warn!(
+                            "worker {worker:?} crashed ({error}); respawning — {} job(s) hit",
+                            retryable.len() + riders.len()
+                        );
+                        respawner.respawn(worker);
+                        if let Some((key, per_row)) = slab {
+                            // The slab died with the worker: clear its
+                            // residency and accounting; every row restores
+                            // from its dispatch checkpoint below.
+                            let lost: Vec<JobId> =
+                                retryable.iter().chain(riders.iter()).copied().collect();
+                            store.abandon_dispatch(key, &lost, per_row);
+                        }
+                        // Riders lost only their parked storage, not
+                        // executing work: restore AoS state from the
+                        // dispatch checkpoint, no retry charged. They keep
+                        // their place in the batcher / paused list and
+                        // re-enter residency at their next boundary.
+                        for id in riders {
+                            let Some(entry) = table.get_mut(&id) else { continue };
+                            entry.inst = entry.checkpoint.take();
+                            debug_assert!(entry.inst.is_some(), "rider had a checkpoint");
+                        }
+                        for id in retryable {
+                            let Some(entry) = table.get_mut(&id) else { continue };
+                            entry.in_flight = false;
+                            entry.retries += 1;
+                            // Kept in the entry too: the retry may crash
+                            // again and restore from the same state.
+                            let checkpoint = entry
+                                .checkpoint
+                                .clone()
+                                .expect("in-flight job has a dispatch checkpoint");
+                            if entry.cancelled {
+                                // A cancel that landed while the doomed
+                                // chunk flew: honor it instead of retrying.
+                                // unwrap: get_mut(&id) succeeded just above.
+                                let entry = table.remove(&id).unwrap();
+                                let priority = entry.priority;
+                                let backend = snapshot_backend(&registry, id);
+                                finalize_job(
+                                    id,
+                                    entry,
+                                    &checkpoint,
+                                    JobStatus::Cancelled,
+                                    backend,
+                                    now,
+                                    &metrics,
+                                    &registry,
+                                    &tracer,
+                                    None,
+                                );
+                                on_job_terminal(
+                                    priority,
+                                    &mut high_active,
+                                    &mut paused,
+                                    &mut table,
+                                    &mut batcher,
+                                    now,
+                                    &tracer,
+                                );
+                                continue;
+                            }
+                            if entry.retries > serve.max_chunk_retries {
+                                // Poison-job quarantine: the budget is
+                                // exhausted — terminal Failed carrying the
+                                // crash's panic message; the process and
+                                // every sibling job keep running.
+                                tracer.event(id.0, EventKind::Quarantined);
+                                // unwrap: get_mut(&id) succeeded just above.
+                                let entry = table.remove(&id).unwrap();
+                                let priority = entry.priority;
+                                let backend = snapshot_backend(&registry, id);
+                                finalize_job(
+                                    id,
+                                    entry,
+                                    &checkpoint,
+                                    JobStatus::Failed,
+                                    backend,
+                                    now,
+                                    &metrics,
+                                    &registry,
+                                    &tracer,
+                                    Some(error.clone()),
+                                );
+                                on_job_terminal(
+                                    priority,
+                                    &mut high_active,
+                                    &mut paused,
+                                    &mut table,
+                                    &mut batcher,
+                                    now,
+                                    &tracer,
+                                );
+                                continue;
+                            }
+                            // Deterministic checkpoint retry, re-dispatched
+                            // SOLO (bypassing the batcher): a poison job
+                            // cannot charge innocent batch-mates' budgets
+                            // a second time.
+                            metrics.chunk_retries.fetch_add(1, Ordering::Relaxed);
+                            tracer.event(id.0, EventKind::ChunkRetry);
+                            entry.in_flight = true;
+                            let multi = entry.variant.is_multi();
+                            let running = RunningJob {
+                                id,
+                                inst: checkpoint,
+                                remaining: entry.remaining,
+                                executed: 0,
+                                chunk: entry.chunks_done,
+                            };
+                            metrics.chunks_dispatched.fetch_add(1, Ordering::Relaxed);
+                            if !dispatch(vec![running], multi) {
+                                return; // backend gone
+                            }
+                        }
                     }
                 }
             }
@@ -1021,6 +1269,7 @@ fn scheduler_loop(
                     &metrics,
                     &registry,
                     &tracer,
+                    None,
                 );
             }
         }
@@ -1060,6 +1309,7 @@ fn scheduler_loop(
                             &metrics,
                             &registry,
                             &tracer,
+                            None,
                         );
                         on_job_terminal(
                             priority,
@@ -1076,6 +1326,10 @@ fn scheduler_loop(
                     let entry = table.get_mut(&id).unwrap();
                     // unwrap: ...and that it holds a parked AoS instance.
                     let inst = entry.inst.take().unwrap();
+                    // Clone-on-dispatch checkpoint: the state a worker
+                    // crash restores and re-executes (bit-identically —
+                    // chunks are deterministic functions of their input).
+                    entry.checkpoint = Some(inst.clone());
                     entry.in_flight = true;
                     // Queue-wait span: ready → dispatched (scheduler lane).
                     if let Some(since) = entry.queued_at.take() {
@@ -1086,6 +1340,7 @@ fn scheduler_loop(
                         inst,
                         remaining: entry.remaining,
                         executed: 0,
+                        chunk: entry.chunks_done,
                     });
                 }
                 if running.is_empty() {
@@ -1157,6 +1412,7 @@ fn scheduler_loop(
                             &metrics,
                             &registry,
                             &tracer,
+                            None,
                         );
                         on_job_terminal(
                             priority,
@@ -1188,6 +1444,8 @@ fn scheduler_loop(
                         } else {
                             // unwrap: non-resident ready jobs park AoS state.
                             let inst = entry.inst.take().unwrap();
+                            // Clone-on-dispatch checkpoint (as above).
+                            entry.checkpoint = Some(inst.clone());
                             entry.in_flight = true;
                             if let Some(since) = entry.queued_at.take() {
                                 tracer.record_span(Stage::QueueWait, id.0, 0, since, now);
@@ -1197,6 +1455,7 @@ fn scheduler_loop(
                                 inst,
                                 remaining: entry.remaining,
                                 executed: 0,
+                                chunk: entry.chunks_done,
                             });
                         }
                     }
@@ -1224,10 +1483,21 @@ fn scheduler_loop(
                 // per row.
                 let ready_set: HashSet<JobId> = ready.iter().copied().collect();
                 let mut gens = vec![0u32; rslab.ids.len()];
+                let mut chunks = vec![0u32; rslab.ids.len()];
                 for (row, rid) in rslab.ids.iter().enumerate() {
+                    // unwrap: every slab row belongs to a live table entry
+                    // (rows are evicted when their job leaves the table).
+                    let entry = table.get_mut(rid).unwrap();
+                    // Checkpoint EVERY row aboard the dispatch — riders
+                    // too: a crash loses the whole slab. A row that only
+                    // rode along last flight still holds a valid
+                    // checkpoint (its state did not change), so only rows
+                    // that advanced re-gather here.
+                    if entry.checkpoint.is_none() {
+                        entry.checkpoint = Some(rslab.slab.materialize_row(row));
+                    }
+                    chunks[row] = entry.chunks_done;
                     if ready_set.contains(rid) {
-                        // unwrap: ready ids were verified live above.
-                        let entry = table.get_mut(rid).unwrap();
                         entry.in_flight = true;
                         if let Some(since) = entry.queued_at.take() {
                             tracer.record_span(Stage::QueueWait, rid.0, 0, since, now);
@@ -1245,6 +1515,7 @@ fn scheduler_loop(
                 let task = SlabTask {
                     rslab,
                     gens,
+                    chunks,
                     sent: Instant::now(),
                 };
                 if engine_tx.send(WorkMsg::Slab(task)).is_err() {

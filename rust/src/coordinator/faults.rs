@@ -1,0 +1,342 @@
+//! Deterministic fault injection for the execution stack.
+//!
+//! A [`FaultPlan`] is a schedule of faults — panics, PJRT runtime errors,
+//! stalls — keyed on `(job, chunk-index, worker lane)`. The plan is parsed
+//! from the test-only `--inject-faults SPEC` flag (or the
+//! `[serve] inject_faults` key) and consulted by the workers at dispatch
+//! time, BEFORE any job state mutates: an injected panic therefore loses
+//! exactly one chunk, which the scheduler re-executes from its dispatch
+//! checkpoint (docs/backends.md §Recovery lifecycle). Every trigger is
+//! deterministic — explicit rules match literal coordinates, probabilistic
+//! rules hash `(seed, job, chunk, worker)` through SplitMix64 — so a
+//! faulty run is exactly reproducible.
+//!
+//! Spec grammar: rules separated by `;`, each rule a comma-separated list
+//! of `key=value` fields:
+//!
+//! ```text
+//! kind=panic|error|stall   (required) what to inject
+//! job=<u64>                match one job id        (omitted = any)
+//! chunk=<u32>              match one chunk index   (omitted = any)
+//! worker=<u32>             match one worker lane   (omitted = any)
+//! times=<u32>              firing budget, default 1; 0 = unlimited
+//! prob=<f64>  seed=<u64>   seeded probabilistic match (both or neither)
+//! delay_ms=<u64>           stall duration, default 10 (stall only)
+//! ```
+//!
+//! Example: `kind=panic,job=3,chunk=1` panics the worker executing job 3's
+//! second chunk, once. `kind=stall,prob=0.1,seed=7,times=0` stalls ~10% of
+//! all dispatches, reproducibly. Kinds: `panic` aborts the dispatch (the
+//! crash-recovery path), `stall` delays it (the worker sleeps, the
+//! scheduler keeps running), `error` makes `run_pjrt_batch` return `Err`
+//! (the engine-fallback path; a no-op on engine workers).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Duration;
+
+/// What an execution-path rule injects (engine pool or PJRT thread, at
+/// dispatch time, before any state mutates).
+#[derive(Debug, PartialEq, Eq)]
+pub enum ExecFault {
+    /// Panic with this message — exercises crash recovery (checkpoint
+    /// retry, worker respawn, quarantine).
+    Panic(String),
+    /// Sleep this long, then execute normally — exercises slow-worker
+    /// behavior (deadlines, scheduler liveness).
+    Stall(Duration),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    Panic,
+    Error,
+    Stall,
+}
+
+#[derive(Debug)]
+struct FaultRule {
+    kind: FaultKind,
+    job: Option<u64>,
+    chunk: Option<u32>,
+    worker: Option<u32>,
+    /// Seeded probabilistic gate: fire when
+    /// `hash(seed, job, chunk, worker) / 2^64 < prob`.
+    prob: Option<(f64, u64)>,
+    /// Remaining firing budget; `None` = unlimited.
+    remaining: Option<AtomicU32>,
+    delay: Duration,
+}
+
+impl FaultRule {
+    fn matches(&self, job: u64, chunk: u32, worker: u32) -> bool {
+        if self.job.is_some_and(|j| j != job) {
+            return false;
+        }
+        if self.chunk.is_some_and(|c| c != chunk) {
+            return false;
+        }
+        if self.worker.is_some_and(|w| w != worker) {
+            return false;
+        }
+        if let Some((p, seed)) = self.prob {
+            let h = splitmix64(
+                seed ^ job.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (u64::from(chunk) << 32)
+                    ^ u64::from(worker),
+            );
+            if (h as f64) / (u64::MAX as f64) >= p {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Consume one unit of budget; `false` when exhausted.
+    fn take_budget(&self) -> bool {
+        match &self.remaining {
+            None => true,
+            Some(left) => left
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                .is_ok(),
+        }
+    }
+
+    fn message(&self, job: u64, chunk: u32, worker: u32) -> String {
+        let what = match self.kind {
+            FaultKind::Panic => "injected panic",
+            FaultKind::Error => "injected error",
+            FaultKind::Stall => "injected stall",
+        };
+        format!("{what}: job {job} chunk {chunk} worker {worker}")
+    }
+}
+
+/// SplitMix64 — the deterministic hash behind probabilistic rules.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A parsed, shareable fault schedule. The empty plan (`FaultPlan::none()`)
+/// never fires and is the production default — the injection checks cost
+/// one `is_empty` branch per dispatch.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// The no-op plan (empty spec).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Parse a `--inject-faults` spec. Empty input yields the no-op plan.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut rules = Vec::new();
+        for rule_src in spec.split(';').map(str::trim).filter(|r| !r.is_empty()) {
+            rules.push(parse_rule(rule_src)?);
+        }
+        Ok(Self { rules })
+    }
+
+    /// Execution-path check (engine pool and the PJRT thread's outer
+    /// guard): does a `panic` or `stall` rule fire for this
+    /// `(job, chunk, worker)`? First matching rule with budget wins.
+    pub fn fire_exec(&self, job: u64, chunk: u32, worker: u32) -> Option<ExecFault> {
+        for rule in &self.rules {
+            if rule.kind == FaultKind::Error || !rule.matches(job, chunk, worker) {
+                continue;
+            }
+            if !rule.take_budget() {
+                continue;
+            }
+            return Some(match rule.kind {
+                FaultKind::Panic => ExecFault::Panic(rule.message(job, chunk, worker)),
+                FaultKind::Stall => ExecFault::Stall(rule.delay),
+                FaultKind::Error => unreachable!("filtered above"),
+            });
+        }
+        None
+    }
+
+    /// PJRT-runtime check: does an `error` rule fire? Returns the message
+    /// `run_pjrt_batch` should fail with (→ engine fallback, no retry
+    /// charged).
+    pub fn fire_pjrt_error(&self, job: u64, chunk: u32, worker: u32) -> Option<String> {
+        for rule in &self.rules {
+            if rule.kind != FaultKind::Error || !rule.matches(job, chunk, worker) {
+                continue;
+            }
+            if !rule.take_budget() {
+                continue;
+            }
+            return Some(rule.message(job, chunk, worker));
+        }
+        None
+    }
+}
+
+fn parse_rule(src: &str) -> anyhow::Result<FaultRule> {
+    let mut kind = None;
+    let mut job = None;
+    let mut chunk = None;
+    let mut worker = None;
+    let mut times: u32 = 1;
+    let mut prob = None;
+    let mut seed = None;
+    let mut delay_ms: u64 = 10;
+    for field in src.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+        let (key, value) = field
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fault field `{field}` is not key=value"))?;
+        let (key, value) = (key.trim(), value.trim());
+        match key {
+            "kind" => {
+                kind = Some(match value {
+                    "panic" => FaultKind::Panic,
+                    "error" => FaultKind::Error,
+                    "stall" => FaultKind::Stall,
+                    other => anyhow::bail!("unknown fault kind `{other}` (panic|error|stall)"),
+                })
+            }
+            "job" => job = Some(parse_num::<u64>(key, value)?),
+            "chunk" => chunk = Some(parse_num::<u32>(key, value)?),
+            "worker" => worker = Some(parse_num::<u32>(key, value)?),
+            "times" => times = parse_num::<u32>(key, value)?,
+            "seed" => seed = Some(parse_num::<u64>(key, value)?),
+            "delay_ms" => delay_ms = parse_num::<u64>(key, value)?,
+            "prob" => {
+                let p: f64 = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault `prob` must be a number, got `{value}`"))?;
+                anyhow::ensure!(
+                    p > 0.0 && p <= 1.0,
+                    "fault `prob` must be in (0, 1], got {p}"
+                );
+                prob = Some(p);
+            }
+            other => anyhow::bail!("unknown fault field `{other}` in `{src}`"),
+        }
+    }
+    let kind = kind.ok_or_else(|| anyhow::anyhow!("fault rule `{src}` is missing `kind=`"))?;
+    let prob = match (prob, seed) {
+        (Some(p), Some(s)) => Some((p, s)),
+        (None, None) => None,
+        _ => anyhow::bail!("fault rule `{src}`: `prob` and `seed` must be given together"),
+    };
+    Ok(FaultRule {
+        kind,
+        job,
+        chunk,
+        worker,
+        prob,
+        remaining: (times > 0).then(|| AtomicU32::new(times)),
+        delay: Duration::from_millis(delay_ms),
+    })
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> anyhow::Result<T> {
+    value
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault `{key}` must be a non-negative integer, got `{value}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_the_noop_plan() {
+        for spec in ["", "  ", ";;"] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            assert!(plan.is_empty(), "{spec:?}");
+            assert_eq!(plan.fire_exec(1, 0, 1), None);
+        }
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn explicit_panic_rule_fires_once_on_its_coordinates() {
+        let plan = FaultPlan::parse("kind=panic,job=3,chunk=1").unwrap();
+        assert_eq!(plan.fire_exec(3, 0, 1), None, "wrong chunk");
+        assert_eq!(plan.fire_exec(4, 1, 1), None, "wrong job");
+        match plan.fire_exec(3, 1, 2) {
+            Some(ExecFault::Panic(msg)) => {
+                assert!(msg.contains("injected panic"), "{msg}");
+                assert!(msg.contains("job 3"), "{msg}");
+            }
+            other => panic!("expected a panic fault, got {other:?}"),
+        }
+        // Default budget is 1: the retried chunk must succeed.
+        assert_eq!(plan.fire_exec(3, 1, 2), None, "budget spent");
+    }
+
+    #[test]
+    fn zero_times_means_unlimited() {
+        let plan = FaultPlan::parse("kind=panic,job=7,times=0").unwrap();
+        for chunk in 0..50 {
+            assert!(plan.fire_exec(7, chunk, 1).is_some());
+        }
+        assert_eq!(plan.fire_exec(8, 0, 1), None, "job matcher still applies");
+    }
+
+    #[test]
+    fn stall_carries_its_delay_and_error_is_pjrt_only() {
+        let plan = FaultPlan::parse("kind=stall,delay_ms=3;kind=error,job=2").unwrap();
+        assert_eq!(
+            plan.fire_exec(1, 0, 1),
+            Some(ExecFault::Stall(Duration::from_millis(3)))
+        );
+        // `error` rules never fire on the execution path...
+        assert_eq!(plan.fire_exec(2, 0, 1), None, "stall budget spent, error skipped");
+        // ...only on the PJRT-runtime check, and budget is per-rule.
+        let msg = plan.fire_pjrt_error(2, 0, 100).unwrap();
+        assert!(msg.contains("injected error"), "{msg}");
+        assert_eq!(plan.fire_pjrt_error(2, 1, 100), None, "budget spent");
+    }
+
+    #[test]
+    fn probabilistic_rules_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("kind=panic,prob=0.5,seed=7,times=0").unwrap();
+        let b = FaultPlan::parse("kind=panic,prob=0.5,seed=7,times=0").unwrap();
+        let c = FaultPlan::parse("kind=panic,prob=0.5,seed=8,times=0").unwrap();
+        let fires = |p: &FaultPlan| -> Vec<bool> {
+            (0..64).map(|i| p.fire_exec(i, 0, 1).is_some()).collect()
+        };
+        let fa = fires(&a);
+        assert_eq!(fa, fires(&b), "same seed, same schedule");
+        assert_ne!(fa, fires(&c), "different seed, different schedule");
+        let hits = fa.iter().filter(|&&f| f).count();
+        assert!((16..=48).contains(&hits), "~half should fire, got {hits}/64");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "job=1",                        // missing kind
+            "kind=explode",                 // unknown kind
+            "kind=panic,job=x",             // non-numeric
+            "kind=panic,frequency=2",       // unknown field
+            "kind=panic,prob=0.5",          // prob without seed
+            "kind=panic,seed=1",            // seed without prob
+            "kind=panic,prob=1.5,seed=1",   // prob out of range
+            "kind=panic,job",               // not key=value
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn worker_matcher_selects_a_lane() {
+        let plan = FaultPlan::parse("kind=panic,worker=100,times=0").unwrap();
+        assert!(plan.fire_exec(1, 0, 100).is_some(), "pjrt lane");
+        assert_eq!(plan.fire_exec(1, 0, 1), None, "engine lane");
+    }
+}

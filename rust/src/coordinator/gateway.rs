@@ -981,6 +981,8 @@ fn metrics_json(m: &MetricsSnapshot) -> Value {
         ("jobs_preempted", Value::Int(m.jobs_preempted as i64)),
         ("resident_bytes", Value::Int(m.resident_bytes as i64)),
         ("jobs_failed", Value::Int(m.jobs_failed as i64)),
+        ("worker_restarts", Value::Int(m.worker_restarts as i64)),
+        ("chunk_retries", Value::Int(m.chunk_retries as i64)),
         ("chunks_dispatched", Value::Int(m.chunks_dispatched as i64)),
         ("pjrt_dispatches", Value::Int(m.pjrt_dispatches as i64)),
         ("engine_dispatches", Value::Int(m.engine_dispatches as i64)),
@@ -1040,6 +1042,17 @@ mod tests {
         assert!(out.contains("\"deadline_misses\":0"), "{out}");
         assert!(out.contains("\"jobs_preempted\":0"), "{out}");
         assert!(out.contains("\"resident_bytes\":0"), "{out}");
+    }
+
+    #[test]
+    fn metrics_json_has_recovery_counters() {
+        let m = crate::coordinator::Metrics::new();
+        m.worker_restarts.store(3, Ordering::Relaxed);
+        m.chunk_retries.store(4, Ordering::Relaxed);
+        let out = jsonmini::to_string(&metrics_json(&m.snapshot()));
+        assert!(out.contains("\"worker_restarts\":3"), "{out}");
+        assert!(out.contains("\"chunk_retries\":4"), "{out}");
+        assert!(out.contains("\"jobs_failed\":0"), "{out}");
     }
 
     #[test]

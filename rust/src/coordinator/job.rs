@@ -140,7 +140,13 @@ pub enum JobStatus {
     /// Stopped because the request's deadline expired before completion
     /// (between chunks; partial results are delivered).
     DeadlineMiss,
-    /// Rejected or failed (reason in `JobResult::error`).
+    /// Rejected at submission, or quarantined: the job's current chunk
+    /// crashed its worker more than `max_chunk_retries` times in a row, so
+    /// the scheduler stopped retrying and failed the job terminally
+    /// instead of killing the process (docs/api.md §Failure semantics).
+    /// The reason — for quarantine, the panic message — is in
+    /// `JobResult::error` / `JobSnapshot::error`, and waiters are woken
+    /// normally: `wait()` returns this status rather than hanging.
     Failed,
 }
 

@@ -31,6 +31,14 @@ pub struct Metrics {
     /// at eviction; 0 when the resident store is off or empty.
     pub resident_bytes: AtomicU64,
     pub jobs_failed: AtomicU64,
+    /// Worker threads respawned after a crash (an engine worker or the
+    /// PJRT dispatcher panicked; the panic was converted to a structured
+    /// error and a replacement thread took its lane).
+    pub worker_restarts: AtomicU64,
+    /// Chunks re-executed from their dispatch checkpoint after the worker
+    /// advancing them crashed. One count per affected job per crash; a job
+    /// that exceeds `max_chunk_retries` is quarantined (`jobs_failed`).
+    pub chunk_retries: AtomicU64,
     pub chunks_dispatched: AtomicU64,
     pub pjrt_dispatches: AtomicU64,
     pub engine_dispatches: AtomicU64,
@@ -94,6 +102,8 @@ impl Metrics {
             jobs_preempted: self.jobs_preempted.load(Ordering::Relaxed),
             resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            chunk_retries: self.chunk_retries.load(Ordering::Relaxed),
             chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
             pjrt_dispatches: self.pjrt_dispatches.load(Ordering::Relaxed),
             engine_dispatches: self.engine_dispatches.load(Ordering::Relaxed),
@@ -123,7 +133,7 @@ impl Metrics {
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(2048);
-        let counters: [(&str, &AtomicU64); 18] = [
+        let counters: [(&str, &AtomicU64); 20] = [
             ("jobs_submitted", &self.jobs_submitted),
             ("jobs_completed", &self.jobs_completed),
             ("jobs_early_stopped", &self.jobs_early_stopped),
@@ -131,6 +141,8 @@ impl Metrics {
             ("deadline_misses", &self.deadline_misses),
             ("jobs_preempted", &self.jobs_preempted),
             ("jobs_failed", &self.jobs_failed),
+            ("worker_restarts", &self.worker_restarts),
+            ("chunk_retries", &self.chunk_retries),
             ("chunks_dispatched", &self.chunks_dispatched),
             ("pjrt_dispatches", &self.pjrt_dispatches),
             ("engine_dispatches", &self.engine_dispatches),
@@ -222,6 +234,8 @@ pub struct MetricsSnapshot {
     pub jobs_preempted: u64,
     pub resident_bytes: u64,
     pub jobs_failed: u64,
+    pub worker_restarts: u64,
+    pub chunk_retries: u64,
     pub chunks_dispatched: u64,
     pub pjrt_dispatches: u64,
     pub engine_dispatches: u64,
@@ -247,6 +261,7 @@ impl MetricsSnapshot {
         format!(
             "jobs: {} submitted, {} completed, {} early-stopped, {} cancelled, \
              {} deadline-missed, {} preempted, {} failed\n\
+             recovery: {} worker restarts, {} chunk retries\n\
              chunks: {} dispatched ({} pjrt, {} engine / {} batched jobs), \
              mean batch {:.2}, {} padded rows, {} resident bytes\n\
              generations: {}\n\
@@ -260,6 +275,8 @@ impl MetricsSnapshot {
             self.deadline_misses,
             self.jobs_preempted,
             self.jobs_failed,
+            self.worker_restarts,
+            self.chunk_retries,
             self.chunks_dispatched,
             self.pjrt_dispatches,
             self.engine_dispatches,
@@ -320,7 +337,12 @@ mod tests {
     fn render_contains_counts() {
         let m = Metrics::new();
         m.jobs_submitted.store(3, Ordering::Relaxed);
-        assert!(m.snapshot().render().contains("3 submitted"));
+        m.worker_restarts.store(2, Ordering::Relaxed);
+        m.chunk_retries.store(5, Ordering::Relaxed);
+        let text = m.snapshot().render();
+        assert!(text.contains("3 submitted"));
+        assert!(text.contains("2 worker restarts"));
+        assert!(text.contains("5 chunk retries"));
     }
 
     #[test]
@@ -353,6 +375,8 @@ mod tests {
         assert!(text.contains("fpga_ga_jobs_submitted_total 3"));
         assert!(text.contains("# TYPE fpga_ga_requests_shed_total counter"));
         assert!(text.contains("# TYPE fpga_ga_connections_rejected_total counter"));
+        assert!(text.contains("# TYPE fpga_ga_worker_restarts_total counter"));
+        assert!(text.contains("# TYPE fpga_ga_chunk_retries_total counter"));
         assert!(text.contains("# TYPE fpga_ga_resident_bytes gauge"));
         // 500µs <= 1024µs edge; 2000µs lands in the next one.
         assert!(text.contains("fpga_ga_job_latency_seconds_bucket{le=\"0.001024\"} 1"));

@@ -43,6 +43,7 @@
 
 mod batcher;
 mod coordinator;
+mod faults;
 mod gateway;
 mod job;
 mod metrics;
@@ -51,6 +52,7 @@ mod workers;
 
 pub use batcher::{BatchPlan, Batcher};
 pub use coordinator::{Coordinator, CoordinatorBuilder};
+pub use faults::{ExecFault, FaultPlan};
 pub use gateway::{Gateway, GatewayConfig};
 pub use job::{
     JobEvent, JobHandle, JobId, JobPhase, JobResult, JobSnapshot, JobStatus, OptimizeRequest,

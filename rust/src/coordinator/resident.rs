@@ -137,6 +137,25 @@ impl ResidentStore {
         }
     }
 
+    /// Abandon an in-flight dispatch whose slab was LOST with a crashed
+    /// worker (docs/backends.md §Recovery lifecycle): clear the variant's
+    /// busy flag, un-home every row the slab carried, and subtract the
+    /// lost footprint from the `resident_bytes` gauge. The jobs themselves
+    /// are restored by the scheduler from their dispatch checkpoints as
+    /// plain AoS machines; they re-enter residency at their next boundary
+    /// via the normal admission path.
+    pub fn abandon_dispatch(&mut self, key: VariantKey, ids: &[JobId], per_row_bytes: u64) {
+        debug_assert!(self.in_flight.contains(&key), "abandoning a parked slab");
+        self.in_flight.remove(&key);
+        for id in ids {
+            self.homes.remove(id);
+            self.tracer.event(id.0, EventKind::Evict);
+        }
+        self.metrics
+            .resident_bytes
+            .fetch_sub(per_row_bytes * ids.len() as u64, Ordering::Relaxed);
+    }
+
     /// Evict one job from its PARKED slab, rebuilding the AoS machine
     /// (terminal jobs, cancellation, result extraction). Returns `None`
     /// when the job is not resident. Panics if the slab is in flight —
@@ -339,6 +358,29 @@ mod tests {
         store.parked.get_mut(&key).unwrap().ids.push(JobId(7));
         let err = store.check_invariants().unwrap_err();
         assert!(err.contains("slab rows"), "{err}");
+    }
+
+    #[test]
+    fn abandon_dispatch_clears_residency_and_gauge() {
+        let metrics = Arc::new(Metrics::new());
+        let mut store = ResidentStore::new(metrics.clone(), Arc::new(Tracer::disabled()));
+        let a = job(1);
+        let b = job(2);
+        let key = a.variant();
+        let mut rslab = store.begin_dispatch(key);
+        store.admit_into(&mut rslab, JobId(1), a);
+        store.admit_into(&mut rslab, JobId(2), b);
+        let per_row = rslab.slab.row_state_bytes() as u64;
+        let ids = rslab.ids.clone();
+        // Simulate the worker crashing with the slab: `rslab` is dropped
+        // (lost), and the scheduler repairs the store's accounting.
+        drop(rslab);
+        store.abandon_dispatch(key, &ids, per_row);
+        assert!(!store.variant_in_flight(&key));
+        assert!(!store.is_resident(JobId(1)));
+        assert!(!store.is_resident(JobId(2)));
+        assert_eq!(metrics.resident_bytes.load(Ordering::Relaxed), 0);
+        store.check_invariants().expect("repaired store is consistent");
     }
 
     #[test]

@@ -2,13 +2,25 @@
 //! by a pluggable [`StepBackend`]) and the PJRT dispatcher thread. Both
 //! consume [`WorkMsg`] batches and return advanced job state via
 //! [`DoneMsg`]; the scheduler treats them uniformly.
+//!
+//! Supervision (docs/backends.md §Recovery lifecycle): chunk execution is
+//! wrapped in `catch_unwind`, so a panic — a backend bug, a poisoned job,
+//! or an injected [`FaultPlan`] fault — never takes the process down.
+//! The crashing worker converts the panic payload into a structured
+//! [`DoneMsg::Crashed`] report (naming every job it held) and exits; the
+//! scheduler restores the lost jobs from their dispatch checkpoints,
+//! retries them, and respawns the lane. A panic that escapes the chunk
+//! guard still cannot strand the scheduler: a [`DisconnectSentinel`]
+//! reports the death on the thread's way out.
 
+use crate::coordinator::faults::{ExecFault, FaultPlan};
 use crate::coordinator::job::JobId;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::resident::ResidentSlab;
-use crate::ga::{AnyGa, BackendKind, GaInstance, KernelKind, MultiVarGa, StepBackend};
+use crate::ga::{AnyGa, BackendKind, GaInstance, KernelKind, MultiVarGa, StepBackend, VariantKey};
 use crate::obs::{Stage, Tracer};
 use crate::runtime::{ChunkIo, Manifest, Runtime};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -26,6 +38,9 @@ pub(crate) struct RunningJob {
     pub remaining: u32,
     /// Generations executed by the just-finished chunk (set by backend).
     pub executed: u32,
+    /// Index of the chunk this dispatch executes (the job's completed-chunk
+    /// count at dispatch; repeats on a checkpoint retry). Fault-plan key.
+    pub chunk: u32,
 }
 
 /// A resident-slab chunk: the variant's whole cohort moves through the
@@ -34,6 +49,8 @@ pub(crate) struct RunningJob {
 pub(crate) struct SlabTask {
     pub rslab: ResidentSlab,
     pub gens: Vec<u32>,
+    /// Per-row chunk index at dispatch (parallel to `gens`). Fault-plan key.
+    pub chunks: Vec<u32>,
     /// Scheduler-side send timestamp: the worker's dispatch span measures
     /// channel wait as `sent → pickup` (obs `dispatch` stage).
     pub sent: Instant,
@@ -48,6 +65,24 @@ pub(crate) enum WorkMsg {
     Shutdown,
 }
 
+/// Which worker thread a crash report (and its respawn) belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WorkerId {
+    /// Engine pool member `i` (span lane `1 + i`).
+    Engine(usize),
+    /// The PJRT dispatcher thread (span lane [`Tracer::PJRT_LANE`]).
+    Pjrt,
+}
+
+impl WorkerId {
+    pub fn lane(self) -> u32 {
+        match self {
+            WorkerId::Engine(i) => 1 + i as u32,
+            WorkerId::Pjrt => Tracer::PJRT_LANE,
+        }
+    }
+}
+
 /// Completion sent back to the scheduler.
 pub(crate) enum DoneMsg {
     Batch {
@@ -57,6 +92,21 @@ pub(crate) enum DoneMsg {
     Slab {
         task: SlabTask,
         backend: &'static str,
+    },
+    /// A worker crashed mid-chunk. The jobs it held are gone — the
+    /// scheduler restores each from its dispatch checkpoint: `retryable`
+    /// jobs (whose chunk was executing) are charged a retry and
+    /// re-dispatched or quarantined; `riders` (slab rows that were parked
+    /// aboard the lost slab) are restored without a retry charge.
+    Crashed {
+        retryable: Vec<JobId>,
+        riders: Vec<JobId>,
+        /// `Some((variant, per_row_state_bytes))` when an in-flight slab
+        /// was lost — the scheduler repairs the resident-store accounting.
+        slab: Option<(VariantKey, u64)>,
+        /// Structured panic payload (the quarantined job's `error`).
+        error: String,
+        worker: WorkerId,
     },
 }
 
@@ -73,6 +123,77 @@ pub(crate) enum SchedMsg {
     Cancel(JobId),
     Done(DoneMsg),
     Shutdown,
+}
+
+/// Render a caught panic payload as the structured error string carried by
+/// [`DoneMsg::Crashed`] (and ultimately `JobResult::error`).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
+}
+
+/// Dead-worker disconnect sentinel: armed when a worker thread starts,
+/// disarmed by nothing — if the thread unwinds past the per-chunk guard
+/// (e.g. a poisoned lock), the sentinel's `Drop` reports the death so the
+/// scheduler respawns the lane instead of waiting forever for a completion
+/// that will never arrive. A normal exit (shutdown, caught crash) sends
+/// nothing.
+struct DisconnectSentinel {
+    tx: Sender<SchedMsg>,
+    worker: WorkerId,
+}
+
+impl Drop for DisconnectSentinel {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.tx.send(SchedMsg::Done(DoneMsg::Crashed {
+                retryable: Vec::new(),
+                riders: Vec::new(),
+                slab: None,
+                error: "worker thread panicked outside chunk execution".to_string(),
+                worker: self.worker,
+            }));
+        }
+    }
+}
+
+/// Fire any matching execution-path faults for an AoS batch (test-only
+/// injection; the plan is empty in production). Runs BEFORE the backend
+/// touches the batch, so an injected panic loses exactly one replayable
+/// chunk.
+fn inject_batch_faults(faults: &FaultPlan, jobs: &[RunningJob], lane: u32) {
+    if faults.is_empty() {
+        return;
+    }
+    for j in jobs {
+        match faults.fire_exec(j.id.0, j.chunk, lane) {
+            Some(ExecFault::Panic(msg)) => panic!("{msg}"),
+            Some(ExecFault::Stall(d)) => std::thread::sleep(d),
+            None => {}
+        }
+    }
+}
+
+/// Slab twin of [`inject_batch_faults`]: advancing rows only.
+fn inject_slab_faults(faults: &FaultPlan, task: &SlabTask, lane: u32) {
+    if faults.is_empty() {
+        return;
+    }
+    for (row, id) in task.rslab.ids.iter().enumerate() {
+        if task.gens[row] == 0 {
+            continue;
+        }
+        match faults.fire_exec(id.0, task.chunks[row], lane) {
+            Some(ExecFault::Panic(msg)) => panic!("{msg}"),
+            Some(ExecFault::Stall(d)) => std::thread::sleep(d),
+            None => {}
+        }
+    }
 }
 
 /// Advance a whole same-variant batch one chunk in ONE backend call: the
@@ -134,61 +255,82 @@ pub(crate) fn run_slab_task(backend: &dyn StepBackend, task: &mut SlabTask) -> u
     task.gens.iter().filter(|&&g| g > 0).count()
 }
 
-/// Spawn the behavioral worker pool: `count` threads sharing one queue,
-/// each owning one instance of the configured [`StepBackend`]. A multi-job
-/// batch is one `step_batch` call — observable as `engine_batch_jobs`
-/// growing faster than `engine_dispatches` in the metrics.
-pub(crate) fn spawn_engine_pool(
-    count: usize,
+/// Partition a slab task's rows into (advancing, riders) for a crash
+/// report: advancing rows lose executing work (retry-charged), riders only
+/// lose their parked storage (restored for free).
+fn partition_slab_rows(task: &SlabTask) -> (Vec<JobId>, Vec<JobId>) {
+    let mut retryable = Vec::new();
+    let mut riders = Vec::new();
+    for (row, id) in task.rslab.ids.iter().enumerate() {
+        if task.gens[row] > 0 {
+            retryable.push(*id);
+        } else {
+            riders.push(*id);
+        }
+    }
+    (retryable, riders)
+}
+
+/// Spawn ONE engine worker on pool lane `i`. Split out of
+/// [`spawn_engine_pool`] so the scheduler can respawn a crashed lane with
+/// identical configuration (the respawner closure built in
+/// `CoordinatorBuilder::start`).
+// allow(too_many_arguments): the full worker context, taken flat — this is
+// the respawn seam and must stay callable from a boxed closure.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn_engine_worker(
+    i: usize,
     backend: BackendKind,
     kernels: KernelKind,
     work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
     tracer: Arc<Tracer>,
-) -> Vec<JoinHandle<()>> {
-    (0..count)
-        .map(|i| {
-            let rx = work_rx.clone();
-            let tx = done_tx.clone();
-            let metrics = metrics.clone();
-            let tracer = tracer.clone();
-            // Span lane for this worker: 0 is the scheduler, workers are
-            // 1-based, PJRT is `Tracer::PJRT_LANE`.
-            let lane = 1 + i as u32;
-            std::thread::Builder::new()
-                .name(format!("ga-engine-{i}"))
-                .spawn(move || {
-                    let backend = backend.instantiate_with(kernels);
-                    loop {
-                        let msg = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match msg {
-                            Ok(WorkMsg::Batch(mut jobs, chunk, sent)) => {
-                                let rep = jobs.first().map_or(0, |j| j.id.0);
-                                if tracer.spans_enabled() {
-                                    tracer.record_span(
-                                        Stage::Dispatch,
-                                        rep,
-                                        lane,
-                                        sent,
-                                        Instant::now(),
-                                    );
-                                }
-                                // Timed AROUND the backend call (lint R3:
-                                // no clocks inside kernels).
-                                let advanced = {
-                                    let _step = tracer.span(Stage::FusedStep, rep, lane);
-                                    run_engine_batch(backend.as_ref(), &mut jobs, chunk)
-                                };
+    faults: Arc<FaultPlan>,
+) -> JoinHandle<()> {
+    let worker = WorkerId::Engine(i);
+    let lane = worker.lane();
+    std::thread::Builder::new()
+        .name(format!("ga-engine-{i}"))
+        .spawn(move || {
+            let _sentinel = DisconnectSentinel {
+                tx: done_tx.clone(),
+                worker,
+            };
+            let backend = backend.instantiate_with(kernels);
+            loop {
+                let msg = {
+                    let guard = work_rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(WorkMsg::Batch(jobs, chunk, sent)) => {
+                        let rep = jobs.first().map_or(0, |j| j.id.0);
+                        if tracer.spans_enabled() {
+                            tracer.record_span(Stage::Dispatch, rep, lane, sent, Instant::now());
+                        }
+                        // Checkpointed on the scheduler side; on a panic the
+                        // batch is gone, so capture the ids first.
+                        let ids: Vec<JobId> = jobs.iter().map(|j| j.id).collect();
+                        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            let mut jobs = jobs;
+                            inject_batch_faults(&faults, &jobs, lane);
+                            // Timed AROUND the backend call (lint R3:
+                            // no clocks inside kernels).
+                            let advanced = {
+                                let _step = tracer.span(Stage::FusedStep, rep, lane);
+                                run_engine_batch(backend.as_ref(), &mut jobs, chunk)
+                            };
+                            (jobs, advanced)
+                        }));
+                        match outcome {
+                            Ok((jobs, advanced)) => {
                                 metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
                                 metrics
                                     .engine_batch_jobs
                                     .fetch_add(advanced as u64, Ordering::Relaxed);
                                 metrics.record_batch(advanced, 0);
-                                if tx
+                                if done_tx
                                     .send(SchedMsg::Done(DoneMsg::Batch {
                                         jobs,
                                         backend: "engine",
@@ -198,28 +340,47 @@ pub(crate) fn spawn_engine_pool(
                                     return; // scheduler gone
                                 }
                             }
-                            Ok(WorkMsg::Slab(mut task)) => {
-                                // Slab spans are cohort-scoped (job 0): one
-                                // dispatch advances the variant's cohort.
-                                if tracer.spans_enabled() {
-                                    tracer.record_span(
-                                        Stage::Dispatch,
-                                        0,
-                                        lane,
-                                        task.sent,
-                                        Instant::now(),
-                                    );
-                                }
-                                let advanced = {
-                                    let _step = tracer.span(Stage::FusedStep, 0, lane);
-                                    run_slab_task(backend.as_ref(), &mut task)
-                                };
+                            Err(payload) => {
+                                // The backend may hold poisoned internal
+                                // state after an unwind: report and exit;
+                                // the scheduler respawns this lane fresh.
+                                let _ = done_tx.send(SchedMsg::Done(DoneMsg::Crashed {
+                                    retryable: ids,
+                                    riders: Vec::new(),
+                                    slab: None,
+                                    error: panic_message(payload.as_ref()),
+                                    worker,
+                                }));
+                                return;
+                            }
+                        }
+                    }
+                    Ok(WorkMsg::Slab(task)) => {
+                        // Slab spans are cohort-scoped (job 0): one
+                        // dispatch advances the variant's cohort.
+                        if tracer.spans_enabled() {
+                            tracer.record_span(Stage::Dispatch, 0, lane, task.sent, Instant::now());
+                        }
+                        let (retryable, riders) = partition_slab_rows(&task);
+                        let slab_info =
+                            (task.rslab.key, task.rslab.slab.row_state_bytes() as u64);
+                        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            let mut task = task;
+                            inject_slab_faults(&faults, &task, lane);
+                            let advanced = {
+                                let _step = tracer.span(Stage::FusedStep, 0, lane);
+                                run_slab_task(backend.as_ref(), &mut task)
+                            };
+                            (task, advanced)
+                        }));
+                        match outcome {
+                            Ok((task, advanced)) => {
                                 metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
                                 metrics
                                     .engine_batch_jobs
                                     .fetch_add(advanced as u64, Ordering::Relaxed);
                                 metrics.record_batch(advanced, 0);
-                                if tx
+                                if done_tx
                                     .send(SchedMsg::Done(DoneMsg::Slab {
                                         task,
                                         backend: "engine",
@@ -229,13 +390,70 @@ pub(crate) fn spawn_engine_pool(
                                     return; // scheduler gone
                                 }
                             }
-                            Ok(WorkMsg::Shutdown) | Err(_) => return,
+                            Err(payload) => {
+                                let _ = done_tx.send(SchedMsg::Done(DoneMsg::Crashed {
+                                    retryable,
+                                    riders,
+                                    slab: Some(slab_info),
+                                    error: panic_message(payload.as_ref()),
+                                    worker,
+                                }));
+                                return;
+                            }
                         }
                     }
-                })
-                .expect("spawn engine worker")
+                    Ok(WorkMsg::Shutdown) | Err(_) => return,
+                }
+            }
+        })
+        .expect("spawn engine worker")
+}
+
+/// Spawn the behavioral worker pool: `count` threads sharing one queue,
+/// each owning one instance of the configured [`StepBackend`]. A multi-job
+/// batch is one `step_batch` call — observable as `engine_batch_jobs`
+/// growing faster than `engine_dispatches` in the metrics.
+// allow(too_many_arguments): mirror of `spawn_engine_worker` (same seam).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn_engine_pool(
+    count: usize,
+    backend: BackendKind,
+    kernels: KernelKind,
+    work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
+    done_tx: Sender<SchedMsg>,
+    metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
+    faults: Arc<FaultPlan>,
+) -> Vec<JoinHandle<()>> {
+    (0..count)
+        .map(|i| {
+            spawn_engine_worker(
+                i,
+                backend,
+                kernels,
+                work_rx.clone(),
+                done_tx.clone(),
+                metrics.clone(),
+                tracer.clone(),
+                faults.clone(),
+            )
         })
         .collect()
+}
+
+/// Execute the PJRT step with panic isolation: a panic inside the PJRT
+/// dispatch is converted into an `Err`, so it takes the SAME engine-
+/// fallback path as a reported runtime error — the batch re-executes on
+/// the engine in place, and no chunk retry is charged. (Previously only
+/// `Err` fell back; a panic in `run_pjrt_batch` killed the thread.)
+pub(crate) fn pjrt_isolated(step: impl FnOnce() -> anyhow::Result<()>) -> anyhow::Result<()> {
+    match std::panic::catch_unwind(AssertUnwindSafe(step)) {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow::anyhow!(
+            "pjrt dispatch panicked: {}",
+            panic_message(payload.as_ref())
+        )),
+    }
 }
 
 /// Spawn the PJRT dispatcher: ONE thread owning the non-`Send` Runtime.
@@ -244,19 +462,30 @@ pub(crate) fn spawn_engine_pool(
 /// `k_chunk` generations. If the PJRT runtime cannot initialize (no XLA in
 /// this build / environment), the thread stays up and executes every batch
 /// through the scalar engine instead — canonical state is never stranded.
+/// The receiver is shared (`Arc<Mutex<_>>`) so a respawned dispatcher
+/// resumes the same queue after a crash.
+// allow(too_many_arguments): the full dispatcher context, taken flat — the
+// respawn seam, like `spawn_engine_worker`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_pjrt_thread(
     manifest: Manifest,
     fallback: BackendKind,
     kernels: KernelKind,
-    work_rx: Receiver<WorkMsg>,
+    work_rx: Arc<Mutex<Receiver<WorkMsg>>>,
     done_tx: Sender<SchedMsg>,
     metrics: Arc<Metrics>,
     tracer: Arc<Tracer>,
+    faults: Arc<FaultPlan>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ga-pjrt".into())
         .spawn(move || {
-            let lane = Tracer::PJRT_LANE;
+            let worker = WorkerId::Pjrt;
+            let lane = worker.lane();
+            let _sentinel = DisconnectSentinel {
+                tx: done_tx.clone(),
+                worker,
+            };
             let mut rt = match Runtime::new(manifest) {
                 Ok(rt) => Some(rt),
                 Err(e) => {
@@ -281,63 +510,120 @@ pub(crate) fn spawn_pjrt_thread(
                 metrics.record_batch(advanced, 0);
             };
             loop {
-                match work_rx.recv() {
-                    Ok(WorkMsg::Batch(mut jobs, chunk, sent)) => {
+                let msg = {
+                    let guard = work_rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(WorkMsg::Batch(jobs, chunk, sent)) => {
                         if tracer.spans_enabled() {
                             let rep = jobs.first().map_or(0, |j| j.id.0);
                             tracer.record_span(Stage::Dispatch, rep, lane, sent, Instant::now());
                         }
-                        let executed_by = match rt.as_mut() {
-                            Some(rt) => match run_pjrt_batch(rt, &mut jobs, &metrics, &tracer) {
-                                Ok(()) => {
-                                    metrics.pjrt_dispatches.fetch_add(1, Ordering::Relaxed);
-                                    "pjrt"
+                        let ids: Vec<JobId> = jobs.iter().map(|j| j.id).collect();
+                        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            let mut jobs = jobs;
+                            inject_batch_faults(&faults, &jobs, lane);
+                            let executed_by = match rt.as_mut() {
+                                Some(rt) => {
+                                    let step = pjrt_isolated(|| {
+                                        run_pjrt_batch(rt, &mut jobs, &metrics, &tracer, &faults)
+                                    });
+                                    match step {
+                                        Ok(()) => {
+                                            metrics
+                                                .pjrt_dispatches
+                                                .fetch_add(1, Ordering::Relaxed);
+                                            "pjrt"
+                                        }
+                                        Err(e) => {
+                                            // Fall back to the engine in-place
+                                            // (error OR panic); jobs a
+                                            // successful sub-dispatch already
+                                            // advanced are skipped
+                                            // (run_engine_batch contract).
+                                            log::warn!(
+                                                "pjrt dispatch failed ({e}); engine fallback"
+                                            );
+                                            run_fallback(&mut jobs, chunk);
+                                            "engine"
+                                        }
+                                    }
                                 }
-                                Err(e) => {
-                                    // Fall back to the engine in-place; jobs a
-                                    // successful sub-dispatch already advanced
-                                    // are skipped (run_engine_batch contract).
-                                    log::warn!("pjrt dispatch failed ({e}); engine fallback");
+                                None => {
                                     run_fallback(&mut jobs, chunk);
                                     "engine"
                                 }
-                            },
-                            None => {
-                                run_fallback(&mut jobs, chunk);
-                                "engine"
+                            };
+                            (jobs, executed_by)
+                        }));
+                        match outcome {
+                            Ok((jobs, executed_by)) => {
+                                if done_tx
+                                    .send(SchedMsg::Done(DoneMsg::Batch {
+                                        jobs,
+                                        backend: executed_by,
+                                    }))
+                                    .is_err()
+                                {
+                                    return;
+                                }
                             }
-                        };
-                        if done_tx
-                            .send(SchedMsg::Done(DoneMsg::Batch {
-                                jobs,
-                                backend: executed_by,
-                            }))
-                            .is_err()
-                        {
-                            return;
+                            Err(payload) => {
+                                let _ = done_tx.send(SchedMsg::Done(DoneMsg::Crashed {
+                                    retryable: ids,
+                                    riders: Vec::new(),
+                                    slab: None,
+                                    error: panic_message(payload.as_ref()),
+                                    worker,
+                                }));
+                                return;
+                            }
                         }
                     }
                     // Defensive: the scheduler routes slab work to the
                     // engine pool (resident mode excludes PJRT), but a slab
                     // that lands here still executes correctly.
-                    Ok(WorkMsg::Slab(mut task)) => {
-                        let advanced = {
-                            let _step = tracer.span(Stage::FusedStep, 0, lane);
-                            run_slab_task(fallback.as_ref(), &mut task)
-                        };
-                        metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
-                        metrics
-                            .engine_batch_jobs
-                            .fetch_add(advanced as u64, Ordering::Relaxed);
-                        metrics.record_batch(advanced, 0);
-                        if done_tx
-                            .send(SchedMsg::Done(DoneMsg::Slab {
-                                task,
-                                backend: "engine",
-                            }))
-                            .is_err()
-                        {
-                            return;
+                    Ok(WorkMsg::Slab(task)) => {
+                        let (retryable, riders) = partition_slab_rows(&task);
+                        let slab_info =
+                            (task.rslab.key, task.rslab.slab.row_state_bytes() as u64);
+                        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            let mut task = task;
+                            inject_slab_faults(&faults, &task, lane);
+                            let advanced = {
+                                let _step = tracer.span(Stage::FusedStep, 0, lane);
+                                run_slab_task(fallback.as_ref(), &mut task)
+                            };
+                            (task, advanced)
+                        }));
+                        match outcome {
+                            Ok((task, advanced)) => {
+                                metrics.engine_dispatches.fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .engine_batch_jobs
+                                    .fetch_add(advanced as u64, Ordering::Relaxed);
+                                metrics.record_batch(advanced, 0);
+                                if done_tx
+                                    .send(SchedMsg::Done(DoneMsg::Slab {
+                                        task,
+                                        backend: "engine",
+                                    }))
+                                    .is_err()
+                                {
+                                    return;
+                                }
+                            }
+                            Err(payload) => {
+                                let _ = done_tx.send(SchedMsg::Done(DoneMsg::Crashed {
+                                    retryable,
+                                    riders,
+                                    slab: Some(slab_info),
+                                    error: panic_message(payload.as_ref()),
+                                    worker,
+                                }));
+                                return;
+                            }
                         }
                     }
                     Ok(WorkMsg::Shutdown) | Err(_) => return,
@@ -357,6 +643,7 @@ fn run_pjrt_batch(
     jobs: &mut [RunningJob],
     metrics: &Metrics,
     tracer: &Tracer,
+    faults: &FaultPlan,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!jobs.is_empty(), "empty batch");
     // The AOT artifacts are V = 2 lowerings; the scheduler routes multivar
@@ -366,6 +653,15 @@ fn run_pjrt_batch(
         jobs.iter().all(|j| matches!(j.inst, AnyGa::Two(_))),
         "multivar jobs are not supported on the PJRT path"
     );
+    // Injected runtime errors surface exactly like a real PJRT failure:
+    // before any sub-dispatch, so the whole batch falls back cleanly.
+    if !faults.is_empty() {
+        for j in jobs.iter() {
+            if let Some(msg) = faults.fire_pjrt_error(j.id.0, j.chunk, Tracer::PJRT_LANE) {
+                anyhow::bail!("{msg}");
+            }
+        }
+    }
     let mut start = 0;
     while start < jobs.len() {
         let remaining = jobs.len() - start;
@@ -459,4 +755,40 @@ fn run_pjrt_subbatch(
         job.executed = k;
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_message_decodes_common_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("static str")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "static str");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "formatted 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert!(panic_message(p.as_ref()).contains("non-string"));
+    }
+
+    #[test]
+    fn pjrt_isolated_converts_panics_into_fallback_errors() {
+        // The satellite seam: a panic inside the PJRT dispatch must be
+        // handled exactly like `Err` — routed to the engine fallback —
+        // not allowed to kill the dispatcher thread.
+        assert!(pjrt_isolated(|| Ok(())).is_ok());
+        let e = pjrt_isolated(|| anyhow::bail!("plain error")).unwrap_err();
+        assert!(e.to_string().contains("plain error"));
+        let e = pjrt_isolated(|| panic!("xla assertion tripped")).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("pjrt dispatch panicked"), "{msg}");
+        assert!(msg.contains("xla assertion tripped"), "{msg}");
+    }
+
+    #[test]
+    fn worker_lanes_are_stable() {
+        assert_eq!(WorkerId::Engine(0).lane(), 1);
+        assert_eq!(WorkerId::Engine(3).lane(), 4);
+        assert_eq!(WorkerId::Pjrt.lane(), Tracer::PJRT_LANE);
+    }
 }

@@ -255,15 +255,25 @@ impl SoaSlab {
         }
     }
 
+    /// Materialize row `row` as its AoS machine WITHOUT touching the slab —
+    /// the checkpoint gather behind the coordinator's crash-recovery path:
+    /// an in-flight slab lost to a worker crash is rebuilt row by row from
+    /// the copies this returns (docs/backends.md §Recovery lifecycle).
+    pub fn materialize_row(&self, row: usize) -> AnyGa {
+        assert!(row < self.rows.len(), "row out of range");
+        let (n, l) = (self.n, self.l);
+        let meta = self.rows[row].clone();
+        let pop = self.pop[row * n..(row + 1) * n].to_vec();
+        let states = self.lfsr[row * l..(row + 1) * l].to_vec();
+        self.rebuild(meta, pop, states)
+    }
+
     /// Materialize row `row` as its AoS machine, run `f` on it, and write
     /// the advanced state back — the reference (non-fused) slab stepping
     /// path behind the [`crate::ga::StepBackend::step_slab`] default.
     pub fn with_row_materialized(&mut self, row: usize, f: impl FnOnce(&mut AnyGa)) {
         let (n, l) = (self.n, self.l);
-        let meta = self.rows[row].clone();
-        let pop = self.pop[row * n..(row + 1) * n].to_vec();
-        let states = self.lfsr[row * l..(row + 1) * l].to_vec();
-        let mut inst = self.rebuild(meta, pop, states);
+        let mut inst = self.materialize_row(row);
         f(&mut inst);
         let meta = &mut self.rows[row];
         let mut best = BestSoFar::new(meta.maximize);

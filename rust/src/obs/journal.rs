@@ -38,6 +38,16 @@ pub enum EventKind {
     DeadlineMiss,
     /// Terminal: the job could not run (bad params, backend error).
     Fail,
+    /// A worker thread crashed while executing a chunk (panic caught and
+    /// converted to a structured error); the scheduler respawns it. Worker-
+    /// scoped (job 0) — the affected jobs each record a `ChunkRetry`.
+    WorkerCrash,
+    /// A job's in-flight chunk was lost to a worker crash and is being
+    /// re-executed from its dispatch checkpoint.
+    ChunkRetry,
+    /// The job exhausted its chunk-retry budget (`max_chunk_retries`) and
+    /// was quarantined into terminal `Failed` (followed by `Fail`).
+    Quarantined,
 }
 
 impl EventKind {
@@ -54,6 +64,9 @@ impl EventKind {
             EventKind::Cancel => "cancel",
             EventKind::DeadlineMiss => "deadline_miss",
             EventKind::Fail => "fail",
+            EventKind::WorkerCrash => "worker_crash",
+            EventKind::ChunkRetry => "chunk_retry",
+            EventKind::Quarantined => "quarantined",
         }
     }
 }

@@ -298,3 +298,186 @@ fn config_file_errors_are_contextual() {
     let missing = fpga_ga::config::Config::from_file(std::path::Path::new("/nope/x.toml"));
     assert!(missing.unwrap_err().to_string().contains("/nope/x.toml"));
 }
+
+// ---------------------------------------------------------------------------
+// Fault-tolerant execution (ISSUE 10): deterministic crash injection drives
+// the supervision path end to end — checkpointed retry must be bit-identical
+// to a fault-free run, and a poison job must quarantine without taking the
+// process (or its siblings) down. The `inject_faults` spec grammar is pinned
+// by unit tests next to `FaultPlan::parse`.
+// ---------------------------------------------------------------------------
+
+fn ga(k: u32, seed: u64) -> GaParams {
+    GaParams {
+        n: 16,
+        m: 20,
+        k,
+        function: "f3".into(),
+        seed,
+        ..GaParams::default()
+    }
+}
+
+/// Scalar engine pool (batch of 1, zero window): every dispatch carries
+/// exactly one job, so recovery counters are exact, not topology-dependent.
+fn faulty_scalar(spec: &str, max_chunk_retries: u32) -> Coordinator {
+    Coordinator::builder(ServeParams {
+        workers: 1,
+        use_pjrt: false,
+        inject_faults: spec.into(),
+        max_chunk_retries,
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap()
+}
+
+fn reference(params: &GaParams) -> AnyGa {
+    let mut r = AnyGa::from_params(params).unwrap();
+    r.run(params.k);
+    r
+}
+
+#[test]
+fn injected_chunk_panic_retries_and_completes_bit_identically() {
+    // One panic at the second chunk: the worker dies, the lane respawns,
+    // and the chunk replays from its dispatch checkpoint. The client sees
+    // nothing but the final result — bit-identical to a fault-free run.
+    let coord = faulty_scalar("kind=panic,job=1,chunk=1", 2);
+    let p = ga(100, 51);
+    let r = coord.submit(OptimizeRequest::new(p.clone())).wait();
+    assert_eq!(r.status, JobStatus::Completed, "{:?}", r.error);
+    assert_eq!(r.generations, 100);
+    let want = reference(&p);
+    assert_eq!(r.best_y, want.best().y);
+    assert_eq!(r.best_x, want.best().x);
+    assert_eq!(r.curve, want.curve());
+    let m = coord.metrics();
+    assert_eq!(m.worker_restarts, 1, "one crash, one respawn");
+    assert_eq!(m.chunk_retries, 1, "one checkpointed replay");
+    assert_eq!(m.jobs_failed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn retry_exhaustion_quarantines_the_poison_job_and_spares_siblings() {
+    // `times=0` = unlimited: job 1 panics on every attempt. With a budget
+    // of 2 retries it crashes 3 times (initial + 2 replays), then lands in
+    // terminal Failed carrying the panic message. Siblings submitted after
+    // it — sharing the same (repeatedly respawned) worker lane — complete
+    // bit-identically, and the coordinator keeps accepting work.
+    let coord = faulty_scalar("kind=panic,job=1,times=0", 2);
+    let poison = coord.submit(OptimizeRequest::new(ga(200, 61)));
+    let poison_id = poison.id;
+    let sib_params = ga(100, 62);
+    let sibling = coord.submit(OptimizeRequest::new(sib_params.clone()));
+    let pr = poison.wait();
+    assert_eq!(pr.status, JobStatus::Failed);
+    let msg = pr.error.clone().expect("quarantine surfaces the panic");
+    assert!(msg.contains("injected panic"), "{msg}");
+    let sr = sibling.wait();
+    assert_eq!(sr.status, JobStatus::Completed, "{:?}", sr.error);
+    let want = reference(&sib_params);
+    assert_eq!(sr.best_y, want.best().y);
+    assert_eq!(sr.curve, want.curve());
+    // The failure is queryable after the fact (gateway `GET /v1/jobs/:id`).
+    let snap = coord.job(poison_id).unwrap();
+    assert_eq!(snap.status, Some(JobStatus::Failed));
+    assert!(snap.error.unwrap().contains("injected panic"));
+    let m = coord.metrics();
+    assert_eq!(m.worker_restarts, 3, "initial crash + two retry crashes");
+    assert_eq!(m.chunk_retries, 2, "budget of 2 fully spent");
+    assert_eq!(m.jobs_failed, 1);
+    // Still alive: fresh work after a quarantine runs to completion.
+    let after = coord.submit(OptimizeRequest::new(ga(50, 63))).wait();
+    assert_eq!(after.status, JobStatus::Completed, "{:?}", after.error);
+    coord.shutdown();
+}
+
+#[test]
+fn resident_slab_crash_restores_every_row_and_repairs_accounting() {
+    // Same-variant jobs cohabit one SoA slab; a crash loses the whole slab,
+    // so EVERY row — not just the faulted one — must restore from its
+    // dispatch checkpoint. Depending on arrival timing the two jobs share
+    // the doomed dispatch (both charged a retry) or not (one charged), so
+    // counters are asserted as ranges; the results must be exact either way.
+    let coord = Coordinator::builder(ServeParams {
+        workers: 1,
+        max_batch: 8,
+        batch_window_us: 100,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: true,
+        inject_faults: "kind=panic,job=1,chunk=1".into(),
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap();
+    let pa = ga(200, 71);
+    let pb = ga(200, 72);
+    let a = coord.submit(OptimizeRequest::new(pa.clone()));
+    let b = coord.submit(OptimizeRequest::new(pb.clone()));
+    let ra = a.wait();
+    let rb = b.wait();
+    assert_eq!(ra.status, JobStatus::Completed, "{:?}", ra.error);
+    assert_eq!(rb.status, JobStatus::Completed, "{:?}", rb.error);
+    let wa = reference(&pa);
+    let wb = reference(&pb);
+    assert_eq!(ra.best_y, wa.best().y);
+    assert_eq!(ra.curve, wa.curve());
+    assert_eq!(rb.best_y, wb.best().y);
+    assert_eq!(rb.curve, wb.curve());
+    let m = coord.metrics();
+    assert_eq!(m.worker_restarts, 1, "the fault fires exactly once");
+    assert!(
+        (1..=2).contains(&m.chunk_retries),
+        "faulted row always replays; its slab-mate only if co-dispatched \
+         (got {})",
+        m.chunk_retries
+    );
+    assert_eq!(m.jobs_failed, 0);
+    assert_eq!(
+        m.resident_bytes, 0,
+        "crash recovery must not leak residency accounting"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn quarantined_resident_job_frees_its_slab_row() {
+    // Poison job in resident mode: after quarantine its slab row (rebuilt
+    // on every retry) must be gone from the store — resident_bytes returns
+    // to zero once the surviving sibling also finishes.
+    let coord = Coordinator::builder(ServeParams {
+        workers: 1,
+        max_batch: 8,
+        batch_window_us: 100,
+        use_pjrt: false,
+        backend: BackendKind::Batched,
+        resident_store: true,
+        inject_faults: "kind=panic,job=1,times=0".into(),
+        max_chunk_retries: 1,
+        ..ServeParams::default()
+    })
+    .start()
+    .unwrap();
+    let poison = coord.submit(OptimizeRequest::new(ga(200, 81)));
+    let sib_params = ga(200, 82);
+    let sibling = coord.submit(OptimizeRequest::new(sib_params.clone()));
+    let pr = poison.wait();
+    assert_eq!(pr.status, JobStatus::Failed);
+    assert!(pr.error.unwrap().contains("injected panic"));
+    let sr = sibling.wait();
+    assert_eq!(sr.status, JobStatus::Completed, "{:?}", sr.error);
+    let want = reference(&sib_params);
+    assert_eq!(sr.best_y, want.best().y);
+    assert_eq!(sr.curve, want.curve());
+    let m = coord.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert!(m.worker_restarts >= 2, "got {}", m.worker_restarts);
+    assert_eq!(
+        m.resident_bytes, 0,
+        "quarantine must evict the poison job's slab row"
+    );
+    coord.shutdown();
+}

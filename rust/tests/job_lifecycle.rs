@@ -371,3 +371,34 @@ fn cancelled_job_with_deadline_counts_as_cancelled_only() {
     assert_eq!(m.deadline_misses, 0);
     coord.shutdown();
 }
+
+#[test]
+fn crashed_job_does_not_strand_waiters() {
+    // ISSUE 10 regression: a worker panic used to drop the in-flight job's
+    // result channel without a terminal send, leaving `wait()` blocked
+    // forever. Quarantine must finalize through the same result delivery
+    // as every other terminal path, so the waiter wakes with Failed.
+    let serve = ServeParams {
+        workers: 1,
+        use_pjrt: false,
+        // Every attempt at job 1 panics; a zero retry budget quarantines
+        // it on the first crash.
+        inject_faults: "kind=panic,job=1,times=0".into(),
+        max_chunk_retries: 0,
+        ..ServeParams::default()
+    };
+    let coord = Coordinator::builder(serve).start().unwrap();
+    let mut h = coord.submit(OptimizeRequest::new(params(16, 100, 9)));
+    let r = h
+        .wait_timeout(Duration::from_secs(120))
+        .expect("waiter must wake: crashed job finalizes as Failed");
+    assert_eq!(r.status, JobStatus::Failed);
+    assert!(r.error.clone().unwrap().contains("injected panic"), "{:?}", r.error);
+    // The terminal result is cached; later polls stay consistent.
+    assert_eq!(h.try_wait().unwrap().status, JobStatus::Failed);
+    let m = coord.metrics();
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.chunk_retries, 0, "zero budget: no replay before quarantine");
+    assert_eq!(m.jobs_failed, 1);
+    coord.shutdown();
+}
